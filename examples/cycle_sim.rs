@@ -1,0 +1,55 @@
+//! Cycle-accurate simulation walkthrough: renders the Fig. 2 life-cycle
+//! of ML-accelerator instructions (init → 32-cycle operand transmission
+//! → accel_valid → compute → accel_ready → write-back) and the cycle
+//! attribution of a full inference.
+//!
+//!     make artifacts && cargo run --release --example cycle_sim [config]
+
+use anyhow::Result;
+
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::soc::format_trace_line;
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::Manifest;
+
+fn main() -> Result<()> {
+    let key = std::env::args().nth(1).unwrap_or_else(|| "iris_ovr_w4".to_string());
+    let manifest = Manifest::load(&artifacts_root())?;
+    let entry = manifest.config(&key)?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set(&entry.dataset)?;
+    let timing = TimingConfig::flexic();
+
+    println!("=== {key}: one inference on the Bendable RISC-V SoC ===\n");
+    let mut runner = ProgramRunner::accelerated(&model, timing, ProgramOpts::default())?;
+    runner.soc_mut().rearm();
+    runner.poke_features(&test.x_q[0])?;
+
+    let mut cfu_lines = 0usize;
+    let mut other = 0usize;
+    let mut cb = |info: &flexsvm::serv::StepInfo| {
+        // show every accelerator instruction (the Fig. 2 handshake) and
+        // the first few regular instructions for context
+        if info.cfu.is_some() && cfu_lines < 12 {
+            println!("{}", format_trace_line(info, &timing));
+            cfu_lines += 1;
+        } else if info.cfu.is_none() && other < 8 {
+            println!("{}", format_trace_line(info, &timing));
+            other += 1;
+        }
+    };
+    let r = runner.soc_mut().run_traced(1_000_000_000, Some(&mut cb))?;
+
+    println!("\npredicted class: {}", r.value());
+    let s = r.stats;
+    println!("cycle attribution over {} instructions:", s.instret);
+    println!("  fetch    {:>8} cyc ({:>4.1}%)", s.fetch, 100.0 * s.fetch as f64 / s.total() as f64);
+    println!("  exec     {:>8} cyc ({:>4.1}%)", s.exec, 100.0 * s.exec as f64 / s.total() as f64);
+    println!("  data mem {:>8} cyc ({:>4.1}%)  [{} loads, {} stores]", s.data_mem, 100.0 * s.data_mem_share(), s.loads, s.stores);
+    println!("  cfu      {:>8} cyc ({:>4.1}%)  [{} accelerator ops]", s.cfu, 100.0 * s.cfu as f64 / s.total() as f64, s.cfu_ops);
+    println!("  total    {:>8} cyc = {:.1} ms at 52 kHz", s.total(), s.total() as f64 / 52.0);
+    println!("\ncycle_sim OK");
+    Ok(())
+}

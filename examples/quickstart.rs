@@ -1,0 +1,61 @@
+//! Quickstart: load an AOT-compiled SVM artifact, classify a few Iris
+//! samples through the PJRT runtime, and cross-check against the
+//! cycle-accurate SERV + accelerator simulation.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use flexsvm::power::FlexicModel;
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::runtime::Engine;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::Manifest;
+
+fn main() -> Result<()> {
+    // 1. artifacts: the build-time Python path (jax + pallas) has already
+    //    trained, quantized and AOT-lowered every model — just load.
+    let manifest = Manifest::load(&artifacts_root())?;
+    let key = "iris_ovr_w4";
+    let entry = manifest.config(key)?;
+    println!(
+        "{key}: {} classes x {} features, {}-bit weights, build-time accuracy {:.1}%",
+        entry.n_classes,
+        entry.n_features,
+        entry.bits,
+        entry.accuracy * 100.0
+    );
+
+    // 2. functional fast path: compiled HLO on the PJRT CPU client
+    let mut engine = Engine::new()?;
+    engine.load(&manifest, entry, 1)?;
+    let test = manifest.test_set(&entry.dataset)?;
+    let preds = engine.predict(key, 1, &test.x_q[..5])?;
+    println!("PJRT predictions for 5 test samples: {preds:?} (labels {:?})", &test.y[..5]);
+
+    // 3. the same inference on the cycle-accurate Bendable RISC-V SoC
+    let model = manifest.model(entry)?;
+    let power = FlexicModel::paper();
+    let mut accel =
+        ProgramRunner::accelerated(&model, TimingConfig::flexic(), ProgramOpts::default())?;
+    let mut base = ProgramRunner::baseline(&model, TimingConfig::flexic())?;
+    for (i, x) in test.x_q.iter().take(5).enumerate() {
+        let (pa, sa) = accel.run_sample(x)?;
+        let (pb, sb) = base.run_sample(x)?;
+        assert_eq!(pa, preds[i], "SoC and PJRT must agree");
+        assert_eq!(pa, pb, "accelerated and baseline programs must agree");
+        println!(
+            "sample {i}: class {pa} | SERV+accel {:>7} cyc ({:.1} ms, {:.3} mJ) | SERV-only {:>8} cyc ({:.0} ms) | {:>4.1}x",
+            sa.total(),
+            1e3 * power.latency_s(sa.total() as f64),
+            power.energy_mj(sa.total() as f64),
+            sb.total(),
+            1e3 * power.latency_s(sb.total() as f64),
+            sb.total() as f64 / sa.total() as f64,
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

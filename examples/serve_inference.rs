@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER (DESIGN.md §4 experiment E2E): the full three-layer
+//! stack on a real workload.
+//!
+//!   Layer 1/2 (build time): Pallas PE kernel + JAX model, AOT-lowered
+//!     to HLO text by `make artifacts`.
+//!   Layer 3 (this binary):  the Rust coordinator loads the compiled
+//!     graphs on the PJRT CPU client and serves batched classification
+//!     requests — routing per config, dynamic batching, backpressure —
+//!     with Python nowhere on the request path.
+//!
+//! The workload streams the real held-out test vectors of four
+//! Table-I configurations from 8 client threads, checks every answer
+//! against the labels (accuracy must equal the build-time metric) and
+//! reports throughput, latency percentiles and batch-formation stats.
+//! The numbers land in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example serve_inference
+//!     (options: serve_inference <n_requests> <backend pjrt|native>)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::Manifest;
+
+const WORKERS: usize = 8;
+
+fn main() -> Result<()> {
+    let n_requests: usize =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(20_000);
+    let backend = match std::env::args().nth(2).as_deref() {
+        Some("native") => Backend::Native,
+        _ => Backend::Pjrt,
+    };
+    let keys: Vec<String> = ["iris_ovr_w4", "bs_ovo_w8", "seeds_ovo_w4", "derm_ovr_w16"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+
+    let manifest = Manifest::load(&artifacts_root())?;
+    let mut testsets = Vec::new();
+    for k in &keys {
+        let entry = manifest.config(k)?;
+        testsets.push((k.clone(), manifest.test_set(&entry.dataset)?, entry.accuracy));
+    }
+
+    println!("starting coordinator ({backend:?}) serving {} configs ...", keys.len());
+    let t_load = Instant::now();
+    let server = Server::start(
+        artifacts_root(),
+        keys.clone(),
+        ServerOpts {
+            backend,
+            batch_max: 64,
+            compiled_batch: 64,
+            linger: Duration::from_micros(500),
+            queue_cap: 4096,
+            eager_flush: true,
+        },
+    )?;
+    println!("  all graphs compiled + resident in {:.2}s", t_load.elapsed().as_secs_f64());
+
+    let client = server.client();
+    let correct = AtomicU64::new(0);
+    let done = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..WORKERS {
+            let client = client.clone();
+            let testsets = &testsets;
+            let correct = &correct;
+            let done = &done;
+            handles.push(scope.spawn(move || -> Result<()> {
+                for i in 0..n_requests / WORKERS {
+                    let (key, test, _) = &testsets[(w + i) % testsets.len()];
+                    let idx = (w * 7919 + i * 31) % test.len();
+                    let resp = client.infer(key, &test.x_q[idx])?;
+                    if resp.pred == test.y[idx] {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed();
+    let served = done.load(Ordering::Relaxed);
+    let acc = correct.load(Ordering::Relaxed) as f64 / served as f64;
+
+    println!("\n=== E2E results ===");
+    println!(
+        "served {served} requests from {WORKERS} clients in {:.2}s  ->  {:.0} req/s",
+        dt.as_secs_f64(),
+        served as f64 / dt.as_secs_f64()
+    );
+    println!("online accuracy over the mixed stream: {:.1}%", acc * 100.0);
+
+    let mut metrics: Vec<_> = client.metrics()?.into_iter().collect();
+    metrics.sort_by(|a, b| a.0.cmp(&b.0));
+    for (key, m) in metrics {
+        let h = m.latency.as_ref().unwrap();
+        println!(
+            "  {key:<16} {:>6} reqs | {:>5} batches (mean {:>4.1}/batch) | latency p50 {:>5} us  p99 {:>6} us  max {:>6} us",
+            m.requests,
+            m.batches,
+            m.mean_batch(),
+            h.quantile_us(0.50),
+            h.quantile_us(0.99),
+            h.max_us()
+        );
+    }
+
+    // sanity: the mixed-stream accuracy must be the weighted mean of the
+    // per-config build-time accuracies (same vectors, same models)
+    let expect: f64 = testsets.iter().map(|(_, _, a)| a).sum::<f64>() / testsets.len() as f64;
+    anyhow::ensure!(
+        (acc - expect).abs() < 0.05,
+        "online accuracy {acc:.3} diverges from expected {expect:.3}"
+    );
+    println!("serve_inference OK");
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT build driver: train → quantize → lower → emit artifacts/.
+
+Run once at build time (``make artifacts``); Python is never on the Rust
+request path.  Emits, under ``--out-dir`` (default ../artifacts):
+
+  manifest.json                      index of everything below
+  metrics.json                       accuracy per (dataset, strategy, bits)
+  hlo/<ds>_<strat>_w<bits>_b<B>.hlo.txt   AOT inference graphs (HLO TEXT —
+                                     xla_extension 0.5.1 rejects jax≥0.5
+                                     serialized HloModuleProto because of
+                                     64-bit instruction ids; the text
+                                     parser reassigns ids cleanly)
+  weights/<ds>_<strat>_w<bits>.json  quantized coefficients for the Rust
+                                     accelerator model + program generators
+  datasets/<ds>.json                 4-bit-quantized test set + labels
+  golden/<ds>_<strat>_w<bits>.json   input→scores→prediction vectors used
+                                     by the Rust cross-layer bit-exactness
+                                     tests (svm, accel, SERV program, PJRT)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from . import datasets as D
+from . import train as T
+from . import quantize as Q
+from . import model as M
+
+BATCH_SIZES = (1, 64)
+STRATEGIES = ("ovr", "ovo")
+BITS = Q.SUPPORTED_BITS
+N_GOLDEN = 32
+
+
+def _jsonable(a):
+    if isinstance(a, np.ndarray):
+        return a.tolist()
+    return a
+
+
+def build_dataset_artifacts(ds: D.Dataset, out: pathlib.Path, manifest: dict, metrics: dict):
+    x_q_test = Q.quantize_inputs(ds.x_test)
+    x_q_train = Q.quantize_inputs(ds.x_train)
+
+    (out / "datasets").mkdir(exist_ok=True)
+    with open(out / "datasets" / f"{ds.name}.json", "w") as f:
+        json.dump(
+            {
+                "name": ds.name,
+                "n_classes": ds.n_classes,
+                "n_features": ds.n_features,
+                "class_names": ds.class_names,
+                "x_q_test": _jsonable(x_q_test),
+                "y_test": _jsonable(ds.y_test),
+                "n_test": ds.n_test,
+                "n_train": ds.n_train,
+            },
+            f,
+        )
+
+    models = {
+        "ovr": T.train_ovr(ds.x_train, ds.y_train, ds.n_classes),
+        "ovo": T.train_ovo(ds.x_train, ds.y_train, ds.n_classes),
+    }
+
+    for strat in STRATEGIES:
+        fm = models[strat]
+        float_acc = T.accuracy(T.predict_float(fm, ds.x_test), ds.y_test)
+        for bits in BITS:
+            qm = Q.quantize_model(fm, bits)
+            t0 = time.time()
+            pred_q = Q.predict_int(qm, x_q_test)
+            acc_q = T.accuracy(pred_q, ds.y_test)
+            # cross-check the L2 graph (pallas kernel) against the numpy spec
+            pred_l2, scores_l2 = M.predict_np(qm, x_q_test)
+            assert np.array_equal(pred_l2, pred_q), (
+                f"L2/pallas vs numpy-int mismatch for {ds.name}/{strat}/w{bits}"
+            )
+            scores_spec = Q.scores_int(qm, x_q_test).astype(np.int64)
+            assert np.array_equal(scores_l2.astype(np.int64), scores_spec)
+
+            key = f"{ds.name}_{strat}_w{bits}"
+            metrics[key] = {
+                "dataset": ds.name,
+                "strategy": strat,
+                "bits": bits,
+                "accuracy": acc_q,
+                "accuracy_float": float_acc,
+                "n_classifiers": qm.n_classifiers,
+                "n_features": qm.n_features,
+                "n_classes": qm.n_classes,
+            }
+
+            (out / "weights").mkdir(exist_ok=True)
+            with open(out / "weights" / f"{key}.json", "w") as f:
+                json.dump(
+                    {
+                        "dataset": ds.name,
+                        "strategy": strat,
+                        "bits": bits,
+                        "n_classes": qm.n_classes,
+                        "n_features": qm.n_features,
+                        "n_classifiers": qm.n_classifiers,
+                        "weights": _jsonable(qm.weights),
+                        "biases": _jsonable(qm.biases),
+                        "pairs": [list(p) for p in qm.pairs],
+                        "scale": qm.scale,
+                    },
+                    f,
+                )
+
+            n_g = min(N_GOLDEN, x_q_test.shape[0])
+            gx = x_q_test[:n_g]
+            g_scores = Q.scores_int(qm, gx)
+            g_pred = Q.predict_int(qm, gx)
+            (out / "golden").mkdir(exist_ok=True)
+            with open(out / "golden" / f"{key}.json", "w") as f:
+                json.dump(
+                    {
+                        "config": key,
+                        "x_q": _jsonable(gx),
+                        "scores": _jsonable(g_scores),
+                        "pred": _jsonable(g_pred),
+                        "y_true": _jsonable(ds.y_test[:n_g]),
+                    },
+                    f,
+                )
+
+            hlo_files = {}
+            (out / "hlo").mkdir(exist_ok=True)
+            for batch in BATCH_SIZES:
+                hlo = M.lower_to_hlo_text(qm, batch)
+                rel = f"hlo/{key}_b{batch}.hlo.txt"
+                with open(out / rel, "w") as f:
+                    f.write(hlo)
+                hlo_files[str(batch)] = rel
+
+            manifest["configs"][key] = {
+                "dataset": ds.name,
+                "strategy": strat,
+                "bits": bits,
+                "n_classes": qm.n_classes,
+                "n_features": qm.n_features,
+                "n_classifiers": qm.n_classifiers,
+                "weights": f"weights/{key}.json",
+                "golden": f"golden/{key}.json",
+                "hlo": hlo_files,
+                "accuracy": acc_q,
+            }
+            print(
+                f"  {key}: acc={acc_q:.3f} (float {float_acc:.3f}) "
+                f"K={qm.n_classifiers} F={qm.n_features}  [{time.time()-t0:.1f}s]"
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", nargs="*", default=list(D.DATASET_NAMES))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "batch_sizes": list(BATCH_SIZES),
+        "datasets": {},
+        "configs": {},
+    }
+    metrics: dict = {}
+    t0 = time.time()
+    for name in args.datasets:
+        ds = D.load(name)
+        print(f"[{name}] n={ds.n_train}+{ds.n_test} F={ds.n_features} C={ds.n_classes}")
+        manifest["datasets"][name] = {
+            "file": f"datasets/{name}.json",
+            "n_classes": ds.n_classes,
+            "n_features": ds.n_features,
+            "n_test": ds.n_test,
+        }
+        build_dataset_artifacts(ds, out, manifest, metrics)
+
+    with open(out / "metrics.json", "w") as f:
+        json.dump(metrics, f, indent=1)
+    with open(out / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts complete in {time.time()-t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the SVM PE kernel (Layer-1 correctness anchor).
+
+These functions define the integer semantics every other layer must
+reproduce bit-exactly:
+
+    kernels/svm_pe.py  (Pallas, nibble-decomposed PE datapath)
+    rust/src/svm/      (native integer inference)
+    rust/src/accel/    (cycle-level accelerator model)
+    SERV-executed programs (rust/src/program/)
+
+Score:  score[n, k] = sum_f x_q[n, f] * w_q[k, f]  +  15 * b_q[k]
+OvR:    argmax over k (first max wins).
+OvO:    classifier k for pair (i, j), i<j: score >= 0 votes i, else j;
+        winner = argmax votes (first max wins).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+XMAX = 15
+
+
+def scores_ref(x_q, w_q, b_q):
+    """[B,F] u4-in-i32, [K,F] i32, [K] i32 -> [B,K] i32 integer scores."""
+    return (
+        jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32).T,
+                preferred_element_type=jnp.int32)
+        + XMAX * b_q.astype(jnp.int32)[None, :]
+    )
+
+
+def ovr_predict_ref(x_q, w_q, b_q):
+    """OvR: winning class id per sample (first maximum on ties)."""
+    return jnp.argmax(scores_ref(x_q, w_q, b_q), axis=1).astype(jnp.int32)
+
+
+def ovo_votes_ref(scores, pairs_i, pairs_j, n_classes):
+    """Vote tally [B, C] from pairwise scores [B, K] and pair index arrays."""
+    pos = scores >= 0  # [B, K]
+    winner = jnp.where(pos, pairs_i[None, :], pairs_j[None, :])  # [B, K]
+    onehot = jnp.equal(winner[:, :, None], jnp.arange(n_classes)[None, None, :])
+    return jnp.sum(onehot.astype(jnp.int32), axis=1)
+
+
+def ovo_predict_ref(x_q, w_q, b_q, pairs_i, pairs_j, n_classes):
+    s = scores_ref(x_q, w_q, b_q)
+    votes = ovo_votes_ref(s, pairs_i, pairs_j, n_classes)
+    return jnp.argmax(votes, axis=1).astype(jnp.int32)

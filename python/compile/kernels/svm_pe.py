@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernel: the SVM accelerator's PE datapath (Fig. 6/7).
+
+The paper's Processing Engine is eight parallel 4×4-bit **unsigned**
+multipliers.  Signed {4,8,16}-bit weights are handled by a
+2's-complement→sign-magnitude converter: each weight contributes its
+unsigned magnitude, split into 4-bit nibbles, and a sign flag that turns
+the accumulate into an add or subtract.  A mux stage shifts each nibble
+product left by 0/4/8/12 before accumulation (Fig. 7).
+
+Hardware adaptation (DESIGN.md §3/L1): the paper targets a 52 kHz
+flexible ASIC, not a GPU, so there is nothing to port mechanically —
+instead the PE's *structure* is what the kernel mirrors:
+
+  * the eight physical multipliers  → the vectorised nibble axis
+    ``k ∈ 0..bits/4`` plus lane-parallel 4×4 products,
+  * the sign-magnitude module       → ``sign``/``mag`` decomposition,
+  * the shift-mux stage             → ``<< 4k`` on each nibble product,
+  * the bias-as-extra-input trick   → ``XMAX * b_q`` epilogue,
+  * the running max_sum/max_id regs → the fused argmax variant.
+
+BlockSpec tiles the batch axis so one block's working set
+(x: TB×F, w: K×F, out: TB×K, all int32) stays ≤ a few KiB — far inside
+a TPU core's ~16 MiB VMEM; on a real TPU this kernel is VPU-bound
+(int4-magnitude arithmetic, no MXU), see DESIGN.md §9.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is exactly what
+the Rust runtime loads (see /opt/xla-example/README.md).
+
+Every kernel here must agree bit-exactly with kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+XMAX = 15  # 4-bit unsigned full scale; also the bias "input" value
+
+# Default batch tile.  Small models (K·F ≤ 34·15) make the x-tile the
+# dominant VMEM term: 64·34·4 B ≈ 8.5 KiB per block.
+DEFAULT_BLOCK_B = 64
+
+
+def _pe_scores_kernel(x_ref, w_ref, b_ref, o_ref, *, nibbles: int):
+    """One grid step: scores for a TB×F tile of inputs against all K
+    classifiers, nibble-decomposed exactly like the PE datapath."""
+    x = x_ref[...].astype(jnp.int32)          # [TB, F] values 0..15
+    w = w_ref[...].astype(jnp.int32)          # [K, F]  signed
+    # 2's-complement -> sign-magnitude (the converter module in Fig. 6)
+    sign = jnp.where(w < 0, -1, 1).astype(jnp.int32)
+    mag = jnp.abs(w)
+    acc = jnp.zeros((x.shape[0], w.shape[0]), jnp.int32)
+    for k in range(nibbles):                  # the eight-multiplier array,
+        nib = (mag >> (4 * k)) & 0xF          # one nibble plane per pass
+        signed_nib = sign * nib               # add-or-subtract select
+        # 4×4 unsigned product + shift-mux (<< 4k), accumulated in cur_sum
+        acc = acc + (
+            jnp.dot(x, signed_nib.T, preferred_element_type=jnp.int32) << (4 * k)
+        )
+    # bias as an extra (input = XMAX, weight = b_q) pair
+    o_ref[...] = acc + XMAX * b_ref[...].astype(jnp.int32)[None, :]
+
+
+def _pad_batch(x_q, block_b):
+    b = x_q.shape[0]
+    pad = (-b) % block_b
+    if pad:
+        x_q = jnp.concatenate([x_q, jnp.zeros((pad, x_q.shape[1]), x_q.dtype)], axis=0)
+    return x_q, b
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_b"))
+def pe_scores(x_q, w_q, b_q, *, bits: int, block_b: int = DEFAULT_BLOCK_B):
+    """Integer classifier scores [B, K] via the PE datapath.
+
+    x_q: [B, F] int32 with values in 0..15 (4-bit unsigned features)
+    w_q: [K, F] int32 signed, magnitudes < 2**(bits-1)
+    b_q: [K]    int32 signed
+    """
+    assert bits in (4, 8, 16), bits
+    nibbles = bits // 4
+    x_pad, b_real = _pad_batch(x_q, block_b)
+    n_blocks = x_pad.shape[0] // block_b
+    k = w_q.shape[0]
+    f = w_q.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_pe_scores_kernel, nibbles=nibbles),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_pad.shape[0], k), jnp.int32),
+        interpret=True,
+    )(x_pad, w_q, b_q)
+    return out[:b_real]
+
+
+def _pe_argmax_kernel(x_ref, w_ref, b_ref, s_ref, id_ref, *, nibbles: int):
+    """Fused scores + running argmax — mirrors the max_sum/max_id registers
+    updated concurrently with the PE calculation (paper §IV-A)."""
+    _pe_scores_kernel(x_ref, w_ref, b_ref, s_ref, nibbles=nibbles)
+    s = s_ref[...]
+    # strictly-greater update == first maximum wins, like the hardware
+    id_ref[...] = jnp.argmax(s, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_b"))
+def pe_scores_argmax(x_q, w_q, b_q, *, bits: int, block_b: int = DEFAULT_BLOCK_B):
+    """(scores [B,K], argmax-id [B]) in one fused kernel (OvR fast path)."""
+    assert bits in (4, 8, 16), bits
+    nibbles = bits // 4
+    x_pad, b_real = _pad_batch(x_q, block_b)
+    n_blocks = x_pad.shape[0] // block_b
+    k = w_q.shape[0]
+    f = w_q.shape[1]
+    scores, ids = pl.pallas_call(
+        functools.partial(_pe_argmax_kernel, nibbles=nibbles),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x_pad.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((x_pad.shape[0],), jnp.int32),
+        ],
+        interpret=True,
+    )(x_pad, w_q, b_q)
+    return scores[:b_real], ids[:b_real]
+
+
+def vmem_estimate_bytes(block_b: int, n_feat: int, n_classifiers: int) -> int:
+    """Static VMEM footprint of one grid step (all operands int32).
+
+    Used by DESIGN.md §9 and tests to assert the block stays tiny
+    relative to a 16 MiB VMEM budget.
+    """
+    x = block_b * n_feat * 4
+    w = n_classifiers * n_feat * 4
+    b = n_classifiers * 4
+    out = block_b * n_classifiers * 4
+    scratch = block_b * n_classifiers * 4  # accumulator
+    return x + w + b + out + scratch

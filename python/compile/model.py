@@ -1,0 +1,92 @@
+"""Layer-2 JAX model: quantized multi-class SVM inference graphs.
+
+One jitted graph per (dataset, strategy, bits) configuration.  The graph
+consumes a batch of 4-bit-quantized feature vectors (stored int32) and
+returns integer predictions plus raw integer scores; classifier weights
+are baked in as constants (they are what the accelerator would hold in
+its weight stream), so the AOT artifact is fully self-contained and the
+Rust hot path only ships activations.
+
+The dot-product hot-spot is the Layer-1 Pallas PE kernel
+(kernels/svm_pe.py); the OvR argmax uses the fused kernel variant, the
+OvO vote tally is cheap jnp glue that XLA fuses around it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import QuantModel
+from .kernels import svm_pe
+from .kernels.ref import ovo_votes_ref
+
+
+def _pairs_arrays(qm: QuantModel) -> tuple[jnp.ndarray, jnp.ndarray]:
+    pi = jnp.asarray(np.array([p[0] for p in qm.pairs], np.int32))
+    pj = jnp.asarray(np.array([p[1] for p in qm.pairs], np.int32))
+    return pi, pj
+
+
+def build_predict_fn(qm: QuantModel):
+    """Returns fn(x_q [B,F] i32) -> (pred [B] i32, scores [B,K] i32)."""
+    w_q = jnp.asarray(qm.weights, jnp.int32)
+    b_q = jnp.asarray(qm.biases, jnp.int32)
+    bits = qm.bits
+
+    if qm.strategy == "ovr":
+
+        def predict(x_q):
+            scores, ids = svm_pe.pe_scores_argmax(x_q, w_q, b_q, bits=bits)
+            return ids, scores
+
+        return predict
+
+    pi, pj = _pairs_arrays(qm)
+    n_classes = qm.n_classes
+
+    def predict(x_q):
+        scores = svm_pe.pe_scores(x_q, w_q, b_q, bits=bits)
+        votes = ovo_votes_ref(scores, pi, pj, n_classes)
+        return jnp.argmax(votes, axis=1).astype(jnp.int32), scores
+
+    return predict
+
+
+def predict_np(qm: QuantModel, x_q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Convenience eager wrapper (used by tests and metric computation)."""
+    fn = build_predict_fn(qm)
+    pred, scores = fn(jnp.asarray(x_q, jnp.int32))
+    return np.asarray(pred), np.asarray(scores)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering (HLO text — see aot.py for why text, not serialized proto)
+# ---------------------------------------------------------------------------
+
+
+def lower_to_hlo_text(qm: QuantModel, batch: int) -> str:
+    """Lower the inference graph at a fixed batch size to HLO text.
+
+    The lowered computation has ONE parameter (x_q i32[batch, F]) and
+    returns a tuple (pred i32[batch], scores i32[batch, K]) — the Rust
+    runtime unwraps the tuple.
+    """
+    from jax._src.lib import xla_client as xc
+
+    predict = build_predict_fn(qm)
+    spec = jax.ShapeDtypeStruct((batch, qm.n_features), jnp.int32)
+    lowered = jax.jit(predict).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default printer
+    # elides big literals as `constant({...})`, and xla_extension 0.5.1's
+    # text parser silently materialises those as iota garbage — the
+    # baked-in classifier weights would be destroyed.  (Found the hard
+    # way; see rust/tests/runtime_pjrt.rs which pins bit-exactness.)
+    return comp.as_hlo_text(print_large_constants=True)

@@ -1,0 +1,122 @@
+"""Post-training uniform quantization (paper §V-A and §IV-A).
+
+The accelerator consumes:
+  * 4-bit **unsigned** input features (paper: "4-bit unsigned input
+    features ... since such low bitwidth is typically sufficient").
+    Features are already normalised to [0, 1], so x_q = round(x * 15).
+  * {4, 8, 16}-bit **signed** weights and biases, uniformly quantized.
+
+Scale convention
+----------------
+One symmetric scale per (model, bitwidth), shared by every classifier of
+the model and by the biases.  Sharing across classifiers is REQUIRED for
+OvR: the hardware argmax (max_sum/max_id registers) compares raw integer
+sums across classifiers, which is only meaningful if they share a scale.
+
+    qmax  = 2^(bits-1) - 1
+    s_w   = qmax / max(|W|_inf, |b|_inf)
+    w_q   = clip(round(w * s_w), -qmax, qmax)      (never -2^(b-1): keeps
+                                                    magnitudes in b-1 bits,
+                                                    matching the sign-
+                                                    magnitude PE datapath)
+    b_q   = clip(round(b * s_w), -qmax, qmax)
+
+Bias handling (paper: "The bias is treated as an input with its own
+weight for scaling"): the integer score is
+
+    score_int = sum_f x_q[f] * w_q[f]  +  XMAX * b_q,   XMAX = 15
+
+i.e. the bias rides through the PE as one extra (input=15, weight=b_q)
+pair, so score_int ≈ 15 * s_w * (x·w + b) — a positive monotone map of
+the float score, preserving both the OvR argmax and the OvO sign.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .train import SvmModel
+
+XMAX = 15  # 4-bit unsigned input full-scale; also the bias "input"
+SUPPORTED_BITS = (4, 8, 16)
+
+
+@dataclasses.dataclass
+class QuantModel:
+    """A quantized multi-class SVM, bit-exact spec for all lower layers."""
+
+    strategy: str
+    n_classes: int
+    bits: int
+    weights: np.ndarray  # [K, F] int32, values in [-qmax, qmax]
+    biases: np.ndarray   # [K]    int32
+    pairs: list[tuple[int, int]]
+    scale: float         # s_w — kept for de-quantization / reporting
+
+    @property
+    def n_classifiers(self) -> int:
+        return int(self.weights.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.weights.shape[1])
+
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def quantize_inputs(x: np.ndarray) -> np.ndarray:
+    """[0,1] floats -> 4-bit unsigned ints (int32 storage)."""
+    return np.clip(np.round(x * XMAX), 0, XMAX).astype(np.int32)
+
+
+def quantize_model(model: SvmModel, bits: int) -> QuantModel:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    qmax = (1 << (bits - 1)) - 1
+    full = max(
+        float(np.max(np.abs(model.weights))),
+        float(np.max(np.abs(model.biases))),
+        1e-12,
+    )
+    s_w = qmax / full
+    w_q = np.clip(np.round(model.weights * s_w), -qmax, qmax).astype(np.int32)
+    b_q = np.clip(np.round(model.biases * s_w), -qmax, qmax).astype(np.int32)
+    return QuantModel(
+        strategy=model.strategy,
+        n_classes=model.n_classes,
+        bits=bits,
+        weights=w_q,
+        biases=b_q,
+        pairs=list(model.pairs),
+        scale=s_w,
+    )
+
+
+# ---------------------------------------------------------------------------
+# integer reference inference (numpy; the jnp oracle lives in kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+
+def scores_int(qm: QuantModel, x_q: np.ndarray) -> np.ndarray:
+    """Integer classifier scores [N, K]; the spec every layer must match."""
+    return x_q.astype(np.int64) @ qm.weights.T.astype(np.int64) + XMAX * qm.biases.astype(
+        np.int64
+    )
+
+
+def predict_int(qm: QuantModel, x_q: np.ndarray) -> np.ndarray:
+    """Integer predictions; ties resolved to the FIRST maximum (this is
+    what the hardware's strictly-greater max_sum update does, and what
+    jnp.argmax does — all layers must agree)."""
+    s = scores_int(qm, x_q)
+    if qm.strategy == "ovr":
+        return np.argmax(s, axis=1).astype(np.int32)
+    votes = np.zeros((x_q.shape[0], qm.n_classes), dtype=np.int32)
+    for k, (i, j) in enumerate(qm.pairs):
+        pos = s[:, k] >= 0
+        votes[pos, i] += 1
+        votes[~pos, j] += 1
+    return np.argmax(votes, axis=1).astype(np.int32)

@@ -1,0 +1,159 @@
+"""From-scratch linear-SVM training in JAX (scikit-learn substitute).
+
+The paper trains with scikit-learn's ``LinearSVC`` (liblinear: L2-regularised
+squared-hinge loss).  scikit-learn is not available offline, so we implement
+the same objective family from scratch and optimise it with full-batch Adam
+until convergence — the problems are tiny (≤ 500 samples, ≤ 34 features), so
+full-batch gradient descent converges to the same solutions liblinear finds.
+
+Objective (per binary classifier, matching LinearSVC defaults):
+
+    min_{w,b}  0.5 * ||w||^2  +  C * sum_i max(0, 1 - y_i (w.x_i + b))^2
+
+Multi-class schemes (paper §IV-A):
+  * OvR — one classifier per class, winner = argmax score.
+  * OvO — one classifier per ordered pair (i, j), i < j, trained with
+    class i as +1 and class j as -1; winner by majority vote, where a
+    non-negative score votes i and a negative score votes j.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# binary squared-hinge SVM
+# ---------------------------------------------------------------------------
+
+
+def _svm_loss(params, x, y, c_reg):
+    w, b = params
+    margin = y * (x @ w + b)
+    hinge = jnp.maximum(0.0, 1.0 - margin)
+    return 0.5 * jnp.sum(w * w) + c_reg * jnp.sum(hinge * hinge)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _adam_train(x, y, c_reg, steps, lr):
+    """Full-batch Adam on the squared-hinge objective.  Returns (w, b)."""
+    n_feat = x.shape[1]
+    params = (jnp.zeros(n_feat), jnp.asarray(0.0))
+    grad_fn = jax.grad(_svm_loss)
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, i):
+        params, m, v = carry
+        g = grad_fn(params, x, y, c_reg)
+        m = jax.tree.map(lambda m_, g_: beta1 * m_ + (1 - beta1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: beta2 * v_ + (1 - beta2) * g_ * g_, v, g)
+        t = i + 1.0
+        mhat = jax.tree.map(lambda m_: m_ / (1 - beta1**t), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - beta2**t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return (params, m, v), ()
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _), _ = jax.lax.scan(
+        step, (params, zeros, zeros), jnp.arange(steps, dtype=jnp.float32)
+    )
+    return params
+
+
+def train_binary(
+    x: np.ndarray,
+    y_pm1: np.ndarray,
+    c_reg: float = 1.0,
+    steps: int = 4000,
+    lr: float = 0.05,
+) -> tuple[np.ndarray, float]:
+    """Train one binary SVM; y in {-1, +1}.  Returns (w [F], b)."""
+    w, b = _adam_train(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(y_pm1, jnp.float32),
+        jnp.asarray(c_reg, jnp.float32),
+        steps,
+        jnp.asarray(lr, jnp.float32),
+    )
+    return np.asarray(w, np.float64), float(b)
+
+
+# ---------------------------------------------------------------------------
+# multi-class models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SvmModel:
+    """A trained multi-class linear SVM (float coefficients).
+
+    ``strategy`` is "ovr" or "ovo".  For OvR there are C classifiers, one
+    per class, ``pairs[k] = (k, k)``.  For OvO there are C(C-1)/2, and
+    ``pairs[k] = (i, j)`` with i < j: positive score votes i.
+    """
+
+    strategy: str
+    n_classes: int
+    weights: np.ndarray  # [K, F] float
+    biases: np.ndarray   # [K]    float
+    pairs: list[tuple[int, int]]
+
+    @property
+    def n_classifiers(self) -> int:
+        return int(self.weights.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.weights.shape[1])
+
+
+def train_ovr(x, y, n_classes, c_reg=5.0, steps=4000) -> SvmModel:
+    ws, bs, pairs = [], [], []
+    for c in range(n_classes):
+        y_pm1 = np.where(y == c, 1.0, -1.0)
+        w, b = train_binary(x, y_pm1, c_reg=c_reg, steps=steps)
+        ws.append(w)
+        bs.append(b)
+        pairs.append((c, c))
+    return SvmModel("ovr", n_classes, np.stack(ws), np.asarray(bs), pairs)
+
+
+def train_ovo(x, y, n_classes, c_reg=5.0, steps=4000) -> SvmModel:
+    ws, bs, pairs = [], [], []
+    for i, j in itertools.combinations(range(n_classes), 2):
+        mask = (y == i) | (y == j)
+        xs = x[mask]
+        y_pm1 = np.where(y[mask] == i, 1.0, -1.0)
+        w, b = train_binary(xs, y_pm1, c_reg=c_reg, steps=steps)
+        ws.append(w)
+        bs.append(b)
+        pairs.append((i, j))
+    return SvmModel("ovo", n_classes, np.stack(ws), np.asarray(bs), pairs)
+
+
+# ---------------------------------------------------------------------------
+# float inference (reference; quantized inference lives in quantize/ref)
+# ---------------------------------------------------------------------------
+
+
+def predict_float(model: SvmModel, x: np.ndarray) -> np.ndarray:
+    scores = x @ model.weights.T + model.biases  # [N, K]
+    if model.strategy == "ovr":
+        return np.argmax(scores, axis=1).astype(np.int32)
+    votes = np.zeros((x.shape[0], model.n_classes), dtype=np.int32)
+    for k, (i, j) in enumerate(model.pairs):
+        pos = scores[:, k] >= 0.0
+        votes[pos, i] += 1
+        votes[~pos, j] += 1
+    return np.argmax(votes, axis=1).astype(np.int32)
+
+
+def accuracy(pred: np.ndarray, y: np.ndarray) -> float:
+    return float(np.mean(pred == y))

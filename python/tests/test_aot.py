@@ -1,0 +1,87 @@
+"""Artifact-consistency tests: if `make artifacts` has run, the emitted
+JSON/HLO must be mutually consistent (these are the files the Rust side
+trusts)."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    return json.load(open(ART / "manifest.json"))
+
+
+def test_manifest_covers_all_30_configs():
+    m = _manifest()
+    assert len(m["configs"]) == 30
+    for ds in ["bs", "derm", "iris", "seeds", "v3"]:
+        for strat in ["ovr", "ovo"]:
+            for bits in [4, 8, 16]:
+                assert f"{ds}_{strat}_w{bits}" in m["configs"]
+
+
+def test_all_referenced_files_exist():
+    m = _manifest()
+    for cfg in m["configs"].values():
+        assert (ART / cfg["weights"]).exists()
+        assert (ART / cfg["golden"]).exists()
+        for rel in cfg["hlo"].values():
+            assert (ART / rel).exists()
+    for d in m["datasets"].values():
+        assert (ART / d["file"]).exists()
+
+
+def test_golden_consistent_with_weights():
+    """Recompute golden scores from the weights JSON: the two files must
+    encode the same model."""
+    m = _manifest()
+    for key in ["iris_ovr_w4", "derm_ovo_w16", "bs_ovr_w8"]:
+        cfg = m["configs"][key]
+        w = json.load(open(ART / cfg["weights"]))
+        g = json.load(open(ART / cfg["golden"]))
+        W = np.array(w["weights"], np.int64)
+        b = np.array(w["biases"], np.int64)
+        x = np.array(g["x_q"], np.int64)
+        scores = x @ W.T + 15 * b
+        np.testing.assert_array_equal(scores, np.array(g["scores"], np.int64))
+
+
+def test_hlo_artifacts_have_full_constants():
+    """Regression test for the xla_extension-0.5.1 elided-literal trap."""
+    for p in (ART / "hlo").glob("*.hlo.txt"):
+        text = p.read_text()
+        assert "constant({...})" not in text, p.name
+        assert "{ ... }" not in text, p.name
+
+
+def test_metrics_match_manifest_accuracy():
+    m = _manifest()
+    metrics = json.load(open(ART / "metrics.json"))
+    for key, cfg in m["configs"].items():
+        assert abs(metrics[key]["accuracy"] - cfg["accuracy"]) < 1e-12
+
+
+def test_weight_ranges_fit_declared_bits():
+    m = _manifest()
+    for key, cfg in m["configs"].items():
+        w = json.load(open(ART / cfg["weights"]))
+        qmax = (1 << (w["bits"] - 1)) - 1
+        assert np.abs(np.array(w["weights"])).max() <= qmax, key
+        assert np.abs(np.array(w["biases"])).max() <= qmax, key
+
+
+def test_datasets_quantized_inputs_in_range():
+    m = _manifest()
+    for d in m["datasets"].values():
+        data = json.load(open(ART / d["file"]))
+        x = np.array(data["x_q_test"])
+        assert x.min() >= 0 and x.max() <= 15
+        assert len(data["y_test"]) == data["n_test"]

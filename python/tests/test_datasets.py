@@ -1,0 +1,92 @@
+"""Dataset substrate tests: shapes, normalisation, determinism, and the
+exactness of the Balance Scale generation."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+
+
+@pytest.mark.parametrize("name", D.DATASET_NAMES)
+def test_shapes_and_split(name):
+    ds = D.load(name)
+    expect = {
+        "bs": (625, 4, 3),
+        "derm": (366, 34, 6),
+        "iris": (150, 4, 3),
+        "seeds": (210, 7, 3),
+        "v3": (310, 6, 3),
+    }[name]
+    n, f, c = expect
+    assert ds.n_train + ds.n_test == n
+    assert ds.n_features == f
+    assert ds.n_classes == c
+    # 80/20 split
+    assert abs(ds.n_train - round(0.8 * n)) <= 1
+    assert ds.x_train.shape == (ds.n_train, f)
+    assert ds.y_test.shape == (ds.n_test,)
+
+
+@pytest.mark.parametrize("name", D.DATASET_NAMES)
+def test_normalised_to_unit_interval(name):
+    ds = D.load(name)
+    for x in (ds.x_train, ds.x_test):
+        assert x.min() >= 0.0
+        assert x.max() <= 1.0
+    # train set spans the full range per feature (min-max normalisation)
+    assert np.allclose(ds.x_train.min(axis=0), 0.0)
+    assert np.allclose(ds.x_train.max(axis=0), 1.0)
+
+
+@pytest.mark.parametrize("name", D.DATASET_NAMES)
+def test_all_classes_present_in_both_splits(name):
+    ds = D.load(name)
+    assert set(np.unique(ds.y_train)) == set(range(ds.n_classes))
+    assert set(np.unique(ds.y_test)) <= set(range(ds.n_classes))
+
+
+def test_deterministic_generation():
+    a = D.load("iris")
+    b = D.load("iris")
+    assert np.array_equal(a.x_train, b.x_train)
+    assert np.array_equal(a.y_test, b.y_test)
+
+
+def test_balance_scale_is_exact():
+    """BS is not synthetic-approximate: it IS the UCI dataset (the UCI
+    file itself is generated from the torque rule)."""
+    ds = D.balance_scale()
+    n = ds.n_train + ds.n_test
+    assert n == 625
+    # class distribution of the real dataset: L=288, B=49, R=288
+    y = np.concatenate([ds.y_train, ds.y_test])
+    counts = np.bincount(y, minlength=3)
+    assert counts[0] == 288
+    assert counts[1] == 49
+    assert counts[2] == 288
+
+
+def test_balance_scale_rule_holds():
+    """Reconstruct the torque rule from the normalised features."""
+    ds = D.balance_scale()
+    # denormalise: features were 1..5 min-max mapped to [0,1]
+    x = ds.x_train * 4 + 1
+    lw, ldist, rw, rdist = x[:, 0], x[:, 1], x[:, 2], x[:, 3]
+    left, right = lw * ldist, rw * rdist
+    expect = np.where(left > right, 0, np.where(left == right, 1, 2))
+    assert np.array_equal(expect.astype(np.int32), ds.y_train)
+
+
+def test_unknown_dataset_raises():
+    with pytest.raises(KeyError):
+        D.load("nope")
+
+
+def test_derm_ordinal_grid():
+    """The 33 clinical attributes of the derm generator live on the
+    real dataset's 0..3 ordinal grid (before normalisation)."""
+    ds = D.dermatology_like()
+    # after min-max normalisation an ordinal grid has ≤ 4 distinct values
+    for j in range(ds.n_features - 1):
+        distinct = np.unique(np.concatenate([ds.x_train[:, j], ds.x_test[:, j]]))
+        assert len(distinct) <= 4, f"feature {j} has {len(distinct)} levels"

@@ -1,0 +1,115 @@
+"""Layer-1 Pallas PE kernel vs the pure-jnp oracle (ref.py), including
+hypothesis sweeps over shapes, precisions and values — the CORE
+correctness signal of the compile path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, svm_pe
+
+
+def _rand(rng, b, k, f, bits):
+    qmax = (1 << (bits - 1)) - 1
+    x = rng.integers(0, 16, size=(b, f)).astype(np.int32)
+    w = rng.integers(-qmax, qmax + 1, size=(k, f)).astype(np.int32)
+    bias = rng.integers(-qmax, qmax + 1, size=(k,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_pe_scores_match_ref(bits):
+    rng = np.random.default_rng(bits)
+    x, w, b = _rand(rng, 37, 5, 11, bits)
+    got = svm_pe.pe_scores(x, w, b, bits=bits)
+    want = ref.scores_ref(x, w, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_fused_argmax_matches_ref(bits):
+    rng = np.random.default_rng(100 + bits)
+    x, w, b = _rand(rng, 50, 7, 6, bits)
+    scores, ids = svm_pe.pe_scores_argmax(x, w, b, bits=bits)
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(ref.scores_ref(x, w, b)))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref.ovr_predict_ref(x, w, b)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 130),
+    k=st.integers(1, 16),
+    f=st.integers(1, 35),
+    bits=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pe_scores_hypothesis_sweep(b, k, f, bits, seed):
+    """Shape/precision sweep: any (batch, classifiers, features) combo —
+    including batches that don't divide the block size — must be
+    bit-exact against the oracle."""
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, k, f, bits)
+    got = svm_pe.pe_scores(x, w, bias, bits=bits, block_b=32)
+    want = ref.scores_ref(x, w, bias)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 70),
+    k=st.integers(2, 10),
+    bits=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_argmax_first_max_semantics(b, k, bits, seed):
+    """Ties must resolve to the FIRST maximum (hardware strict-greater
+    update) — force ties by duplicating classifier rows."""
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, k, 4, bits)
+    # duplicate classifier 0 at the end: a guaranteed tie candidate
+    w = jnp.concatenate([w, w[:1]], axis=0)
+    bias = jnp.concatenate([bias, bias[:1]])
+    _, ids = svm_pe.pe_scores_argmax(x, w, bias, bits=bits)
+    want = np.argmax(np.asarray(ref.scores_ref(x, w, bias)), axis=1)
+    np.testing.assert_array_equal(np.asarray(ids), want)
+
+
+def test_extreme_values_no_overflow():
+    """Worst case: F=35 features at 15 with 16-bit full-scale weights
+    stays far inside int32 (the accumulator width argument, DESIGN §8)."""
+    f = 35
+    x = jnp.full((4, f), 15, jnp.int32)
+    w = jnp.full((3, f), 32767, jnp.int32)
+    b = jnp.full((3,), 32767, jnp.int32)
+    got = np.asarray(svm_pe.pe_scores(x, w, b, bits=16))
+    expect = f * 15 * 32767 + 15 * 32767
+    assert (got == expect).all()
+    assert expect < 2**31 - 1
+
+
+def test_negative_weight_sign_magnitude_path():
+    """Directed case for the sign-magnitude module: w = -1 has magnitude
+    nibbles (1, 0, 0, 0) and must subtract."""
+    x = jnp.asarray([[7]], jnp.int32)
+    w = jnp.asarray([[-1]], jnp.int32)
+    b = jnp.asarray([0], jnp.int32)
+    for bits in (4, 8, 16):
+        got = np.asarray(svm_pe.pe_scores(x, w, b, bits=bits))
+        assert got[0, 0] == -7, f"bits={bits}"
+
+
+def test_ovo_votes_ref_tally():
+    scores = jnp.asarray([[5, -3, 0]], jnp.int32)  # pairs (0,1),(0,2),(1,2)
+    pi = jnp.asarray([0, 0, 1], jnp.int32)
+    pj = jnp.asarray([1, 2, 2], jnp.int32)
+    votes = np.asarray(ref.ovo_votes_ref(scores, pi, pj, 3))
+    # +5 -> vote 0; -3 -> vote 2; 0 (>=0) -> vote 1
+    np.testing.assert_array_equal(votes, [[1, 1, 1]])
+
+
+def test_vmem_estimate_is_tiny():
+    """The paper-scale worst case (derm OvO 16-bit) uses a few hundred
+    KiB of VMEM per block — far under a 16 MiB budget (DESIGN.md §9)."""
+    est = svm_pe.vmem_estimate_bytes(svm_pe.DEFAULT_BLOCK_B, 35, 15)
+    assert est < 1 << 20

@@ -1,0 +1,75 @@
+"""Layer-2 model graph tests: predictions vs the numpy spec, OvO voting,
+and the AOT lowering invariants (HLO text properties the Rust loader
+depends on)."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import model as M
+from compile import quantize as Q
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def v3_models():
+    ds = D.load("v3")
+    ovr = T.train_ovr(ds.x_train, ds.y_train, 3, steps=800)
+    ovo = T.train_ovo(ds.x_train, ds.y_train, 3, steps=800)
+    return ds, ovr, ovo
+
+
+@pytest.mark.parametrize("strategy", ["ovr", "ovo"])
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_l2_matches_numpy_spec(v3_models, strategy, bits):
+    ds, ovr, ovo = v3_models
+    qm = Q.quantize_model(ovr if strategy == "ovr" else ovo, bits)
+    x_q = Q.quantize_inputs(ds.x_test)
+    pred, scores = M.predict_np(qm, x_q)
+    np.testing.assert_array_equal(pred, Q.predict_int(qm, x_q))
+    np.testing.assert_array_equal(scores.astype(np.int64), Q.scores_int(qm, x_q))
+
+
+def test_ovo_graph_vote_tally(v3_models):
+    """The OvO graph's argmax must implement first-max vote resolution."""
+    ds, _, ovo = v3_models
+    qm = Q.quantize_model(ovo, 8)
+    x_q = Q.quantize_inputs(ds.x_test[:40])
+    pred, scores = M.predict_np(qm, x_q)
+    # recompute votes in numpy
+    votes = np.zeros((len(x_q), qm.n_classes), np.int32)
+    for k, (i, j) in enumerate(qm.pairs):
+        pos = scores[:, k] >= 0
+        votes[pos, i] += 1
+        votes[~pos, j] += 1
+    np.testing.assert_array_equal(pred, np.argmax(votes, axis=1))
+
+
+@pytest.mark.parametrize("batch", [1, 64])
+def test_hlo_text_lowering(v3_models, batch):
+    ds, ovr, _ = v3_models
+    qm = Q.quantize_model(ovr, 4)
+    hlo = M.lower_to_hlo_text(qm, batch)
+    # single s32 parameter of the right shape
+    assert f"s32[{batch},{qm.n_features}]" in hlo
+    assert "ENTRY" in hlo
+    # the load-bearing property: no elided literals (xla 0.5.1 would
+    # silently fill `constant({...})` with iota garbage)
+    assert "constant({...})" not in hlo
+    assert "{ ... }" not in hlo
+
+
+def test_hlo_constants_contain_weights(v3_models):
+    """The classifier weights must be baked into the artifact verbatim."""
+    ds, ovr, _ = v3_models
+    qm = Q.quantize_model(ovr, 8)
+    hlo = M.lower_to_hlo_text(qm, 1)
+    # pick a distinctive weight value and find it in some constant body
+    w = int(qm.weights[0, 0])
+    assert str(w) in hlo
+
+
+def test_lowering_is_deterministic(v3_models):
+    _, ovr, _ = v3_models
+    qm = Q.quantize_model(ovr, 16)
+    assert M.lower_to_hlo_text(qm, 1) == M.lower_to_hlo_text(qm, 1)

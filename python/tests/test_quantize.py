@@ -1,0 +1,89 @@
+"""Quantization pipeline tests: ranges, scale sharing, monotonicity."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import quantize as Q
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def iris_model():
+    ds = D.load("iris")
+    return ds, T.train_ovr(ds.x_train, ds.y_train, 3, steps=1500)
+
+
+def test_input_quantization_range():
+    x = np.array([[0.0, 0.5, 1.0], [0.26, 0.74, 0.99]])
+    q = Q.quantize_inputs(x)
+    assert q.dtype == np.int32
+    assert q.min() >= 0 and q.max() <= 15
+    assert q[0, 0] == 0 and q[0, 2] == 15
+    assert q[0, 1] == 8  # round(7.5) banker's -> 8? np.round(7.5)=8.0? np.round uses
+    # banker's rounding: np.round(7.5) == 8.0 is FALSE (it's 8? -> 7.5 rounds to 8? no: to even = 8)
+    # 0.5*15 = 7.5 -> nearest even is 8
+    assert q[1, 0] == 4  # 3.9 -> 4
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_weight_range_symmetric(iris_model, bits):
+    _, m = iris_model
+    qm = Q.quantize_model(m, bits)
+    qmax = (1 << (bits - 1)) - 1
+    assert np.abs(qm.weights).max() <= qmax
+    assert np.abs(qm.biases).max() <= qmax
+    # the largest coefficient maps to full scale
+    assert max(np.abs(qm.weights).max(), np.abs(qm.biases).max()) == qmax
+
+
+def test_shared_scale_across_classifiers(iris_model):
+    """OvR argmax requires one scale for the whole model."""
+    _, m = iris_model
+    qm = Q.quantize_model(m, 8)
+    # dequantised weights approximate originals under the SINGLE scale
+    deq = qm.weights / qm.scale
+    assert np.abs(deq - m.weights).max() <= 0.5 / qm.scale + 1e-9
+
+
+def test_bits_rejected():
+    _, m = (None, T.SvmModel("ovr", 2, np.zeros((2, 2)), np.zeros(2), [(0, 0), (1, 1)]))
+    with pytest.raises(ValueError):
+        Q.quantize_model(m, 5)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_16bit_close_to_float(iris_model, bits):
+    ds, m = iris_model
+    qm = Q.quantize_model(m, bits)
+    x_q = Q.quantize_inputs(ds.x_test)
+    acc_q = T.accuracy(Q.predict_int(qm, x_q), ds.y_test)
+    acc_f = T.accuracy(T.predict_float(m, ds.x_test), ds.y_test)
+    # 16-bit must track float closely; 4-bit may lose a few points
+    tol = {4: 0.15, 8: 0.06, 16: 0.03}[bits]
+    assert abs(acc_q - acc_f) <= tol
+
+
+def test_scores_monotone_with_float(iris_model):
+    """Integer scores are a positive monotone map of float scores, so
+    per-classifier rankings are preserved up to quantization error."""
+    ds, m = iris_model
+    qm = Q.quantize_model(m, 16)
+    x_q = Q.quantize_inputs(ds.x_test[:20])
+    s_int = Q.scores_int(qm, x_q).astype(np.float64)
+    s_float = ds.x_test[:20] @ m.weights.T + m.biases
+    # correlation per classifier should be ~1
+    for k in range(3):
+        c = np.corrcoef(s_int[:, k], s_float[:, k])[0, 1]
+        assert c > 0.97, f"classifier {k}: corr {c}"
+
+
+def test_predict_int_tie_first_max():
+    qm = Q.QuantModel(
+        strategy="ovr", n_classes=2, bits=4,
+        weights=np.array([[1], [1]], np.int32),
+        biases=np.array([0, 0], np.int32),
+        pairs=[(0, 0), (1, 1)], scale=1.0,
+    )
+    pred = Q.predict_int(qm, np.array([[5]], np.int32))
+    assert pred[0] == 0  # tie -> first

@@ -1,0 +1,75 @@
+"""From-scratch LinearSVC-equivalent training tests."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import train as T
+
+
+def _blobs(n=60, f=3, margin=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.normal(-margin / 2, 0.4, size=(n // 2, f))
+    x1 = rng.normal(margin / 2, 0.4, size=(n // 2, f))
+    x = np.vstack([x0, x1])
+    y = np.array([-1.0] * (n // 2) + [1.0] * (n // 2))
+    return x, y
+
+
+def test_binary_separable_converges():
+    x, y = _blobs()
+    w, b = T.train_binary(x, y, steps=1500)
+    pred = np.sign(x @ w + b)
+    assert np.mean(pred == y) == 1.0
+
+
+def test_binary_margin_property():
+    """On separable data the squared-hinge solution leaves most points
+    outside the margin (|f(x)| >= 1)."""
+    x, y = _blobs(margin=4.0)
+    w, b = T.train_binary(x, y, steps=3000)
+    margins = y * (x @ w + b)
+    assert np.mean(margins >= 0.99) > 0.9
+
+
+def test_ovr_model_shape():
+    ds = D.load("iris")
+    m = T.train_ovr(ds.x_train, ds.y_train, 3, steps=500)
+    assert m.weights.shape == (3, 4)
+    assert m.biases.shape == (3,)
+    assert m.pairs == [(0, 0), (1, 1), (2, 2)]
+    assert m.strategy == "ovr"
+
+
+def test_ovo_model_shape():
+    ds = D.load("derm")
+    m = T.train_ovo(ds.x_train, ds.y_train, 6, steps=200)
+    assert m.weights.shape == (15, 34)  # C(6,2)
+    assert len(m.pairs) == 15
+    assert m.pairs[0] == (0, 1)
+    assert m.pairs[-1] == (4, 5)
+    assert all(i < j for i, j in m.pairs)
+
+
+@pytest.mark.parametrize("name,floor", [("iris", 0.9), ("derm", 0.95), ("seeds", 0.85)])
+def test_reasonable_accuracy(name, floor):
+    ds = D.load(name)
+    m = T.train_ovr(ds.x_train, ds.y_train, ds.n_classes)
+    acc = T.accuracy(T.predict_float(m, ds.x_test), ds.y_test)
+    assert acc >= floor, f"{name}: {acc}"
+
+
+def test_ovo_votes_tie_break_first_max():
+    # two classes with one classifier: degenerate but well-defined
+    m = T.SvmModel("ovo", 2, np.array([[0.0]]), np.array([0.0]), [(0, 1)])
+    pred = T.predict_float(m, np.array([[1.0]]))
+    # score 0 counts as >= 0 -> vote class 0
+    assert pred[0] == 0
+
+
+def test_training_is_deterministic():
+    x, y = _blobs(seed=3)
+    w1, b1 = T.train_binary(x, y, steps=500)
+    w2, b2 = T.train_binary(x, y, steps=500)
+    assert np.allclose(w1, w2)
+    assert b1 == b2

@@ -1,0 +1,124 @@
+//! Design-choice ablations (DESIGN.md §4, ABL-1/ABL-2):
+//!
+//!  * ABL-1 — PE multiplier count: fewer 4×4 multipliers serialise each
+//!    calc pass (ceil(8/lanes) accelerator cycles instead of 1), but cut
+//!    accelerator gates/power.  Latency-energy-area trade-off table.
+//!  * ABL-2 — memory-latency sensitivity: sweep the FE memory model
+//!    (read/write/overhead) and report how the headline speedup moves —
+//!    the paper's Dermatology observation ("execution latency is mainly
+//!    dominated by memory access delays") quantified.
+//!  * ABL-3 — program shape: unrolled vs looped accelerated program.
+//!
+//!     cargo bench --bench bench_ablation
+
+use flexsvm::power::FlexicModel;
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&artifacts_root())?;
+    let power = FlexicModel::paper();
+
+    // ---- ABL-1: PE lane count --------------------------------------------
+    println!("### ABL-1: PE multiplier count (iris_ovr_w4, one inference)");
+    let entry = manifest.config("iris_ovr_w4")?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set("iris")?;
+    let x = &test.x_q[0];
+    let mut runner =
+        ProgramRunner::accelerated(&model, TimingConfig::flexic(), ProgramOpts::default())?;
+    let (_, stats) = runner.run_sample(x)?;
+    // calc ops = cfu_ops - create_env - K res ops
+    let k = model.weights.len() as u64;
+    let calc_ops = stats.cfu_ops - 1 - k;
+    let mut t = Table::new(["PE lanes", "accel cyc/inf", "accel gates", "accel mW", "energy/inf (mJ)", "rel. latency"]);
+    let base_total = stats.total();
+    for lanes in [8u64, 4, 2, 1] {
+        // each calc pass serialises to ceil(8/lanes) accelerator cycles
+        let extra = calc_ops * (8 / lanes - 1);
+        let total = base_total + extra;
+        // gate model: multipliers scale, the rest of the accelerator stays
+        let full_gates = 2000u64;
+        let mult_gates = 8 * 90;
+        let gates = full_gates - mult_gates + lanes * 90;
+        let accel_mw = power.accel_mw_scaled(gates);
+        let energy = (power.serv_mw + accel_mw) * (total as f64 / power.clock_hz);
+        t.row([
+            lanes.to_string(),
+            total.to_string(),
+            gates.to_string(),
+            format!("{accel_mw:.3}"),
+            format!("{energy:.3}"),
+            format!("{:.3}", total as f64 / base_total as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(8 lanes = the paper's design point; 1 lane ~ a bespoke serial MAC)\n");
+
+    // ---- ABL-2: memory latency sweep --------------------------------------
+    println!("### ABL-2: memory-latency sensitivity (speedup of accel vs baseline)");
+    let mut t2 = Table::new(["mem model (rd/wr/ovh)", "iris_ovr_w4", "derm_ovo_w16"]);
+    let sweeps: &[(&str, u64, u64, u64)] = &[
+        ("ideal (1/1/0)", 1, 1, 0),
+        ("half paper (23/24/32)", 23, 24, 32),
+        ("paper (46/47/64)", 46, 47, 64),
+        ("2x paper (92/94/128)", 92, 94, 128),
+        ("4x paper (184/188/256)", 184, 188, 256),
+    ];
+    for &(name, r, w, o) in sweeps {
+        let timing = TimingConfig { mem_read: r, mem_write: w, mem_overhead: o, ..TimingConfig::flexic() };
+        let mut cells = vec![name.to_string()];
+        for key in ["iris_ovr_w4", "derm_ovo_w16"] {
+            let entry = manifest.config(key)?;
+            let model = manifest.model(entry)?;
+            let test = manifest.test_set(&entry.dataset)?;
+            let x = &test.x_q[0];
+            let bc = ProgramRunner::baseline(&model, timing)?.run_sample(x)?.1.total();
+            let ac = ProgramRunner::accelerated(&model, timing, ProgramOpts::default())?
+                .run_sample(x)?
+                .1
+                .total();
+            cells.push(format!("{:.1}x", bc as f64 / ac as f64));
+        }
+        t2.row(cells);
+    }
+    print!("{}", t2.render());
+    println!("(speedup shrinks as memory dominates — the paper's Dermatology effect)\n");
+
+    // ---- ABL-3: unrolled vs looped accelerated program --------------------
+    println!("### ABL-3: program shape (accel cycles/inference)");
+    let mut t3 = Table::new(["config", "unrolled", "looped", "unroll gain"]);
+    for key in ["iris_ovr_w4", "bs_ovo_w8", "derm_ovr_w4", "derm_ovo_w16"] {
+        let entry = manifest.config(key)?;
+        let model = manifest.model(entry)?;
+        let test = manifest.test_set(&entry.dataset)?;
+        let x = &test.x_q[0];
+        let un = ProgramRunner::accelerated(
+            &model,
+            TimingConfig::flexic(),
+            ProgramOpts { unroll_limit: usize::MAX },
+        )?
+        .run_sample(x)?
+        .1
+        .total();
+        let lo = ProgramRunner::accelerated(
+            &model,
+            TimingConfig::flexic(),
+            ProgramOpts { unroll_limit: 0 },
+        )?
+        .run_sample(x)?
+        .1
+        .total();
+        t3.row([
+            key.to_string(),
+            un.to_string(),
+            lo.to_string(),
+            format!("{:.2}x", lo as f64 / un as f64),
+        ]);
+    }
+    print!("{}", t3.render());
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Accelerator-model and PJRT micro-benchmarks: PE passes, full
+//! accelerator op streams, and compiled-graph execution by batch size.
+//!
+//!     cargo bench --bench bench_accel
+
+use flexsvm::accel::svm::SvmAccel;
+use flexsvm::accel::{pe, Cfu};
+use flexsvm::isa::svm_ops;
+use flexsvm::runtime::Engine;
+use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::svm::pack;
+use flexsvm::util::benchkit::Bench;
+use flexsvm::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg32::seeded(0xbe);
+
+    // --- PE datapath ---
+    let b = Bench::new("PE datapath (nibble-decomposed MAC)");
+    for mode in [pe::Mode::W4, pe::Mode::W8, pe::Mode::W16] {
+        let qmax = (1i32 << (mode.bits() - 1)) - 1;
+        let pairs: Vec<(u32, u32)> = (0..1024)
+            .map(|_| {
+                let xs: Vec<u32> = (0..mode.lanes()).map(|_| rng.below(16)).collect();
+                let ws: Vec<i32> =
+                    (0..mode.lanes()).map(|_| rng.range_i32(-qmax, qmax)).collect();
+                (pe::pack_features(&xs, mode), pe::pack_weights(&ws, mode))
+            })
+            .collect();
+        let mut sink = 0i64;
+        let s = b.case(&format!("pe::compute x1024 ({mode:?})"), 10, 200, || {
+            sink = pairs.iter().map(|&(a, w)| pe::compute(a, w, mode)).sum();
+        });
+        std::hint::black_box(sink);
+        b.metric(
+            &format!("{mode:?} PE passes"),
+            1024.0 / s.median.as_secs_f64() / 1e6,
+            "Mpasses/s",
+        );
+    }
+
+    // --- full accelerator instruction stream ---
+    let b2 = Bench::new("SvmAccel op stream (calc4 x 8 + res4)");
+    let mut accel = SvmAccel::new();
+    let ops: Vec<(u32, u32)> = (0..8)
+        .map(|_| {
+            let xs: Vec<u32> = (0..8).map(|_| rng.below(16)).collect();
+            let ws: Vec<i32> = (0..8).map(|_| rng.range_i32(-7, 7)).collect();
+            (pe::pack_features(&xs, pe::Mode::W4), pe::pack_weights(&ws, pe::Mode::W4))
+        })
+        .collect();
+    let s = b2.case("classifier pass (9 ops)", 100, 1000, || {
+        accel.execute(svm_ops::CREATE_ENV, 0, 0).unwrap();
+        for &(a, w) in &ops {
+            accel.execute(svm_ops::SV_CALC4, a, w).unwrap();
+        }
+        accel.execute(svm_ops::SV_RES4, 0, 0).unwrap();
+    });
+    b2.metric("accelerator ops", 10.0 / s.median.as_secs_f64() / 1e6, "Mops/s");
+
+    // --- packing ---
+    let b3 = Bench::new("operand packing (host side)");
+    let manifest = Manifest::load(&artifacts_root())?;
+    let entry = manifest.config("derm_ovo_w16")?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set("derm")?;
+    b3.case("feature_words derm w16", 10, 1000, || {
+        std::hint::black_box(pack::feature_words(&test.x_q[0], 16));
+    });
+    b3.case("all_weight_words derm ovo w16", 2, 50, || {
+        std::hint::black_box(pack::all_weight_words(&model));
+    });
+
+    // --- PJRT compiled-graph execution ---
+    let b4 = Bench::new("PJRT execution (AOT HLO on CPU client)");
+    let mut engine = Engine::new()?;
+    for key in ["iris_ovr_w4", "derm_ovo_w16"] {
+        let entry = manifest.config(key)?;
+        let test = manifest.test_set(&entry.dataset)?;
+        for batch in [1usize, 64] {
+            engine.load(&manifest, entry, batch)?;
+            let cfg = engine.get(key, batch)?;
+            let mut flat = Vec::new();
+            for i in 0..batch {
+                flat.extend_from_slice(&test.x_q[i % test.len()]);
+            }
+            let s = b4.case(&format!("{key} b{batch}"), 5, 100, || {
+                std::hint::black_box(cfg.execute(&flat).unwrap());
+            });
+            b4.metric(
+                &format!("{key} b{batch} throughput"),
+                batch as f64 / s.median.as_secs_f64(),
+                "inf/s",
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! SERV simulator performance (the L3 hot path of every Table-I run):
+//! simulated cycles/s and instructions/s over representative programs.
+//!
+//!     cargo bench --bench bench_serv
+
+use flexsvm::isa::reg::*;
+use flexsvm::isa::Asm;
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::soc::Soc;
+use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::util::benchkit::Bench;
+
+/// A compute-heavy loop: N iterations of add/xor/shift/branch.
+fn alu_loop(n: i32) -> Asm {
+    let mut a = Asm::new(0);
+    a.li(T0, n);
+    a.li(T1, 0);
+    a.label("loop");
+    a.add(T1, T1, T0);
+    a.xori(T1, T1, 0x5a);
+    a.slli(T2, T1, 3);
+    a.srli(T2, T2, 3);
+    a.addi(T0, T0, -1);
+    a.bne(T0, ZERO, "loop");
+    a.mv(A0, T1);
+    a.ecall();
+    a
+}
+
+/// A memory-heavy loop: load/store ping-pong.
+fn mem_loop(n: i32) -> Asm {
+    let mut a = Asm::new(0);
+    a.la(S0, "buf");
+    a.li(T0, n);
+    a.label("loop");
+    a.lw(T1, S0, 0);
+    a.addi(T1, T1, 3);
+    a.sw(S0, T1, 0);
+    a.lw(T1, S0, 4);
+    a.sw(S0, T1, 4);
+    a.addi(T0, T0, -1);
+    a.bne(T0, ZERO, "loop");
+    a.lw(A0, S0, 0);
+    a.ecall();
+    a.label("buf");
+    a.zeros(2);
+    a
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("SERV simulator throughput");
+
+    for (name, asm) in [("alu_loop_5k", alu_loop(5000)), ("mem_loop_5k", mem_loop(5000))] {
+        let image = asm.assemble_bytes()?;
+        let mut cycles = 0u64;
+        let mut instrs = 0u64;
+        let s = b.case(name, 2, 10, || {
+            let mut soc = Soc::new(&image, TimingConfig::flexic());
+            let r = soc.run(100_000_000).unwrap();
+            cycles = r.stats.total();
+            instrs = r.stats.instret;
+        });
+        b.metric(
+            &format!("{name} simulated"),
+            cycles as f64 / s.median.as_secs_f64() / 1e6,
+            "Mcyc/s",
+        );
+        b.metric(
+            &format!("{name} retired"),
+            instrs as f64 / s.median.as_secs_f64() / 1e6,
+            "Minstr/s",
+        );
+    }
+
+    // end-to-end inference programs (what bench_table1 spends time in)
+    let manifest = Manifest::load(&artifacts_root())?;
+    let b2 = Bench::new("inference program simulation");
+    for key in ["iris_ovr_w4", "derm_ovo_w16"] {
+        let entry = manifest.config(key)?;
+        let model = manifest.model(entry)?;
+        let test = manifest.test_set(&entry.dataset)?;
+        let x = &test.x_q[0];
+
+        let mut base = ProgramRunner::baseline(&model, TimingConfig::flexic())?;
+        let mut cyc = 0u64;
+        let s = b2.case(&format!("{key} baseline 1 inf"), 1, 10, || {
+            cyc = base.run_sample(x).unwrap().1.total();
+        });
+        b2.metric(&format!("{key} baseline"), cyc as f64 / s.median.as_secs_f64() / 1e6, "Mcyc/s");
+
+        let mut acc = ProgramRunner::accelerated(&model, TimingConfig::flexic(), ProgramOpts::default())?;
+        b2.case(&format!("{key} accel 1 inf"), 1, 50, || {
+            acc.run_sample(x).unwrap();
+        });
+    }
+    Ok(())
+}

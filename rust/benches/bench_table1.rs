@@ -1,0 +1,66 @@
+//! Bench target for Table I (experiment T1 in DESIGN.md §4): regenerates
+//! every row of the paper's evaluation on the cycle-accurate SoC and
+//! prints paper-vs-measured speedups.
+//!
+//!     cargo bench --bench bench_table1
+
+use flexsvm::report::{run_table1, table1, Table1Opts};
+use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::util::Table;
+
+/// Paper Table I speedups, keyed like our configs (for shape comparison).
+const PAPER_SPEEDUP: &[(&str, f64)] = &[
+    ("bs_ovr_w4", 31.3), ("bs_ovr_w8", 23.5), ("bs_ovr_w16", 16.5),
+    ("bs_ovo_w4", 15.7), ("bs_ovo_w8", 13.5), ("bs_ovo_w16", 11.0),
+    ("derm_ovr_w4", 4.9), ("derm_ovr_w8", 2.3), ("derm_ovr_w16", 1.6),
+    ("derm_ovo_w4", 3.1), ("derm_ovo_w8", 1.9), ("derm_ovo_w16", 1.5),
+    ("iris_ovr_w4", 36.2), ("iris_ovr_w8", 27.7), ("iris_ovr_w16", 19.7),
+    ("iris_ovo_w4", 32.6), ("iris_ovo_w8", 28.2), ("iris_ovo_w16", 22.7),
+    ("seeds_ovr_w4", 33.7), ("seeds_ovr_w8", 25.0), ("seeds_ovr_w16", 14.0),
+    ("seeds_ovo_w4", 36.4), ("seeds_ovo_w8", 30.4), ("seeds_ovo_w16", 14.4),
+    ("v3_ovr_w4", 48.6), ("v3_ovr_w8", 36.5), ("v3_ovr_w16", 23.6),
+    ("v3_ovo_w4", 39.5), ("v3_ovo_w8", 33.5), ("v3_ovo_w16", 16.4),
+];
+
+fn paper_speedup(key: &str) -> Option<f64> {
+    PAPER_SPEEDUP.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&artifacts_root())?;
+    let t0 = std::time::Instant::now();
+    let rows = run_table1(&manifest, &Table1Opts::default())?;
+    let wall = t0.elapsed();
+
+    println!("=== Table I (measured on the cycle-accurate SERV SoC) ===");
+    print!("{}", table1::render(&rows, true));
+
+    println!("=== paper-vs-measured speedup shape ===");
+    let mut t = Table::new(["config", "paper (x)", "ours (x)", "ratio"]);
+    let mut same_direction = 0usize;
+    for r in &rows {
+        if let Some(p) = paper_speedup(&r.key) {
+            t.row([
+                r.key.clone(),
+                format!("{p:.1}"),
+                format!("{:.1}", r.speedup),
+                format!("{:.2}", r.speedup / p),
+            ]);
+            if r.speedup > 1.0 {
+                same_direction += 1;
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "\naccelerator wins in {}/{} configs (paper: 30/30); total bench wall time {:.1}s",
+        same_direction,
+        rows.len(),
+        wall.as_secs_f64()
+    );
+
+    // machine-readable output for EXPERIMENTS.md
+    std::fs::write("artifacts/table1_measured.json", table1::to_json(&rows).to_string())?;
+    println!("wrote artifacts/table1_measured.json");
+    Ok(())
+}

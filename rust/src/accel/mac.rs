@@ -1,0 +1,86 @@
+//! Demo CFU #2 (funct7 = 2): a 32×32 multiply-accumulate unit.
+//!
+//! Demonstrates the framework's extensibility claim (paper §III-C:
+//! "other non-conflicting values (e.g., funct7 = 2, 3, etc.) could be
+//! assigned to additional custom accelerators").  This is the generic
+//! MAC SERV lacks (no M extension): op 0 accumulates rs1*rs2, op 1
+//! reads the accumulator, op 2 clears it.
+
+use anyhow::{bail, Result};
+
+use super::{Cfu, CfuOutput};
+
+pub const OP_MAC: u8 = 0;
+pub const OP_READ: u8 = 1;
+pub const OP_CLEAR: u8 = 2;
+
+/// Compute cycles for one 32×32 multiply on the iterative (shift-add)
+/// hardware multiplier this CFU models: one partial product per cycle.
+const MUL_CYCLES: u64 = 32;
+
+#[derive(Debug, Default)]
+pub struct MacAccel {
+    acc: u32,
+    pub ops: u64,
+}
+
+impl MacAccel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Cfu for MacAccel {
+    fn name(&self) -> &'static str {
+        "mac32"
+    }
+
+    fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        self.ops += 1;
+        Ok(match funct3 {
+            OP_MAC => {
+                // low 32 bits of the product are sign-agnostic
+                self.acc = self.acc.wrapping_add(rs1.wrapping_mul(rs2));
+                CfuOutput { value: 0, compute_cycles: MUL_CYCLES }
+            }
+            OP_READ => CfuOutput { value: self.acc, compute_cycles: 1 },
+            OP_CLEAR => {
+                self.acc = 0;
+                CfuOutput { value: 0, compute_cycles: 1 }
+            }
+            other => bail!("mac32: unknown funct3 {other}"),
+        })
+    }
+
+    fn nand2_equivalents(&self) -> u64 {
+        // iterative multiplier (32-bit adder + control) + accumulator
+        32 * 9 + 32 * 4 + 64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_accumulates_signed_products() {
+        let mut m = MacAccel::new();
+        m.execute(OP_MAC, 7, (-3i32) as u32, ).unwrap();
+        m.execute(OP_MAC, 2, 10).unwrap();
+        let v = m.execute(OP_READ, 0, 0).unwrap().value;
+        assert_eq!(v as i32, -21 + 20);
+        m.execute(OP_CLEAR, 0, 0).unwrap();
+        assert_eq!(m.execute(OP_READ, 0, 0).unwrap().value, 0);
+    }
+
+    #[test]
+    fn wrapping_behaviour() {
+        let mut m = MacAccel::new();
+        m.execute(OP_MAC, u32::MAX, 2).unwrap();
+        assert_eq!(m.execute(OP_READ, 0, 0).unwrap().value, u32::MAX - 1);
+    }
+}

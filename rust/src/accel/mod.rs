@@ -1,0 +1,151 @@
+//! The ML-accelerator framework (paper contribution 1, §III).
+//!
+//! The paper's framework lets any developer attach a custom co-processor
+//! to the SERV core by implementing a small RTL interface template: a
+//! `accel_valid`/`accel_ready` handshake carrying `rs1`, `rs2` and the
+//! `funct3` operation id (Fig. 1).  This module is the software twin of
+//! that template:
+//!
+//!  * [`Cfu`] is the interface a co-processor implements — the analogue
+//!    of the RTL template the framework ships.
+//!  * [`CfuBank`] is the decoder-side routing: R-type instructions with
+//!    funct7 ∉ {0x00, 0x20} are dispatched to the CFU registered under
+//!    that funct7 value (Fig. 4 — SERV only uses 0x00/0x20 internally,
+//!    so funct7 = 1, 2, 3, … are free; each CFU gets up to 8 operations
+//!    via funct3).
+//!
+//! The paper's SVM accelerator ([`svm::SvmAccel`], funct7 = 1) is one
+//! instance; [`mac::MacAccel`] (funct7 = 2) and [`popcount::PopcountAccel`]
+//! (funct7 = 3) demonstrate the claimed extensibility.
+
+pub mod mac;
+pub mod pe;
+pub mod popcount;
+pub mod rtl_template;
+pub mod signmag;
+pub mod svm;
+
+use anyhow::{bail, Result};
+
+/// Result of one CFU operation — what the handshake returns to SERV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CfuOutput {
+    /// Value forwarded to `rd` (ignored when the instruction's rd = x0,
+    /// e.g. the SV_Calc* family in Fig. 8).
+    pub value: u32,
+    /// Accelerator-internal compute cycles between `accel_valid` and
+    /// `accel_ready` (the 32-cycle operand/result transfers are charged
+    /// by the SoC handshake, not here).
+    pub compute_cycles: u64,
+}
+
+/// The co-processor interface template (paper Fig. 1).
+///
+/// Implementations must be deterministic: the cycle-accurate SoC replays
+/// operations when tracing.
+pub trait Cfu: Send {
+    /// Human-readable name (reports/traces).
+    fn name(&self) -> &'static str;
+
+    /// Reset all internal registers (power-on or explicit re-init).
+    fn reset(&mut self);
+
+    /// Execute one operation.  `funct3` selects among up to 8 ops;
+    /// `rs1`/`rs2` are the 32-bit operands serially received from SERV.
+    fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput>;
+
+    /// Combinational gate-count estimate (NAND2-equivalents) for the
+    /// FlexIC area model; 0 if unknown.
+    fn nand2_equivalents(&self) -> u64 {
+        0
+    }
+}
+
+/// Decoder-side CFU routing by funct7 (1..=31, excluding 0x20).
+pub struct CfuBank {
+    slots: Vec<(u8, Box<dyn Cfu>)>,
+}
+
+impl Default for CfuBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CfuBank {
+    pub fn new() -> Self {
+        CfuBank { slots: Vec::new() }
+    }
+
+    /// Register a CFU under a funct7 value.  funct7 0x00 and 0x20 are
+    /// SERV's own ALU encodings and are rejected (paper §III-C).
+    pub fn register(&mut self, funct7: u8, cfu: Box<dyn Cfu>) -> Result<()> {
+        if funct7 == 0x00 || funct7 == 0x20 || funct7 > 0x7f {
+            bail!("funct7 {funct7:#x} is reserved by SERV or out of range");
+        }
+        if self.slots.iter().any(|(f, _)| *f == funct7) {
+            bail!("funct7 {funct7:#x} already registered");
+        }
+        self.slots.push((funct7, cfu));
+        Ok(())
+    }
+
+    pub fn get_mut(&mut self, funct7: u8) -> Option<&mut dyn Cfu> {
+        self.slots
+            .iter_mut()
+            .find(|(f, _)| *f == funct7)
+            .map(|(_, c)| c.as_mut() as &mut dyn Cfu)
+    }
+
+    pub fn get(&self, funct7: u8) -> Option<&dyn Cfu> {
+        self.slots.iter().find(|(f, _)| *f == funct7).map(|(_, c)| c.as_ref() as &dyn Cfu)
+    }
+
+    pub fn reset_all(&mut self) {
+        for (_, c) in &mut self.slots {
+            c.reset();
+        }
+    }
+
+    pub fn registered(&self) -> Vec<(u8, &'static str)> {
+        self.slots.iter().map(|(f, c)| (*f, c.name())).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Cfu for Echo {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+        fn reset(&mut self) {}
+        fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+            Ok(CfuOutput { value: rs1 ^ rs2 ^ funct3 as u32, compute_cycles: 1 })
+        }
+    }
+
+    #[test]
+    fn register_and_dispatch() {
+        let mut bank = CfuBank::new();
+        bank.register(1, Box::new(Echo)).unwrap();
+        let out = bank.get_mut(1).unwrap().execute(3, 0xf0, 0x0f).unwrap();
+        assert_eq!(out.value, 0xf0 ^ 0x0f ^ 3);
+        assert!(bank.get_mut(2).is_none());
+    }
+
+    #[test]
+    fn reserved_funct7_rejected() {
+        let mut bank = CfuBank::new();
+        assert!(bank.register(0x00, Box::new(Echo)).is_err());
+        assert!(bank.register(0x20, Box::new(Echo)).is_err());
+        bank.register(1, Box::new(Echo)).unwrap();
+        assert!(bank.register(1, Box::new(Echo)).is_err(), "double registration");
+    }
+}

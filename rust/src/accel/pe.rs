@@ -1,0 +1,182 @@
+//! The Processing Engine (paper Fig. 7): eight parallel 4×4-bit unsigned
+//! multipliers with a shift-mux recombination stage.
+//!
+//! One `SV_Calc*` instruction delivers two packed 32-bit operands:
+//!
+//! | mode | rs1 (features, 4-bit unsigned each) | rs2 (weights, signed)    | pairs/instr |
+//! |------|-------------------------------------|--------------------------|-------------|
+//! | W4   | 8 features in nibbles 0..7          | 8 × 4-bit                | 8           |
+//! | W8   | 4 features in nibbles 0..3          | 4 × 8-bit                | 4           |
+//! | W16  | 2 features in nibbles 0..1          | 2 × 16-bit               | 2           |
+//!
+//! In every mode all eight multipliers are busy (8 = pairs × nibbles),
+//! so the PE pass costs one accelerator cycle.  Each weight is converted
+//! to sign-magnitude; nibble products are shifted by the mux stage
+//! (<< 0/4/8/12) and added to or subtracted from the running sum.
+
+use super::signmag::{nibbles, sign_extend, to_sign_magnitude};
+
+/// Weight-precision mode, selected by funct3 (paper Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    W4,
+    W8,
+    W16,
+}
+
+impl Mode {
+    pub fn bits(self) -> u8 {
+        match self {
+            Mode::W4 => 4,
+            Mode::W8 => 8,
+            Mode::W16 => 16,
+        }
+    }
+
+    /// Feature/weight pairs consumed per instruction.
+    pub fn lanes(self) -> usize {
+        match self {
+            Mode::W4 => 8,
+            Mode::W8 => 4,
+            Mode::W16 => 2,
+        }
+    }
+
+    /// Magnitude nibbles per weight (= multipliers per lane).
+    pub fn nibbles_per_weight(self) -> usize {
+        (self.bits() / 4) as usize
+    }
+}
+
+/// Number of physical 4×4 multipliers in the PE (Fig. 7).
+pub const NUM_MULTIPLIERS: usize = 8;
+
+/// Unpack the packed feature word: lane `l` is the 4-bit unsigned value
+/// in nibble `l`.
+pub fn unpack_features(rs1: u32, mode: Mode) -> Vec<u32> {
+    (0..mode.lanes()).map(|l| (rs1 >> (4 * l)) & 0xf).collect()
+}
+
+/// Unpack the packed weight word: lane `l` is the `bits`-wide signed
+/// field at offset `l * bits`.
+pub fn unpack_weights(rs2: u32, mode: Mode) -> Vec<i32> {
+    let bits = mode.bits() as u32;
+    (0..mode.lanes())
+        .map(|l| sign_extend((rs2 >> (bits * l as u32)) & ((1u64 << bits) - 1) as u32, mode.bits()))
+        .collect()
+}
+
+/// Pack features (values 0..15) into an rs1 word for the given mode.
+pub fn pack_features(xs: &[u32], mode: Mode) -> u32 {
+    assert!(xs.len() <= mode.lanes(), "too many features for one word");
+    xs.iter().enumerate().fold(0u32, |acc, (l, &x)| {
+        assert!(x <= 0xf, "feature {x} exceeds 4 bits");
+        acc | (x << (4 * l))
+    })
+}
+
+/// Pack signed weights into an rs2 word for the given mode.
+pub fn pack_weights(ws: &[i32], mode: Mode) -> u32 {
+    assert!(ws.len() <= mode.lanes(), "too many weights for one word");
+    let bits = mode.bits() as u32;
+    let mask = ((1u64 << bits) - 1) as u32;
+    ws.iter().enumerate().fold(0u32, |acc, (l, &w)| {
+        let min = -(1i32 << (bits - 1));
+        let max = (1i32 << (bits - 1)) - 1;
+        assert!((min..=max).contains(&w), "weight {w} does not fit {bits} bits");
+        acc | (((w as u32) & mask) << (bits * l as u32))
+    })
+}
+
+/// One PE pass: the multiply-accumulate contribution of a packed
+/// operand pair.  This is the bit-exact model of the Fig. 7 datapath.
+pub fn compute(rs1: u32, rs2: u32, mode: Mode) -> i64 {
+    let xs = unpack_features(rs1, mode);
+    let ws = unpack_weights(rs2, mode);
+    let npw = mode.nibbles_per_weight();
+    let mut sum: i64 = 0;
+    let mut multipliers_used = 0;
+    for (x, w) in xs.iter().zip(ws.iter()) {
+        let (neg, mag) = to_sign_magnitude(*w, mode.bits());
+        for (k, nib) in nibbles(mag, npw).enumerate() {
+            // a 4×4 unsigned multiplier lane + the shift-mux stage
+            let product = (x * nib) as i64; // ≤ 15*15 = 225
+            let shifted = product << (4 * k);
+            sum += if neg { -shifted } else { shifted };
+            multipliers_used += 1;
+        }
+    }
+    debug_assert!(multipliers_used <= NUM_MULTIPLIERS);
+    sum
+}
+
+/// Accelerator-internal cycles for one PE pass: every mode fills all
+/// eight multipliers exactly once.
+pub fn compute_cycles(_mode: Mode) -> u64 {
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    /// The nibble-decomposed PE must equal the direct dot product.
+    #[test]
+    fn pe_matches_dot_product() {
+        let mut rng = Pcg32::seeded(0xbeef);
+        for mode in [Mode::W4, Mode::W8, Mode::W16] {
+            let qmax = (1i32 << (mode.bits() - 1)) - 1;
+            for _ in 0..1000 {
+                let lanes = mode.lanes();
+                let xs: Vec<u32> = (0..lanes).map(|_| rng.below(16)).collect();
+                let ws: Vec<i32> = (0..lanes).map(|_| rng.range_i32(-qmax, qmax)).collect();
+                let rs1 = pack_features(&xs, mode);
+                let rs2 = pack_weights(&ws, mode);
+                let expect: i64 =
+                    xs.iter().zip(ws.iter()).map(|(&x, &w)| x as i64 * w as i64).sum();
+                assert_eq!(compute(rs1, rs2, mode), expect, "mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Pcg32::seeded(2);
+        for mode in [Mode::W4, Mode::W8, Mode::W16] {
+            let qmax = (1i32 << (mode.bits() - 1)) - 1;
+            for _ in 0..200 {
+                let lanes = mode.lanes();
+                let xs: Vec<u32> = (0..lanes).map(|_| rng.below(16)).collect();
+                let ws: Vec<i32> = (0..lanes).map(|_| rng.range_i32(-qmax, qmax)).collect();
+                assert_eq!(unpack_features(pack_features(&xs, mode), mode), xs);
+                assert_eq!(unpack_weights(pack_weights(&ws, mode), mode), ws);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_words_zero_padded() {
+        // fewer pairs than lanes: remaining lanes multiply by 0
+        let rs1 = pack_features(&[3, 5], Mode::W4);
+        let rs2 = pack_weights(&[2, -1], Mode::W4);
+        assert_eq!(compute(rs1, rs2, Mode::W4), 3 * 2 - 5);
+    }
+
+    #[test]
+    fn extreme_weights() {
+        // most-negative representable weights still decompose correctly
+        for (mode, w) in [(Mode::W8, -127), (Mode::W16, -32767)] {
+            let rs1 = pack_features(&[15], mode);
+            let rs2 = pack_weights(&[w], mode);
+            assert_eq!(compute(rs1, rs2, mode), 15 * w as i64);
+        }
+    }
+
+    #[test]
+    fn single_cycle_all_modes() {
+        for mode in [Mode::W4, Mode::W8, Mode::W16] {
+            assert_eq!(compute_cycles(mode), 1);
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Demo CFU #3 (funct7 = 3): single-cycle popcount — the primitive a
+//! binary-neural-network classifier needs (paper ref [4] deploys BNNs
+//! on flexible substrates).  op 0: popcount(rs1) + rs2 (fused
+//! accumulate form, so a BNN inner loop is one instruction per word).
+
+use anyhow::{bail, Result};
+
+use super::{Cfu, CfuOutput};
+
+pub const OP_POPCNT_ACC: u8 = 0;
+pub const OP_XNOR_POPCNT: u8 = 1;
+
+#[derive(Debug, Default)]
+pub struct PopcountAccel;
+
+impl PopcountAccel {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Cfu for PopcountAccel {
+    fn name(&self) -> &'static str {
+        "popcount"
+    }
+
+    fn reset(&mut self) {}
+
+    fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        Ok(match funct3 {
+            OP_POPCNT_ACC => {
+                CfuOutput { value: rs1.count_ones() + rs2, compute_cycles: 1 }
+            }
+            OP_XNOR_POPCNT => {
+                // BNN dot product: popcount(xnor(a, b))
+                CfuOutput { value: (!(rs1 ^ rs2)).count_ones(), compute_cycles: 1 }
+            }
+            other => bail!("popcount: unknown funct3 {other}"),
+        })
+    }
+
+    fn nand2_equivalents(&self) -> u64 {
+        // adder tree of 32 inputs
+        32 * 5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_accumulate() {
+        let mut p = PopcountAccel::new();
+        assert_eq!(p.execute(OP_POPCNT_ACC, 0xff, 10).unwrap().value, 18);
+        assert_eq!(p.execute(OP_POPCNT_ACC, 0, 0).unwrap().value, 0);
+    }
+
+    #[test]
+    fn xnor_popcount() {
+        let mut p = PopcountAccel::new();
+        assert_eq!(p.execute(OP_XNOR_POPCNT, 0xffff_ffff, 0xffff_ffff).unwrap().value, 32);
+        assert_eq!(p.execute(OP_XNOR_POPCNT, 0, 0xffff_ffff).unwrap().value, 0);
+    }
+}

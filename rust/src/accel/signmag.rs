@@ -1,0 +1,73 @@
+//! 2's-complement → sign-magnitude conversion module (paper Fig. 6).
+//!
+//! The PE multiplies 4-bit *unsigned* quantities, so each signed weight
+//! is decomposed into an unsigned magnitude (split into 4-bit nibbles
+//! that map onto the 4×4 multipliers) plus a sign flag that selects
+//! add-or-subtract at the accumulator.
+
+/// Sign flag + unsigned magnitude of a two's-complement value of the
+/// given width.  `bits` ∈ {4, 8, 16}; `w` must fit the width.
+pub fn to_sign_magnitude(w: i32, bits: u8) -> (bool, u32) {
+    debug_assert!(matches!(bits, 4 | 8 | 16));
+    let min = -(1i32 << (bits - 1));
+    let max = (1i32 << (bits - 1)) - 1;
+    debug_assert!(
+        (min..=max).contains(&w),
+        "weight {w} does not fit {bits}-bit two's complement"
+    );
+    (w < 0, w.unsigned_abs())
+}
+
+/// Split a magnitude into `n` 4-bit nibbles, least-significant first —
+/// one per 4×4 multiplier lane.
+pub fn nibbles(mag: u32, n: usize) -> impl Iterator<Item = u32> {
+    (0..n).map(move |k| (mag >> (4 * k)) & 0xf)
+}
+
+/// Sign-extend the low `bits` of a raw field to i32 (unpacking side).
+pub fn sign_extend(raw: u32, bits: u8) -> i32 {
+    let shift = 32 - bits as u32;
+    ((raw << shift) as i32) >> shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn decomposition_reconstructs_value() {
+        let mut rng = Pcg32::seeded(11);
+        for bits in [4u8, 8, 16] {
+            let qmax = (1i32 << (bits - 1)) - 1;
+            for _ in 0..500 {
+                let w = rng.range_i32(-qmax, qmax);
+                let (neg, mag) = to_sign_magnitude(w, bits);
+                let n = (bits / 4) as usize;
+                let rebuilt: u32 =
+                    nibbles(mag, n).enumerate().map(|(k, nib)| nib << (4 * k)).sum();
+                let signed = if neg { -(rebuilt as i64) } else { rebuilt as i64 };
+                assert_eq!(signed, w as i64, "bits={bits} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_bounds() {
+        let (_, mag) = to_sign_magnitude(-128 + 1, 8); // 127
+        assert!(nibbles(mag, 2).all(|n| n <= 0xf));
+        let (neg, mag) = to_sign_magnitude(-32767, 16);
+        assert!(neg);
+        assert_eq!(mag, 32767);
+        assert_eq!(nibbles(mag, 4).collect::<Vec<_>>(), vec![0xf, 0xf, 0xf, 0x7]);
+    }
+
+    #[test]
+    fn sign_extend_fields() {
+        assert_eq!(sign_extend(0xf, 4), -1);
+        assert_eq!(sign_extend(0x7, 4), 7);
+        assert_eq!(sign_extend(0x80, 8), -128);
+        assert_eq!(sign_extend(0xffff, 16), -1);
+        assert_eq!(sign_extend(0x7fff, 16), 32767);
+    }
+}

@@ -1,0 +1,237 @@
+//! The paper's SVM co-processor (Fig. 6): PE + control registers +
+//! the Fig. 8 instruction set, behind the [`Cfu`] framework interface.
+//!
+//! Internal registers (paper §IV-A):
+//!   * `cur_sum` — running weighted sum of the classifier in flight;
+//!   * `cur_id`  — id of that classifier;
+//!   * `max_sum`/`max_id` — running argmax across classifiers (OvR),
+//!     updated concurrently with the PE;
+//!   * `max_valid` — one flip-flop marking whether any classifier has
+//!     finalised since `Create_Env` (a minor micro-architectural
+//!     refinement over the paper, which resets `max_sum` to zero: the
+//!     flag makes the first `SV_Res*` unconditionally seed the maximum,
+//!     so the argmax is exact even when every score is negative; the
+//!     paper itself notes "minor deviations in ... design choices may
+//!     exist", §III).
+//!
+//! The `SV_Res*` result word (paper §IV-A): bit 31 = sign of the
+//! classifier's `cur_sum` (what OvO consumes), bits 7..0 = `max_id`
+//! (what OvR consumes after the final classifier).
+
+use anyhow::{bail, Result};
+
+use crate::isa::svm_ops;
+
+use super::pe::{self, Mode};
+use super::{Cfu, CfuOutput};
+
+/// Accumulator width guard: features ≤ 15, |weights| < 2^15, F ≤ 34 + bias
+/// keeps |score| < 2^24, far inside i32 — checked at runtime anyway.
+#[derive(Debug, Clone, Default)]
+pub struct SvmAccel {
+    cur_sum: i64,
+    cur_id: u32,
+    max_sum: i64,
+    max_id: u32,
+    max_valid: bool,
+    /// lifetime op counter (reports)
+    pub ops: u64,
+}
+
+impl SvmAccel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observable register state (used by tests and the cycle trace).
+    pub fn registers(&self) -> (i64, u32, i64, u32) {
+        (self.cur_sum, self.cur_id, self.max_sum, self.max_id)
+    }
+
+    fn calc(&mut self, rs1: u32, rs2: u32, mode: Mode) -> CfuOutput {
+        self.cur_sum += pe::compute(rs1, rs2, mode);
+        debug_assert!(
+            self.cur_sum.abs() < (1 << 31),
+            "cur_sum overflowed the 32-bit accumulator"
+        );
+        CfuOutput { value: 0, compute_cycles: pe::compute_cycles(mode) }
+    }
+
+    fn res(&mut self) -> CfuOutput {
+        let score = self.cur_sum;
+        // concurrent argmax update (strictly-greater => first max wins)
+        if !self.max_valid || score > self.max_sum {
+            self.max_sum = score;
+            self.max_id = self.cur_id;
+            self.max_valid = true;
+        }
+        // unified 32-bit result: sign in MSB, class id in low 8 bits
+        let sign_bit = if score < 0 { 1u32 << 31 } else { 0 };
+        let value = sign_bit | (self.max_id & 0xff);
+        self.cur_sum = 0;
+        self.cur_id = self.cur_id.wrapping_add(1);
+        CfuOutput { value, compute_cycles: 1 }
+    }
+}
+
+impl Cfu for SvmAccel {
+    fn name(&self) -> &'static str {
+        "svm-accelerator"
+    }
+
+    fn reset(&mut self) {
+        self.cur_sum = 0;
+        self.cur_id = 0;
+        self.max_sum = 0;
+        self.max_id = 0;
+        self.max_valid = false;
+    }
+
+    fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        self.ops += 1;
+        Ok(match funct3 {
+            svm_ops::SV_CALC4 => self.calc(rs1, rs2, Mode::W4),
+            svm_ops::SV_CALC8 => self.calc(rs1, rs2, Mode::W8),
+            svm_ops::SV_CALC16 => self.calc(rs1, rs2, Mode::W16),
+            svm_ops::SV_RES4 | svm_ops::SV_RES8 | svm_ops::SV_RES16 => self.res(),
+            svm_ops::CREATE_ENV => {
+                self.reset();
+                CfuOutput { value: 0, compute_cycles: 1 }
+            }
+            other => bail!("svm accelerator: unknown funct3 {other}"),
+        })
+    }
+
+    /// NAND2-equivalent estimate for the FlexIC area model: eight 4×4
+    /// multipliers (~90 gates each), the sign-magnitude converters,
+    /// shift-mux stage, a 32-bit adder/subtractor and four registers
+    /// with compare logic — calibrated so the total is consistent with
+    /// the paper's 5.82 mm² at Gen3 FlexIC density (see power/).
+    fn nand2_equivalents(&self) -> u64 {
+        let multipliers = 8 * 90;
+        let signmag = 4 * 40;
+        let shift_mux = 8 * 24;
+        let accumulator = 32 * 9; // adder + sub select
+        let registers = 4 * 32 * 4 + 32 * 6; // 4 regs + comparator
+        multipliers + signmag + shift_mux + accumulator + registers
+    }
+}
+
+/// Extract the OvO sign from an `SV_Res*` result word (bit 31 set =
+/// negative score = vote for class j of the pair).
+pub fn result_sign_negative(result: u32) -> bool {
+    result >> 31 == 1
+}
+
+/// Extract the OvR running-argmax class id from an `SV_Res*` result.
+pub fn result_class_id(result: u32) -> u32 {
+    result & 0xff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::svm_ops::*;
+
+    fn calc4(a: &mut SvmAccel, xs: &[u32], ws: &[i32]) {
+        let rs1 = pe::pack_features(xs, Mode::W4);
+        let rs2 = pe::pack_weights(ws, Mode::W4);
+        a.execute(SV_CALC4, rs1, rs2).unwrap();
+    }
+
+    #[test]
+    fn ovr_argmax_sequence() {
+        let mut a = SvmAccel::new();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        // classifier 0: score 10
+        calc4(&mut a, &[5], &[2]);
+        let r0 = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert_eq!(result_class_id(r0), 0);
+        assert!(!result_sign_negative(r0));
+        // classifier 1: score 30 -> takes over
+        calc4(&mut a, &[10], &[3]);
+        let r1 = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert_eq!(result_class_id(r1), 1);
+        // classifier 2: score 20 -> max stays 1
+        calc4(&mut a, &[10], &[2]);
+        let r2 = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert_eq!(result_class_id(r2), 1);
+    }
+
+    #[test]
+    fn all_negative_scores_argmax_exact() {
+        // the max_valid flag: argmax of [-10, -3, -7] must be 1
+        let mut a = SvmAccel::new();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        for (i, s) in [(-10i32, 0usize), (-3, 1), (-7, 2)].iter().zip(0..) {
+            let _ = s;
+            calc4(&mut a, &[1], &[i.0.clamp(-7, 7)]);
+            // use multiple calcs to reach scores beyond 4-bit range
+            while a.registers().0 != i.0 as i64 {
+                let remaining = i.0 as i64 - a.registers().0;
+                let step = remaining.clamp(-7, 7) as i32;
+                calc4(&mut a, &[1], &[step]);
+            }
+            a.execute(SV_RES4, 0, 0).unwrap();
+        }
+        let (_, _, max_sum, max_id) = a.registers();
+        assert_eq!(max_sum, -3);
+        assert_eq!(max_id, 1);
+    }
+
+    #[test]
+    fn ovo_sign_extraction() {
+        let mut a = SvmAccel::new();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        calc4(&mut a, &[3], &[-5]); // score -15
+        let r = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert!(result_sign_negative(r));
+        calc4(&mut a, &[3], &[5]); // score +15
+        let r = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert!(!result_sign_negative(r));
+        // zero counts as non-negative (votes class i)
+        let r = a.execute(SV_RES4, 0, 0).unwrap().value;
+        assert!(!result_sign_negative(r));
+    }
+
+    #[test]
+    fn res_resets_cur_sum_and_increments_id() {
+        let mut a = SvmAccel::new();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        calc4(&mut a, &[7, 2], &[1, 1]);
+        assert_eq!(a.registers().0, 9);
+        a.execute(SV_RES4, 0, 0).unwrap();
+        let (cur_sum, cur_id, _, _) = a.registers();
+        assert_eq!(cur_sum, 0);
+        assert_eq!(cur_id, 1);
+    }
+
+    #[test]
+    fn create_env_resets_everything() {
+        let mut a = SvmAccel::new();
+        calc4(&mut a, &[7], &[7]);
+        a.execute(SV_RES4, 0, 0).unwrap();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        assert_eq!(a.registers(), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn multi_precision_accumulation() {
+        let mut a = SvmAccel::new();
+        a.execute(CREATE_ENV, 0, 0).unwrap();
+        let rs1 = pe::pack_features(&[9, 4], Mode::W16);
+        let rs2 = pe::pack_weights(&[1000, -2000], Mode::W16);
+        a.execute(SV_CALC16, rs1, rs2).unwrap();
+        assert_eq!(a.registers().0, 9 * 1000 - 4 * 2000);
+        let rs1 = pe::pack_features(&[1, 1, 1, 1], Mode::W8);
+        let rs2 = pe::pack_weights(&[100, 100, -50, 0], Mode::W8);
+        a.execute(SV_CALC8, rs1, rs2).unwrap();
+        assert_eq!(a.registers().0, 1000 + 150);
+    }
+
+    #[test]
+    fn unknown_funct3_rejected() {
+        let mut a = SvmAccel::new();
+        assert!(a.execute(0b011, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Serving metrics: latency histogram + per-config counters
+//! (hand-rolled; no external metrics crates offline).
+
+use std::time::Duration;
+
+/// Log-scaled latency histogram, microsecond resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i counts samples with value < BOUNDS[i].
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+/// Bucket upper bounds in µs: 1, 2, 5, 10, 20, 50, ... up to ~100 s.
+fn bounds() -> Vec<u64> {
+    let mut b = Vec::new();
+    let mut base = 1u64;
+    while base <= 100_000_000 {
+        for m in [1, 2, 5] {
+            b.push(base * m);
+        }
+        base *= 10;
+    }
+    b
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; bounds().len() + 1], total: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = bounds().iter().position(|&b| us < b).unwrap_or(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile (upper bound of the bucket containing it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        let bs = bounds();
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bs.get(i).copied().unwrap_or(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Per-config serving counters.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_samples: u64,
+    pub latency: Option<Histogram>,
+}
+
+impl ConfigMetrics {
+    pub fn new() -> Self {
+        ConfigMetrics { latency: Some(Histogram::new()), ..Default::default() }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_samples as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for us in [3u64, 7, 12, 40, 90, 900, 15_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99, "p50 {p50} p99 {p99}");
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 15_000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let mut m = ConfigMetrics::new();
+        m.batches = 4;
+        m.batched_samples = 10;
+        assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,349 @@
+//! Inference coordinator: request router + dynamic batcher + serving
+//! loop over the PJRT engine (Python is never on this path).
+//!
+//! Shape (vLLM-router-like, scaled to this paper's workload): client
+//! threads submit `(config, features)` requests through a bounded
+//! channel; the dispatcher thread routes them into per-config queues,
+//! flushes a queue when it reaches `batch_max` or its oldest request
+//! exceeds `linger`, executes the batch on the engine, and answers
+//! each request through its response channel.  The PJRT client is not
+//! `Send`, so the engine lives on the dispatcher thread — batching,
+//! not parallel dispatch, is where CPU-PJRT throughput comes from.
+//!
+//! A `Native` backend (same protocol, pure-Rust integer inference) is
+//! provided for differential testing and as the baseline the serving
+//! bench compares against.
+
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Engine;
+use crate::svm::model::Manifest;
+use crate::svm::{infer, QuantModel};
+
+use metrics::ConfigMetrics;
+
+/// Which compute backend serves the batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled HLO on the PJRT CPU client.
+    Pjrt,
+    /// Native Rust integer inference (differential testing / baseline).
+    Native,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOpts {
+    pub backend: Backend,
+    /// Max samples per flushed batch (≤ the compiled batch size).
+    pub batch_max: usize,
+    /// Compiled batch size to load (from the manifest's batch set).
+    pub compiled_batch: usize,
+    /// How long a request may wait for batchmates.
+    pub linger: Duration,
+    /// Bound of the ingress queue (backpressure).
+    pub queue_cap: usize,
+    /// Flush as soon as the ingress channel drains (EXPERIMENTS.md §Perf,
+    /// L3 iteration 5): whatever arrived together is batched together,
+    /// and nobody waits out the linger against an idle channel.  The
+    /// linger then only bounds worst-case wait under sustained load.
+    pub eager_flush: bool,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            backend: Backend::Pjrt,
+            batch_max: 64,
+            compiled_batch: 64,
+            linger: Duration::from_millis(2),
+            queue_cap: 1024,
+            eager_flush: true,
+        }
+    }
+}
+
+/// A single inference answer.
+#[derive(Debug, Clone, Copy)]
+pub struct Response {
+    pub pred: i32,
+    /// Queue + execute time observed by the server.
+    pub latency: Duration,
+    /// How many samples shared the executed batch.
+    pub batch_size: usize,
+}
+
+struct Request {
+    key: String,
+    features: Vec<i32>,
+    enqueued: Instant,
+    resp: mpsc::SyncSender<Result<Response>>,
+}
+
+enum Msg {
+    Req(Request),
+    Snapshot(mpsc::SyncSender<HashMap<String, ConfigMetrics>>),
+    Shutdown,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Msg>,
+}
+
+impl Client {
+    /// Blocking single inference.
+    pub fn infer(&self, key: &str, features: &[i32]) -> Result<Response> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Req(Request {
+                key: key.to_string(),
+                features: features.to_vec(),
+                enqueued: Instant::now(),
+                resp: tx,
+            }))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().context("server dropped the request")?
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> Result<HashMap<String, ConfigMetrics>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().context("server dropped the snapshot request")
+    }
+}
+
+/// Running server; dropping the handle shuts the dispatcher down.
+pub struct Server {
+    tx: mpsc::SyncSender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server for the given config keys.
+    pub fn start(artifacts_root: std::path::PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
+        if opts.batch_max == 0 || opts.batch_max > opts.compiled_batch {
+            bail!("batch_max must be in 1..=compiled_batch");
+        }
+        let (tx, rx) = mpsc::sync_channel::<Msg>(opts.queue_cap);
+        // fail fast on bad configs before spawning
+        let manifest = Manifest::load(&artifacts_root)?;
+        for k in &keys {
+            manifest.config(k)?;
+        }
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let join = std::thread::Builder::new()
+            .name("flexsvm-dispatcher".into())
+            .spawn(move || dispatcher(manifest, keys, opts, rx, ready_tx))?;
+        ready_rx.recv().context("dispatcher died during init")??;
+        Ok(Server { tx, join: Some(join) })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+enum Exec {
+    Pjrt(Engine, usize),
+    Native(HashMap<String, QuantModel>),
+}
+
+impl Exec {
+    fn run(&self, key: &str, xs: &[Vec<i32>]) -> Result<Vec<i32>> {
+        match self {
+            Exec::Pjrt(engine, batch) => engine.predict(key, *batch, xs),
+            Exec::Native(models) => {
+                let m = models.get(key).ok_or_else(|| anyhow!("no model {key}"))?;
+                Ok(xs.iter().map(|x| infer::predict(m, x)).collect())
+            }
+        }
+    }
+}
+
+fn dispatcher(
+    manifest: Manifest,
+    keys: Vec<String>,
+    opts: ServerOpts,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    // init: compile/load everything up front (AOT — no first-request jank)
+    let init = (|| -> Result<Exec> {
+        match opts.backend {
+            Backend::Pjrt => {
+                let mut engine = Engine::new()?;
+                for k in &keys {
+                    let entry = manifest.config(k)?;
+                    engine.load(&manifest, entry, opts.compiled_batch)?;
+                }
+                Ok(Exec::Pjrt(engine, opts.compiled_batch))
+            }
+            Backend::Native => {
+                let mut models = HashMap::new();
+                for k in &keys {
+                    let entry = manifest.config(k)?;
+                    models.insert(k.clone(), manifest.model(entry)?);
+                }
+                Ok(Exec::Native(models))
+            }
+        }
+    })();
+    let exec = match init {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut queues: HashMap<String, Vec<Request>> = HashMap::new();
+    let mut stats: HashMap<String, ConfigMetrics> = HashMap::new();
+
+    let flush = |key: &str, q: &mut Vec<Request>, stats: &mut HashMap<String, ConfigMetrics>| {
+        if q.is_empty() {
+            return;
+        }
+        let pending: Vec<Request> = std::mem::take(q);
+        let xs: Vec<Vec<i32>> = pending.iter().map(|r| r.features.clone()).collect();
+        let result = exec.run(key, &xs);
+        let m = stats.entry(key.to_string()).or_insert_with(ConfigMetrics::new);
+        m.batches += 1;
+        m.batched_samples += pending.len() as u64;
+        match result {
+            Ok(preds) => {
+                for (req, pred) in pending.into_iter().zip(preds) {
+                    let latency = req.enqueued.elapsed();
+                    if let Some(h) = m.latency.as_mut() {
+                        h.record(latency);
+                    }
+                    let _ = req.resp.send(Ok(Response { pred, latency, batch_size: xs.len() }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                for req in pending {
+                    let _ = req.resp.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    };
+
+    loop {
+        // deadline of the oldest pending request across queues
+        let now = Instant::now();
+        let next_deadline = queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| r.enqueued + opts.linger)
+            .min();
+        let timeout = next_deadline
+            .map(|d| d.saturating_duration_since(now))
+            .unwrap_or(Duration::from_millis(50));
+
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(req)) => {
+                // drain everything already in flight so co-arriving
+                // requests land in the same batch
+                let mut pending = vec![Msg::Req(req)];
+                while let Ok(m) = rx.try_recv() {
+                    pending.push(m);
+                }
+                let mut shutdown = false;
+                for msg in pending {
+                    match msg {
+                        Msg::Req(req) => {
+                            if !queues.contains_key(&req.key) && !keys.iter().any(|k| *k == req.key) {
+                                let _ =
+                                    req.resp.send(Err(anyhow!("config {:?} not served", req.key)));
+                                continue;
+                            }
+                            let m =
+                                stats.entry(req.key.clone()).or_insert_with(ConfigMetrics::new);
+                            m.requests += 1;
+                            let q = queues.entry(req.key.clone()).or_default();
+                            q.push(req);
+                            if q.len() >= opts.batch_max {
+                                let key = q[0].key.clone();
+                                let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
+                                flush(&key, &mut taken, &mut stats);
+                            }
+                        }
+                        Msg::Snapshot(tx) => {
+                            let _ = tx.send(stats.clone());
+                        }
+                        Msg::Shutdown => shutdown = true,
+                    }
+                }
+                if opts.eager_flush {
+                    // channel is drained: everything queued goes out now
+                    let due: Vec<String> =
+                        queues.iter().filter(|(_, q)| !q.is_empty()).map(|(k, _)| k.clone()).collect();
+                    for key in due {
+                        let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
+                        flush(&key, &mut taken, &mut stats);
+                    }
+                }
+                if shutdown {
+                    for (key, mut q) in std::mem::take(&mut queues) {
+                        flush(&key, &mut q, &mut stats);
+                    }
+                    return;
+                }
+            }
+            Ok(Msg::Snapshot(tx)) => {
+                let _ = tx.send(stats.clone());
+            }
+            Ok(Msg::Shutdown) => {
+                for (key, mut q) in std::mem::take(&mut queues) {
+                    flush(&key, &mut q, &mut stats);
+                }
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // flush queues whose oldest request exceeded the linger
+                let now = Instant::now();
+                let due: Vec<String> = queues
+                    .iter()
+                    .filter(|(_, q)| {
+                        q.first().map(|r| now >= r.enqueued + opts.linger).unwrap_or(false)
+                    })
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for key in due {
+                    let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
+                    flush(&key, &mut taken, &mut stats);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (key, mut q) in std::mem::take(&mut queues) {
+                    flush(&key, &mut q, &mut stats);
+                }
+                return;
+            }
+        }
+    }
+}
+
+// Integration tests live in rust/tests/coordinator.rs (they need the
+// artifacts on disk for the PJRT backend and exercise Native in-process).

@@ -1,0 +1,206 @@
+//! RV32I (+ custom CFU) instruction decoder.
+//!
+//! This is the software twin of the paper's *modified SERV decoder*
+//! (Fig. 4): a standard R-type word whose funct7 is neither 0x00 nor
+//! 0x20 is dispatched as a `Custom` (accelerator) instruction — the
+//! hardware asserts `acc_op` and forwards `funct3` to the CFU.
+
+use anyhow::{bail, Result};
+
+use super::{AluOp, BranchOp, Instr, LoadOp, StoreOp};
+
+#[inline]
+fn bits(w: u32, hi: u32, lo: u32) -> u32 {
+    (w >> lo) & ((1 << (hi - lo + 1)) - 1)
+}
+
+#[inline]
+fn sign_extend(v: u32, width: u32) -> i32 {
+    let shift = 32 - width;
+    ((v << shift) as i32) >> shift
+}
+
+/// Decode a 32-bit instruction word.
+pub fn decode(w: u32) -> Result<Instr> {
+    let opcode = bits(w, 6, 0);
+    let rd = bits(w, 11, 7) as u8;
+    let funct3 = bits(w, 14, 12) as u8;
+    let rs1 = bits(w, 19, 15) as u8;
+    let rs2 = bits(w, 24, 20) as u8;
+    let funct7 = bits(w, 31, 25) as u8;
+
+    let imm_i = sign_extend(bits(w, 31, 20), 12);
+    let imm_s = sign_extend((bits(w, 31, 25) << 5) | bits(w, 11, 7), 12);
+    let imm_b = sign_extend(
+        (bits(w, 31, 31) << 12) | (bits(w, 7, 7) << 11) | (bits(w, 30, 25) << 5) | (bits(w, 11, 8) << 1),
+        13,
+    );
+    let imm_u = (w & 0xffff_f000) as i32;
+    let imm_j = sign_extend(
+        (bits(w, 31, 31) << 20) | (bits(w, 19, 12) << 12) | (bits(w, 20, 20) << 11) | (bits(w, 30, 21) << 1),
+        21,
+    );
+
+    Ok(match opcode {
+        0b0110111 => Instr::Lui { rd, imm: imm_u },
+        0b0010111 => Instr::Auipc { rd, imm: imm_u },
+        0b1101111 => Instr::Jal { rd, offset: imm_j },
+        0b1100111 => {
+            if funct3 != 0 {
+                bail!("bad JALR funct3 {funct3}");
+            }
+            Instr::Jalr { rd, rs1, offset: imm_i }
+        }
+        0b1100011 => {
+            let op = match funct3 {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => bail!("bad branch funct3 {funct3}"),
+            };
+            Instr::Branch { op, rs1, rs2, offset: imm_b }
+        }
+        0b0000011 => {
+            let op = match funct3 {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => bail!("bad load funct3 {funct3}"),
+            };
+            Instr::Load { op, rd, rs1, offset: imm_i }
+        }
+        0b0100011 => {
+            let op = match funct3 {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => bail!("bad store funct3 {funct3}"),
+            };
+            Instr::Store { op, rs1, rs2, offset: imm_s }
+        }
+        0b0010011 => {
+            let op = match funct3 {
+                0b000 => AluOp::Add,
+                0b001 => {
+                    if funct7 != 0 {
+                        bail!("bad SLLI funct7 {funct7:#x}");
+                    }
+                    AluOp::Sll
+                }
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => match funct7 {
+                    0x00 => AluOp::Srl,
+                    0x20 => AluOp::Sra,
+                    _ => bail!("bad shift funct7 {funct7:#x}"),
+                },
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => unreachable!(),
+            };
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => (rs2 as i32) & 0x1f,
+                _ => imm_i,
+            };
+            Instr::OpImm { op, rd, rs1, imm }
+        }
+        0b0110011 => {
+            // The modified decoder (Fig. 4): funct7 ∉ {0x00, 0x20} → acc_op.
+            match funct7 {
+                0x00 => {
+                    let op = match funct3 {
+                        0b000 => AluOp::Add,
+                        0b001 => AluOp::Sll,
+                        0b010 => AluOp::Slt,
+                        0b011 => AluOp::Sltu,
+                        0b100 => AluOp::Xor,
+                        0b101 => AluOp::Srl,
+                        0b110 => AluOp::Or,
+                        0b111 => AluOp::And,
+                        _ => unreachable!(),
+                    };
+                    Instr::Op { op, rd, rs1, rs2 }
+                }
+                0x20 => {
+                    let op = match funct3 {
+                        0b000 => AluOp::Sub,
+                        0b101 => AluOp::Sra,
+                        _ => bail!("bad OP funct3 {funct3} with funct7=0x20"),
+                    };
+                    Instr::Op { op, rd, rs1, rs2 }
+                }
+                f7 => Instr::Custom { funct7: f7, funct3, rd, rs1, rs2 },
+            }
+        }
+        0b0001111 => Instr::Fence,
+        0b1110011 => match bits(w, 31, 20) {
+            0 => Instr::Ecall,
+            1 => Instr::Ebreak,
+            sys => bail!("unsupported SYSTEM instruction (imm={sys:#x}); CSRs are not implemented in SERV"),
+        },
+        _ => bail!("unknown opcode {opcode:#09b} (word {w:#010x})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::super::reg::*;
+    use super::*;
+
+    /// encode -> decode must be the identity on every instruction form.
+    #[test]
+    fn roundtrip_all_forms() {
+        let cases = vec![
+            Instr::Lui { rd: T0, imm: 0x7ffff << 12 },
+            Instr::Auipc { rd: A0, imm: -4096 },
+            Instr::Jal { rd: RA, offset: -2048 },
+            Instr::Jalr { rd: ZERO, rs1: RA, offset: 0 },
+            Instr::Branch { op: BranchOp::Bgeu, rs1: T0, rs2: T1, offset: 4094 },
+            Instr::Branch { op: BranchOp::Blt, rs1: S0, rs2: S1, offset: -4096 },
+            Instr::Load { op: LoadOp::Lbu, rd: A1, rs1: SP, offset: -1 },
+            Instr::Load { op: LoadOp::Lw, rd: A1, rs1: SP, offset: 2047 },
+            Instr::Store { op: StoreOp::Sh, rs1: SP, rs2: A2, offset: -2048 },
+            Instr::OpImm { op: AluOp::Xor, rd: T2, rs1: T3, imm: -1 },
+            Instr::OpImm { op: AluOp::Sra, rd: T2, rs1: T3, imm: 31 },
+            Instr::OpImm { op: AluOp::Sll, rd: T2, rs1: T3, imm: 1 },
+            Instr::Op { op: AluOp::Sub, rd: S2, rs1: S3, rs2: S4 },
+            Instr::Op { op: AluOp::Sltu, rd: S2, rs1: S3, rs2: S4 },
+            Instr::Custom { funct7: 1, funct3: 7, rd: A0, rs1: A1, rs2: A2 },
+            Instr::Custom { funct7: 3, funct3: 0, rd: ZERO, rs1: A1, rs2: A2 },
+            Instr::Fence,
+            Instr::Ecall,
+            Instr::Ebreak,
+        ];
+        for i in cases {
+            let w = encode(i);
+            let d = decode(w).unwrap_or_else(|e| panic!("decode {i:?}: {e}"));
+            assert_eq!(d, i, "word {w:#010x}");
+        }
+    }
+
+    #[test]
+    fn custom_funct7_routing() {
+        // funct7=1 with OP opcode is the SVM accelerator, not ADD
+        let w = encode(Instr::Custom { funct7: 1, funct3: 0, rd: A0, rs1: A1, rs2: A2 });
+        match decode(w).unwrap() {
+            Instr::Custom { funct7: 1, .. } => {}
+            other => panic!("expected Custom, got {other:?}"),
+        }
+        // funct7=0 stays a regular ADD
+        let w = encode(Instr::Op { op: AluOp::Add, rd: A0, rs1: A1, rs2: A2 });
+        assert!(matches!(decode(w).unwrap(), Instr::Op { op: AluOp::Add, .. }));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_0000).is_err()); // opcode 0
+    }
+}

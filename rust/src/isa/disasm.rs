@@ -1,0 +1,121 @@
+//! Disassembler — used by execution traces and the cycle_sim example.
+
+use super::reg::NAMES;
+use super::{AluOp, BranchOp, Instr, LoadOp, StoreOp, CFU_FUNCT7_SVM};
+
+fn r(i: u8) -> &'static str {
+    NAMES[i as usize]
+}
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Xor => "xor",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Or => "or",
+        AluOp::And => "and",
+    }
+}
+
+/// SVM accelerator mnemonic for a funct3 value (paper Fig. 8).
+pub fn svm_mnemonic(funct3: u8) -> &'static str {
+    match funct3 {
+        0b000 => "sv.calc4",
+        0b001 => "sv.res4",
+        0b010 => "sv.calc8",
+        0b100 => "sv.res8",
+        0b101 => "sv.calc16",
+        0b110 => "sv.res16",
+        0b111 => "sv.create_env",
+        _ => "sv.unknown",
+    }
+}
+
+/// Render an instruction in GNU-style assembly syntax.
+pub fn disasm(i: Instr) -> String {
+    match i {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Jal { rd, offset } => format!("jal {}, {offset:+}", r(rd)),
+        Instr::Jalr { rd, rs1, offset } => format!("jalr {}, {offset}({})", r(rd), r(rs1)),
+        Instr::Branch { op, rs1, rs2, offset } => {
+            let name = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{name} {}, {}, {offset:+}", r(rs1), r(rs2))
+        }
+        Instr::Load { op, rd, rs1, offset } => {
+            let name = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{name} {}, {offset}({})", r(rd), r(rs1))
+        }
+        Instr::Store { op, rs1, rs2, offset } => {
+            let name = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{name} {}, {offset}({})", r(rs2), r(rs1))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => match op {
+            AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                format!("{}i {}, {}, {imm}", alu_name(op), r(rd), r(rs1))
+            }
+            _ => format!("{}i {}, {}, {imm}", alu_name(op), r(rd), r(rs1)),
+        },
+        Instr::Op { op, rd, rs1, rs2 } => {
+            format!("{} {}, {}, {}", alu_name(op), r(rd), r(rs1), r(rs2))
+        }
+        Instr::Custom { funct7, funct3, rd, rs1, rs2 } => {
+            if funct7 == CFU_FUNCT7_SVM {
+                format!("{} {}, {}, {}", svm_mnemonic(funct3), r(rd), r(rs1), r(rs2))
+            } else {
+                format!("cfu{funct7}.op{funct3} {}, {}, {}", r(rd), r(rs1), r(rs2))
+            }
+        }
+        Instr::Fence => "fence".to_string(),
+        Instr::Ecall => "ecall".to_string(),
+        Instr::Ebreak => "ebreak".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reg::*;
+    use super::*;
+
+    #[test]
+    fn renders() {
+        assert_eq!(
+            disasm(Instr::OpImm { op: AluOp::Add, rd: A0, rs1: ZERO, imm: 5 }),
+            "addi a0, zero, 5"
+        );
+        assert_eq!(
+            disasm(Instr::Custom { funct7: 1, funct3: 0, rd: ZERO, rs1: A1, rs2: A2 }),
+            "sv.calc4 zero, a1, a2"
+        );
+        assert_eq!(
+            disasm(Instr::Custom { funct7: 1, funct3: 7, rd: ZERO, rs1: ZERO, rs2: ZERO }),
+            "sv.create_env zero, zero, zero"
+        );
+        assert_eq!(
+            disasm(Instr::Load { op: LoadOp::Lw, rd: T0, rs1: SP, offset: 8 }),
+            "lw t0, 8(sp)"
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! RV32I instruction encoders (bit-exact with the RISC-V unprivileged spec).
+
+use super::{AluOp, BranchOp, Instr, LoadOp, StoreOp};
+
+const OP_LUI: u32 = 0b0110111;
+const OP_AUIPC: u32 = 0b0010111;
+const OP_JAL: u32 = 0b1101111;
+const OP_JALR: u32 = 0b1100111;
+const OP_BRANCH: u32 = 0b1100011;
+const OP_LOAD: u32 = 0b0000011;
+const OP_STORE: u32 = 0b0100011;
+const OP_IMM: u32 = 0b0010011;
+const OP_OP: u32 = 0b0110011;
+const OP_MISC_MEM: u32 = 0b0001111;
+const OP_SYSTEM: u32 = 0b1110011;
+
+pub fn enc_r(funct7: u8, rs2: u8, rs1: u8, funct3: u8, rd: u8, opcode: u32) -> u32 {
+    ((funct7 as u32) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+pub fn enc_i(imm: i32, rs1: u8, funct3: u8, rd: u8, opcode: u32) -> u32 {
+    debug_assert!((-2048..=2047).contains(&imm), "I-imm out of range: {imm}");
+    (((imm as u32) & 0xfff) << 20)
+        | ((rs1 as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+pub fn enc_s(imm: i32, rs2: u8, rs1: u8, funct3: u8, opcode: u32) -> u32 {
+    debug_assert!((-2048..=2047).contains(&imm), "S-imm out of range: {imm}");
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | ((imm & 0x1f) << 7)
+        | opcode
+}
+
+pub fn enc_b(offset: i32, rs2: u8, rs1: u8, funct3: u8, opcode: u32) -> u32 {
+    debug_assert!(offset % 2 == 0, "B-offset must be even");
+    debug_assert!((-4096..=4094).contains(&offset), "B-offset out of range: {offset}");
+    let imm = offset as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | (((imm >> 1) & 0xf) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+pub fn enc_u(imm: i32, rd: u8, opcode: u32) -> u32 {
+    ((imm as u32) & 0xffff_f000) | ((rd as u32) << 7) | opcode
+}
+
+pub fn enc_j(offset: i32, rd: u8, opcode: u32) -> u32 {
+    debug_assert!(offset % 2 == 0, "J-offset must be even");
+    debug_assert!((-(1 << 20)..(1 << 20)).contains(&offset), "J-offset out of range: {offset}");
+    let imm = offset as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3ff) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xff) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn alu_funct(op: AluOp) -> (u8, u8) {
+    // (funct3, funct7)
+    match op {
+        AluOp::Add => (0b000, 0x00),
+        AluOp::Sub => (0b000, 0x20),
+        AluOp::Sll => (0b001, 0x00),
+        AluOp::Slt => (0b010, 0x00),
+        AluOp::Sltu => (0b011, 0x00),
+        AluOp::Xor => (0b100, 0x00),
+        AluOp::Srl => (0b101, 0x00),
+        AluOp::Sra => (0b101, 0x20),
+        AluOp::Or => (0b110, 0x00),
+        AluOp::And => (0b111, 0x00),
+    }
+}
+
+fn branch_funct(op: BranchOp) -> u8 {
+    match op {
+        BranchOp::Beq => 0b000,
+        BranchOp::Bne => 0b001,
+        BranchOp::Blt => 0b100,
+        BranchOp::Bge => 0b101,
+        BranchOp::Bltu => 0b110,
+        BranchOp::Bgeu => 0b111,
+    }
+}
+
+fn load_funct(op: LoadOp) -> u8 {
+    match op {
+        LoadOp::Lb => 0b000,
+        LoadOp::Lh => 0b001,
+        LoadOp::Lw => 0b010,
+        LoadOp::Lbu => 0b100,
+        LoadOp::Lhu => 0b101,
+    }
+}
+
+fn store_funct(op: StoreOp) -> u8 {
+    match op {
+        StoreOp::Sb => 0b000,
+        StoreOp::Sh => 0b001,
+        StoreOp::Sw => 0b010,
+    }
+}
+
+/// Encode any `Instr` to its 32-bit machine word.
+pub fn encode(i: Instr) -> u32 {
+    match i {
+        Instr::Lui { rd, imm } => enc_u(imm, rd, OP_LUI),
+        Instr::Auipc { rd, imm } => enc_u(imm, rd, OP_AUIPC),
+        Instr::Jal { rd, offset } => enc_j(offset, rd, OP_JAL),
+        Instr::Jalr { rd, rs1, offset } => enc_i(offset, rs1, 0b000, rd, OP_JALR),
+        Instr::Branch { op, rs1, rs2, offset } => {
+            enc_b(offset, rs2, rs1, branch_funct(op), OP_BRANCH)
+        }
+        Instr::Load { op, rd, rs1, offset } => enc_i(offset, rs1, load_funct(op), rd, OP_LOAD),
+        Instr::Store { op, rs1, rs2, offset } => {
+            enc_s(offset, rs2, rs1, store_funct(op), OP_STORE)
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            let (f3, f7) = alu_funct(op);
+            match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    debug_assert!((0..32).contains(&imm), "shamt out of range");
+                    enc_r(f7, imm as u8, rs1, f3, rd, OP_IMM)
+                }
+                AluOp::Sub => panic!("subi does not exist; use addi with negated imm"),
+                _ => enc_i(imm, rs1, f3, rd, OP_IMM),
+            }
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let (f3, f7) = alu_funct(op);
+            enc_r(f7, rs2, rs1, f3, rd, OP_OP)
+        }
+        Instr::Custom { funct7, funct3, rd, rs1, rs2 } => {
+            enc_r(funct7, rs2, rs1, funct3, rd, OP_OP)
+        }
+        Instr::Fence => enc_i(0, 0, 0b000, 0, OP_MISC_MEM),
+        Instr::Ecall => enc_i(0, 0, 0b000, 0, OP_SYSTEM),
+        Instr::Ebreak => enc_i(1, 0, 0b000, 0, OP_SYSTEM),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reg::*;
+    use super::*;
+
+    // Reference encodings cross-checked against the RISC-V spec / GNU as.
+    #[test]
+    fn known_encodings() {
+        // addi x1, x0, 5  -> 0x00500093
+        assert_eq!(
+            encode(Instr::OpImm { op: AluOp::Add, rd: RA, rs1: ZERO, imm: 5 }),
+            0x0050_0093
+        );
+        // add x3, x1, x2 -> 0x002081b3
+        assert_eq!(
+            encode(Instr::Op { op: AluOp::Add, rd: GP, rs1: RA, rs2: SP }),
+            0x0020_81b3
+        );
+        // sub x3, x1, x2 -> 0x402081b3
+        assert_eq!(
+            encode(Instr::Op { op: AluOp::Sub, rd: GP, rs1: RA, rs2: SP }),
+            0x4020_81b3
+        );
+        // lw x5, 8(x2) -> 0x00812283
+        assert_eq!(
+            encode(Instr::Load { op: LoadOp::Lw, rd: T0, rs1: SP, offset: 8 }),
+            0x0081_2283
+        );
+        // sw x5, 12(x2) -> 0x00512623
+        assert_eq!(
+            encode(Instr::Store { op: StoreOp::Sw, rs1: SP, rs2: T0, offset: 12 }),
+            0x0051_2623
+        );
+        // beq x1, x2, +8 -> 0x00208463
+        assert_eq!(
+            encode(Instr::Branch { op: BranchOp::Beq, rs1: RA, rs2: SP, offset: 8 }),
+            0x0020_8463
+        );
+        // jal x1, +16 -> 0x010000ef
+        assert_eq!(encode(Instr::Jal { rd: RA, offset: 16 }), 0x0100_00ef);
+        // lui x7, 0x12345 -> 0x123453b7
+        assert_eq!(encode(Instr::Lui { rd: T2, imm: 0x12345 << 12 }), 0x1234_53b7);
+        // ecall -> 0x00000073
+        assert_eq!(encode(Instr::Ecall), 0x0000_0073);
+        // srai x6, x5, 3 -> 0x4032d313
+        assert_eq!(
+            encode(Instr::OpImm { op: AluOp::Sra, rd: T1, rs1: T0, imm: 3 }),
+            0x4032_d313
+        );
+    }
+
+    #[test]
+    fn custom_cfu_encoding_matches_fig3() {
+        // Fig. 3: funct7=0000001, opcode=0110011 (OP)
+        let w = encode(Instr::Custom { funct7: 1, funct3: 0, rd: A0, rs1: A1, rs2: A2 });
+        assert_eq!(w >> 25, 1, "funct7");
+        assert_eq!(w & 0x7f, 0b0110011, "opcode");
+        assert_eq!((w >> 12) & 7, 0, "funct3");
+        assert_eq!((w >> 7) & 0x1f, A0 as u32);
+        assert_eq!((w >> 15) & 0x1f, A1 as u32);
+        assert_eq!((w >> 20) & 0x1f, A2 as u32);
+    }
+
+    #[test]
+    fn negative_immediates() {
+        // addi x1, x1, -1 -> 0xfff08093
+        assert_eq!(
+            encode(Instr::OpImm { op: AluOp::Add, rd: RA, rs1: RA, imm: -1 }),
+            0xfff0_8093
+        );
+        // beq backwards
+        let w = encode(Instr::Branch { op: BranchOp::Bne, rs1: T0, rs2: ZERO, offset: -8 });
+        assert_eq!(w, 0xfe02_9ce3);
+    }
+}

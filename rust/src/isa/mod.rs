@@ -1,0 +1,163 @@
+//! RV32I instruction-set substrate: encode, decode, disassemble, and a
+//! programmatic macro-assembler.
+//!
+//! This replaces the bare-metal GCC toolchain the paper uses: both the
+//! software-only baseline and the accelerated SVM routine are generated
+//! directly as machine code (rust/src/program/), so the exact instruction
+//! stream the SERV simulator executes is auditable.
+//!
+//! The custom ML-accelerator instructions (paper Fig. 3/8) reuse the
+//! standard R-type OP opcode (0b0110011) with `funct7 = 1`; `funct3`
+//! selects the accelerator operation.  SERV itself only uses funct7
+//! values 0x00 and 0x20, so funct7 = 1..=0x1f (≠0x20) are free for CFUs;
+//! we follow the paper and route funct7 = 1 to the SVM accelerator, and
+//! demonstrate extensibility with funct7 = 2, 3 demo CFUs.
+
+pub mod asm;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod parse;
+
+pub use asm::Asm;
+pub use decode::decode;
+pub use disasm::disasm;
+
+/// ABI register indices (x0..x31).
+pub mod reg {
+    pub const ZERO: u8 = 0;
+    pub const RA: u8 = 1;
+    pub const SP: u8 = 2;
+    pub const GP: u8 = 3;
+    pub const TP: u8 = 4;
+    pub const T0: u8 = 5;
+    pub const T1: u8 = 6;
+    pub const T2: u8 = 7;
+    pub const S0: u8 = 8;
+    pub const S1: u8 = 9;
+    pub const A0: u8 = 10;
+    pub const A1: u8 = 11;
+    pub const A2: u8 = 12;
+    pub const A3: u8 = 13;
+    pub const A4: u8 = 14;
+    pub const A5: u8 = 15;
+    pub const A6: u8 = 16;
+    pub const A7: u8 = 17;
+    pub const S2: u8 = 18;
+    pub const S3: u8 = 19;
+    pub const S4: u8 = 20;
+    pub const S5: u8 = 21;
+    pub const S6: u8 = 22;
+    pub const S7: u8 = 23;
+    pub const S8: u8 = 24;
+    pub const S9: u8 = 25;
+    pub const S10: u8 = 26;
+    pub const S11: u8 = 27;
+    pub const T3: u8 = 28;
+    pub const T4: u8 = 29;
+    pub const T5: u8 = 30;
+    pub const T6: u8 = 31;
+
+    pub const NAMES: [&str; 32] = [
+        "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3",
+        "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11",
+        "t3", "t4", "t5", "t6",
+    ];
+}
+
+/// The funct7 value that routes an R-type instruction to the paper's SVM
+/// accelerator (Fig. 3: funct7 = 0000001).
+pub const CFU_FUNCT7_SVM: u8 = 1;
+
+/// SVM accelerator funct3 encodings (paper Fig. 8).
+pub mod svm_ops {
+    pub const SV_CALC4: u8 = 0b000;
+    pub const SV_RES4: u8 = 0b001;
+    pub const SV_CALC8: u8 = 0b010;
+    pub const SV_RES8: u8 = 0b100;
+    pub const SV_CALC16: u8 = 0b101;
+    pub const SV_RES16: u8 = 0b110;
+    pub const CREATE_ENV: u8 = 0b111;
+}
+
+/// A decoded RV32I (+ custom CFU) instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    Jal { rd: u8, offset: i32 },
+    Jalr { rd: u8, rs1: u8, offset: i32 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, offset: i32 },
+    Load { op: LoadOp, rd: u8, rs1: u8, offset: i32 },
+    Store { op: StoreOp, rs1: u8, rs2: u8, offset: i32 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    /// Custom CFU dispatch: R-type with non-standard funct7 (paper Fig. 3).
+    Custom { funct7: u8, funct3: u8, rd: u8, rs1: u8, rs2: u8 },
+    Fence,
+    Ecall,
+    Ebreak,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+impl Instr {
+    /// Does this instruction write a destination register?
+    pub fn writes_rd(&self) -> Option<u8> {
+        match *self {
+            Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::OpImm { rd, .. }
+            | Instr::Op { rd, .. }
+            | Instr::Custom { rd, .. } => {
+                if rd != 0 {
+                    Some(rd)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! Text assembler front-end: parse GNU-style RV32I assembly (the same
+//! syntax `disasm` emits, plus labels and `.word` directives) into an
+//! `Asm` program.  Round-trip property: `parse(disasm(i)) == i`.
+//!
+//! Supported grammar per line (comments start with `#` or `//`):
+//!   label:
+//!   mnemonic rd, rs1, rs2
+//!   mnemonic rd, rs1, imm
+//!   load/store:  lw rd, off(rs1)   sw rs2, off(rs1)
+//!   branches:    beq rs1, rs2, <label|offset>
+//!   jumps:       jal rd, <label|offset>    j <label>
+//!   pseudo:      li, mv, nop, ret, call
+//!   custom:      sv.calc4 rd, rs1, rs2   cfu<f7>.op<f3> rd, rs1, rs2
+//!   data:        .word 0x1234  |  .zero N
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::reg::NAMES;
+use super::{svm_ops, Asm, BranchOp, CFU_FUNCT7_SVM};
+
+fn parse_reg(tok: &str) -> Result<u8> {
+    let t = tok.trim();
+    if let Some(i) = NAMES.iter().position(|n| *n == t) {
+        return Ok(i as u8);
+    }
+    if let Some(n) = t.strip_prefix('x') {
+        let i: u8 = n.parse().context("bad xN register")?;
+        if i < 32 {
+            return Ok(i);
+        }
+    }
+    bail!("unknown register {t:?}")
+}
+
+fn parse_imm(tok: &str) -> Result<i32> {
+    let t = tok.trim();
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t.strip_prefix('+').unwrap_or(t)),
+    };
+    let v = if let Some(hex) = t.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)?
+    } else if let Some(bin) = t.strip_prefix("0b") {
+        i64::from_str_radix(bin, 2)?
+    } else {
+        t.parse::<i64>().with_context(|| format!("bad immediate {t:?}"))?
+    };
+    let v = if neg { -v } else { v };
+    i32::try_from(v).map_err(|_| anyhow!("immediate {v} out of 32-bit range"))
+}
+
+/// split "off(reg)" -> (off, reg)
+fn parse_mem_operand(tok: &str) -> Result<(i32, u8)> {
+    let t = tok.trim();
+    let open = t.find('(').ok_or_else(|| anyhow!("expected off(reg), got {t:?}"))?;
+    let close = t.rfind(')').ok_or_else(|| anyhow!("missing ')' in {t:?}"))?;
+    let off = if open == 0 { 0 } else { parse_imm(&t[..open])? };
+    let reg = parse_reg(&t[open + 1..close])?;
+    Ok((off, reg))
+}
+
+fn svm_funct3(mnemonic: &str) -> Option<u8> {
+    Some(match mnemonic {
+        "sv.calc4" => svm_ops::SV_CALC4,
+        "sv.res4" => svm_ops::SV_RES4,
+        "sv.calc8" => svm_ops::SV_CALC8,
+        "sv.res8" => svm_ops::SV_RES8,
+        "sv.calc16" => svm_ops::SV_CALC16,
+        "sv.res16" => svm_ops::SV_RES16,
+        "sv.create_env" => svm_ops::CREATE_ENV,
+        _ => return None,
+    })
+}
+
+/// Parse a full program into an `Asm` (base address 0 unless set).
+pub fn parse_program(text: &str) -> Result<Asm> {
+    let mut a = Asm::new(0);
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().split("//").next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        parse_line(&mut a, line)
+            .with_context(|| format!("line {}: {raw:?}", lineno + 1))?;
+    }
+    Ok(a)
+}
+
+fn parse_line(a: &mut Asm, line: &str) -> Result<()> {
+    if let Some(label) = line.strip_suffix(':') {
+        let label = label.trim();
+        if label.is_empty() || label.contains(char::is_whitespace) {
+            bail!("bad label {label:?}");
+        }
+        a.label(label);
+        return Ok(());
+    }
+    let (mnemonic, rest) = match line.find(char::is_whitespace) {
+        Some(i) => (&line[..i], line[i..].trim()),
+        None => (line, ""),
+    };
+    let ops: Vec<&str> = if rest.is_empty() {
+        vec![]
+    } else {
+        rest.split(',').map(|s| s.trim()).collect()
+    };
+    let n = ops.len();
+    let rrr = |a: &mut Asm, f: fn(&mut Asm, u8, u8, u8) -> &mut Asm| -> Result<()> {
+        anyhow::ensure!(n == 3, "{mnemonic} needs 3 operands");
+        f(a, parse_reg(ops[0])?, parse_reg(ops[1])?, parse_reg(ops[2])?);
+        Ok(())
+    };
+    let rri = |a: &mut Asm, f: fn(&mut Asm, u8, u8, i32) -> &mut Asm| -> Result<()> {
+        anyhow::ensure!(n == 3, "{mnemonic} needs 3 operands");
+        f(a, parse_reg(ops[0])?, parse_reg(ops[1])?, parse_imm(ops[2])?);
+        Ok(())
+    };
+    let branch = |a: &mut Asm, op: BranchOp| -> Result<()> {
+        anyhow::ensure!(n == 3, "{mnemonic} needs 3 operands");
+        a.branch(op, parse_reg(ops[0])?, parse_reg(ops[1])?, ops[2]);
+        Ok(())
+    };
+    let load = |a: &mut Asm, f: fn(&mut Asm, u8, u8, i32) -> &mut Asm| -> Result<()> {
+        anyhow::ensure!(n == 2, "{mnemonic} needs rd, off(rs1)");
+        let rd = parse_reg(ops[0])?;
+        let (off, rs1) = parse_mem_operand(ops[1])?;
+        f(a, rd, rs1, off);
+        Ok(())
+    };
+    let store = |a: &mut Asm, f: fn(&mut Asm, u8, u8, i32) -> &mut Asm| -> Result<()> {
+        anyhow::ensure!(n == 2, "{mnemonic} needs rs2, off(rs1)");
+        let rs2 = parse_reg(ops[0])?;
+        let (off, rs1) = parse_mem_operand(ops[1])?;
+        f(a, rs1, rs2, off);
+        Ok(())
+    };
+
+    match mnemonic {
+        "add" => rrr(a, |a, d, s1, s2| a.add(d, s1, s2))?,
+        "sub" => rrr(a, |a, d, s1, s2| a.sub(d, s1, s2))?,
+        "and" => rrr(a, |a, d, s1, s2| a.and(d, s1, s2))?,
+        "or" => rrr(a, |a, d, s1, s2| a.or(d, s1, s2))?,
+        "xor" => rrr(a, |a, d, s1, s2| a.xor(d, s1, s2))?,
+        "sll" => rrr(a, |a, d, s1, s2| a.sll(d, s1, s2))?,
+        "srl" => rrr(a, |a, d, s1, s2| a.srl(d, s1, s2))?,
+        "sra" => rrr(a, |a, d, s1, s2| a.sra(d, s1, s2))?,
+        "slt" => rrr(a, |a, d, s1, s2| a.slt(d, s1, s2))?,
+        "sltu" => rrr(a, |a, d, s1, s2| a.sltu(d, s1, s2))?,
+        "addi" => rri(a, |a, d, s, i| a.addi(d, s, i))?,
+        "andi" => rri(a, |a, d, s, i| a.andi(d, s, i))?,
+        "ori" => rri(a, |a, d, s, i| a.ori(d, s, i))?,
+        "xori" => rri(a, |a, d, s, i| a.xori(d, s, i))?,
+        "slti" => rri(a, |a, d, s, i| a.slti(d, s, i))?,
+        "slli" => rri(a, |a, d, s, i| a.slli(d, s, i))?,
+        "srli" => rri(a, |a, d, s, i| a.srli(d, s, i))?,
+        "srai" => rri(a, |a, d, s, i| a.srai(d, s, i))?,
+        "li" => rri_2(a, ops, |a, d, i| {
+            a.li(d, i);
+        })?,
+        "lui" => rri_2(a, ops, |a, d, i| {
+            a.lui(d, i << 12);
+        })?,
+        "auipc" => rri_2(a, ops, |a, d, i| {
+            a.auipc(d, i << 12);
+        })?,
+        "mv" => {
+            anyhow::ensure!(n == 2, "mv needs 2 operands");
+            a.mv(parse_reg(ops[0])?, parse_reg(ops[1])?);
+        }
+        "lw" => load(a, |a, d, s, o| a.lw(d, s, o))?,
+        "lb" => load(a, |a, d, s, o| a.lb(d, s, o))?,
+        "lbu" => load(a, |a, d, s, o| a.lbu(d, s, o))?,
+        "lh" => load(a, |a, d, s, o| a.lh(d, s, o))?,
+        "lhu" => load(a, |a, d, s, o| a.lhu(d, s, o))?,
+        "sw" => store(a, |a, s1, s2, o| a.sw(s1, s2, o))?,
+        "sb" => store(a, |a, s1, s2, o| a.sb(s1, s2, o))?,
+        "sh" => store(a, |a, s1, s2, o| a.sh(s1, s2, o))?,
+        "beq" => branch(a, BranchOp::Beq)?,
+        "bne" => branch(a, BranchOp::Bne)?,
+        "blt" => branch(a, BranchOp::Blt)?,
+        "bge" => branch(a, BranchOp::Bge)?,
+        "bltu" => branch(a, BranchOp::Bltu)?,
+        "bgeu" => branch(a, BranchOp::Bgeu)?,
+        "jal" => {
+            anyhow::ensure!(n == 2, "jal needs rd, target");
+            a.jal(parse_reg(ops[0])?, ops[1]);
+        }
+        "jalr" => {
+            anyhow::ensure!(n == 2, "jalr needs rd, off(rs1)");
+            let rd = parse_reg(ops[0])?;
+            let (off, rs1) = parse_mem_operand(ops[1])?;
+            a.jalr(rd, rs1, off);
+        }
+        "j" => {
+            anyhow::ensure!(n == 1, "j needs a target");
+            a.j(ops[0]);
+        }
+        "call" => {
+            anyhow::ensure!(n == 1, "call needs a target");
+            a.call(ops[0]);
+        }
+        "la" => {
+            anyhow::ensure!(n == 2, "la needs rd, label");
+            a.la(parse_reg(ops[0])?, ops[1]);
+        }
+        "ret" => {
+            a.ret();
+        }
+        "nop" => {
+            a.nop();
+        }
+        "ecall" => {
+            a.ecall();
+        }
+        "ebreak" => {
+            a.ebreak();
+        }
+        "fence" => {
+            a.word(super::encode::encode(super::Instr::Fence));
+        }
+        ".word" => {
+            anyhow::ensure!(n == 1, ".word needs one value");
+            a.word(parse_imm(ops[0])? as u32);
+        }
+        ".zero" => {
+            anyhow::ensure!(n == 1, ".zero needs a count");
+            a.zeros(parse_imm(ops[0])? as usize);
+        }
+        m => {
+            // custom CFU forms: sv.* or cfu<f7>.op<f3>
+            if let Some(f3) = svm_funct3(m) {
+                anyhow::ensure!(n == 3, "{m} needs 3 operands");
+                a.cfu(CFU_FUNCT7_SVM, f3, parse_reg(ops[0])?, parse_reg(ops[1])?, parse_reg(ops[2])?);
+            } else if let Some(rest) = m.strip_prefix("cfu") {
+                let (f7s, f3s) = rest
+                    .split_once(".op")
+                    .ok_or_else(|| anyhow!("bad custom mnemonic {m:?}"))?;
+                let f7: u8 = f7s.parse()?;
+                let f3: u8 = f3s.parse()?;
+                anyhow::ensure!(n == 3, "{m} needs 3 operands");
+                a.cfu(f7, f3, parse_reg(ops[0])?, parse_reg(ops[1])?, parse_reg(ops[2])?);
+            } else {
+                bail!("unknown mnemonic {m:?}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn rri_2(a: &mut Asm, ops: Vec<&str>, f: impl FnOnce(&mut Asm, u8, i32)) -> Result<()> {
+    anyhow::ensure!(ops.len() == 2, "needs 2 operands");
+    f(a, parse_reg(ops[0])?, parse_imm(ops[1])?);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{decode, disasm};
+    use super::*;
+    use crate::serv::TimingConfig;
+    use crate::soc::Soc;
+
+    #[test]
+    fn parse_and_run_program() {
+        let src = r#"
+            # sum 1..10 through memory
+                la   s0, buf
+                li   t0, 10
+                li   t1, 0
+            loop:
+                add  t1, t1, t0
+                sw   t1, 0(s0)
+                lw   t1, 0(s0)
+                addi t0, t0, -1
+                bne  t0, zero, loop
+                mv   a0, t1
+                ecall
+            buf:
+                .zero 1
+        "#;
+        let a = parse_program(src).unwrap();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::ideal_mem());
+        assert_eq!(soc.run(10_000_000).unwrap().value(), 55);
+    }
+
+    #[test]
+    fn parse_custom_instructions() {
+        let src = "sv.create_env zero, zero, zero\nsv.calc4 zero, a1, a2\ncfu3.op1 a0, a1, a2\necall\n";
+        let a = parse_program(src).unwrap();
+        let words = a.assemble().unwrap();
+        match decode(words[0]).unwrap() {
+            super::super::Instr::Custom { funct7: 1, funct3: 7, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match decode(words[2]).unwrap() {
+            super::super::Instr::Custom { funct7: 3, funct3: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// disasm -> parse -> encode is the identity for register/imm forms.
+    #[test]
+    fn disasm_parse_roundtrip() {
+        use crate::testing::check;
+        check("disasm-parse", 0x77, 500, |rng| {
+            use super::super::{AluOp, Instr, LoadOp, StoreOp};
+            let rd = rng.below(32) as u8;
+            let rs1 = rng.below(32) as u8;
+            let rs2 = rng.below(32) as u8;
+            let instr = match rng.below(5) {
+                0 => Instr::Op { op: *rng.choose(&[AluOp::Add, AluOp::Sub, AluOp::Xor, AluOp::Sltu]), rd, rs1, rs2 },
+                1 => Instr::OpImm { op: AluOp::Add, rd, rs1, imm: rng.range_i32(-2048, 2047) },
+                2 => Instr::Load { op: *rng.choose(&[LoadOp::Lw, LoadOp::Lbu, LoadOp::Lh]), rd, rs1, offset: rng.range_i32(-2048, 2047) },
+                3 => Instr::Store { op: *rng.choose(&[StoreOp::Sw, StoreOp::Sb]), rs1, rs2, offset: rng.range_i32(-2048, 2047) },
+                _ => Instr::Custom { funct7: CFU_FUNCT7_SVM, funct3: *rng.choose(&[0u8, 1, 2, 4, 5, 6, 7]), rd, rs1, rs2 },
+            };
+            let text = disasm(instr);
+            let a = parse_program(&text).unwrap_or_else(|e| panic!("parse {text:?}: {e}"));
+            let words = a.assemble().unwrap();
+            assert_eq!(decode(words[0]).unwrap(), instr, "text was {text:?}");
+        });
+    }
+
+    #[test]
+    fn hex_and_binary_immediates() {
+        let a = parse_program("li a0, 0x10\nli a1, -0x10\nli a2, 0b101\necall").unwrap();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::ideal_mem());
+        let r = soc.run(100_000).unwrap();
+        match r.exit {
+            crate::serv::Exit::Ecall { a0, a1 } => {
+                assert_eq!(a0, 16);
+                assert_eq!(a1 as i32, -16);
+            }
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_program("nop\nbogus a0, a1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+}

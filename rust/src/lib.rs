@@ -1,0 +1,16 @@
+//! Flex-SVM: reproduction of "Support Vector Machines Classification on
+//! Bendable RISC-V" — see DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod accel;
+pub mod isa;
+pub mod power;
+pub mod program;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod serv;
+pub mod soc;
+pub mod svm;
+pub mod testing;
+pub mod util;

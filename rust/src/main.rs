@@ -1,0 +1,353 @@
+//! flexsvm — command-line entry point.
+//!
+//! Subcommands:
+//!   table1        regenerate Table I on the cycle-accurate SERV SoC
+//!   area-power    the §V-B area/power paragraph
+//!   golden-check  cross-layer bit-exactness sweep over all 30 configs
+//!   sim           run one config's test set on the SoC (baseline+accel)
+//!   trace         Fig. 2 life-cycle trace of accelerator instructions
+//!   serve         demo serving loop over the PJRT engine
+//!
+//! Run with `--help` (or no arguments) for options.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use flexsvm::accel::{pe, svm::SvmAccel, Cfu};
+use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::report::{self, table1::render, Table1Opts};
+use flexsvm::serv::TimingConfig;
+use flexsvm::soc::format_trace_line;
+use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::svm::{infer, pack};
+use flexsvm::util::Args;
+
+const USAGE: &str = "\
+flexsvm — SVM classification on Bendable RISC-V (reproduction)
+
+USAGE: flexsvm <subcommand> [options]
+
+  table1       [--datasets bs,derm,iris,seeds,v3] [--limit N] [--attr]
+               [--json FILE] [--mem-read N --mem-write N --mem-overhead N]
+  area-power
+  golden-check
+  sim          --config <key> [--limit N]
+  trace        --config <key> [--sample I] [--max-lines N]
+  serve        [--configs k1,k2] [--requests N] [--backend pjrt|native]
+               [--batch-max N] [--linger-us N]
+  asm          <file.s> [--out image.bin] [--run] [--max-cycles N]
+  rtl-template [--out-dir DIR]     (emit Verilog + C header for the SVM CFU)
+  vcd          --config <key> [--sample I] [--out trace.vcd]
+
+Artifacts are read from $FLEXSVM_ARTIFACTS or ./artifacts (make artifacts).
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("table1") => cmd_table1(&args),
+        Some("area-power") => {
+            print!("{}", report::area_power::render());
+            Ok(())
+        }
+        Some("golden-check") => cmd_golden_check(),
+        Some("sim") => cmd_sim(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("asm") => cmd_asm(&args),
+        Some("rtl-template") => cmd_rtl_template(&args),
+        Some("vcd") => cmd_vcd(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn timing_from(args: &Args) -> Result<TimingConfig> {
+    let mut t = TimingConfig::flexic();
+    t.mem_read = args.u64_or("mem-read", t.mem_read)?;
+    t.mem_write = args.u64_or("mem-write", t.mem_write)?;
+    t.mem_overhead = args.u64_or("mem-overhead", t.mem_overhead)?;
+    Ok(t)
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_root())?;
+    let limit = args.usize_or("limit", 0)?;
+    let opts = Table1Opts {
+        datasets: args.list_or("datasets", &[]),
+        limit: if limit == 0 { None } else { Some(limit) },
+        timing: timing_from(args)?,
+        program: ProgramOpts::default(),
+        verify_accuracy: true,
+    };
+    let t0 = Instant::now();
+    let rows = report::run_table1(&manifest, &opts)?;
+    print!("{}", render(&rows, args.flag("attr")));
+    eprintln!("({} configs in {:.1}s)", rows.len(), t0.elapsed().as_secs_f64());
+    if let Some(path) = args.opt_str("json") {
+        std::fs::write(path, report::table1::to_json(&rows).to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Cross-layer sweep: for every config, golden vectors must agree across
+/// native inference, the accelerator model (packed-word emulation), and
+/// the SERV-executed accelerated program.
+fn cmd_golden_check() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_root())?;
+    let mut checked = 0;
+    for entry in &manifest.configs {
+        let model = manifest.model(entry)?;
+        let golden = manifest.golden(entry)?;
+        let mut runner =
+            ProgramRunner::accelerated(&model, TimingConfig::ideal_mem(), ProgramOpts::default())?;
+        for (i, x) in golden.x_q.iter().enumerate() {
+            // native
+            let native_scores = infer::scores(&model, x);
+            if native_scores != golden.scores[i] {
+                bail!("{}: native scores diverge at sample {i}", entry.key);
+            }
+            let native_pred = infer::predict(&model, x);
+            if native_pred != golden.pred[i] {
+                bail!("{}: native pred diverges at sample {i}", entry.key);
+            }
+            // accelerator model via packed-word emulation
+            let mode = pack::mode_for_bits(model.bits);
+            let fw = pack::feature_words(x, model.bits);
+            for (k, &gs) in golden.scores[i].iter().enumerate() {
+                let ww = pack::weight_words(&model, k);
+                let s: i64 = fw.iter().zip(&ww).map(|(&a, &b)| pe::compute(a, b, mode)).sum();
+                if s != gs {
+                    bail!("{}: PE emulation diverges at sample {i} classifier {k}", entry.key);
+                }
+            }
+            // SERV-executed program
+            let (pred, _) = runner.run_sample(x)?;
+            if pred != golden.pred[i] {
+                bail!("{}: SERV program pred diverges at sample {i}", entry.key);
+            }
+            checked += 1;
+        }
+    }
+    println!(
+        "golden-check OK: {checked} samples x 3 layers across {} configs",
+        manifest.configs.len()
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let key = args.opt_str("config").ok_or_else(|| anyhow::anyhow!("--config required"))?;
+    let manifest = Manifest::load(&artifacts_root())?;
+    let entry = manifest.config(key)?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set(&entry.dataset)?;
+    let limit = args.usize_or("limit", 0)?;
+    let limit = if limit == 0 { None } else { Some(limit) };
+    let timing = timing_from(args)?;
+
+    let mut base = ProgramRunner::baseline(&model, timing)?;
+    let b = base.run_test_set(&test.x_q, &test.y, limit)?;
+    let mut acc = ProgramRunner::accelerated(&model, timing, ProgramOpts::default())?;
+    let a = acc.run_test_set(&test.x_q, &test.y, limit)?;
+    println!("config {key}: {} samples", b.n_samples);
+    println!(
+        "  baseline: acc {:.1}%  {:.0} cyc/inf  (fetch {:.0}%  exec {:.0}%  dmem {:.0}%)",
+        b.accuracy * 100.0,
+        b.cycles_per_inference,
+        100.0 * b.agg.fetch as f64 / b.agg.total() as f64,
+        100.0 * b.agg.exec as f64 / b.agg.total() as f64,
+        100.0 * b.agg.data_mem_share(),
+    );
+    println!(
+        "  accel:    acc {:.1}%  {:.0} cyc/inf  (fetch {:.0}%  exec {:.0}%  dmem {:.0}%  cfu {:.0}%)",
+        a.accuracy * 100.0,
+        a.cycles_per_inference,
+        100.0 * a.agg.fetch as f64 / a.agg.total() as f64,
+        100.0 * a.agg.exec as f64 / a.agg.total() as f64,
+        100.0 * a.agg.data_mem_share(),
+        100.0 * a.agg.cfu as f64 / a.agg.total() as f64,
+    );
+    println!("  speedup: {:.1}x", b.cycles_per_inference / a.cycles_per_inference);
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let key = args.opt_str("config").ok_or_else(|| anyhow::anyhow!("--config required"))?;
+    let manifest = Manifest::load(&artifacts_root())?;
+    let entry = manifest.config(key)?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set(&entry.dataset)?;
+    let sample = args.usize_or("sample", 0)?;
+    let max_lines = args.usize_or("max-lines", 80)?;
+    let timing = TimingConfig::flexic();
+
+    let mut runner = ProgramRunner::accelerated(&model, timing, ProgramOpts::default())?;
+    runner.soc_mut().rearm();
+    runner.poke_features(&test.x_q[sample])?;
+    let mut lines = 0usize;
+    let mut cb = |info: &flexsvm::serv::StepInfo| {
+        if lines < max_lines {
+            println!("{}", format_trace_line(info, &timing));
+            lines += 1;
+        } else if lines == max_lines {
+            println!("... (truncated; --max-lines to extend)");
+            lines += 1;
+        }
+    };
+    let r = runner.soc_mut().run_traced(1_000_000_000, Some(&mut cb))?;
+    println!(
+        "exit: pred={} total {} cycles ({} instructions)",
+        r.value(),
+        r.stats.total(),
+        r.stats.instret
+    );
+    Ok(())
+}
+
+/// Assemble a text program (the framework's bare-metal path without a
+/// GCC toolchain); optionally execute it on the SoC with all demo CFUs.
+fn cmd_asm(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: flexsvm asm <file.s> [--run]"))?;
+    let src = std::fs::read_to_string(path)?;
+    let asm = flexsvm::isa::parse::parse_program(&src)?;
+    let image = asm.assemble_bytes()?;
+    println!("assembled {} words from {path}", image.len() / 4);
+    if let Some(out) = args.opt_str("out") {
+        std::fs::write(out, &image)?;
+        println!("wrote {out}");
+    }
+    if args.flag("run") {
+        let mut soc = flexsvm::soc::Soc::new(&image, TimingConfig::flexic());
+        soc.register_cfu(1, Box::new(SvmAccel::new()))?;
+        soc.register_cfu(2, Box::new(flexsvm::accel::mac::MacAccel::new()))?;
+        soc.register_cfu(3, Box::new(flexsvm::accel::popcount::PopcountAccel::new()))?;
+        let r = soc.run(args.u64_or("max-cycles", 1_000_000_000)?)?;
+        println!(
+            "exit a0={} after {} cycles ({} instructions, CPI {:.1})",
+            r.value(),
+            r.stats.total(),
+            r.stats.instret,
+            r.stats.cpi()
+        );
+    }
+    Ok(())
+}
+
+/// Emit the framework's RTL template + C header for the SVM CFU spec
+/// (paper §III-D: "a provided template that defines the required
+/// interface").
+fn cmd_rtl_template(args: &Args) -> Result<()> {
+    use flexsvm::accel::rtl_template::CfuSpec;
+    let dir = std::path::PathBuf::from(args.str_or("out-dir", "generated_rtl"));
+    std::fs::create_dir_all(&dir)?;
+    let spec = CfuSpec::svm();
+    let v_path = dir.join(format!("{}.v", spec.name));
+    let h_path = dir.join(format!("{}.h", spec.name));
+    std::fs::write(&v_path, spec.verilog())?;
+    std::fs::write(&h_path, spec.c_header())?;
+    println!("wrote {} and {}", v_path.display(), h_path.display());
+    Ok(())
+}
+
+/// Dump the Fig. 1/2 handshake signals of one inference as a VCD file.
+fn cmd_vcd(args: &Args) -> Result<()> {
+    use flexsvm::soc::vcd::VcdWriter;
+    let key = args.opt_str("config").ok_or_else(|| anyhow::anyhow!("--config required"))?;
+    let out = args.str_or("out", "trace.vcd");
+    let manifest = Manifest::load(&artifacts_root())?;
+    let entry = manifest.config(key)?;
+    let model = manifest.model(entry)?;
+    let test = manifest.test_set(&entry.dataset)?;
+    let sample = args.usize_or("sample", 0)?;
+    let timing = TimingConfig::flexic();
+    let mut runner = ProgramRunner::accelerated(&model, timing, ProgramOpts::default())?;
+    runner.soc_mut().rearm();
+    runner.poke_features(&test.x_q[sample])?;
+    let mut vcd = VcdWriter::new(timing);
+    let mut cb = |info: &flexsvm::serv::StepInfo| vcd.record(info);
+    let r = runner.soc_mut().run_traced(1_000_000_000, Some(&mut cb))?;
+    std::fs::write(out, vcd.finish())?;
+    println!("pred={}; wrote {out} ({} cycles of handshake activity)", r.value(), r.stats.total());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let keys = args.list_or("configs", &["iris_ovr_w4", "bs_ovo_w8"]);
+    let n_requests = args.usize_or("requests", 1000)?;
+    let backend = match args.str_or("backend", "pjrt") {
+        "pjrt" => Backend::Pjrt,
+        "native" => Backend::Native,
+        other => bail!("unknown backend {other}"),
+    };
+    let opts = ServerOpts {
+        backend,
+        batch_max: args.usize_or("batch-max", 64)?,
+        linger: std::time::Duration::from_micros(args.u64_or("linger-us", 2000)?),
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&artifacts_root())?;
+    let server = Server::start(artifacts_root(), keys.clone(), opts)?;
+    let client = server.client();
+
+    // drive requests from worker threads using real test vectors
+    let mut testsets = Vec::new();
+    for k in &keys {
+        let entry = manifest.config(k)?;
+        testsets.push((k.clone(), manifest.test_set(&entry.dataset)?));
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..4usize {
+            let client = client.clone();
+            let testsets = &testsets;
+            handles.push(scope.spawn(move || -> Result<u64> {
+                let mut correct = 0u64;
+                for i in 0..n_requests / 4 {
+                    let (key, test) = &testsets[(w + i) % testsets.len()];
+                    let idx = (w * 7919 + i) % test.len();
+                    let resp = client.infer(key, &test.x_q[idx])?;
+                    if resp.pred == test.y[idx] {
+                        correct += 1;
+                    }
+                }
+                Ok(correct)
+            }));
+        }
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed();
+    let served = (n_requests / 4) * 4;
+    println!(
+        "served {served} requests in {:.2}s = {:.0} req/s",
+        dt.as_secs_f64(),
+        served as f64 / dt.as_secs_f64()
+    );
+    for (key, m) in client.metrics()? {
+        let h = m.latency.as_ref().unwrap();
+        println!(
+            "  {key}: {} reqs, {} batches (mean {:.1}/batch), p50 {}us p99 {}us",
+            m.requests,
+            m.batches,
+            m.mean_batch(),
+            h.quantile_us(0.5),
+            h.quantile_us(0.99)
+        );
+    }
+    // keep the accelerator trait demonstrably object-safe in the binary
+    let _ = SvmAccel::new().name();
+    Ok(())
+}

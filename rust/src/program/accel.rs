@@ -1,0 +1,259 @@
+//! Accelerated SVM inference (paper Algorithm 1) using the custom
+//! instruction set of Fig. 8.
+//!
+//! Per classifier: stream packed (features, weights) word pairs through
+//! `SV_Calc{4,8,16}`, finalise with `SV_Res{4,8,16}`.  OvR reads the
+//! running `max_id` from the last result; OvO extracts the sign bit and
+//! tallies votes in software.  The calc stream is fully unrolled when
+//! small (inline-asm style); Dermatology-sized models keep the loop.
+//!
+//! Register allocation:
+//!   s0 packed-feature base   s1 weight-word ptr   s3 K   s4 k
+//!   s7 words/classifier      s8/s9 pair ptrs      s10 votes base
+//!   t0 result                t1 j                 t2 feature ptr
+
+use anyhow::Result;
+
+use crate::isa::reg::*;
+use crate::isa::{svm_ops, Asm, CFU_FUNCT7_SVM};
+use crate::svm::model::{QuantModel, Strategy};
+use crate::svm::pack;
+
+use super::{finish, BuiltProgram, ProgramKind, ProgramOpts};
+
+fn calc_f3(bits: u8) -> u8 {
+    match bits {
+        4 => svm_ops::SV_CALC4,
+        8 => svm_ops::SV_CALC8,
+        16 => svm_ops::SV_CALC16,
+        _ => unreachable!(),
+    }
+}
+
+fn res_f3(bits: u8) -> u8 {
+    match bits {
+        4 => svm_ops::SV_RES4,
+        8 => svm_ops::SV_RES8,
+        16 => svm_ops::SV_RES16,
+        _ => unreachable!(),
+    }
+}
+
+/// Build the accelerated inference program.
+pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
+    let k = m.n_classifiers();
+    let c = m.n_classes;
+    let nw = pack::words_per_classifier(m.n_features, m.bits);
+    let calc = calc_f3(m.bits);
+    let res = res_f3(m.bits);
+    let unroll = k * nw <= opts.unroll_limit;
+    let mut a = Asm::new(0);
+
+    // ---- prologue ----
+    a.cfu(CFU_FUNCT7_SVM, svm_ops::CREATE_ENV, ZERO, ZERO, ZERO);
+    a.la(S0, "fwords");
+    a.la(S1, "wwords");
+    if m.strategy == Strategy::Ovo {
+        a.la(S8, "pairs_i");
+        a.la(S9, "pairs_j");
+        a.la(S10, "votes");
+        a.mv(T0, S10);
+        a.li(T1, c as i32);
+        a.label("zv_loop");
+        a.sw(T0, ZERO, 0);
+        a.addi(T0, T0, 4);
+        a.addi(T1, T1, -1);
+        a.bne(T1, ZERO, "zv_loop");
+    }
+
+    // per-classifier body, emitted once (loop) or K times (unrolled)
+    let emit_ovo_vote = |a: &mut Asm, suffix: &str| {
+        // t0 = SV_Res result; bit 31 set => negative => vote pairs_j
+        let vi = format!("vote_i{suffix}");
+        let dv = format!("do_vote{suffix}");
+        a.srli(T5, T0, 31);
+        a.beq(T5, ZERO, &vi);
+        a.lw(T5, S9, 0);
+        a.j(&dv);
+        a.label(&vi);
+        a.lw(T5, S8, 0);
+        a.label(&dv);
+        a.slli(T5, T5, 2);
+        a.add(T5, T5, S10);
+        a.lw(T4, T5, 0);
+        a.addi(T4, T4, 1);
+        a.sw(T5, T4, 0);
+        a.addi(S8, S8, 4);
+        a.addi(S9, S9, 4);
+    };
+
+    if unroll {
+        // straight-line: lw/lw/sv.calc per word, sv.res per classifier
+        for kk in 0..k {
+            for j in 0..nw {
+                a.lw(A0, S0, (j * 4) as i32);
+                a.lw(A1, S1, ((kk * nw + j) * 4) as i32);
+                a.cfu(CFU_FUNCT7_SVM, calc, ZERO, A0, A1);
+            }
+            a.cfu(CFU_FUNCT7_SVM, res, T0, ZERO, ZERO);
+            if m.strategy == Strategy::Ovo {
+                emit_ovo_vote(&mut a, &format!("_{kk}"));
+            }
+        }
+    } else {
+        a.li(S3, k as i32);
+        a.li(S4, 0);
+        a.li(S7, nw as i32);
+        a.label("loop_k");
+        a.li(T1, 0);
+        a.mv(T2, S0);
+        a.label("loop_j");
+        a.lw(A0, T2, 0);
+        a.lw(A1, S1, 0);
+        a.cfu(CFU_FUNCT7_SVM, calc, ZERO, A0, A1);
+        a.addi(T2, T2, 4);
+        a.addi(S1, S1, 4);
+        a.addi(T1, T1, 1);
+        a.blt(T1, S7, "loop_j");
+        a.cfu(CFU_FUNCT7_SVM, res, T0, ZERO, ZERO);
+        if m.strategy == Strategy::Ovo {
+            emit_ovo_vote(&mut a, "");
+        }
+        a.addi(S4, S4, 1);
+        a.blt(S4, S3, "loop_k");
+    }
+
+    // ---- epilogue ----
+    match m.strategy {
+        Strategy::Ovr => {
+            // Algorithm 1: max_id <- result & 0xFF
+            a.andi(A0, T0, 0xff);
+            a.ecall();
+        }
+        Strategy::Ovo => {
+            a.la(T6, "votes");
+            a.li(T0, 0);
+            a.li(T1, c as i32);
+            a.label("am_loop");
+            a.lw(T2, T6, 0);
+            a.beq(T0, ZERO, "am_update");
+            a.blt(S5, T2, "am_update");
+            a.j("am_next");
+            a.label("am_update");
+            a.mv(S5, T2);
+            a.mv(S6, T0);
+            a.label("am_next");
+            a.addi(T6, T6, 4);
+            a.addi(T0, T0, 1);
+            a.blt(T0, T1, "am_loop");
+            a.mv(A0, S6);
+            a.ecall();
+        }
+    }
+
+    // ---- data ----
+    let text_words = (a.here() / 4) as usize;
+    a.label("fwords");
+    a.zeros(nw); // host-poked packed features (incl. the bias lane = 15)
+    a.label("wwords");
+    a.words(&pack::all_weight_words(m));
+    if m.strategy == Strategy::Ovo {
+        a.label("pairs_i");
+        a.words_i32(&m.pairs.iter().map(|p| p.0 as i32).collect::<Vec<_>>());
+        a.label("pairs_j");
+        a.words_i32(&m.pairs.iter().map(|p| p.1 as i32).collect::<Vec<_>>());
+        a.label("votes");
+        a.zeros(c);
+    }
+
+    let mut built = finish(&a, ProgramKind::Accelerated, "fwords", nw)?;
+    built.text_words = text_words;
+    Ok(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::run::ProgramRunner;
+    use crate::serv::TimingConfig;
+    use crate::svm::infer;
+    use crate::util::Pcg32;
+
+    fn random_model(rng: &mut Pcg32, strategy: Strategy, bits: u8, c: usize, f: usize) -> QuantModel {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let pairs: Vec<(usize, usize)> = match strategy {
+            Strategy::Ovr => (0..c).map(|i| (i, i)).collect(),
+            Strategy::Ovo => {
+                let mut p = vec![];
+                for i in 0..c {
+                    for j in i + 1..c {
+                        p.push((i, j));
+                    }
+                }
+                p
+            }
+        };
+        let k = pairs.len();
+        QuantModel {
+            dataset: "rand".into(),
+            strategy,
+            bits,
+            n_classes: c,
+            n_features: f,
+            weights: (0..k)
+                .map(|_| (0..f).map(|_| rng.range_i32(-qmax, qmax)).collect())
+                .collect(),
+            biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
+            pairs,
+            scale: 1.0,
+        }
+    }
+
+    /// SERV + accelerator must agree with native inference — loop and
+    /// unrolled forms, all precisions, both strategies.
+    #[test]
+    fn accel_program_matches_native_inference() {
+        let mut rng = Pcg32::seeded(0xacce1);
+        for strategy in [Strategy::Ovr, Strategy::Ovo] {
+            for bits in [4u8, 8, 16] {
+                for unroll_limit in [0usize, 1024] {
+                    let m = random_model(&mut rng, strategy, bits, 4, 6);
+                    let mut runner = ProgramRunner::accelerated(
+                        &m,
+                        TimingConfig::ideal_mem(),
+                        ProgramOpts { unroll_limit },
+                    )
+                    .unwrap();
+                    for _ in 0..8 {
+                        let x: Vec<i32> = (0..6).map(|_| rng.below(16) as i32).collect();
+                        let (pred, _) = runner.run_sample(&x).unwrap();
+                        assert_eq!(
+                            pred,
+                            infer::predict(&m, &x),
+                            "{strategy:?} w{bits} unroll={unroll_limit} x={x:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Headline sanity: the accelerated program must beat the baseline
+    /// by an order of magnitude under the paper's timing model.
+    #[test]
+    fn accel_is_much_faster_than_baseline() {
+        let mut rng = Pcg32::seeded(21);
+        let m = random_model(&mut rng, Strategy::Ovr, 8, 3, 8);
+        let x: Vec<i32> = (0..8).map(|_| rng.below(16) as i32).collect();
+        let t = TimingConfig::flexic();
+        let base = ProgramRunner::baseline(&m, t).unwrap().run_sample(&x).unwrap().1.total();
+        let acc = ProgramRunner::accelerated(&m, t, ProgramOpts::default())
+            .unwrap()
+            .run_sample(&x)
+            .unwrap()
+            .1
+            .total();
+        let speedup = base as f64 / acc as f64;
+        assert!(speedup > 5.0, "speedup only {speedup:.1}x (base {base}, accel {acc})");
+    }
+}

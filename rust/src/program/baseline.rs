@@ -1,0 +1,246 @@
+//! Software-only SVM inference (the paper's "w/o accel" configuration).
+//!
+//! Pure RV32I: every product is a shift-add `mul32` call (SERV has no M
+//! extension), scores accumulate in registers, OvR tracks a running
+//! strict-maximum, OvO tallies votes in memory and argmaxes them.
+//!
+//! Register allocation (callee-saved registers are free — bare metal,
+//! main never returns):
+//!   s0 x-buffer ptr   s1 weight ptr (walks)   s2 bias ptr (walks)
+//!   s3 K              s4 k                    s5 best score
+//!   s6 best id        s7 F                    s8/s9 pair-i/j ptrs (OvO)
+//!   s10 votes base (OvO)
+//!   t0 sum            t1 j                    t2 x ptr (walks)
+//!   mul32 clobbers a0, a1, t3, t4.
+
+use anyhow::Result;
+
+use crate::isa::reg::*;
+use crate::isa::Asm;
+use crate::svm::model::{QuantModel, Strategy};
+use crate::svm::infer::XMAX;
+
+use super::{finish, BuiltProgram, ProgramKind};
+
+/// Emit `mul32`: a0 = a0 * a1 (low 32 bits; correct for signed operands
+/// mod 2^32).  Iterates while the multiplier has set bits.
+fn emit_mul32(a: &mut Asm) {
+    a.label("mul32");
+    a.mv(T3, A0);
+    a.li(A0, 0);
+    a.label("mul_loop");
+    a.andi(T4, A1, 1);
+    a.beq(T4, ZERO, "mul_skip");
+    a.add(A0, A0, T3);
+    a.label("mul_skip");
+    a.slli(T3, T3, 1);
+    a.srli(A1, A1, 1);
+    a.bne(A1, ZERO, "mul_loop");
+    a.ret();
+}
+
+/// Build the baseline inference program for a quantized model.
+pub fn build(m: &QuantModel) -> Result<BuiltProgram> {
+    let k = m.n_classifiers();
+    let f = m.n_features;
+    let c = m.n_classes;
+    let mut a = Asm::new(0);
+
+    // ---- prologue ----
+    a.la(S0, "xbuf");
+    a.la(S1, "weights");
+    a.la(S2, "biases");
+    a.li(S3, k as i32);
+    a.li(S4, 0);
+    a.li(S7, f as i32);
+    if m.strategy == Strategy::Ovo {
+        a.la(S8, "pairs_i");
+        a.la(S9, "pairs_j");
+        a.la(S10, "votes");
+        // zero the votes array (fresh state every run)
+        a.mv(T0, S10);
+        a.li(T1, c as i32);
+        a.label("zv_loop");
+        a.sw(T0, ZERO, 0);
+        a.addi(T0, T0, 4);
+        a.addi(T1, T1, -1);
+        a.bne(T1, ZERO, "zv_loop");
+    }
+
+    // ---- per-classifier loop ----
+    a.label("loop_k");
+    a.li(T0, 0); // sum
+    a.li(T1, 0); // j
+    a.mv(T2, S0);
+    a.label("loop_j");
+    a.lw(A0, T2, 0);
+    a.lw(A1, S1, 0);
+    a.call("mul32");
+    a.add(T0, T0, A0);
+    a.addi(T2, T2, 4);
+    a.addi(S1, S1, 4);
+    a.addi(T1, T1, 1);
+    a.blt(T1, S7, "loop_j");
+    // bias: sum += 15 * b[k]
+    a.li(A0, XMAX as i32);
+    a.lw(A1, S2, 0);
+    a.call("mul32");
+    a.add(T0, T0, A0);
+    a.addi(S2, S2, 4);
+
+    match m.strategy {
+        Strategy::Ovr => {
+            // strict-greater running max (first max wins)
+            a.beq(S4, ZERO, "update_best");
+            a.blt(S5, T0, "update_best");
+            a.j("next_k");
+            a.label("update_best");
+            a.mv(S5, T0);
+            a.mv(S6, S4);
+            a.label("next_k");
+        }
+        Strategy::Ovo => {
+            // vote: score >= 0 -> pairs_i[k], else pairs_j[k]
+            a.bge(T0, ZERO, "vote_i");
+            a.lw(T5, S9, 0);
+            a.j("do_vote");
+            a.label("vote_i");
+            a.lw(T5, S8, 0);
+            a.label("do_vote");
+            a.slli(T5, T5, 2);
+            a.add(T5, T5, S10);
+            a.lw(T4, T5, 0);
+            a.addi(T4, T4, 1);
+            a.sw(T5, T4, 0);
+            a.addi(S8, S8, 4);
+            a.addi(S9, S9, 4);
+        }
+    }
+    a.addi(S4, S4, 1);
+    a.blt(S4, S3, "loop_k");
+
+    // ---- epilogue ----
+    match m.strategy {
+        Strategy::Ovr => {
+            a.mv(A0, S6);
+            a.ecall();
+        }
+        Strategy::Ovo => {
+            // argmax over votes[0..C], first max wins
+            a.la(T6, "votes");
+            a.li(T0, 0); // c
+            a.li(T1, c as i32);
+            a.label("am_loop");
+            a.lw(T2, T6, 0);
+            a.beq(T0, ZERO, "am_update");
+            a.blt(S5, T2, "am_update");
+            a.j("am_next");
+            a.label("am_update");
+            a.mv(S5, T2);
+            a.mv(S6, T0);
+            a.label("am_next");
+            a.addi(T6, T6, 4);
+            a.addi(T0, T0, 1);
+            a.blt(T0, T1, "am_loop");
+            a.mv(A0, S6);
+            a.ecall();
+        }
+    }
+
+    emit_mul32(&mut a);
+
+    // ---- data ----
+    let text_words = (a.here() / 4) as usize;
+    a.label("xbuf");
+    a.zeros(f); // host-poked raw features (one word each, 0..15)
+    a.label("weights");
+    for row in &m.weights {
+        a.words_i32(row);
+    }
+    a.label("biases");
+    a.words_i32(&m.biases);
+    if m.strategy == Strategy::Ovo {
+        a.label("pairs_i");
+        a.words_i32(&m.pairs.iter().map(|p| p.0 as i32).collect::<Vec<_>>());
+        a.label("pairs_j");
+        a.words_i32(&m.pairs.iter().map(|p| p.1 as i32).collect::<Vec<_>>());
+        a.label("votes");
+        a.zeros(c);
+    }
+
+    let mut built = finish(&a, ProgramKind::Baseline, "xbuf", f)?;
+    built.text_words = text_words;
+    Ok(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::run::ProgramRunner;
+    use crate::serv::TimingConfig;
+    use crate::svm::infer;
+    use crate::util::Pcg32;
+
+    fn random_model(rng: &mut Pcg32, strategy: Strategy, bits: u8, c: usize, f: usize) -> QuantModel {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let pairs: Vec<(usize, usize)> = match strategy {
+            Strategy::Ovr => (0..c).map(|i| (i, i)).collect(),
+            Strategy::Ovo => {
+                let mut p = vec![];
+                for i in 0..c {
+                    for j in i + 1..c {
+                        p.push((i, j));
+                    }
+                }
+                p
+            }
+        };
+        let k = pairs.len();
+        QuantModel {
+            dataset: "rand".into(),
+            strategy,
+            bits,
+            n_classes: c,
+            n_features: f,
+            weights: (0..k)
+                .map(|_| (0..f).map(|_| rng.range_i32(-qmax, qmax)).collect())
+                .collect(),
+            biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
+            pairs,
+            scale: 1.0,
+        }
+    }
+
+    /// The SERV-executed baseline program must agree with the native
+    /// integer spec on random models and inputs.
+    #[test]
+    fn baseline_program_matches_native_inference() {
+        let mut rng = Pcg32::seeded(0x5eed);
+        for strategy in [Strategy::Ovr, Strategy::Ovo] {
+            for bits in [4u8, 8, 16] {
+                let m = random_model(&mut rng, strategy, bits, 3, 5);
+                let mut runner =
+                    ProgramRunner::baseline(&m, TimingConfig::ideal_mem()).unwrap();
+                for _ in 0..10 {
+                    let x: Vec<i32> = (0..5).map(|_| rng.below(16) as i32).collect();
+                    let (pred, _) = runner.run_sample(&x).unwrap();
+                    assert_eq!(pred, infer::predict(&m, &x), "{strategy:?} w{bits} x={x:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_cycles_scale_with_classifiers() {
+        let mut rng = Pcg32::seeded(9);
+        let small = random_model(&mut rng, Strategy::Ovr, 8, 2, 4);
+        let large = random_model(&mut rng, Strategy::Ovr, 8, 6, 4);
+        let x = vec![7i32; 4];
+        let t = TimingConfig::flexic();
+        let c_small =
+            ProgramRunner::baseline(&small, t).unwrap().run_sample(&x).unwrap().1.total();
+        let c_large =
+            ProgramRunner::baseline(&large, t).unwrap().run_sample(&x).unwrap().1.total();
+        assert!(c_large > c_small * 2, "6 classifiers should cost >2x of 2");
+    }
+}

@@ -1,0 +1,83 @@
+//! Bare-metal SVM inference programs for the SERV SoC.
+//!
+//! Two generators produce the exact machine code the paper measures:
+//!
+//!  * [`baseline`] — pure RV32I software inference.  SERV has no
+//!    multiplier (paper §II-B), so every `x*w` product runs through a
+//!    shift-add `mul32` routine — the cost the accelerator removes.
+//!  * [`accel`] — Algorithm 1: `Create_Env`, a `SV_Calc*` stream over
+//!    packed feature/weight words, `SV_Res*` per classifier, and
+//!    software vote handling for OvO.
+//!
+//! Both programs follow the same bare-metal convention: features are
+//! host-poked into a fixed buffer before each run, the predicted class
+//! id is returned in `a0` via `ecall`.
+//!
+//! [`run::ProgramRunner`] is the host-side harness that feeds test
+//! samples, runs the SoC and collects per-inference cycle statistics.
+
+pub mod accel;
+pub mod baseline;
+pub mod run;
+
+use crate::isa::Asm;
+
+/// Which program variant (reports/plots key off this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramKind {
+    Baseline,
+    Accelerated,
+}
+
+impl ProgramKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProgramKind::Baseline => "baseline",
+            ProgramKind::Accelerated => "accel",
+        }
+    }
+}
+
+/// Generation options.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgramOpts {
+    /// Fully unroll the calc loop of the accelerated program when the
+    /// total instruction count stays small (the paper's inline-asm
+    /// style).  Loop form is kept for large models (Dermatology).
+    pub unroll_limit: usize,
+}
+
+impl Default for ProgramOpts {
+    fn default() -> Self {
+        ProgramOpts { unroll_limit: 128 }
+    }
+}
+
+/// A generated program image plus the addresses the host needs.
+#[derive(Debug, Clone)]
+pub struct BuiltProgram {
+    pub kind: ProgramKind,
+    pub image: Vec<u8>,
+    /// Where the host pokes the (raw or packed) feature words.
+    pub feature_addr: u32,
+    /// Number of feature words the host must write per inference.
+    pub n_feature_words: usize,
+    /// Static instruction count (text section words).
+    pub text_words: usize,
+}
+
+pub(crate) fn finish(asm: &Asm, kind: ProgramKind, feature_label: &str, n_feature_words: usize)
+    -> anyhow::Result<BuiltProgram>
+{
+    let image = asm.assemble_bytes()?;
+    let feature_addr = asm
+        .lookup(feature_label)
+        .ok_or_else(|| anyhow::anyhow!("program generator did not place {feature_label:?}"))?;
+    Ok(BuiltProgram {
+        kind,
+        image,
+        feature_addr,
+        n_feature_words,
+        text_words: 0, // patched by generators that track it
+    })
+}

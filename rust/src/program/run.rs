@@ -1,0 +1,182 @@
+//! Host-side harness: build a program, load it into an SoC, feed test
+//! samples, collect per-inference cycle statistics.
+
+use anyhow::{bail, Result};
+
+use crate::accel::svm::SvmAccel;
+use crate::serv::{CycleStats, Exit, TimingConfig};
+use crate::soc::Soc;
+use crate::svm::model::QuantModel;
+use crate::svm::pack;
+
+use super::{accel, baseline, BuiltProgram, ProgramKind, ProgramOpts};
+
+/// Default per-inference cycle budget (Dermatology baseline runs ~10^7).
+pub const DEFAULT_BUDGET: u64 = 500_000_000;
+
+pub struct ProgramRunner {
+    soc: Soc,
+    prog: BuiltProgram,
+    bits: u8,
+    n_features: usize,
+    budget: u64,
+}
+
+impl ProgramRunner {
+    /// Software-only configuration ("w/o accel"): no CFU is registered —
+    /// if the program tried to issue an accelerator instruction the SoC
+    /// would fault, proving the baseline really is pure RV32I.
+    pub fn baseline(m: &QuantModel, timing: TimingConfig) -> Result<ProgramRunner> {
+        let prog = baseline::build(m)?;
+        let soc = Soc::new(&prog.image, timing);
+        Ok(ProgramRunner { soc, prog, bits: m.bits, n_features: m.n_features, budget: DEFAULT_BUDGET })
+    }
+
+    /// Accelerated configuration: SVM CFU at funct7 = 1.
+    pub fn accelerated(m: &QuantModel, timing: TimingConfig, opts: ProgramOpts) -> Result<ProgramRunner> {
+        let prog = accel::build(m, opts)?;
+        let mut soc = Soc::new(&prog.image, timing);
+        soc.register_cfu(crate::isa::CFU_FUNCT7_SVM, Box::new(SvmAccel::new()))?;
+        Ok(ProgramRunner { soc, prog, bits: m.bits, n_features: m.n_features, budget: DEFAULT_BUDGET })
+    }
+
+    pub fn kind(&self) -> ProgramKind {
+        self.prog.kind
+    }
+
+    pub fn program(&self) -> &BuiltProgram {
+        &self.prog
+    }
+
+    pub fn set_budget(&mut self, cycles: u64) {
+        self.budget = cycles;
+    }
+
+    /// Mutable access to the SoC (tracing harnesses).
+    pub fn soc_mut(&mut self) -> &mut Soc {
+        &mut self.soc
+    }
+
+    /// Write the feature words for one sample into the program's buffer.
+    pub fn poke_features(&mut self, x_q: &[i32]) -> Result<()> {
+        if x_q.len() != self.n_features {
+            bail!("expected {} features, got {}", self.n_features, x_q.len());
+        }
+        if x_q.iter().any(|&v| !(0..=15).contains(&v)) {
+            bail!("features must be 4-bit unsigned");
+        }
+        let words: Vec<u32> = match self.prog.kind {
+            ProgramKind::Baseline => x_q.iter().map(|&v| v as u32).collect(),
+            ProgramKind::Accelerated => pack::feature_words(x_q, self.bits),
+        };
+        debug_assert_eq!(words.len(), self.prog.n_feature_words);
+        self.soc.mem.poke_words(self.prog.feature_addr, &words);
+        Ok(())
+    }
+
+    /// Run one inference; returns (predicted class, cycle stats).
+    pub fn run_sample(&mut self, x_q: &[i32]) -> Result<(i32, CycleStats)> {
+        self.soc.rearm();
+        self.poke_features(x_q)?;
+        let r = self.soc.run(self.budget)?;
+        match r.exit {
+            Exit::Ecall { a0, .. } => Ok((a0 as i32, r.stats)),
+            Exit::Ebreak => bail!("program hit ebreak"),
+        }
+    }
+
+    /// Run the whole test set; returns (accuracy, mean per-inference
+    /// stats, aggregate stats).
+    pub fn run_test_set(
+        &mut self,
+        x: &[Vec<i32>],
+        y: &[i32],
+        limit: Option<usize>,
+    ) -> Result<TestSetResult> {
+        let n = limit.unwrap_or(x.len()).min(x.len());
+        if n == 0 {
+            bail!("empty test set");
+        }
+        let mut agg = CycleStats::default();
+        let mut correct = 0usize;
+        for i in 0..n {
+            let (pred, stats) = self.run_sample(&x[i])?;
+            agg.merge(&stats);
+            if pred == y[i] {
+                correct += 1;
+            }
+        }
+        Ok(TestSetResult {
+            n_samples: n,
+            accuracy: correct as f64 / n as f64,
+            cycles_per_inference: agg.total() as f64 / n as f64,
+            agg,
+        })
+    }
+}
+
+/// Aggregate result over a test set.
+#[derive(Debug, Clone, Copy)]
+pub struct TestSetResult {
+    pub n_samples: usize,
+    pub accuracy: f64,
+    pub cycles_per_inference: f64,
+    pub agg: CycleStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::model::Strategy;
+
+    fn tiny_model() -> QuantModel {
+        QuantModel {
+            dataset: "tiny".into(),
+            strategy: Strategy::Ovr,
+            bits: 4,
+            n_classes: 2,
+            n_features: 2,
+            weights: vec![vec![7, -7], vec![-7, 7]],
+            biases: vec![0, 0],
+            pairs: vec![(0, 0), (1, 1)],
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn run_test_set_accuracy() {
+        let m = tiny_model();
+        let x = vec![vec![15, 0], vec![0, 15], vec![12, 3], vec![1, 9]];
+        let y = vec![0, 1, 0, 1];
+        for mut r in [
+            ProgramRunner::baseline(&m, TimingConfig::ideal_mem()).unwrap(),
+            ProgramRunner::accelerated(&m, TimingConfig::ideal_mem(), ProgramOpts::default())
+                .unwrap(),
+        ] {
+            let res = r.run_test_set(&x, &y, None).unwrap();
+            assert_eq!(res.accuracy, 1.0, "{:?}", r.kind());
+            assert!(res.cycles_per_inference > 0.0);
+            assert_eq!(res.n_samples, 4);
+        }
+    }
+
+    #[test]
+    fn feature_validation() {
+        let m = tiny_model();
+        let mut r = ProgramRunner::baseline(&m, TimingConfig::ideal_mem()).unwrap();
+        assert!(r.run_sample(&[16, 0]).is_err());
+        assert!(r.run_sample(&[1]).is_err());
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        let m = tiny_model();
+        let mut r =
+            ProgramRunner::accelerated(&m, TimingConfig::flexic(), ProgramOpts::default())
+                .unwrap();
+        let (p1, s1) = r.run_sample(&[9, 2]).unwrap();
+        let (p2, s2) = r.run_sample(&[9, 2]).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(s1, s2, "cycle counts must be reproducible");
+    }
+}

@@ -1,0 +1,71 @@
+//! The §V-B area/power paragraph: component power and area, the Gen3
+//! gate-budget check, and per-CFU NAND2 estimates.
+
+use crate::accel::mac::MacAccel;
+use crate::accel::popcount::PopcountAccel;
+use crate::accel::svm::SvmAccel;
+use crate::accel::Cfu;
+use crate::power::FlexicModel;
+use crate::util::Table;
+
+pub fn render() -> String {
+    let m = FlexicModel::paper();
+    let mut out = String::new();
+    out.push_str("FlexIC Gen3 @ 52 kHz (paper §V-B reference figures)\n\n");
+    let mut t = Table::new(["Component", "Power (mW)", "Area (mm2)", "NAND2-eq"]);
+    let svm = SvmAccel::new();
+    let mac = MacAccel::new();
+    let pop = PopcountAccel::new();
+    t.row([
+        "SERV core".to_string(),
+        format!("{:.3}", m.serv_mw),
+        format!("{:.2}", m.serv_area_mm2),
+        "~5500".to_string(),
+    ]);
+    t.row([
+        "SVM accelerator".to_string(),
+        format!("{:.3}", m.accel_mw),
+        format!("{:.2}", m.accel_area_mm2),
+        format!("{}", svm.nand2_equivalents()),
+    ]);
+    t.row([
+        "(demo) mac32 CFU".to_string(),
+        format!("{:.3}", m.accel_mw_scaled(mac.nand2_equivalents())),
+        format!("{:.2}", m.accel_area_scaled(mac.nand2_equivalents())),
+        format!("{}", mac.nand2_equivalents()),
+    ]);
+    t.row([
+        "(demo) popcount CFU".to_string(),
+        format!("{:.3}", m.accel_mw_scaled(pop.nand2_equivalents())),
+        format!("{:.2}", m.accel_area_scaled(pop.nand2_equivalents())),
+        format!("{}", pop.nand2_equivalents()),
+    ]);
+    t.row([
+        "Total (SERV + SVM)".to_string(),
+        format!("{:.3}", m.total_mw()),
+        format!("{:.2}", m.serv_area_mm2 + m.accel_area_mm2),
+        format!("{}", 5500 + svm.nand2_equivalents()),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nGen3 integration budget: {} NAND2-eq — SERV + SVM accel fits: {}\n",
+        m.gate_budget,
+        m.fits_budget(svm.nand2_equivalents())
+    ));
+    out.push_str(&format!(
+        "battery life on a 1000 mWh coin pack at continuous inference: {:.0} h\n",
+        m.battery_life_h(1000.0)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_components() {
+        let s = super::render();
+        for needle in ["SERV core", "SVM accelerator", "mac32", "popcount", "0.224", "18.47"] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment regeneration: Table I, the §V-B area/power paragraph,
+//! and cycle-attribution reports (DESIGN.md §4 experiment index).
+
+pub mod area_power;
+pub mod table1;
+
+pub use table1::{run_table1, RowResult, Table1Opts};

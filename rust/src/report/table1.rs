@@ -1,0 +1,222 @@
+//! Table I regeneration: per (dataset, strategy, bits) — accuracy,
+//! cycles/inference with and without the accelerator (measured on the
+//! cycle-accurate SERV SoC), energy via the FlexIC model, speedup and
+//! energy reduction.
+
+use anyhow::Result;
+
+use crate::power::FlexicModel;
+use crate::program::run::ProgramRunner;
+use crate::program::ProgramOpts;
+use crate::serv::TimingConfig;
+use crate::svm::model::Manifest;
+use crate::util::{json, Json, Table};
+
+/// One Table-I row (paper columns + our cycle-attribution extras).
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub key: String,
+    pub dataset: String,
+    pub strategy: String,
+    pub bits: u8,
+    pub accuracy: f64,
+    pub n_samples: usize,
+    pub base_cycles: f64,
+    pub base_energy_mj: f64,
+    pub accel_cycles: f64,
+    pub accel_energy_mj: f64,
+    pub speedup: f64,
+    pub energy_red_pct: f64,
+    /// data-memory share of total cycles (MEM experiment)
+    pub base_mem_share: f64,
+    pub accel_mem_share: f64,
+}
+
+/// Options for the Table-I run.
+#[derive(Debug, Clone)]
+pub struct Table1Opts {
+    /// Datasets to include (short names); empty = all.
+    pub datasets: Vec<String>,
+    /// Max test samples per config (None = full test set).
+    pub limit: Option<usize>,
+    pub timing: TimingConfig,
+    pub program: ProgramOpts,
+    /// Cross-check SoC predictions against build-time accuracy.
+    pub verify_accuracy: bool,
+}
+
+impl Default for Table1Opts {
+    fn default() -> Self {
+        Table1Opts {
+            datasets: vec![],
+            limit: None,
+            timing: TimingConfig::flexic(),
+            program: ProgramOpts::default(),
+            verify_accuracy: true,
+        }
+    }
+}
+
+/// Run the full sweep — configs are independent, so they run on a
+/// scoped thread pool (one thread per config, each owning its SoCs;
+/// EXPERIMENTS.md §Perf iteration 4).
+pub fn run_table1(manifest: &Manifest, opts: &Table1Opts) -> Result<Vec<RowResult>> {
+    let entries: Vec<_> = manifest
+        .configs
+        .iter()
+        .filter(|e| opts.datasets.is_empty() || opts.datasets.contains(&e.dataset))
+        .collect();
+    let mut rows = Vec::with_capacity(entries.len());
+    std::thread::scope(|scope| -> Result<()> {
+        let handles: Vec<_> = entries
+            .iter()
+            .map(|entry| scope.spawn(move || run_one(manifest, entry, opts)))
+            .collect();
+        for h in handles {
+            rows.push(h.join().expect("table1 worker panicked")?);
+        }
+        Ok(())
+    })?;
+    // paper row order: dataset, OvR before OvO, bits ascending
+    let ds_rank = |d: &str| ["bs", "derm", "iris", "seeds", "v3"].iter().position(|x| *x == d).unwrap_or(99);
+    let st_rank = |s: &str| if s == "ovr" { 0 } else { 1 };
+    rows.sort_by_key(|r| (ds_rank(&r.dataset), st_rank(&r.strategy), r.bits));
+    Ok(rows)
+}
+
+fn run_one(
+    manifest: &Manifest,
+    entry: &crate::svm::model::ConfigEntry,
+    opts: &Table1Opts,
+) -> Result<RowResult> {
+    let power = FlexicModel::paper();
+    {
+        let model = manifest.model(entry)?;
+        let test = manifest.test_set(&entry.dataset)?;
+
+        let mut base = ProgramRunner::baseline(&model, opts.timing)?;
+        let base_res = base.run_test_set(&test.x_q, &test.y, opts.limit)?;
+
+        let mut acc = ProgramRunner::accelerated(&model, opts.timing, opts.program)?;
+        let acc_res = acc.run_test_set(&test.x_q, &test.y, opts.limit)?;
+
+        // both SoC variants must classify identically (same integer math)
+        anyhow::ensure!(
+            (base_res.accuracy - acc_res.accuracy).abs() < 1e-12,
+            "{}: baseline and accelerated SoC disagree on accuracy",
+            entry.key
+        );
+        if opts.verify_accuracy && opts.limit.is_none() {
+            anyhow::ensure!(
+                (acc_res.accuracy - entry.accuracy).abs() < 1e-9,
+                "{}: SoC accuracy {} != build-time accuracy {}",
+                entry.key,
+                acc_res.accuracy,
+                entry.accuracy
+            );
+        }
+
+        let base_cycles = base_res.cycles_per_inference;
+        let accel_cycles = acc_res.cycles_per_inference;
+        Ok(RowResult {
+            key: entry.key.clone(),
+            dataset: entry.dataset.clone(),
+            strategy: entry.strategy.as_str().to_string(),
+            bits: entry.bits,
+            accuracy: acc_res.accuracy,
+            n_samples: acc_res.n_samples,
+            base_cycles,
+            base_energy_mj: power.energy_mj(base_cycles),
+            accel_cycles,
+            accel_energy_mj: power.energy_mj(accel_cycles),
+            speedup: base_cycles / accel_cycles,
+            energy_red_pct: power.energy_reduction_pct(base_cycles, accel_cycles),
+            base_mem_share: base_res.agg.data_mem_share(),
+            accel_mem_share: acc_res.agg.data_mem_share(),
+        })
+    }
+}
+
+/// Render in the paper's column layout.
+pub fn render(rows: &[RowResult], with_attr: bool) -> String {
+    let mut header = vec![
+        "Dataset", "Strategy", "Bits", "Acc(%)", "base Mcyc", "base mJ/inf", "accel Mcyc",
+        "accel mJ/inf", "Speedup(x)", "EnRed(%)",
+    ];
+    if with_attr {
+        header.push("base dmem%");
+        header.push("accel dmem%");
+    }
+    let mut t = Table::new(header);
+    for r in rows {
+        let mut cells = vec![
+            r.dataset.clone(),
+            r.strategy.to_uppercase(),
+            r.bits.to_string(),
+            format!("{:.1}", r.accuracy * 100.0),
+            format!("{:.3}", r.base_cycles / 1e6),
+            format!("{:.1}", r.base_energy_mj),
+            format!("{:.4}", r.accel_cycles / 1e6),
+            format!("{:.2}", r.accel_energy_mj),
+            format!("{:.1}", r.speedup),
+            format!("{:.1}", r.energy_red_pct),
+        ];
+        if with_attr {
+            cells.push(format!("{:.1}", r.base_mem_share * 100.0));
+            cells.push(format!("{:.1}", r.accel_mem_share * 100.0));
+        }
+        t.row(cells);
+    }
+    let mut out = t.render();
+    out.push_str(&summary(rows));
+    out
+}
+
+/// Headline means (the paper's "21× improvement ... on average").
+pub fn summary(rows: &[RowResult]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let mean = |f: &dyn Fn(&RowResult) -> f64| {
+        rows.iter().map(|r| f(r)).sum::<f64>() / rows.len() as f64
+    };
+    let ovr: Vec<&RowResult> = rows.iter().filter(|r| r.strategy == "ovr").collect();
+    let ovo: Vec<&RowResult> = rows.iter().filter(|r| r.strategy == "ovo").collect();
+    let mean_of = |rs: &[&RowResult]| {
+        if rs.is_empty() {
+            0.0
+        } else {
+            rs.iter().map(|r| r.speedup).sum::<f64>() / rs.len() as f64
+        }
+    };
+    format!(
+        "\nmean speedup {:.1}x (OvR {:.1}x, OvO {:.1}x) | mean energy reduction {:.1}% | paper: 21x avg, OvR 23x, OvO 19.8x\n",
+        mean(&|r| r.speedup),
+        mean_of(&ovr),
+        mean_of(&ovo),
+        mean(&|r| r.energy_red_pct),
+    )
+}
+
+/// JSON export for EXPERIMENTS.md bookkeeping.
+pub fn to_json(rows: &[RowResult]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                json::obj([
+                    ("key", r.key.as_str().into()),
+                    ("accuracy", r.accuracy.into()),
+                    ("base_cycles", r.base_cycles.into()),
+                    ("accel_cycles", r.accel_cycles.into()),
+                    ("base_energy_mj", r.base_energy_mj.into()),
+                    ("accel_energy_mj", r.accel_energy_mj.into()),
+                    ("speedup", r.speedup.into()),
+                    ("energy_red_pct", r.energy_red_pct.into()),
+                    ("base_mem_share", r.base_mem_share.into()),
+                    ("accel_mem_share", r.accel_mem_share.into()),
+                    ("n_samples", (r.n_samples as i32).into()),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,136 @@
+//! PJRT runtime: load the AOT-compiled inference graphs (HLO text
+//! emitted by `python/compile/aot.py`) and execute them from Rust.
+//!
+//! Python never runs on this path — the artifacts are compiled once by
+//! `make artifacts`, and this module turns each into a resident
+//! `PjRtLoadedExecutable` on the CPU PJRT client (the same flow a TPU
+//! deployment would use with a TPU plugin; see /opt/xla-example/README
+//! for why the interchange format is HLO *text*, not serialized proto:
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::svm::model::{ConfigEntry, Manifest};
+
+/// One compiled inference graph: predicts `batch` samples of
+/// `n_features` 4-bit features in a single execution.
+pub struct LoadedConfig {
+    exe: xla::PjRtLoadedExecutable,
+    pub key: String,
+    pub batch: usize,
+    pub n_features: usize,
+    pub n_classifiers: usize,
+}
+
+/// Batch inference output.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Predicted class per sample.
+    pub preds: Vec<i32>,
+    /// Raw integer classifier scores, row-major [batch][n_classifiers].
+    pub scores: Vec<i32>,
+}
+
+impl LoadedConfig {
+    /// Execute on exactly `batch` samples (callers pad; see `Engine`).
+    pub fn execute(&self, x_q: &[i32]) -> Result<BatchOutput> {
+        if x_q.len() != self.batch * self.n_features {
+            bail!(
+                "expected {}x{} features, got {}",
+                self.batch,
+                self.n_features,
+                x_q.len()
+            );
+        }
+        let input = xla::Literal::vec1(x_q).reshape(&[self.batch as i64, self.n_features as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (pred [B], scores [B,K])
+        let (pred_lit, scores_lit) = result.to_tuple2()?;
+        Ok(BatchOutput { preds: pred_lit.to_vec::<i32>()?, scores: scores_lit.to_vec::<i32>()? })
+    }
+}
+
+/// The PJRT engine: one CPU client + a cache of compiled configs.
+pub struct Engine {
+    client: xla::PjRtClient,
+    loaded: HashMap<(String, usize), LoadedConfig>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, loaded: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO text file.
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Load (compile + cache) a (config, batch) pair from the manifest.
+    pub fn load(&mut self, manifest: &Manifest, entry: &ConfigEntry, batch: usize) -> Result<()> {
+        let cache_key = (entry.key.clone(), batch);
+        if self.loaded.contains_key(&cache_key) {
+            return Ok(());
+        }
+        let path = manifest.hlo_path(entry, batch)?;
+        let exe = self.compile(&path)?;
+        self.loaded.insert(
+            cache_key,
+            LoadedConfig {
+                exe,
+                key: entry.key.clone(),
+                batch,
+                n_features: entry.n_features,
+                n_classifiers: entry.n_classifiers,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str, batch: usize) -> Result<&LoadedConfig> {
+        self.loaded
+            .get(&(key.to_string(), batch))
+            .with_context(|| format!("config {key:?} batch {batch} not loaded"))
+    }
+
+    pub fn loaded_keys(&self) -> Vec<(String, usize)> {
+        self.loaded.keys().cloned().collect()
+    }
+
+    /// Predict an arbitrary number of samples by padding to the loaded
+    /// batch size and slicing the tail off (row-major x_q, n×F).
+    pub fn predict(&self, key: &str, batch: usize, x_q: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let cfg = self.get(key, batch)?;
+        let mut preds = Vec::with_capacity(x_q.len());
+        for chunk in x_q.chunks(cfg.batch) {
+            let mut flat = Vec::with_capacity(cfg.batch * cfg.n_features);
+            for row in chunk {
+                if row.len() != cfg.n_features {
+                    bail!("feature arity mismatch");
+                }
+                flat.extend_from_slice(row);
+            }
+            flat.resize(cfg.batch * cfg.n_features, 0); // pad with zeros
+            let out = cfg.execute(&flat)?;
+            preds.extend_from_slice(&out.preds[..chunk.len()]);
+        }
+        Ok(preds)
+    }
+}
+
+// NOTE: integration tests in rust/tests/runtime_pjrt.rs exercise this
+// module against the real artifacts (golden vectors + accuracy); no
+// unit tests here because the PJRT client needs the artifacts on disk.

@@ -1,0 +1,491 @@
+//! The SERV instruction FSM: fetch → (modified) decode → serial execute.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::accel::CfuBank;
+use crate::isa::{self, AluOp, BranchOp, Instr, LoadOp, StoreOp};
+
+use super::alu::{self, BitOp, ShiftOp};
+use super::timing::{CycleStats, TimingConfig};
+
+/// Memory-side interface of the core (implemented by `soc::Memory`).
+/// Latency is charged by the core from `TimingConfig`; the bus only
+/// moves data and validates addresses.
+pub trait Bus {
+    fn fetch(&mut self, addr: u32) -> Result<u32>;
+    /// size in {1, 2, 4}; returns zero-extended raw bits.
+    fn load(&mut self, addr: u32, size: u8) -> Result<u32>;
+    fn store(&mut self, addr: u32, value: u32, size: u8) -> Result<()>;
+}
+
+/// Program termination, signalled by `ecall`/`ebreak`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exit {
+    /// `ecall`: a0 carries the program's result value, a1 an optional
+    /// auxiliary value (our bare-metal convention).
+    Ecall { a0: u32, a1: u32 },
+    Ebreak,
+}
+
+/// CFU handshake record for one accelerator instruction — enough to
+/// render the Fig. 2 life-cycle trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CfuEvent {
+    pub funct7: u8,
+    pub funct3: u8,
+    pub rs1: u32,
+    pub rs2: u32,
+    pub result: u32,
+    pub compute_cycles: u64,
+    pub wrote_rd: bool,
+}
+
+/// Per-step report.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    pub pc: u32,
+    pub instr: Instr,
+    pub cycles: u64,
+    pub exit: Option<Exit>,
+    pub cfu: Option<CfuEvent>,
+}
+
+/// Architectural state: 32 registers + PC.  (In RTL these are shift
+/// registers; their serial access cost is what the 32-cycle execute
+/// phases account for.)
+///
+/// `decode_cache` is a pure simulator optimisation (EXPERIMENTS.md
+/// §Perf): decoding is memoised per PC, keyed by the raw fetched word,
+/// so a hit is only valid while the instruction memory at that PC is
+/// unchanged — self-modifying images degrade gracefully to re-decoding.
+#[derive(Debug, Clone)]
+pub struct ServCore {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    decode_cache: Vec<(u32, Instr)>,
+}
+
+/// Cache entries are (raw_word, decoded); this raw word never decodes
+/// successfully, so it marks an empty slot.
+const CACHE_EMPTY: u32 = 0xffff_ffff;
+
+impl ServCore {
+    pub fn new(pc: u32) -> Self {
+        ServCore { regs: [0; 32], pc, decode_cache: Vec::new() }
+    }
+
+    #[inline]
+    fn rd_write(&mut self, rd: u8, value: u32) {
+        if rd != 0 {
+            self.regs[rd as usize] = value;
+        }
+    }
+
+    #[inline]
+    fn r(&self, i: u8) -> u32 {
+        self.regs[i as usize]
+    }
+
+    /// Execute one instruction; charge cycles into `stats`.
+    pub fn step(
+        &mut self,
+        bus: &mut (impl Bus + ?Sized),
+        cfus: &mut CfuBank,
+        t: &TimingConfig,
+        stats: &mut CycleStats,
+    ) -> Result<StepInfo> {
+        let pc = self.pc;
+        if pc % 4 != 0 {
+            bail!("misaligned PC {pc:#010x}");
+        }
+        // ---- fetch: one memory transaction per instruction ----
+        let word = bus.fetch(pc)?;
+        stats.fetch += t.fetch_cost();
+        let slot = (pc / 4) as usize;
+        let instr = match self.decode_cache.get(slot) {
+            Some(&(raw, cached)) if raw == word => cached,
+            _ => {
+                let decoded = isa::decode(word)
+                    .map_err(|e| anyhow!("at pc {pc:#010x} (word {word:#010x}): {e}"))?;
+                if self.decode_cache.len() <= slot {
+                    self.decode_cache.resize(slot + 1, (CACHE_EMPTY, Instr::Fence));
+                }
+                self.decode_cache[slot] = (word, decoded);
+                decoded
+            }
+        };
+
+        let mut cycles = t.fetch_cost();
+        let mut exit = None;
+        let mut cfu_event = None;
+        let mut next_pc = pc.wrapping_add(4);
+
+        macro_rules! exec {
+            ($n:expr) => {{
+                stats.exec += $n as u64;
+                cycles += $n as u64;
+            }};
+        }
+
+        match instr {
+            Instr::Lui { rd, imm } => {
+                // serial pass shifting the immediate into rd
+                exec!(alu::BITS);
+                self.rd_write(rd, imm as u32);
+            }
+            Instr::Auipc { rd, imm } => {
+                let r = alu::add(pc, imm as u32);
+                exec!(r.cycles);
+                self.rd_write(rd, r.value);
+            }
+            Instr::Jal { rd, offset } => {
+                let link = pc.wrapping_add(4);
+                let r = alu::add(pc, offset as u32);
+                exec!(r.cycles);
+                self.rd_write(rd, link);
+                next_pc = r.value;
+            }
+            Instr::Jalr { rd, rs1, offset } => {
+                let link = pc.wrapping_add(4);
+                let r = alu::add(self.r(rs1), offset as u32);
+                exec!(r.cycles);
+                self.rd_write(rd, link);
+                next_pc = r.value & !1;
+            }
+            Instr::Branch { op, rs1, rs2, offset } => {
+                let a = self.r(rs1);
+                let b = self.r(rs2);
+                let (taken, c) = match op {
+                    BranchOp::Beq => {
+                        let r = alu::eq(a, b);
+                        (r.value == 1, r.cycles)
+                    }
+                    BranchOp::Bne => {
+                        let r = alu::eq(a, b);
+                        (r.value == 0, r.cycles)
+                    }
+                    BranchOp::Blt => {
+                        let r = alu::slt(a, b);
+                        (r.value == 1, r.cycles)
+                    }
+                    BranchOp::Bge => {
+                        let r = alu::slt(a, b);
+                        (r.value == 0, r.cycles)
+                    }
+                    BranchOp::Bltu => {
+                        let r = alu::sltu(a, b);
+                        (r.value == 1, r.cycles)
+                    }
+                    BranchOp::Bgeu => {
+                        let r = alu::sltu(a, b);
+                        (r.value == 0, r.cycles)
+                    }
+                };
+                exec!(c);
+                if taken {
+                    // serial PC update pass
+                    exec!(t.branch_taken_extra);
+                    next_pc = pc.wrapping_add(offset as u32);
+                }
+            }
+            Instr::Load { op, rd, rs1, offset } => {
+                let a = alu::add(self.r(rs1), offset as u32); // serial EA calc
+                exec!(a.cycles);
+                let addr = a.value;
+                let (size, signed) = match op {
+                    LoadOp::Lb => (1, true),
+                    LoadOp::Lbu => (1, false),
+                    LoadOp::Lh => (2, true),
+                    LoadOp::Lhu => (2, false),
+                    LoadOp::Lw => (4, false),
+                };
+                let raw = bus.load(addr, size)?;
+                stats.data_mem += t.load_cost();
+                cycles += t.load_cost();
+                stats.loads += 1;
+                let value = if signed {
+                    match size {
+                        1 => raw as u8 as i8 as i32 as u32,
+                        2 => raw as u16 as i16 as i32 as u32,
+                        _ => raw,
+                    }
+                } else {
+                    raw
+                };
+                // serial shift of the fetched word into rd
+                exec!(t.load_shift_in);
+                self.rd_write(rd, value);
+            }
+            Instr::Store { op, rs1, rs2, offset } => {
+                let a = alu::add(self.r(rs1), offset as u32);
+                exec!(a.cycles);
+                let size = match op {
+                    StoreOp::Sb => 1,
+                    StoreOp::Sh => 2,
+                    StoreOp::Sw => 4,
+                };
+                bus.store(a.value, self.r(rs2), size)?;
+                stats.data_mem += t.store_cost();
+                cycles += t.store_cost();
+                stats.stores += 1;
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let r = self.alu_exec(op, self.r(rs1), imm as u32);
+                exec!(r.cycles);
+                self.rd_write(rd, r.value);
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let r = self.alu_exec(op, self.r(rs1), self.r(rs2));
+                exec!(r.cycles);
+                self.rd_write(rd, r.value);
+            }
+            Instr::Custom { funct7, funct3, rd, rs1, rs2 } => {
+                // Fig. 2 handshake: init/rf_ready/valid edges, 32-cycle
+                // serial operand transmission, accelerator compute,
+                // 32-cycle result write-back (skipped for rd = x0).
+                let a = self.r(rs1);
+                let b = self.r(rs2);
+                let cfu = cfus
+                    .get_mut(funct7)
+                    .ok_or_else(|| anyhow!("no CFU registered for funct7={funct7} at pc {pc:#010x}"))?;
+                let out = cfu.execute(funct3, a, b)?;
+                let wrote_rd = rd != 0;
+                let mut c = t.cfu_setup + t.cfu_tx + out.compute_cycles;
+                if wrote_rd {
+                    c += t.cfu_wb;
+                    self.rd_write(rd, out.value);
+                }
+                stats.cfu += c;
+                cycles += c;
+                stats.cfu_ops += 1;
+                cfu_event = Some(CfuEvent {
+                    funct7,
+                    funct3,
+                    rs1: a,
+                    rs2: b,
+                    result: out.value,
+                    compute_cycles: out.compute_cycles,
+                    wrote_rd,
+                });
+            }
+            Instr::Fence => {
+                exec!(alu::BITS);
+            }
+            Instr::Ecall => {
+                exec!(alu::BITS);
+                exit = Some(Exit::Ecall { a0: self.r(10), a1: self.r(11) });
+            }
+            Instr::Ebreak => {
+                exec!(alu::BITS);
+                exit = Some(Exit::Ebreak);
+            }
+        }
+
+        self.pc = next_pc;
+        stats.instret += 1;
+        Ok(StepInfo { pc, instr, cycles, exit, cfu: cfu_event })
+    }
+
+    fn alu_exec(&self, op: AluOp, a: u32, b: u32) -> alu::SerialResult {
+        match op {
+            AluOp::Add => alu::add(a, b),
+            AluOp::Sub => alu::sub(a, b),
+            AluOp::And => alu::bitwise(BitOp::And, a, b),
+            AluOp::Or => alu::bitwise(BitOp::Or, a, b),
+            AluOp::Xor => alu::bitwise(BitOp::Xor, a, b),
+            AluOp::Slt => alu::slt(a, b),
+            AluOp::Sltu => alu::sltu(a, b),
+            AluOp::Sll => alu::shift(ShiftOp::Sll, a, b & 0x1f),
+            AluOp::Srl => alu::shift(ShiftOp::Srl, a, b & 0x1f),
+            AluOp::Sra => alu::shift(ShiftOp::Sra, a, b & 0x1f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+    use crate::isa::Asm;
+
+    /// Trivial RAM-backed bus for core unit tests.
+    pub struct TestRam(pub Vec<u8>);
+
+    impl Bus for TestRam {
+        fn fetch(&mut self, addr: u32) -> Result<u32> {
+            self.load(addr, 4)
+        }
+        fn load(&mut self, addr: u32, size: u8) -> Result<u32> {
+            let a = addr as usize;
+            if a + size as usize > self.0.len() {
+                bail!("load out of range {addr:#x}");
+            }
+            let mut v = 0u32;
+            for i in 0..size as usize {
+                v |= (self.0[a + i] as u32) << (8 * i);
+            }
+            Ok(v)
+        }
+        fn store(&mut self, addr: u32, value: u32, size: u8) -> Result<()> {
+            let a = addr as usize;
+            if a + size as usize > self.0.len() {
+                bail!("store out of range {addr:#x}");
+            }
+            for i in 0..size as usize {
+                self.0[a + i] = (value >> (8 * i)) as u8;
+            }
+            Ok(())
+        }
+    }
+
+    fn run(asm: &Asm) -> (ServCore, CycleStats, Exit) {
+        let mut img = asm.assemble_bytes().unwrap();
+        img.resize(img.len() + 4096, 0);
+        let mut ram = TestRam(img);
+        let mut core = ServCore::new(0);
+        let mut cfus = CfuBank::new();
+        let t = TimingConfig::ideal_mem();
+        let mut stats = CycleStats::default();
+        for _ in 0..100_000 {
+            let info = core.step(&mut ram, &mut cfus, &t, &mut stats).unwrap();
+            if let Some(e) = info.exit {
+                return (core, stats, e);
+            }
+        }
+        panic!("program did not terminate");
+    }
+
+    #[test]
+    fn arithmetic_program() {
+        let mut a = Asm::new(0);
+        a.li(A0, 21);
+        a.li(A1, 2);
+        a.add(A0, A0, A1); // 23
+        a.slli(A0, A0, 4); // 368
+        a.addi(A0, A0, -68); // 300
+        a.ecall();
+        let (_, stats, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: 300, a1: 2 });
+        assert!(stats.instret >= 6);
+        // every retired instruction paid a fetch and ≥32 exec cycles
+        assert!(stats.exec >= stats.instret * 32);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_loop() {
+        let mut a = Asm::new(0);
+        // sum = 1+2+...+5 stored/reloaded through memory each iteration
+        a.la(S0, "buf");
+        a.li(T0, 5);
+        a.li(T1, 0);
+        a.label("loop");
+        a.add(T1, T1, T0);
+        a.sw(S0, T1, 0);
+        a.lw(T1, S0, 0);
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop");
+        a.mv(A0, T1);
+        a.ecall();
+        a.label("buf");
+        a.zeros(1);
+        let (_, stats, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: 15, a1: 0 });
+        assert_eq!(stats.loads, 5);
+        assert_eq!(stats.stores, 5);
+    }
+
+    #[test]
+    fn byte_halfword_sign_extension() {
+        let mut a = Asm::new(0);
+        a.la(S0, "buf");
+        a.li(T0, 0xFF);
+        a.sb(S0, T0, 0);
+        a.lb(A0, S0, 0); // sign-extended -1
+        a.lbu(A1, S0, 0); // 255
+        a.ecall();
+        a.label("buf");
+        a.zeros(1);
+        let (_, _, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: 0xffff_ffff, a1: 255 });
+    }
+
+    #[test]
+    fn function_call_and_return() {
+        let mut a = Asm::new(0);
+        a.li(A0, 7);
+        a.call("double");
+        a.call("double");
+        a.ecall(); // 28
+        a.label("double");
+        a.add(A0, A0, A0);
+        a.ret();
+        let (_, _, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: 28, a1: 0 });
+    }
+
+    #[test]
+    fn branch_taken_costs_more() {
+        let t = TimingConfig::ideal_mem();
+        // taken branch
+        let mut a1 = Asm::new(0);
+        a1.beq(ZERO, ZERO, "t");
+        a1.label("t");
+        a1.ecall();
+        // not-taken branch
+        let mut a2 = Asm::new(0);
+        a2.bne(ZERO, ZERO, "t");
+        a2.label("t");
+        a2.ecall();
+        let run1 = |a: &Asm| {
+            let mut img = a.assemble_bytes().unwrap();
+            img.resize(1024, 0);
+            let mut ram = TestRam(img);
+            let mut core = ServCore::new(0);
+            let mut cfus = CfuBank::new();
+            let mut stats = CycleStats::default();
+            core.step(&mut ram, &mut cfus, &t, &mut stats).unwrap();
+            stats.total()
+        };
+        assert_eq!(run1(&a1), run1(&a2) + t.branch_taken_extra);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut a = Asm::new(0);
+        a.li(T0, 99);
+        a.add(ZERO, T0, T0);
+        a.mv(A0, ZERO);
+        a.ecall();
+        let (_, _, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: 0, a1: 0 });
+    }
+
+    #[test]
+    fn unknown_cfu_errors() {
+        let mut a = Asm::new(0);
+        a.cfu(5, 0, A0, A1, A2);
+        let img = {
+            let mut b = a.assemble_bytes().unwrap();
+            b.resize(64, 0);
+            b
+        };
+        let mut ram = TestRam(img);
+        let mut core = ServCore::new(0);
+        let mut cfus = CfuBank::new();
+        let mut stats = CycleStats::default();
+        let err = core
+            .step(&mut ram, &mut cfus, &TimingConfig::ideal_mem(), &mut stats)
+            .unwrap_err();
+        assert!(err.to_string().contains("no CFU registered"));
+    }
+
+    #[test]
+    fn srai_on_negative() {
+        let mut a = Asm::new(0);
+        a.li(A0, -64);
+        a.srai(A0, A0, 3);
+        a.ecall();
+        let (_, _, e) = run(&a);
+        assert_eq!(e, Exit::Ecall { a0: (-8i32) as u32, a1: 0 });
+    }
+}

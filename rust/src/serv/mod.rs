@@ -1,0 +1,28 @@
+//! Cycle-accurate bit-serial SERV core model (paper §II-B).
+//!
+//! SERV executes instructions one bit at a time: a 1-bit ALU with a
+//! carry flip-flop, shift-register operand access, and an FSM that
+//! sequences 32-cycle serial passes.  This module reproduces that
+//! execution discipline in software:
+//!
+//!  * [`alu`] — the bit-serial ALU: results are computed bit by bit, and
+//!    every pass reports the serial cycles it consumed.
+//!  * [`core`] — the instruction FSM: fetch (charged at the paper's FE
+//!    memory latency), decode (the *modified decoder* that raises
+//!    `acc_op` for funct7 ∉ {0x00, 0x20} — implemented in
+//!    `crate::isa::decode`), serial execute, and the CFU handshake of
+//!    Fig. 2 (32-cycle operand transmission, accelerator compute,
+//!    32-cycle result write-back).
+//!  * [`timing`] — all latency parameters (memory, handshake, shifts)
+//!    plus per-category cycle attribution.
+//!
+//! SERV has no M extension: multiplication is emulated in software by
+//! the baseline programs (rust/src/program/baseline.rs), which is
+//! exactly the bottleneck the paper's SVM accelerator removes.
+
+pub mod alu;
+pub mod core;
+pub mod timing;
+
+pub use core::{Bus, CfuEvent, Exit, ServCore, StepInfo};
+pub use timing::{CycleStats, TimingConfig};

@@ -1,0 +1,132 @@
+//! Flat little-endian memory with bounds/alignment checking.
+//!
+//! Latency is charged by the core from `TimingConfig` (the paper's
+//! 46/47-cycle transactions + 64-cycle overhead); this module is purely
+//! the data side, plus access counters for the MEM attribution report.
+
+use anyhow::{bail, Result};
+
+use crate::serv::Bus;
+
+/// Default memory map used by the program generators.
+pub const TEXT_BASE: u32 = 0x0000_0000;
+pub const STACK_TOP: u32 = 0x000f_fff0;
+pub const DEFAULT_SIZE: usize = 0x10_0000; // 1 MiB
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemCounters {
+    pub ifetches: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+pub struct Memory {
+    bytes: Vec<u8>,
+    pub counters: MemCounters,
+}
+
+impl Memory {
+    pub fn new(size: usize) -> Self {
+        Memory { bytes: vec![0; size], counters: MemCounters::default() }
+    }
+
+    pub fn with_image(image: &[u8], size: usize) -> Self {
+        let mut m = Memory::new(size.max(image.len()));
+        m.bytes[..image.len()].copy_from_slice(image);
+        m
+    }
+
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Raw (latency-free, uncounted) access for test harnesses and the
+    /// program loader.
+    pub fn poke32(&mut self, addr: u32, value: u32) {
+        let a = addr as usize;
+        self.bytes[a..a + 4].copy_from_slice(&value.to_le_bytes());
+    }
+
+    pub fn peek32(&self, addr: u32) -> u32 {
+        let a = addr as usize;
+        u32::from_le_bytes(self.bytes[a..a + 4].try_into().unwrap())
+    }
+
+    pub fn poke_words(&mut self, addr: u32, words: &[u32]) {
+        for (i, &w) in words.iter().enumerate() {
+            self.poke32(addr + (i as u32) * 4, w);
+        }
+    }
+
+    fn check(&self, addr: u32, size: u8) -> Result<usize> {
+        let a = addr as usize;
+        if a + size as usize > self.bytes.len() {
+            bail!("memory access out of range: {addr:#010x} (+{size})");
+        }
+        if addr % size as u32 != 0 {
+            bail!("misaligned {size}-byte access at {addr:#010x}");
+        }
+        Ok(a)
+    }
+}
+
+impl Bus for Memory {
+    fn fetch(&mut self, addr: u32) -> Result<u32> {
+        let a = self.check(addr, 4)?;
+        self.counters.ifetches += 1;
+        Ok(u32::from_le_bytes(self.bytes[a..a + 4].try_into().unwrap()))
+    }
+
+    fn load(&mut self, addr: u32, size: u8) -> Result<u32> {
+        let a = self.check(addr, size)?;
+        self.counters.reads += 1;
+        let mut v = 0u32;
+        for i in 0..size as usize {
+            v |= (self.bytes[a + i] as u32) << (8 * i);
+        }
+        Ok(v)
+    }
+
+    fn store(&mut self, addr: u32, value: u32, size: u8) -> Result<()> {
+        let a = self.check(addr, size)?;
+        self.counters.writes += 1;
+        for i in 0..size as usize {
+            self.bytes[a + i] = (value >> (8 * i)) as u8;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn little_endian_roundtrip() {
+        let mut m = Memory::new(64);
+        m.store(8, 0x1234_5678, 4).unwrap();
+        assert_eq!(m.load(8, 4).unwrap(), 0x1234_5678);
+        assert_eq!(m.load(8, 1).unwrap(), 0x78);
+        assert_eq!(m.load(9, 1).unwrap(), 0x56);
+        assert_eq!(m.load(8, 2).unwrap(), 0x5678);
+    }
+
+    #[test]
+    fn bounds_and_alignment() {
+        let mut m = Memory::new(16);
+        assert!(m.load(16, 4).is_err());
+        assert!(m.load(13, 4).is_err()); // misaligned
+        assert!(m.store(15, 0, 2).is_err());
+        assert!(m.load(14, 2).is_ok());
+    }
+
+    #[test]
+    fn counters_track_accesses() {
+        let mut m = Memory::new(64);
+        m.fetch(0).unwrap();
+        m.load(4, 4).unwrap();
+        m.store(8, 1, 4).unwrap();
+        m.store(12, 2, 4).unwrap();
+        assert_eq!(m.counters, MemCounters { ifetches: 1, reads: 1, writes: 2 });
+    }
+}

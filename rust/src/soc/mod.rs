@@ -1,0 +1,178 @@
+//! System-on-chip: SERV core + memory + CFU bank, wired per Fig. 1/5.
+//!
+//! `Soc::run` drives the core to completion and returns the exit value
+//! with full cycle attribution.  An optional tracer receives one event
+//! per retired instruction — `examples/cycle_sim.rs` uses it to render
+//! the Fig. 2 handshake life-cycle.
+
+pub mod mem;
+pub mod vcd;
+
+use anyhow::{bail, Result};
+
+use crate::accel::CfuBank;
+use crate::isa::disasm;
+use crate::serv::{CfuEvent, CycleStats, Exit, ServCore, StepInfo, TimingConfig};
+
+pub use mem::{Memory, DEFAULT_SIZE, STACK_TOP, TEXT_BASE};
+
+/// Outcome of a completed program run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunResult {
+    pub exit: Exit,
+    pub stats: CycleStats,
+}
+
+impl RunResult {
+    /// The program's result value (a0 at ecall).
+    pub fn value(&self) -> u32 {
+        match self.exit {
+            Exit::Ecall { a0, .. } => a0,
+            Exit::Ebreak => 0,
+        }
+    }
+}
+
+/// A trace callback: called once per retired instruction.
+pub type Tracer<'a> = &'a mut dyn FnMut(&StepInfo);
+
+pub struct Soc {
+    pub core: ServCore,
+    pub mem: Memory,
+    pub cfus: CfuBank,
+    pub timing: TimingConfig,
+}
+
+impl Soc {
+    /// Build an SoC with the program image loaded at `TEXT_BASE`, the
+    /// stack pointer initialised to `STACK_TOP`, and PC at the entry.
+    pub fn new(image: &[u8], timing: TimingConfig) -> Self {
+        let mem = Memory::with_image(image, DEFAULT_SIZE);
+        let mut core = ServCore::new(TEXT_BASE);
+        core.regs[2] = STACK_TOP; // sp
+        Soc { core, mem, cfus: CfuBank::new(), timing }
+    }
+
+    pub fn register_cfu(&mut self, funct7: u8, cfu: Box<dyn crate::accel::Cfu>) -> Result<()> {
+        self.cfus.register(funct7, cfu)
+    }
+
+    /// Run to `ecall`/`ebreak` or the cycle budget.
+    pub fn run(&mut self, max_cycles: u64) -> Result<RunResult> {
+        self.run_traced(max_cycles, None)
+    }
+
+    pub fn run_traced(&mut self, max_cycles: u64, mut tracer: Option<Tracer>) -> Result<RunResult> {
+        let mut stats = CycleStats::default();
+        loop {
+            let info = self.core.step(&mut self.mem, &mut self.cfus, &self.timing, &mut stats)?;
+            if let Some(t) = tracer.as_deref_mut() {
+                t(&info);
+            }
+            if let Some(exit) = info.exit {
+                return Ok(RunResult { exit, stats });
+            }
+            if stats.total() > max_cycles {
+                bail!(
+                    "cycle budget exceeded ({max_cycles}) at pc {:#010x} after {} instructions",
+                    self.core.pc,
+                    stats.instret
+                );
+            }
+        }
+    }
+
+    /// Re-arm the SoC for another run of the same image: reset PC/regs
+    /// (but NOT memory — programs may carry state between runs; reload
+    /// the image if isolation is needed).
+    pub fn rearm(&mut self) {
+        self.core = ServCore::new(TEXT_BASE);
+        self.core.regs[2] = STACK_TOP;
+        self.cfus.reset_all();
+    }
+}
+
+/// Render one trace line; CFU instructions show the Fig. 2 phases.
+pub fn format_trace_line(info: &StepInfo, timing: &TimingConfig) -> String {
+    let base = format!("{:#010x}  {:<28}", info.pc, disasm(info.instr));
+    match info.cfu {
+        Some(CfuEvent { funct3, rs1, rs2, result, compute_cycles, wrote_rd, .. }) => {
+            let wb = if wrote_rd {
+                format!(" | rf-writeback {} cyc", timing.cfu_wb)
+            } else {
+                " | no writeback (rd=x0)".to_string()
+            };
+            format!(
+                "{base} [init {} cyc | operand-tx {} cyc (rs1={rs1:#010x} rs2={rs2:#010x}) | \
+                 accel_valid -> compute {compute_cycles} cyc -> accel_ready (res={result:#010x} f3={funct3}){wb}] total {} cyc",
+                timing.cfu_setup, timing.cfu_tx, info.cycles
+            )
+        }
+        None => format!("{base} {} cyc", info.cycles),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+    use crate::isa::Asm;
+
+    #[test]
+    fn run_simple_program() {
+        let mut a = Asm::new(0);
+        a.li(A0, 1234);
+        a.ecall();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        let r = soc.run(1_000_000).unwrap();
+        assert_eq!(r.value(), 1234);
+        // flexic timing: every instruction pays 110-cycle fetch
+        assert_eq!(r.stats.fetch, r.stats.instret * 110);
+    }
+
+    #[test]
+    fn stack_pointer_initialised() {
+        let mut a = Asm::new(0);
+        a.mv(A0, SP);
+        a.ecall();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        let r = soc.run(100_000).unwrap();
+        assert_eq!(r.value(), STACK_TOP);
+    }
+
+    #[test]
+    fn cycle_budget_enforced() {
+        let mut a = Asm::new(0);
+        a.label("spin");
+        a.j("spin");
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        assert!(soc.run(10_000).is_err());
+    }
+
+    #[test]
+    fn tracer_sees_every_instruction() {
+        let mut a = Asm::new(0);
+        a.li(T0, 2);
+        a.label("l");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "l");
+        a.ecall();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        let mut n = 0u64;
+        let mut cb = |_: &StepInfo| n += 1;
+        let r = soc.run_traced(1_000_000, Some(&mut cb)).unwrap();
+        assert_eq!(n, r.stats.instret);
+        assert_eq!(n, 6); // li, addi, bne(taken), addi, bne, ecall
+    }
+
+    #[test]
+    fn rearm_resets_core_state() {
+        let mut a = Asm::new(0);
+        a.addi(A0, A0, 1);
+        a.ecall();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        assert_eq!(soc.run(100_000).unwrap().value(), 1);
+        soc.rearm();
+        assert_eq!(soc.run(100_000).unwrap().value(), 1, "a0 must reset");
+    }
+}

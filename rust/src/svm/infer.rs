@@ -1,0 +1,130 @@
+//! Native integer SVM inference — the Rust twin of the Python spec
+//! (`python/compile/quantize.py`): every layer (Pallas kernel, PJRT
+//! graph, accelerator model, SERV program) must agree with this.
+
+use super::model::{QuantModel, Strategy, TestSet};
+
+/// The bias rides the PE as an (input = 15, weight = b_q) pair.
+pub const XMAX: i64 = 15;
+
+/// Integer classifier scores for one sample: `x·w_k + 15*b_k`.
+pub fn scores(m: &QuantModel, x_q: &[i32]) -> Vec<i64> {
+    assert_eq!(x_q.len(), m.n_features, "feature arity");
+    m.weights
+        .iter()
+        .zip(&m.biases)
+        .map(|(row, &b)| {
+            row.iter().zip(x_q).map(|(&w, &x)| w as i64 * x as i64).sum::<i64>() + XMAX * b as i64
+        })
+        .collect()
+}
+
+/// First-maximum argmax (ties -> lowest index), matching both
+/// `jnp.argmax` and the accelerator's strictly-greater max_sum update.
+pub fn argmax_first(vals: &[i64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in vals.iter().enumerate().skip(1) {
+        if v > vals[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// OvO vote tally: classifier k for pair (i, j): score ≥ 0 votes i.
+pub fn ovo_votes(m: &QuantModel, s: &[i64]) -> Vec<i64> {
+    let mut votes = vec![0i64; m.n_classes];
+    for (k, &(i, j)) in m.pairs.iter().enumerate() {
+        if s[k] >= 0 {
+            votes[i] += 1;
+        } else {
+            votes[j] += 1;
+        }
+    }
+    votes
+}
+
+/// Predict the class of one quantized sample.
+pub fn predict(m: &QuantModel, x_q: &[i32]) -> i32 {
+    let s = scores(m, x_q);
+    match m.strategy {
+        Strategy::Ovr => argmax_first(&s) as i32,
+        Strategy::Ovo => argmax_first(&ovo_votes(m, &s)) as i32,
+    }
+}
+
+/// Accuracy over a test set.
+pub fn accuracy(m: &QuantModel, t: &TestSet) -> f64 {
+    let correct = t
+        .x_q
+        .iter()
+        .zip(&t.y)
+        .filter(|(x, &y)| predict(m, x) == y)
+        .count();
+    correct as f64 / t.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::model::Strategy;
+
+    fn toy(strategy: Strategy) -> QuantModel {
+        QuantModel {
+            dataset: "toy".into(),
+            strategy,
+            bits: 4,
+            n_classes: 3,
+            n_features: 2,
+            weights: vec![vec![7, 0], vec![0, 7], vec![-3, -3]],
+            biases: vec![0, 0, 5],
+            pairs: match strategy {
+                Strategy::Ovr => vec![(0, 0), (1, 1), (2, 2)],
+                Strategy::Ovo => vec![(0, 1), (0, 2), (1, 2)],
+            },
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn scores_include_bias_times_xmax() {
+        let m = toy(Strategy::Ovr);
+        let s = scores(&m, &[2, 3]);
+        assert_eq!(s, vec![14, 21, -15 + 75]);
+    }
+
+    #[test]
+    fn ovr_argmax() {
+        let m = toy(Strategy::Ovr);
+        assert_eq!(predict(&m, &[15, 0]), 0); // scores 105, 0, 30
+        assert_eq!(predict(&m, &[0, 15]), 1);
+        assert_eq!(predict(&m, &[0, 0]), 2); // 0, 0, 75
+    }
+
+    #[test]
+    fn argmax_tie_breaks_to_first() {
+        assert_eq!(argmax_first(&[5, 5, 5]), 0);
+        assert_eq!(argmax_first(&[1, 7, 7]), 1);
+        assert_eq!(argmax_first(&[-3]), 0);
+    }
+
+    #[test]
+    fn ovo_vote_path() {
+        let m = toy(Strategy::Ovo);
+        // x = [15, 0]: s = [105, 75+(-45)=30... recompute:
+        // k0 (0 vs 1): 7*15=105 >= 0 -> vote 0
+        // k1 (0 vs 2): 0*?; weights[1] = [0,7] -> 0 -> vote 0
+        // k2 (1 vs 2): [-3,-3]·[15,0] + 75 = 30 -> vote 1
+        let v = ovo_votes(&m, &scores(&m, &[15, 0]));
+        assert_eq!(v, vec![2, 1, 0]);
+        assert_eq!(predict(&m, &[15, 0]), 0);
+    }
+
+    #[test]
+    fn ovo_zero_score_votes_first_of_pair() {
+        let m = toy(Strategy::Ovo);
+        let v = ovo_votes(&m, &[0, -1, -1]);
+        // k0 zero -> vote 0; k1 neg -> vote 2; k2 neg -> vote 2
+        assert_eq!(v, vec![1, 0, 2]);
+    }
+}

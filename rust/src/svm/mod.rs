@@ -1,0 +1,9 @@
+//! Native quantized-SVM library: artifact loading, bit-exact integer
+//! inference (the Rust twin of the Python spec), and operand packing
+//! shared with the accelerated program generator.
+
+pub mod infer;
+pub mod model;
+pub mod pack;
+
+pub use model::{ConfigEntry, Golden, Manifest, QuantModel, Strategy, TestSet};

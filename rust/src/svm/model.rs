@@ -1,0 +1,333 @@
+//! Quantized SVM model, dataset and golden-vector loading from the
+//! build-time artifacts emitted by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Multi-class decomposition strategy (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Ovr,
+    Ovo,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s {
+            "ovr" => Ok(Strategy::Ovr),
+            "ovo" => Ok(Strategy::Ovo),
+            _ => bail!("unknown strategy {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::Ovr => "ovr",
+            Strategy::Ovo => "ovo",
+        }
+    }
+}
+
+/// A quantized multi-class linear SVM — the bit-exact twin of
+/// `python/compile/quantize.QuantModel`.
+#[derive(Debug, Clone)]
+pub struct QuantModel {
+    pub dataset: String,
+    pub strategy: Strategy,
+    pub bits: u8,
+    pub n_classes: usize,
+    pub n_features: usize,
+    /// [K][F] signed, |w| ≤ 2^(bits-1)-1.
+    pub weights: Vec<Vec<i32>>,
+    /// [K]
+    pub biases: Vec<i32>,
+    /// [K] (i, j) — for OvR, (k, k).
+    pub pairs: Vec<(usize, usize)>,
+    pub scale: f64,
+}
+
+impl QuantModel {
+    pub fn n_classifiers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn config_key(&self) -> String {
+        format!("{}_{}_w{}", self.dataset, self.strategy.as_str(), self.bits)
+    }
+
+    pub fn from_json(j: &Json) -> Result<QuantModel> {
+        let weights = j.get("weights")?.as_mat_i32()?;
+        let biases = j.get("biases")?.as_vec_i32()?;
+        let pairs: Vec<(usize, usize)> = j
+            .get("pairs")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr()?;
+                Ok((p[0].as_usize()?, p[1].as_usize()?))
+            })
+            .collect::<Result<_>>()?;
+        let m = QuantModel {
+            dataset: j.get("dataset")?.as_str()?.to_string(),
+            strategy: Strategy::parse(j.get("strategy")?.as_str()?)?,
+            bits: j.get("bits")?.as_i64()? as u8,
+            n_classes: j.get("n_classes")?.as_usize()?,
+            n_features: j.get("n_features")?.as_usize()?,
+            weights,
+            biases,
+            pairs,
+            scale: j.get("scale")?.as_f64()?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<QuantModel> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !matches!(self.bits, 4 | 8 | 16) {
+            bail!("bad bits {}", self.bits);
+        }
+        let k = self.weights.len();
+        if self.biases.len() != k || self.pairs.len() != k {
+            bail!("inconsistent classifier count");
+        }
+        let qmax = (1i32 << (self.bits - 1)) - 1;
+        for row in &self.weights {
+            if row.len() != self.n_features {
+                bail!("weight row length {} != n_features {}", row.len(), self.n_features);
+            }
+            if row.iter().any(|w| w.abs() > qmax) {
+                bail!("weight exceeds {}-bit range", self.bits);
+            }
+        }
+        if self.biases.iter().any(|b| b.abs() > qmax) {
+            bail!("bias exceeds {}-bit range", self.bits);
+        }
+        for &(i, j) in &self.pairs {
+            if i >= self.n_classes || j >= self.n_classes {
+                bail!("pair ({i},{j}) out of class range");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The 4-bit-quantized held-out test set of a dataset.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub name: String,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub x_q: Vec<Vec<i32>>, // values 0..15
+    pub y: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn from_json(j: &Json) -> Result<TestSet> {
+        let t = TestSet {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_classes: j.get("n_classes")?.as_usize()?,
+            n_features: j.get("n_features")?.as_usize()?,
+            x_q: j.get("x_q_test")?.as_mat_i32()?,
+            y: j.get("y_test")?.as_vec_i32()?,
+        };
+        if t.x_q.len() != t.y.len() {
+            bail!("x/y length mismatch");
+        }
+        if t.x_q.iter().flatten().any(|&v| !(0..=15).contains(&v)) {
+            bail!("test features must be 4-bit unsigned");
+        }
+        Ok(t)
+    }
+
+    pub fn load(path: &Path) -> Result<TestSet> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// Golden cross-layer vectors (first N test samples with the integer
+/// scores and predictions computed by the Python spec).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub config: String,
+    pub x_q: Vec<Vec<i32>>,
+    pub scores: Vec<Vec<i64>>,
+    pub pred: Vec<i32>,
+}
+
+impl Golden {
+    pub fn from_json(j: &Json) -> Result<Golden> {
+        let scores = j
+            .get("scores")?
+            .as_arr()?
+            .iter()
+            .map(|r| r.as_arr()?.iter().map(|v| v.as_i64()).collect::<Result<Vec<_>>>())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Golden {
+            config: j.get("config")?.as_str()?.to_string(),
+            x_q: j.get("x_q")?.as_mat_i32()?,
+            scores,
+            pred: j.get("pred")?.as_vec_i32()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Golden> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// One (dataset, strategy, bits) entry of the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub key: String,
+    pub dataset: String,
+    pub strategy: Strategy,
+    pub bits: u8,
+    pub n_classes: usize,
+    pub n_features: usize,
+    pub n_classifiers: usize,
+    pub weights_path: String,
+    pub golden_path: String,
+    /// batch size -> HLO text path
+    pub hlo: Vec<(usize, String)>,
+    pub accuracy: f64,
+}
+
+/// Artifact index (`artifacts/manifest.json`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: Vec<ConfigEntry>,
+    pub datasets: Vec<(String, String)>, // name -> file
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&root.join("manifest.json"))
+            .context("loading artifacts/manifest.json — run `make artifacts` first")?;
+        let mut configs = Vec::new();
+        for (key, c) in j.get("configs")?.as_obj()? {
+            let mut hlo = Vec::new();
+            for (b, p) in c.get("hlo")?.as_obj()? {
+                hlo.push((b.parse::<usize>()?, p.as_str()?.to_string()));
+            }
+            hlo.sort();
+            configs.push(ConfigEntry {
+                key: key.clone(),
+                dataset: c.get("dataset")?.as_str()?.to_string(),
+                strategy: Strategy::parse(c.get("strategy")?.as_str()?)?,
+                bits: c.get("bits")?.as_i64()? as u8,
+                n_classes: c.get("n_classes")?.as_usize()?,
+                n_features: c.get("n_features")?.as_usize()?,
+                n_classifiers: c.get("n_classifiers")?.as_usize()?,
+                weights_path: c.get("weights")?.as_str()?.to_string(),
+                golden_path: c.get("golden")?.as_str()?.to_string(),
+                hlo,
+                accuracy: c.get("accuracy")?.as_f64()?,
+            });
+        }
+        configs.sort_by(|a, b| a.key.cmp(&b.key));
+        let mut datasets = Vec::new();
+        for (name, d) in j.get("datasets")?.as_obj()? {
+            datasets.push((name.clone(), d.get("file")?.as_str()?.to_string()));
+        }
+        Ok(Manifest { root: root.to_path_buf(), configs, datasets })
+    }
+
+    pub fn config(&self, key: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .iter()
+            .find(|c| c.key == key)
+            .with_context(|| format!("config {key:?} not in manifest"))
+    }
+
+    pub fn model(&self, entry: &ConfigEntry) -> Result<QuantModel> {
+        QuantModel::load(&self.root.join(&entry.weights_path))
+    }
+
+    pub fn golden(&self, entry: &ConfigEntry) -> Result<Golden> {
+        Golden::load(&self.root.join(&entry.golden_path))
+    }
+
+    pub fn test_set(&self, dataset: &str) -> Result<TestSet> {
+        let file = self
+            .datasets
+            .iter()
+            .find(|(n, _)| n == dataset)
+            .with_context(|| format!("dataset {dataset:?} not in manifest"))?;
+        TestSet::load(&self.root.join(&file.1))
+    }
+
+    pub fn hlo_path(&self, entry: &ConfigEntry, batch: usize) -> Result<PathBuf> {
+        let rel = entry
+            .hlo
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .with_context(|| format!("no HLO artifact for batch {batch} in {}", entry.key))?;
+        Ok(self.root.join(&rel.1))
+    }
+}
+
+/// Default artifact root: `$FLEXSVM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("FLEXSVM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_json() -> Json {
+        Json::parse(
+            r#"{"dataset":"toy","strategy":"ovo","bits":4,"n_classes":3,
+                "n_features":2,"n_classifiers":3,
+                "weights":[[1,-2],[3,4],[-5,6]],"biases":[0,-1,2],
+                "pairs":[[0,1],[0,2],[1,2]],"scale":3.5}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn model_from_json() {
+        let m = QuantModel::from_json(&model_json()).unwrap();
+        assert_eq!(m.n_classifiers(), 3);
+        assert_eq!(m.strategy, Strategy::Ovo);
+        assert_eq!(m.config_key(), "toy_ovo_w4");
+        assert_eq!(m.weights[2], vec![-5, 6]);
+    }
+
+    #[test]
+    fn model_validation_rejects_out_of_range() {
+        let mut j = model_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("weights".into(), Json::parse("[[9,0],[0,0],[0,0]]").unwrap());
+        }
+        assert!(QuantModel::from_json(&j).is_err(), "9 exceeds 4-bit qmax 7");
+    }
+
+    #[test]
+    fn testset_bounds_checked() {
+        let j = Json::parse(
+            r#"{"name":"t","n_classes":2,"n_features":1,
+                "x_q_test":[[16]],"y_test":[0]}"#,
+        )
+        .unwrap();
+        assert!(TestSet::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Operand packing for the accelerator's calc instructions.
+//!
+//! The feature stream of one classifier pass is `x[0..F]` followed by
+//! the bias input `15`; the weight stream is `w_k[0..F]` followed by
+//! `b_k`.  Both are chunked into `Mode::lanes()`-wide groups and packed
+//! into 32-bit words (zero-padding the tail — zero lanes contribute
+//! nothing).  The same packing is used by the accelerated SERV program
+//! generator (data section) and the host-side emulation tests, so a
+//! mismatch between program and accelerator is structurally impossible.
+
+use crate::accel::pe::{pack_features, pack_weights, Mode};
+
+use super::infer::XMAX;
+use super::model::QuantModel;
+
+/// The PE mode for a weight bit-width.
+pub fn mode_for_bits(bits: u8) -> Mode {
+    match bits {
+        4 => Mode::W4,
+        8 => Mode::W8,
+        16 => Mode::W16,
+        _ => panic!("unsupported bits {bits}"),
+    }
+}
+
+/// Packed feature words for one sample (shared by all classifiers):
+/// `x[0..F] ++ [15]`, chunked by mode lane count.
+pub fn feature_words(x_q: &[i32], bits: u8) -> Vec<u32> {
+    let mode = mode_for_bits(bits);
+    let stream: Vec<u32> = x_q.iter().map(|&v| v as u32).chain([XMAX as u32]).collect();
+    stream.chunks(mode.lanes()).map(|c| pack_features(c, mode)).collect()
+}
+
+/// Packed weight words for classifier `k`: `w_k[0..F] ++ [b_k]`.
+pub fn weight_words(m: &QuantModel, k: usize) -> Vec<u32> {
+    let mode = mode_for_bits(m.bits);
+    let stream: Vec<i32> = m.weights[k].iter().copied().chain([m.biases[k]]).collect();
+    stream.chunks(mode.lanes()).map(|c| pack_weights(c, mode)).collect()
+}
+
+/// Words per classifier pass = ceil((F + 1) / lanes).
+pub fn words_per_classifier(n_features: usize, bits: u8) -> usize {
+    let lanes = mode_for_bits(bits).lanes();
+    (n_features + 1).div_ceil(lanes)
+}
+
+/// Flattened weight words for all K classifiers (row-major), as laid
+/// out in the accelerated program's data section.
+pub fn all_weight_words(m: &QuantModel) -> Vec<u32> {
+    (0..m.n_classifiers()).flat_map(|k| weight_words(m, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::pe;
+    use crate::svm::model::Strategy;
+    use crate::util::Pcg32;
+
+    fn random_model(rng: &mut Pcg32, bits: u8, k: usize, f: usize) -> QuantModel {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        QuantModel {
+            dataset: "rand".into(),
+            strategy: Strategy::Ovr,
+            bits,
+            n_classes: k,
+            n_features: f,
+            weights: (0..k)
+                .map(|_| (0..f).map(|_| rng.range_i32(-qmax, qmax)).collect())
+                .collect(),
+            biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
+            pairs: (0..k).map(|i| (i, i)).collect(),
+            scale: 1.0,
+        }
+    }
+
+    /// Property: streaming the packed words through the PE reproduces
+    /// the integer score for every classifier — the packing and the PE
+    /// datapath compose to the spec (`infer::scores`).
+    #[test]
+    fn packed_stream_through_pe_equals_scores() {
+        let mut rng = Pcg32::seeded(77);
+        for bits in [4u8, 8, 16] {
+            for f in [1usize, 2, 4, 7, 8, 15, 34] {
+                let m = random_model(&mut rng, bits, 3, f);
+                let x: Vec<i32> = (0..f).map(|_| rng.below(16) as i32).collect();
+                let fw = feature_words(&x, bits);
+                assert_eq!(fw.len(), words_per_classifier(f, bits));
+                let spec = crate::svm::infer::scores(&m, &x);
+                let mode = mode_for_bits(bits);
+                for k in 0..3 {
+                    let ww = weight_words(&m, k);
+                    assert_eq!(ww.len(), fw.len());
+                    let sum: i64 =
+                        fw.iter().zip(&ww).map(|(&a, &b)| pe::compute(a, b, mode)).sum();
+                    assert_eq!(sum, spec[k], "bits={bits} f={f} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_counts() {
+        // iris: F=4, 4-bit -> (4+1)/8 -> 1 word; derm: F=34, 16-bit -> 18
+        assert_eq!(words_per_classifier(4, 4), 1);
+        assert_eq!(words_per_classifier(34, 4), 5);
+        assert_eq!(words_per_classifier(34, 8), 9);
+        assert_eq!(words_per_classifier(34, 16), 18);
+        assert_eq!(words_per_classifier(7, 4), 1);
+    }
+
+    #[test]
+    fn all_weight_words_layout() {
+        let mut rng = Pcg32::seeded(5);
+        let m = random_model(&mut rng, 8, 4, 6);
+        let all = all_weight_words(&m);
+        let per = words_per_classifier(6, 8);
+        assert_eq!(all.len(), 4 * per);
+        assert_eq!(&all[per..2 * per], weight_words(&m, 1).as_slice());
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! vendor set; DESIGN.md §3 documents the substitution).
+//!
+//! A property runs `cases` times against values drawn from generator
+//! closures over a seeded [`Pcg32`].  On failure the harness reports the
+//! case index and re-runnable seed, then panics with the property's own
+//! assertion message.  No shrinking — generators here draw from small,
+//! structured domains where the raw counterexample is already readable.
+
+pub use crate::util::Pcg32;
+
+/// Run a property `cases` times with a deterministic base seed.
+pub fn check<F: FnMut(&mut Pcg32)>(name: &str, seed: u64, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg32::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators over the domains this repo cares about.
+pub mod gen {
+    use super::Pcg32;
+    use crate::svm::model::{QuantModel, Strategy};
+
+    /// A 4-bit unsigned feature vector.
+    pub fn features(rng: &mut Pcg32, n: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.below(16) as i32).collect()
+    }
+
+    /// A random well-formed quantized model.
+    pub fn quant_model(rng: &mut Pcg32) -> QuantModel {
+        let bits = *rng.choose(&[4u8, 8, 16]);
+        let strategy = if rng.below(2) == 0 { Strategy::Ovr } else { Strategy::Ovo };
+        let c = 2 + rng.below(4) as usize; // 2..=5 classes
+        let f = 1 + rng.below(12) as usize; // 1..=12 features
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let pairs: Vec<(usize, usize)> = match strategy {
+            Strategy::Ovr => (0..c).map(|i| (i, i)).collect(),
+            Strategy::Ovo => {
+                let mut p = vec![];
+                for i in 0..c {
+                    for j in i + 1..c {
+                        p.push((i, j));
+                    }
+                }
+                p
+            }
+        };
+        let k = pairs.len();
+        QuantModel {
+            dataset: "prop".into(),
+            strategy,
+            bits,
+            n_classes: c,
+            n_features: f,
+            weights: (0..k)
+                .map(|_| (0..f).map(|_| rng.range_i32(-qmax, qmax)).collect())
+                .collect(),
+            biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
+            pairs,
+            scale: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 1, 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fails", 2, 10, |rng| assert!(rng.below(10) < 5));
+    }
+
+    #[test]
+    fn generators_produce_valid_domains() {
+        check("gen-domains", 3, 50, |rng| {
+            let m = gen::quant_model(rng);
+            let qmax = (1i32 << (m.bits - 1)) - 1;
+            assert!(m.weights.iter().flatten().all(|w| w.abs() <= qmax));
+            assert_eq!(m.weights.len(), m.pairs.len());
+            let x = gen::features(rng, m.n_features);
+            assert!(x.iter().all(|&v| (0..16).contains(&v)));
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use [`Bench`] for warmup, repeated timing and
+//! simple robust statistics.  Times are wall-clock; results print in a
+//! fixed tabular format so bench_output.txt diffs cleanly.
+
+use std::time::{Duration, Instant};
+
+/// Results of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub iters: u32,
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then `iters` measured.
+pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Sample {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let sum: Duration = times.iter().sum();
+    Sample {
+        mean: sum / iters,
+        median: times[times.len() / 2],
+        min: times[0],
+        iters,
+    }
+}
+
+/// Formatting helper: a benchmark section with aligned case rows.
+pub struct Bench {
+    section: String,
+}
+
+impl Bench {
+    pub fn new(section: &str) -> Self {
+        println!("\n### {section}");
+        println!("{:<44} {:>12} {:>12} {:>12} {:>8}", "case", "mean", "median", "min", "iters");
+        Bench { section: section.to_string() }
+    }
+
+    pub fn case<F: FnMut()>(&self, name: &str, warmup: u32, iters: u32, f: F) -> Sample {
+        let s = measure(warmup, iters, f);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8}",
+            name,
+            fmt_dur(s.mean),
+            fmt_dur(s.median),
+            fmt_dur(s.min),
+            s.iters
+        );
+        s
+    }
+
+    /// Report a derived throughput-style metric on its own row.
+    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} {value:>12.2} {unit}", format!("  -> {name}"));
+    }
+
+    pub fn section(&self) -> &str {
+        &self.section
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0u32;
+        let s = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 3);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny command-line parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--key value] [--flag]`.
+//! Unknown options are errors; `--help` is handled by the caller.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// does not start with `-`).
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options not supported: {tok}");
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse_tokens(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--datasets bs,iris`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opt_str(name) {
+            Some(s) => s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_tokens(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["table1", "x", "y"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(&["sim", "--bits", "8", "--trace", "--out=res.json"]);
+        assert_eq!(a.opt_str("bits"), Some("8"));
+        assert!(a.flag("trace"));
+        assert_eq!(a.opt_str("out"), Some("res.json"));
+        assert_eq!(a.usize_or("bits", 4).unwrap(), 8);
+        assert_eq!(a.usize_or("missing", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        // --trace is a flag because the next token starts with --
+        let a = parse(&["run", "--trace", "--bits", "16"]);
+        assert!(a.flag("trace"));
+        assert_eq!(a.opt_str("bits"), Some("16"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["t", "--datasets", "bs, iris"]);
+        assert_eq!(a.list_or("datasets", &[]), vec!["bs", "iris"]);
+        assert_eq!(a.list_or("other", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--bits", "4"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt_str("bits"), Some("4"));
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse_tokens(vec!["-x".to_string()]).is_err());
+    }
+}

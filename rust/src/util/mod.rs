@@ -1,0 +1,13 @@
+//! From-scratch utility substrates (nothing beyond `xla`/`anyhow` is
+//! available in the offline vendor set): JSON, RNG, CLI, text tables.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod benchkit;
+pub mod table;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg32;
+pub use table::Table;

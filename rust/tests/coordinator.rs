@@ -1,0 +1,133 @@
+//! Coordinator integration: routing, batching, metrics, and backend
+//! equivalence over the real artifacts.  Requires `make artifacts`.
+
+use std::time::Duration;
+
+use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::{infer, Manifest};
+
+fn native_opts() -> ServerOpts {
+    ServerOpts { backend: Backend::Native, linger: Duration::from_micros(200), ..Default::default() }
+}
+
+#[test]
+fn native_backend_serves_correct_predictions() {
+    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let keys = vec!["iris_ovr_w4".to_string(), "v3_ovo_w8".to_string()];
+    let server = Server::start(artifacts_root(), keys.clone(), native_opts()).unwrap();
+    let client = server.client();
+    for key in &keys {
+        let entry = manifest.config(key).unwrap();
+        let model = manifest.model(entry).unwrap();
+        let test = manifest.test_set(&entry.dataset).unwrap();
+        for x in test.x_q.iter().take(20) {
+            let resp = client.infer(key, x).unwrap();
+            assert_eq!(resp.pred, infer::predict(&model, x), "{key}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_native_backends_agree() {
+    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let keys = vec!["seeds_ovo_w16".to_string()];
+    let pjrt = Server::start(
+        artifacts_root(),
+        keys.clone(),
+        ServerOpts { backend: Backend::Pjrt, ..native_opts() },
+    )
+    .unwrap();
+    let native = Server::start(artifacts_root(), keys.clone(), native_opts()).unwrap();
+    let test = manifest.test_set("seeds").unwrap();
+    let (pc, nc) = (pjrt.client(), native.client());
+    for x in test.x_q.iter().take(30) {
+        let a = pc.infer("seeds_ovo_w16", x).unwrap();
+        let b = nc.infer("seeds_ovo_w16", x).unwrap();
+        assert_eq!(a.pred, b.pred);
+    }
+}
+
+#[test]
+fn batching_aggregates_concurrent_requests() {
+    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let key = "bs_ovr_w4".to_string();
+    let server = Server::start(
+        artifacts_root(),
+        vec![key.clone()],
+        ServerOpts {
+            backend: Backend::Native,
+            batch_max: 16,
+            linger: Duration::from_millis(5),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let test = manifest.test_set("bs").unwrap();
+    let n = 64usize;
+    std::thread::scope(|s| {
+        for w in 0..8 {
+            let client = client.clone();
+            let key = key.clone();
+            let xs = &test.x_q;
+            s.spawn(move || {
+                for i in 0..n / 8 {
+                    let x = &xs[(w * 13 + i) % xs.len()];
+                    client.infer(&key, x).unwrap();
+                }
+            });
+        }
+    });
+    let m = client.metrics().unwrap();
+    let cm = &m[&key];
+    assert_eq!(cm.requests, n as u64);
+    assert!(
+        cm.batches < n as u64,
+        "expected batching: {} batches for {} requests",
+        cm.batches,
+        n
+    );
+    assert!(cm.mean_batch() > 1.0);
+    let h = cm.latency.as_ref().unwrap();
+    assert_eq!(h.count(), n as u64);
+}
+
+#[test]
+fn unknown_config_is_rejected_per_request() {
+    let server =
+        Server::start(artifacts_root(), vec!["iris_ovr_w4".to_string()], native_opts()).unwrap();
+    let client = server.client();
+    let err = client.infer("nope_ovr_w4", &[0, 0, 0, 0]).unwrap_err();
+    assert!(err.to_string().contains("not served"), "{err}");
+    // server still healthy afterwards
+    let ok = client.infer("iris_ovr_w4", &[5, 5, 5, 5]);
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn server_start_fails_fast_on_bad_config() {
+    let err = Server::start(artifacts_root(), vec!["bogus".to_string()], native_opts());
+    assert!(err.is_err());
+}
+
+#[test]
+fn linger_flush_answers_single_requests() {
+    // a lone request must not wait forever for batchmates
+    let server = Server::start(
+        artifacts_root(),
+        vec!["iris_ovr_w4".to_string()],
+        ServerOpts {
+            backend: Backend::Native,
+            batch_max: 64,
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let resp = client.infer("iris_ovr_w4", &[1, 2, 3, 4]).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(1));
+    assert_eq!(resp.batch_size, 1);
+}

@@ -1,0 +1,108 @@
+//! Cross-layer bit-exactness over the real artifacts (DESIGN.md §6):
+//! golden JSON (Python spec) ⇔ native Rust ⇔ PE emulation ⇔
+//! SERV-executed program — for every one of the 30 configs.
+//! Requires `make artifacts`.
+
+use flexsvm::accel::pe;
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::{infer, pack, Manifest};
+
+fn manifest() -> Manifest {
+    Manifest::load(&artifacts_root()).expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn all_configs_native_matches_golden() {
+    let m = manifest();
+    assert_eq!(m.configs.len(), 30, "expected 5 datasets x 2 strategies x 3 bit-widths");
+    for entry in &m.configs {
+        let model = m.model(entry).unwrap();
+        let golden = m.golden(entry).unwrap();
+        for (i, x) in golden.x_q.iter().enumerate() {
+            assert_eq!(
+                infer::scores(&model, x),
+                golden.scores[i],
+                "{} sample {i}: native scores vs python spec",
+                entry.key
+            );
+            assert_eq!(infer::predict(&model, x), golden.pred[i], "{} sample {i}", entry.key);
+        }
+    }
+}
+
+#[test]
+fn all_configs_pe_emulation_matches_golden() {
+    let m = manifest();
+    for entry in &m.configs {
+        let model = m.model(entry).unwrap();
+        let golden = m.golden(entry).unwrap();
+        let mode = pack::mode_for_bits(model.bits);
+        for (i, x) in golden.x_q.iter().enumerate() {
+            let fw = pack::feature_words(x, model.bits);
+            for (k, &expect) in golden.scores[i].iter().enumerate() {
+                let ww = pack::weight_words(&model, k);
+                let s: i64 = fw.iter().zip(&ww).map(|(&a, &b)| pe::compute(a, b, mode)).sum();
+                assert_eq!(s, expect, "{} sample {i} classifier {k}", entry.key);
+            }
+        }
+    }
+}
+
+#[test]
+fn serv_programs_match_golden_predictions() {
+    let m = manifest();
+    for entry in &m.configs {
+        let model = m.model(entry).unwrap();
+        let golden = m.golden(entry).unwrap();
+        // ideal memory keeps this sweep fast; numerics are timing-free
+        let mut acc =
+            ProgramRunner::accelerated(&model, TimingConfig::ideal_mem(), ProgramOpts::default())
+                .unwrap();
+        let mut base = ProgramRunner::baseline(&model, TimingConfig::ideal_mem()).unwrap();
+        for (i, x) in golden.x_q.iter().enumerate().take(8) {
+            let (pa, _) = acc.run_sample(x).unwrap();
+            assert_eq!(pa, golden.pred[i], "{} accel sample {i}", entry.key);
+            let (pb, _) = base.run_sample(x).unwrap();
+            assert_eq!(pb, golden.pred[i], "{} baseline sample {i}", entry.key);
+        }
+    }
+}
+
+#[test]
+fn accuracy_reproduces_manifest_metrics() {
+    let m = manifest();
+    for entry in &m.configs {
+        let model = m.model(entry).unwrap();
+        let test = m.test_set(&entry.dataset).unwrap();
+        let acc = infer::accuracy(&model, &test);
+        assert!(
+            (acc - entry.accuracy).abs() < 1e-9,
+            "{}: native accuracy {acc} vs build-time {}",
+            entry.key,
+            entry.accuracy
+        );
+    }
+}
+
+/// Paper claim (§V-B): OvO beats OvR in accuracy on average.
+#[test]
+fn ovo_accuracy_advantage_on_average() {
+    let m = manifest();
+    let mean = |strategy: &str| {
+        let rows: Vec<f64> = m
+            .configs
+            .iter()
+            .filter(|c| c.strategy.as_str() == strategy)
+            .map(|c| c.accuracy)
+            .collect();
+        rows.iter().sum::<f64>() / rows.len() as f64
+    };
+    let (ovr, ovo) = (mean("ovr"), mean("ovo"));
+    assert!(
+        ovo + 1e-9 >= ovr,
+        "expected OvO mean accuracy >= OvR (paper reports +3.4%): ovr={ovr:.3} ovo={ovo:.3}"
+    );
+}

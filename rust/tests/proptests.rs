@@ -1,0 +1,221 @@
+//! Property-based invariants across the Rust stack (mini-harness in
+//! flexsvm::testing — proptest is unavailable offline).
+
+use flexsvm::accel::pe;
+use flexsvm::accel::svm::{result_class_id, result_sign_negative, SvmAccel};
+use flexsvm::accel::Cfu;
+use flexsvm::isa::{decode, encode::encode, svm_ops, CFU_FUNCT7_SVM};
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::model::Strategy;
+use flexsvm::svm::{infer, pack};
+use flexsvm::testing::{check, gen};
+
+/// Encode→decode is the identity over random well-formed instructions.
+#[test]
+fn prop_isa_roundtrip() {
+    check("isa-roundtrip", 0x150, 2000, |rng| {
+        use flexsvm::isa::{AluOp, BranchOp, Instr, LoadOp, StoreOp};
+        let rd = rng.below(32) as u8;
+        let rs1 = rng.below(32) as u8;
+        let rs2 = rng.below(32) as u8;
+        let pick = rng.below(8);
+        let instr = match pick {
+            0 => Instr::Op {
+                op: *rng.choose(&[
+                    AluOp::Add,
+                    AluOp::Sub,
+                    AluOp::Xor,
+                    AluOp::Or,
+                    AluOp::And,
+                    AluOp::Slt,
+                    AluOp::Sltu,
+                    AluOp::Sll,
+                    AluOp::Srl,
+                    AluOp::Sra,
+                ]),
+                rd,
+                rs1,
+                rs2,
+            },
+            1 => Instr::OpImm {
+                op: *rng.choose(&[AluOp::Add, AluOp::Xor, AluOp::Or, AluOp::And, AluOp::Slt]),
+                rd,
+                rs1,
+                imm: rng.range_i32(-2048, 2047),
+            },
+            2 => Instr::Load {
+                op: *rng.choose(&[LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu]),
+                rd,
+                rs1,
+                offset: rng.range_i32(-2048, 2047),
+            },
+            3 => Instr::Store {
+                op: *rng.choose(&[StoreOp::Sb, StoreOp::Sh, StoreOp::Sw]),
+                rs1,
+                rs2,
+                offset: rng.range_i32(-2048, 2047),
+            },
+            4 => Instr::Branch {
+                op: *rng.choose(&[
+                    BranchOp::Beq,
+                    BranchOp::Bne,
+                    BranchOp::Blt,
+                    BranchOp::Bge,
+                    BranchOp::Bltu,
+                    BranchOp::Bgeu,
+                ]),
+                rs1,
+                rs2,
+                offset: rng.range_i32(-2048, 2047) * 2,
+            },
+            5 => Instr::Jal { rd, offset: rng.range_i32(-10000, 10000) * 2 },
+            6 => Instr::Lui { rd, imm: rng.range_i32(0, 0xfffff) << 12 },
+            _ => Instr::Custom {
+                funct7: 1 + rng.below(31) as u8,
+                funct3: rng.below(8) as u8,
+                rd,
+                rs1,
+                rs2,
+            },
+        };
+        // funct7 = 0x20 is SERV's sub/sra space, not a CFU slot
+        if let Instr::Custom { funct7: 0x20, .. } = instr {
+            return;
+        }
+        assert_eq!(decode(encode(instr)).unwrap(), instr);
+    });
+}
+
+fn calc_res_f3(bits: u8) -> (u8, u8) {
+    match bits {
+        4 => (svm_ops::SV_CALC4, svm_ops::SV_RES4),
+        8 => (svm_ops::SV_CALC8, svm_ops::SV_RES8),
+        _ => (svm_ops::SV_CALC16, svm_ops::SV_RES16),
+    }
+}
+
+/// The accelerator driven by raw Fig.-8 instruction sequences computes
+/// the same prediction as the native integer spec (OvR path).
+#[test]
+fn prop_accel_ovr_equals_native() {
+    check("accel-ovr", 0x151, 300, |rng| {
+        let mut m = gen::quant_model(rng);
+        // force OvR shape: one classifier per class
+        m.strategy = Strategy::Ovr;
+        m.weights.truncate(m.n_classes);
+        m.biases.truncate(m.n_classes);
+        while m.weights.len() < m.n_classes {
+            m.weights.push(vec![0; m.n_features]);
+            m.biases.push(0);
+        }
+        m.pairs = (0..m.n_classes).map(|i| (i, i)).collect();
+        let x = gen::features(rng, m.n_features);
+
+        let mut accel = SvmAccel::new();
+        accel.execute(svm_ops::CREATE_ENV, 0, 0).unwrap();
+        let (calc, res) = calc_res_f3(m.bits);
+        let fw = pack::feature_words(&x, m.bits);
+        let mut last = 0u32;
+        for k in 0..m.weights.len() {
+            for (a, b) in fw.iter().zip(pack::weight_words(&m, k)) {
+                accel.execute(calc, *a, b).unwrap();
+            }
+            last = accel.execute(res, 0, 0).unwrap().value;
+        }
+        assert_eq!(result_class_id(last) as i32, infer::predict(&m, &x));
+    });
+}
+
+/// OvO sign bits from the accelerator match the spec's score signs.
+#[test]
+fn prop_accel_ovo_signs() {
+    check("accel-ovo-signs", 0x152, 300, |rng| {
+        let m = gen::quant_model(rng);
+        let x = gen::features(rng, m.n_features);
+        let spec = infer::scores(&m, &x);
+        let mut accel = SvmAccel::new();
+        accel.execute(svm_ops::CREATE_ENV, 0, 0).unwrap();
+        let (calc, res) = calc_res_f3(m.bits);
+        let fw = pack::feature_words(&x, m.bits);
+        for (k, &s) in spec.iter().enumerate() {
+            for (a, b) in fw.iter().zip(pack::weight_words(&m, k)) {
+                accel.execute(calc, *a, b).unwrap();
+            }
+            let r = accel.execute(res, 0, 0).unwrap().value;
+            assert_eq!(result_sign_negative(r), s < 0, "classifier {k} score {s}");
+        }
+    });
+}
+
+/// End-to-end: SERV-executed programs (both variants) match native
+/// inference on random models — every backend gives the same answer.
+#[test]
+fn prop_serv_programs_match_native() {
+    check("serv-programs", 0x153, 40, |rng| {
+        let m = gen::quant_model(rng);
+        let x = gen::features(rng, m.n_features);
+        let expect = infer::predict(&m, &x);
+        let mut base = ProgramRunner::baseline(&m, TimingConfig::ideal_mem()).unwrap();
+        let (bp, _) = base.run_sample(&x).unwrap();
+        assert_eq!(bp, expect, "baseline {m:?} x={x:?}");
+        let mut acc =
+            ProgramRunner::accelerated(&m, TimingConfig::ideal_mem(), ProgramOpts::default())
+                .unwrap();
+        let (ap, _) = acc.run_sample(&x).unwrap();
+        assert_eq!(ap, expect, "accel {m:?} x={x:?}");
+    });
+}
+
+/// PE is linear in the feature vector under every mode.
+#[test]
+fn prop_pe_linear_in_features() {
+    check("pe-linearity", 0x154, 500, |rng| {
+        let mode = *rng.choose(&[pe::Mode::W4, pe::Mode::W8, pe::Mode::W16]);
+        let lanes = mode.lanes();
+        let qmax = (1i32 << (mode.bits() - 1)) - 1;
+        let ws: Vec<i32> = (0..lanes).map(|_| rng.range_i32(-qmax, qmax)).collect();
+        let x1: Vec<u32> = (0..lanes).map(|_| rng.below(8)).collect();
+        let x2: Vec<u32> = (0..lanes).map(|_| rng.below(8)).collect();
+        let xs: Vec<u32> = x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let w = pe::pack_weights(&ws, mode);
+        assert_eq!(
+            pe::compute(pe::pack_features(&xs, mode), w, mode),
+            pe::compute(pe::pack_features(&x1, mode), w, mode)
+                + pe::compute(pe::pack_features(&x2, mode), w, mode)
+        );
+    });
+}
+
+/// CFU timing: a Res instruction (writes rd) costs exactly `cfu_wb` more
+/// than a Calc (rd = x0) under any memory timing.
+#[test]
+fn prop_cfu_writeback_timing() {
+    check("cfu-timing", 0x155, 100, |rng| {
+        use flexsvm::accel::CfuBank;
+        use flexsvm::isa::{reg, Asm};
+        use flexsvm::serv::{CycleStats, ServCore};
+        use flexsvm::soc::Memory;
+        let mut t = TimingConfig::flexic();
+        t.mem_read = 1 + rng.below(100) as u64;
+        t.mem_overhead = rng.below(100) as u64;
+
+        let run_one = |f3: u8, rd: u8| {
+            let mut a = Asm::new(0);
+            a.cfu(CFU_FUNCT7_SVM, f3, rd, reg::A1, reg::A2);
+            let mut img = a.assemble_bytes().unwrap();
+            img.resize(256, 0);
+            let mut mem = Memory::with_image(&img, 256);
+            let mut core = ServCore::new(0);
+            let mut bank = CfuBank::new();
+            bank.register(CFU_FUNCT7_SVM, Box::new(SvmAccel::new())).unwrap();
+            let mut stats = CycleStats::default();
+            core.step(&mut mem, &mut bank, &t, &mut stats).unwrap();
+            stats.total()
+        };
+        let calc = run_one(svm_ops::SV_CALC4, reg::ZERO);
+        let res = run_one(svm_ops::SV_RES4, reg::A0);
+        assert_eq!(res, calc + t.cfu_wb, "writeback must add exactly cfu_wb");
+    });
+}

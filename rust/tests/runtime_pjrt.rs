@@ -1,0 +1,85 @@
+//! Integration: PJRT-executed AOT artifacts vs golden vectors and the
+//! native Rust inference — the cross-layer bit-exactness anchor
+//! (DESIGN.md §6, level 4).  Requires `make artifacts`.
+
+use flexsvm::runtime::Engine;
+use flexsvm::svm::{infer, Manifest};
+
+fn manifest() -> Manifest {
+    Manifest::load(&flexsvm::svm::model::artifacts_root())
+        .expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn golden_vectors_match_on_pjrt() {
+    let m = manifest();
+    let mut engine = Engine::new().unwrap();
+    // one config per (strategy, bits) — full 30-config sweep happens in
+    // the report; keep the test suite fast but representative.
+    let keys = [
+        "iris_ovr_w4",
+        "iris_ovo_w8",
+        "bs_ovr_w16",
+        "seeds_ovo_w4",
+        "v3_ovr_w8",
+        "derm_ovo_w16",
+    ];
+    for key in keys {
+        let entry = m.config(key).unwrap();
+        let golden = m.golden(entry).unwrap();
+        engine.load(&m, entry, 1).unwrap();
+        let preds = engine.predict(key, 1, &golden.x_q).unwrap();
+        assert_eq!(preds, golden.pred, "{key}: PJRT vs golden predictions");
+    }
+}
+
+#[test]
+fn pjrt_scores_match_native_rust() {
+    let m = manifest();
+    let mut engine = Engine::new().unwrap();
+    let entry = m.config("seeds_ovr_w8").unwrap();
+    let model = m.model(entry).unwrap();
+    let golden = m.golden(entry).unwrap();
+    engine.load(&m, entry, 1).unwrap();
+    let cfg = engine.get("seeds_ovr_w8", 1).unwrap();
+    for (i, x) in golden.x_q.iter().enumerate() {
+        let out = cfg.execute(x).unwrap();
+        let native = infer::scores(&model, x);
+        let pjrt: Vec<i64> = out.scores.iter().map(|&s| s as i64).collect();
+        assert_eq!(pjrt, native, "sample {i}");
+        assert_eq!(out.preds[0] as i64, golden.pred[i] as i64);
+    }
+}
+
+#[test]
+fn batched_execution_matches_single() {
+    let m = manifest();
+    let mut engine = Engine::new().unwrap();
+    let entry = m.config("bs_ovo_w4").unwrap();
+    let test = m.test_set("bs").unwrap();
+    engine.load(&m, entry, 1).unwrap();
+    engine.load(&m, entry, 64).unwrap();
+    let n = 100.min(test.len());
+    let singles = engine.predict("bs_ovo_w4", 1, &test.x_q[..n]).unwrap();
+    let batched = engine.predict("bs_ovo_w4", 64, &test.x_q[..n]).unwrap();
+    assert_eq!(singles, batched);
+}
+
+#[test]
+fn accuracy_matches_manifest_metric() {
+    let m = manifest();
+    let mut engine = Engine::new().unwrap();
+    for key in ["iris_ovr_w4", "v3_ovo_w16"] {
+        let entry = m.config(key).unwrap();
+        let test = m.test_set(&entry.dataset).unwrap();
+        engine.load(&m, entry, 64).unwrap();
+        let preds = engine.predict(key, 64, &test.x_q).unwrap();
+        let correct = preds.iter().zip(&test.y).filter(|(p, y)| p == y).count();
+        let acc = correct as f64 / test.len() as f64;
+        assert!(
+            (acc - entry.accuracy).abs() < 1e-9,
+            "{key}: PJRT accuracy {acc} vs build-time {}",
+            entry.accuracy
+        );
+    }
+}
