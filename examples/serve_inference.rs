@@ -1,30 +1,41 @@
-//! END-TO-END DRIVER (DESIGN.md §4 experiment E2E): the full three-layer
-//! stack on a real workload.
+//! END-TO-END DRIVER (DESIGN.md §4 experiment E2E): the full stack on
+//! a real workload.
 //!
 //!   Layer 1/2 (build time): Pallas PE kernel + JAX model, AOT-lowered
 //!     to HLO text by `make artifacts`.
-//!   Layer 3 (this binary):  the Rust coordinator loads the compiled
-//!     graphs on the PJRT CPU client and serves batched classification
-//!     requests — routing per config, dynamic batching, backpressure —
-//!     with Python nowhere on the request path.
+//!   Layer 3 (this binary):  the Rust coordinator serves batched
+//!     classification requests — routing per config, dynamic batching,
+//!     backpressure — with Python nowhere on the request path, over
+//!     one of three backends:
+//!
+//!       pjrt    compiled HLO on the PJRT CPU client (`--features pjrt`)
+//!       native  pure-Rust integer inference
+//!       accel   the cycle-level SoC farm (SERV + SVM CFU shards) with
+//!               per-request energy accounting — Table I under load
 //!
 //! The workload streams the real held-out test vectors of four
 //! Table-I configurations from 8 client threads, checks every answer
-//! against the labels (accuracy must equal the build-time metric) and
-//! reports throughput, latency percentiles and batch-formation stats.
+//! against the native integer spec and the labels, and reports
+//! throughput, latency percentiles and batch-formation stats; the
+//! accel backend additionally prints the serving energy report
+//! (energy/request, simulated cycles, accel-vs-baseline ratio).
 //! The numbers land in EXPERIMENTS.md §E2E.
 //!
 //!     make artifacts && cargo run --release --example serve_inference
-//!     (options: serve_inference <n_requests> <backend pjrt|native>)
+//!     (options: serve_inference <n_requests> <backend pjrt|native|accel>)
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::farm::resolve_shards;
+use flexsvm::power::FlexicModel;
+use flexsvm::report::serving;
 use flexsvm::svm::model::artifacts_root;
-use flexsvm::svm::Manifest;
+use flexsvm::svm::{Manifest, QuantModel};
+use flexsvm::util::benchkit::{drive_clients, load_testsets};
 
 const WORKERS: usize = 8;
 
@@ -33,7 +44,17 @@ fn main() -> Result<()> {
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(20_000);
     let backend = match std::env::args().nth(2).as_deref() {
         Some("native") => Backend::Native,
-        _ => Backend::Pjrt,
+        Some("accel") => Backend::Accel,
+        Some("pjrt") => Backend::Pjrt,
+        // default follows the build: pjrt when compiled in, else native
+        None => {
+            if cfg!(feature = "pjrt") {
+                Backend::Pjrt
+            } else {
+                Backend::Native
+            }
+        }
+        Some(other) => bail!("unknown backend {other:?} (pjrt|native|accel)"),
     };
     let keys: Vec<String> = ["iris_ovr_w4", "bs_ovo_w8", "seeds_ovo_w4", "derm_ovr_w16"]
         .iter()
@@ -41,72 +62,60 @@ fn main() -> Result<()> {
         .collect();
 
     let manifest = Manifest::load(&artifacts_root())?;
-    let mut testsets = Vec::new();
+    let testsets = load_testsets(&manifest, &keys)?;
+    let accuracies: Vec<f64> =
+        keys.iter().map(|k| manifest.config(k).map(|e| e.accuracy)).collect::<Result<_>>()?;
+    // native reference models: every served answer is checked against
+    // the integer spec (differential serving check, all backends)
+    let mut ref_models: HashMap<String, QuantModel> = HashMap::new();
     for k in &keys {
-        let entry = manifest.config(k)?;
-        testsets.push((k.clone(), manifest.test_set(&entry.dataset)?, entry.accuracy));
+        ref_models.insert(k.clone(), manifest.model(manifest.config(k)?)?);
     }
 
+    let opts = ServerOpts {
+        backend,
+        batch_max: 64,
+        compiled_batch: 64,
+        linger: Duration::from_micros(500),
+        queue_cap: 4096,
+        eager_flush: true,
+        ..Default::default()
+    };
     println!("starting coordinator ({backend:?}) serving {} configs ...", keys.len());
+    if backend == Backend::Accel {
+        println!(
+            "  farm: {} SoC shards, warm program load + baseline calibration (one software-only\n  \
+             inference per config — the slow part of startup on large models)",
+            resolve_shards(opts.farm.shards)
+        );
+    }
     let t_load = Instant::now();
-    let server = Server::start(
-        artifacts_root(),
-        keys.clone(),
-        ServerOpts {
-            backend,
-            batch_max: 64,
-            compiled_batch: 64,
-            linger: Duration::from_micros(500),
-            queue_cap: 4096,
-            eager_flush: true,
-        },
-    )?;
-    println!("  all graphs compiled + resident in {:.2}s", t_load.elapsed().as_secs_f64());
+    let server = Server::start(artifacts_root(), keys.clone(), opts)?;
+    println!("  backend resident in {:.2}s", t_load.elapsed().as_secs_f64());
 
     let client = server.client();
-    let correct = AtomicU64::new(0);
-    let done = AtomicU64::new(0);
-    let t0 = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for w in 0..WORKERS {
-            let client = client.clone();
-            let testsets = &testsets;
-            let correct = &correct;
-            let done = &done;
-            handles.push(scope.spawn(move || -> Result<()> {
-                for i in 0..n_requests / WORKERS {
-                    let (key, test, _) = &testsets[(w + i) % testsets.len()];
-                    let idx = (w * 7919 + i * 31) % test.len();
-                    let resp = client.infer(key, &test.x_q[idx])?;
-                    if resp.pred == test.y[idx] {
-                        correct.fetch_add(1, Ordering::Relaxed);
-                    }
-                    done.fetch_add(1, Ordering::Relaxed);
-                }
-                Ok(())
-            }));
-        }
-        for h in handles {
-            h.join().unwrap()?;
-        }
-        Ok(())
-    })?;
-    let dt = t0.elapsed();
-    let served = done.load(Ordering::Relaxed);
-    let acc = correct.load(Ordering::Relaxed) as f64 / served as f64;
+    let r = drive_clients(&client, &testsets, n_requests, WORKERS, Some(&ref_models))?;
+    let acc = r.label_correct as f64 / r.served as f64;
 
     println!("\n=== E2E results ===");
     println!(
-        "served {served} requests from {WORKERS} clients in {:.2}s  ->  {:.0} req/s",
-        dt.as_secs_f64(),
-        served as f64 / dt.as_secs_f64()
+        "served {} requests from {WORKERS} clients in {:.2}s  ->  {:.0} req/s",
+        r.served,
+        r.wall.as_secs_f64(),
+        r.served as f64 / r.wall.as_secs_f64()
     );
     println!("online accuracy over the mixed stream: {:.1}%", acc * 100.0);
+    anyhow::ensure!(
+        r.native_mismatch == 0,
+        "{} answers diverged from the native integer spec",
+        r.native_mismatch
+    );
+    println!("every prediction matches the native backend (0 mismatches)");
 
-    let mut metrics: Vec<_> = client.metrics()?.into_iter().collect();
-    metrics.sort_by(|a, b| a.0.cmp(&b.0));
-    for (key, m) in metrics {
+    let metrics = client.metrics()?;
+    let mut sorted: Vec<_> = metrics.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(b.0));
+    for (key, m) in &sorted {
         let h = m.latency.as_ref().unwrap();
         println!(
             "  {key:<16} {:>6} reqs | {:>5} batches (mean {:>4.1}/batch) | latency p50 {:>5} us  p99 {:>6} us  max {:>6} us",
@@ -119,9 +128,27 @@ fn main() -> Result<()> {
         );
     }
 
+    if backend == Backend::Accel {
+        let farm = client.farm_metrics()?;
+        print!("{}", serving::render(&metrics, r.wall, farm.as_ref(), &FlexicModel::paper()));
+        // Table-I sanity: at least one served config's accel-vs-baseline
+        // cycle ratio must sit inside the paper's reported speedup band
+        // (Table I spans 1.5x..48.6x across configs).
+        let ratios: Vec<(String, f64)> = sorted
+            .iter()
+            .map(|(k, m)| ((*k).clone(), m.accel_speedup()))
+            .filter(|(_, r)| *r > 0.0)
+            .collect();
+        anyhow::ensure!(
+            ratios.iter().any(|(_, r)| (1.5..=60.0).contains(r)),
+            "no config's accel-vs-baseline ratio {ratios:?} is in the paper's range"
+        );
+        println!("accel-vs-baseline ratios {ratios:?} — consistent with Table I");
+    }
+
     // sanity: the mixed-stream accuracy must be the weighted mean of the
     // per-config build-time accuracies (same vectors, same models)
-    let expect: f64 = testsets.iter().map(|(_, _, a)| a).sum::<f64>() / testsets.len() as f64;
+    let expect: f64 = accuracies.iter().sum::<f64>() / accuracies.len() as f64;
     anyhow::ensure!(
         (acc - expect).abs() < 0.05,
         "online accuracy {acc:.3} diverges from expected {expect:.3}"

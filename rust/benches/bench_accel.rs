@@ -6,10 +6,8 @@
 use flexsvm::accel::svm::SvmAccel;
 use flexsvm::accel::{pe, Cfu};
 use flexsvm::isa::svm_ops;
-use flexsvm::runtime::Engine;
-use flexsvm::svm::model::{artifacts_root, Manifest};
 use flexsvm::svm::pack;
-use flexsvm::util::benchkit::Bench;
+use flexsvm::util::benchkit::{manifest_or_skip, Bench};
 use flexsvm::util::Pcg32;
 
 fn main() -> anyhow::Result<()> {
@@ -59,8 +57,10 @@ fn main() -> anyhow::Result<()> {
     b2.metric("accelerator ops", 10.0 / s.median.as_secs_f64() / 1e6, "Mops/s");
 
     // --- packing ---
+    let Some(manifest) = manifest_or_skip("bench_accel packing/PJRT sections") else {
+        return Ok(());
+    };
     let b3 = Bench::new("operand packing (host side)");
-    let manifest = Manifest::load(&artifacts_root())?;
     let entry = manifest.config("derm_ovo_w16")?;
     let model = manifest.model(entry)?;
     let test = manifest.test_set("derm")?;
@@ -71,28 +71,33 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(pack::all_weight_words(&model));
     });
 
-    // --- PJRT compiled-graph execution ---
-    let b4 = Bench::new("PJRT execution (AOT HLO on CPU client)");
-    let mut engine = Engine::new()?;
-    for key in ["iris_ovr_w4", "derm_ovo_w16"] {
-        let entry = manifest.config(key)?;
-        let test = manifest.test_set(&entry.dataset)?;
-        for batch in [1usize, 64] {
-            engine.load(&manifest, entry, batch)?;
-            let cfg = engine.get(key, batch)?;
-            let mut flat = Vec::new();
-            for i in 0..batch {
-                flat.extend_from_slice(&test.x_q[i % test.len()]);
+    // --- PJRT compiled-graph execution (pjrt feature only) ---
+    #[cfg(feature = "pjrt")]
+    {
+        let b4 = Bench::new("PJRT execution (AOT HLO on CPU client)");
+        let mut engine = flexsvm::runtime::Engine::new()?;
+        for key in ["iris_ovr_w4", "derm_ovo_w16"] {
+            let entry = manifest.config(key)?;
+            let test = manifest.test_set(&entry.dataset)?;
+            for batch in [1usize, 64] {
+                engine.load(&manifest, entry, batch)?;
+                let cfg = engine.get(key, batch)?;
+                let mut flat = Vec::new();
+                for i in 0..batch {
+                    flat.extend_from_slice(&test.x_q[i % test.len()]);
+                }
+                let s = b4.case(&format!("{key} b{batch}"), 5, 100, || {
+                    std::hint::black_box(cfg.execute(&flat).unwrap());
+                });
+                b4.metric(
+                    &format!("{key} b{batch} throughput"),
+                    batch as f64 / s.median.as_secs_f64(),
+                    "inf/s",
+                );
             }
-            let s = b4.case(&format!("{key} b{batch}"), 5, 100, || {
-                std::hint::black_box(cfg.execute(&flat).unwrap());
-            });
-            b4.metric(
-                &format!("{key} b{batch} throughput"),
-                batch as f64 / s.median.as_secs_f64(),
-                "inf/s",
-            );
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(PJRT section skipped: built without the `pjrt` feature)");
     Ok(())
 }

@@ -1,0 +1,156 @@
+//! Accelerator-farm serving benchmark: the sharded cycle-level SoC
+//! pool under steady / bursty / multi-tenant traffic.
+//!
+//! Part A drives the raw [`Farm`] (scheduler + shard balance + spill
+//! behaviour, paced by the scenario generator's arrival times).
+//! Part B serves the same traffic through the coordinator
+//! (`Backend::Accel`) and prints the serving energy report.
+//!
+//! Runs against the real Table-I artifacts when present, otherwise
+//! against synthetic quantized models — the farm needs no artifacts.
+//!
+//!     cargo bench --bench bench_farm [n_requests]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::farm::scenario::{self, Traffic};
+use flexsvm::farm::{Farm, FarmOpts};
+use flexsvm::power::FlexicModel;
+use flexsvm::report::serving;
+use flexsvm::svm::QuantModel;
+use flexsvm::testing::gen;
+use flexsvm::util::benchkit::manifest_or_skip;
+use flexsvm::util::{Pcg32, Table};
+
+const WORKERS: usize = 8;
+
+/// Table-I configs when artifacts exist, synthetic models otherwise.
+fn build_models() -> Vec<(String, QuantModel)> {
+    if let Some(manifest) = manifest_or_skip("bench_farm: real Table-I configs") {
+        let keys = ["iris_ovr_w4", "seeds_ovo_w4", "bs_ovr_w8", "v3_ovo_w4"];
+        return keys
+            .iter()
+            .map(|k| {
+                let entry = manifest.config(k).unwrap();
+                (k.to_string(), manifest.model(entry).unwrap())
+            })
+            .collect();
+    }
+    println!("bench_farm: using synthetic quantized models instead");
+    let mut rng = Pcg32::seeded(0xfa12);
+    (0..4)
+        .map(|i| {
+            let m = gen::quant_model(&mut rng);
+            (format!("syn{i}_{}", m.config_key()), m)
+        })
+        .collect()
+}
+
+/// Pre-draw one feature vector per arrival (outside the timed region).
+fn draw_features(models: &[(String, QuantModel)], s: &scenario::Scenario, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Pcg32::seeded(seed);
+    s.arrivals.iter().map(|a| gen::features(&mut rng, models[a.config].1.n_features)).collect()
+}
+
+/// Replay arrivals against `f`, paced to their timestamps, from
+/// WORKERS threads (round-robin partition).  Returns the wall time.
+fn replay<F>(s: &scenario::Scenario, xs: &[Vec<i32>], f: F) -> std::time::Duration
+where
+    F: Fn(usize, &[i32]) + Sync,
+{
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..WORKERS {
+            let f = &f;
+            scope.spawn(move || {
+                for (i, a) in s.arrivals.iter().enumerate().skip(w).step_by(WORKERS) {
+                    let target = start + a.at;
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                    f(a.config, &xs[i]);
+                }
+            });
+        }
+    });
+    start.elapsed()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(1_200);
+    let models = build_models();
+    let n_cfg = models.len();
+    let scenarios = [
+        scenario::generate(Traffic::Steady { rps: 2_000.0 }, n_cfg, n, 0xa1),
+        scenario::generate(Traffic::Bursty { rps: 2_000.0, burst: 32 }, n_cfg, n, 0xa2),
+        scenario::generate(Traffic::MultiTenant { rps: 2_000.0, skew: 1.2 }, n_cfg, n, 0xa3),
+    ];
+
+    // ---- part A: raw farm, shard-count sweep -------------------------------
+    println!("### farm scheduler: {n} paced requests, {WORKERS} client threads");
+    let mut t = Table::new([
+        "scenario", "shards", "req/s", "sim Mcyc", "spills", "max/min shard jobs", "lazy loads",
+    ]);
+    for s in &scenarios {
+        let xs = draw_features(&models, s, 0xfeed);
+        for shards in [1usize, 2, 4] {
+            let farm = Farm::start(
+                models.clone(),
+                FarmOpts { shards, calibrate_baseline: false, ..Default::default() },
+            )?;
+            let errors = AtomicU64::new(0);
+            let wall = replay(s, &xs, |cfg, x| {
+                if farm.predict(&models[cfg].0, x).is_err() {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(errors.load(Ordering::Relaxed), 0, "farm must answer every request");
+            let m = farm.metrics();
+            let jobs: Vec<u64> = m.shards.iter().map(|sh| sh.jobs).collect();
+            // every config is warm-loaded once on its home shard; the
+            // rest are lazy spill loads (reload churn)
+            let lazy = m.shards.iter().map(|sh| sh.model_loads).sum::<u64>() - models.len() as u64;
+            t.row([
+                s.traffic.name().to_string(),
+                shards.to_string(),
+                format!("{:.0}", n as f64 / wall.as_secs_f64()),
+                format!("{:.2}", m.total_sim_cycles() as f64 / 1e6),
+                m.spills.to_string(),
+                format!("{}/{}", jobs.iter().max().unwrap(), jobs.iter().min().unwrap()),
+                lazy.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // ---- part B: behind the coordinator, with energy accounting ------------
+    println!("\n### coordinator Backend::Accel (multi-tenant scenario)");
+    let s = &scenarios[2];
+    let xs = draw_features(&models, s, 0xbeef);
+    let server = Server::start_with_models(
+        models.clone(),
+        ServerOpts {
+            backend: Backend::Accel,
+            farm: FarmOpts { calibrate_baseline: true, ..Default::default() },
+            ..Default::default()
+        },
+    )?;
+    let client = server.client();
+    let errors = AtomicU64::new(0);
+    let wall = replay(s, &xs, |cfg, x| {
+        if client.infer(&models[cfg].0, x).is_err() {
+            errors.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert_eq!(errors.load(Ordering::Relaxed), 0);
+    println!("served {n} requests in {:.2}s = {:.0} req/s", wall.as_secs_f64(), n as f64 / wall.as_secs_f64());
+    let farm_metrics = client.farm_metrics()?;
+    print!(
+        "{}",
+        serving::render(&client.metrics()?, wall, farm_metrics.as_ref(), &FlexicModel::paper())
+    );
+    Ok(())
+}

@@ -9,8 +9,7 @@ use flexsvm::program::run::ProgramRunner;
 use flexsvm::program::ProgramOpts;
 use flexsvm::serv::TimingConfig;
 use flexsvm::soc::Soc;
-use flexsvm::svm::model::{artifacts_root, Manifest};
-use flexsvm::util::benchkit::Bench;
+use flexsvm::util::benchkit::{manifest_or_skip, Bench};
 
 /// A compute-heavy loop: N iterations of add/xor/shift/branch.
 fn alu_loop(n: i32) -> Asm {
@@ -75,7 +74,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // end-to-end inference programs (what bench_table1 spends time in)
-    let manifest = Manifest::load(&artifacts_root())?;
+    let Some(manifest) = manifest_or_skip("bench_serv inference section") else {
+        return Ok(());
+    };
     let b2 = Bench::new("inference program simulation");
     for key in ["iris_ovr_w4", "derm_ovo_w16"] {
         let entry = manifest.config(key)?;

@@ -1,24 +1,32 @@
 //! Coordinator serving benchmark: throughput and tail latency vs batch
-//! policy and backend (experiment E2E support data).
+//! policy and backend (experiment E2E support data).  The client loop
+//! lives in `util::benchkit::drive_clients`, shared with
+//! `examples/serve_inference.rs` and the farm bench.
 //!
 //!     cargo bench --bench bench_serving
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use flexsvm::coordinator::{Backend, Server, ServerOpts};
-use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::svm::model::artifacts_root;
+use flexsvm::svm::TestSet;
+use flexsvm::util::benchkit::{drive_clients, latency_summary, load_testsets, manifest_or_skip};
 use flexsvm::util::Table;
 
 const REQUESTS: usize = 8_000;
 const WORKERS: usize = 8;
 
-fn drive(backend: Backend, batch_max: usize, linger_us: u64, eager: bool) -> anyhow::Result<(f64, u64, u64, f64)> {
-    let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
-    let manifest = Manifest::load(&artifacts_root())?;
+fn drive(
+    testsets: &[(String, TestSet)],
+    backend: Backend,
+    batch_max: usize,
+    linger_us: u64,
+    eager: bool,
+) -> anyhow::Result<(f64, u64, u64, f64)> {
+    let keys: Vec<String> = testsets.iter().map(|(k, _)| k.clone()).collect();
     let server = Server::start(
         artifacts_root(),
-        keys.clone(),
+        keys,
         ServerOpts {
             backend,
             batch_max,
@@ -26,61 +34,32 @@ fn drive(backend: Backend, batch_max: usize, linger_us: u64, eager: bool) -> any
             linger: Duration::from_micros(linger_us),
             queue_cap: 4096,
             eager_flush: eager,
+            ..Default::default()
         },
     )?;
     let client = server.client();
-    let mut testsets = Vec::new();
-    for k in &keys {
-        let entry = manifest.config(k)?;
-        testsets.push((k.clone(), manifest.test_set(&entry.dataset)?));
-    }
-    let done = AtomicU64::new(0);
-    let t0 = Instant::now();
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        let mut hs = Vec::new();
-        for w in 0..WORKERS {
-            let client = client.clone();
-            let testsets = &testsets;
-            let done = &done;
-            hs.push(scope.spawn(move || -> anyhow::Result<()> {
-                for i in 0..REQUESTS / WORKERS {
-                    let (key, test) = &testsets[(w + i) % testsets.len()];
-                    let idx = (w * 131 + i) % test.len();
-                    client.infer(key, &test.x_q[idx])?;
-                    done.fetch_add(1, Ordering::Relaxed);
-                }
-                Ok(())
-            }));
-        }
-        for h in hs {
-            h.join().unwrap()?;
-        }
-        Ok(())
-    })?;
-    let dt = t0.elapsed().as_secs_f64();
-    let metrics = client.metrics()?;
-    let mut p50 = 0u64;
-    let mut p99 = 0u64;
-    let mut mean_batch = 0.0;
-    let mut n = 0.0;
-    for m in metrics.values() {
-        let h = m.latency.as_ref().unwrap();
-        p50 = p50.max(h.quantile_us(0.50));
-        p99 = p99.max(h.quantile_us(0.99));
-        mean_batch += m.mean_batch();
-        n += 1.0;
-    }
-    Ok((done.load(Ordering::Relaxed) as f64 / dt, p50, p99, mean_batch / n))
+    let r = drive_clients(&client, testsets, REQUESTS, WORKERS, None)?;
+    let s = latency_summary(&client.metrics()?);
+    Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch))
 }
 
 fn main() -> anyhow::Result<()> {
+    let Some(manifest) = manifest_or_skip("bench_serving") else {
+        return Ok(());
+    };
+    let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
+    let testsets = load_testsets(&manifest, &keys)?;
     println!("### coordinator serving: {REQUESTS} requests, {WORKERS} client threads");
+    #[cfg(feature = "pjrt")]
+    let backends = [Backend::Pjrt, Backend::Native];
+    #[cfg(not(feature = "pjrt"))]
+    let backends = [Backend::Native];
     let mut t = Table::new(["backend", "batch_max", "linger", "eager", "req/s", "p50 (us)", "p99 (us)", "mean batch"]);
-    for backend in [Backend::Pjrt, Backend::Native] {
+    for backend in backends {
         for (batch_max, linger_us, eager) in
             [(1usize, 0u64, false), (8, 200, false), (64, 500, false), (64, 2000, false), (64, 500, true)]
         {
-            let (rps, p50, p99, mb) = drive(backend, batch_max, linger_us, eager)?;
+            let (rps, p50, p99, mb) = drive(&testsets, backend, batch_max, linger_us, eager)?;
             t.row([
                 format!("{backend:?}"),
                 batch_max.to_string(),
@@ -94,6 +73,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     print!("{}", t.render());
-    println!("\n(batch_max=1 is the no-batching baseline; PJRT gains come from batch formation)");
+    println!("\n(batch_max=1 is the no-batching baseline; PJRT gains come from batch formation.");
+    println!(" The Accel backend has its own bench: cargo bench --bench bench_farm)");
     Ok(())
 }

@@ -87,6 +87,15 @@ pub struct ConfigMetrics {
     pub batches: u64,
     pub batched_samples: u64,
     pub latency: Option<Histogram>,
+    /// Samples answered by the simulated SoC farm (Backend::Accel).
+    pub sim_samples: u64,
+    /// Total simulated SoC cycles across those samples.
+    pub sim_cycles: u64,
+    /// Total FlexIC energy across those samples, mJ.
+    pub energy_mj: f64,
+    /// Calibrated software-only baseline cycles/inference for the
+    /// accel-vs-baseline ratio (0.0 when unknown / non-Accel).
+    pub baseline_cycles_per_inf: f64,
 }
 
 impl ConfigMetrics {
@@ -99,6 +108,35 @@ impl ConfigMetrics {
             0.0
         } else {
             self.batched_samples as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean simulated cycles per inference (0 with no sim samples).
+    pub fn mean_sim_cycles(&self) -> f64 {
+        if self.sim_samples == 0 {
+            0.0
+        } else {
+            self.sim_cycles as f64 / self.sim_samples as f64
+        }
+    }
+
+    /// Mean FlexIC energy per request in mJ.
+    pub fn mean_energy_mj(&self) -> f64 {
+        if self.sim_samples == 0 {
+            0.0
+        } else {
+            self.energy_mj / self.sim_samples as f64
+        }
+    }
+
+    /// Accel-vs-baseline cycle ratio under load (Table I's speedup
+    /// column measured on the serving path; 0 when uncalibrated).
+    pub fn accel_speedup(&self) -> f64 {
+        let accel = self.mean_sim_cycles();
+        if accel == 0.0 || self.baseline_cycles_per_inf == 0.0 {
+            0.0
+        } else {
+            self.baseline_cycles_per_inf / accel
         }
     }
 }
@@ -134,5 +172,20 @@ mod tests {
         m.batches = 4;
         m.batched_samples = 10;
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_accounting_means() {
+        let mut m = ConfigMetrics::new();
+        assert_eq!(m.mean_sim_cycles(), 0.0);
+        assert_eq!(m.mean_energy_mj(), 0.0);
+        assert_eq!(m.accel_speedup(), 0.0);
+        m.sim_samples = 4;
+        m.sim_cycles = 400_000;
+        m.energy_mj = 8.0;
+        m.baseline_cycles_per_inf = 2_000_000.0;
+        assert!((m.mean_sim_cycles() - 100_000.0).abs() < 1e-9);
+        assert!((m.mean_energy_mj() - 2.0).abs() < 1e-12);
+        assert!((m.accel_speedup() - 20.0).abs() < 1e-9);
     }
 }

@@ -1,18 +1,27 @@
 //! Inference coordinator: request router + dynamic batcher + serving
-//! loop over the PJRT engine (Python is never on this path).
+//! loop over three interchangeable backends (Python is never on this
+//! path).
 //!
 //! Shape (vLLM-router-like, scaled to this paper's workload): client
 //! threads submit `(config, features)` requests through a bounded
 //! channel; the dispatcher thread routes them into per-config queues,
 //! flushes a queue when it reaches `batch_max` or its oldest request
-//! exceeds `linger`, executes the batch on the engine, and answers
-//! each request through its response channel.  The PJRT client is not
-//! `Send`, so the engine lives on the dispatcher thread — batching,
-//! not parallel dispatch, is where CPU-PJRT throughput comes from.
+//! exceeds `linger`, executes the batch on the backend, and answers
+//! each request through its response channel.
 //!
-//! A `Native` backend (same protocol, pure-Rust integer inference) is
-//! provided for differential testing and as the baseline the serving
-//! bench compares against.
+//! Backends:
+//!
+//!  * [`Backend::Pjrt`] — AOT-compiled HLO on the PJRT CPU client
+//!    (`pjrt` cargo feature).  The client is not `Send`, so the engine
+//!    lives on the dispatcher thread — batching, not parallel
+//!    dispatch, is where CPU-PJRT throughput comes from.
+//!  * [`Backend::Native`] — pure-Rust integer inference (differential
+//!    testing / baseline).
+//!  * [`Backend::Accel`] — the cycle-level SoC farm
+//!    ([`crate::farm::Farm`]): batches fan out across warm SERV+CFU
+//!    shard threads, and every response carries simulated cycles and
+//!    FlexIC energy, aggregated into [`ConfigMetrics`] for the
+//!    serving report (`report::serving`).
 
 pub mod metrics;
 
@@ -22,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::Engine;
+use crate::farm::{AccelOutput, Farm, FarmMetrics, FarmOpts};
 use crate::svm::model::Manifest;
 use crate::svm::{infer, QuantModel};
 
@@ -31,10 +40,13 @@ use metrics::ConfigMetrics;
 /// Which compute backend serves the batches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
-    /// AOT-compiled HLO on the PJRT CPU client.
+    /// AOT-compiled HLO on the PJRT CPU client (needs the `pjrt`
+    /// feature and on-disk artifacts).
     Pjrt,
     /// Native Rust integer inference (differential testing / baseline).
     Native,
+    /// Sharded cycle-level SoC farm with per-request energy accounting.
+    Accel,
 }
 
 /// Server tuning knobs.
@@ -54,19 +66,31 @@ pub struct ServerOpts {
     /// and nobody waits out the linger against an idle channel.  The
     /// linger then only bounds worst-case wait under sustained load.
     pub eager_flush: bool,
+    /// Farm knobs (Backend::Accel only).
+    pub farm: FarmOpts,
 }
 
 impl Default for ServerOpts {
     fn default() -> Self {
         ServerOpts {
-            backend: Backend::Pjrt,
+            backend: Backend::Native,
             batch_max: 64,
             compiled_batch: 64,
             linger: Duration::from_millis(2),
             queue_cap: 1024,
             eager_flush: true,
+            farm: FarmOpts::default(),
         }
     }
+}
+
+/// Simulated-hardware accounting attached to `Backend::Accel` answers.
+#[derive(Debug, Clone, Copy)]
+pub struct SimCost {
+    /// SoC cycles the inference took on the simulated FlexIC hardware.
+    pub cycles: u64,
+    /// FlexIC energy for the inference in mJ.
+    pub energy_mj: f64,
 }
 
 /// A single inference answer.
@@ -77,6 +101,8 @@ pub struct Response {
     pub latency: Duration,
     /// How many samples shared the executed batch.
     pub batch_size: usize,
+    /// Simulated cycles + energy (None on Pjrt/Native backends).
+    pub sim: Option<SimCost>,
 }
 
 struct Request {
@@ -89,6 +115,7 @@ struct Request {
 enum Msg {
     Req(Request),
     Snapshot(mpsc::SyncSender<HashMap<String, ConfigMetrics>>),
+    FarmSnapshot(mpsc::SyncSender<Option<FarmMetrics>>),
     Shutdown,
 }
 
@@ -119,6 +146,13 @@ impl Client {
         self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server is down"))?;
         rx.recv().context("server dropped the snapshot request")
     }
+
+    /// Shard-level farm statistics (None on non-Accel backends).
+    pub fn farm_metrics(&self) -> Result<Option<FarmMetrics>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::FarmSnapshot(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().context("server dropped the snapshot request")
+    }
 }
 
 /// Running server; dropping the handle shuts the dispatcher down.
@@ -127,22 +161,68 @@ pub struct Server {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-impl Server {
-    /// Start a server for the given config keys.
-    pub fn start(artifacts_root: std::path::PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
-        if opts.batch_max == 0 || opts.batch_max > opts.compiled_batch {
-            bail!("batch_max must be in 1..=compiled_batch");
+/// Where the dispatcher gets its models from.
+enum ModelSource {
+    /// On-disk artifact tree (all backends).
+    Artifacts(Manifest),
+    /// In-memory models (Native/Accel — lets tests and benches serve
+    /// synthetic models with no artifacts on disk).
+    Inline(HashMap<String, QuantModel>),
+}
+
+impl ModelSource {
+    fn model(&self, key: &str) -> Result<QuantModel> {
+        match self {
+            ModelSource::Artifacts(m) => {
+                let entry = m.config(key)?;
+                m.model(entry)
+            }
+            ModelSource::Inline(map) => {
+                map.get(key).cloned().with_context(|| format!("config {key:?} not provided"))
+            }
         }
-        let (tx, rx) = mpsc::sync_channel::<Msg>(opts.queue_cap);
+    }
+}
+
+impl Server {
+    /// Start a server for the given config keys of an artifact tree.
+    pub fn start(artifacts_root: std::path::PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
         // fail fast on bad configs before spawning
         let manifest = Manifest::load(&artifacts_root)?;
         for k in &keys {
             manifest.config(k)?;
         }
+        Self::spawn(ModelSource::Artifacts(manifest), keys, opts)
+    }
+
+    /// Start a server over in-memory models (Native/Accel backends;
+    /// no artifacts on disk required).
+    pub fn start_with_models(models: Vec<(String, QuantModel)>, opts: ServerOpts) -> Result<Server> {
+        if opts.backend == Backend::Pjrt {
+            bail!("start_with_models serves Native/Accel only — Pjrt needs on-disk artifacts");
+        }
+        if models.is_empty() {
+            bail!("no models to serve");
+        }
+        let keys: Vec<String> = models.iter().map(|(k, _)| k.clone()).collect();
+        let mut map = HashMap::new();
+        for (k, m) in models {
+            if map.insert(k.clone(), m).is_some() {
+                bail!("duplicate config key {k:?}");
+            }
+        }
+        Self::spawn(ModelSource::Inline(map), keys, opts)
+    }
+
+    fn spawn(source: ModelSource, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
+        if opts.batch_max == 0 || opts.batch_max > opts.compiled_batch {
+            bail!("batch_max must be in 1..=compiled_batch");
+        }
+        let (tx, rx) = mpsc::sync_channel::<Msg>(opts.queue_cap);
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
             .name("flexsvm-dispatcher".into())
-            .spawn(move || dispatcher(manifest, keys, opts, rx, ready_tx))?;
+            .spawn(move || dispatcher(source, keys, opts, rx, ready_tx))?;
         ready_rx.recv().context("dispatcher died during init")??;
         Ok(Server { tx, join: Some(join) })
     }
@@ -162,51 +242,90 @@ impl Drop for Server {
 }
 
 enum Exec {
-    Pjrt(Engine, usize),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::Engine, usize),
     Native(HashMap<String, QuantModel>),
+    Accel(Farm),
+}
+
+/// One executed batch.  Pjrt/Native batches succeed or fail as a unit
+/// (execution cannot fail on input values); the farm answers per
+/// sample, so a bad request fails alone instead of poisoning its
+/// batchmates.
+enum BatchAnswer {
+    Uniform(Vec<i32>),
+    PerSample(Vec<Result<AccelOutput>>),
 }
 
 impl Exec {
-    fn run(&self, key: &str, xs: &[Vec<i32>]) -> Result<Vec<i32>> {
+    fn run(&self, key: &str, xs: &[Vec<i32>]) -> Result<BatchAnswer> {
         match self {
-            Exec::Pjrt(engine, batch) => engine.predict(key, *batch, xs),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(engine, batch) => Ok(BatchAnswer::Uniform(engine.predict(key, *batch, xs)?)),
             Exec::Native(models) => {
                 let m = models.get(key).ok_or_else(|| anyhow!("no model {key}"))?;
-                Ok(xs.iter().map(|x| infer::predict(m, x)).collect())
+                Ok(BatchAnswer::Uniform(xs.iter().map(|x| infer::predict(m, x)).collect()))
             }
+            Exec::Accel(farm) => Ok(BatchAnswer::PerSample(farm.predict_batch(key, xs)?)),
+        }
+    }
+
+    fn baseline_cycles(&self, key: &str) -> Option<f64> {
+        match self {
+            Exec::Accel(farm) => farm.baseline_cycles(key),
+            _ => None,
+        }
+    }
+
+    fn farm_metrics(&self) -> Option<FarmMetrics> {
+        match self {
+            Exec::Accel(farm) => Some(farm.metrics()),
+            _ => None,
         }
     }
 }
 
+/// Init: compile/load everything up front (AOT — no first-request jank).
+fn init_exec(source: &ModelSource, keys: &[String], opts: &ServerOpts) -> Result<Exec> {
+    if opts.backend == Backend::Pjrt {
+        #[cfg(feature = "pjrt")]
+        {
+            let ModelSource::Artifacts(manifest) = source else {
+                bail!("the PJRT backend serves on-disk artifacts only");
+            };
+            let mut engine = crate::runtime::Engine::new()?;
+            for k in keys {
+                let entry = manifest.config(k)?;
+                engine.load(manifest, entry, opts.compiled_batch)?;
+            }
+            return Ok(Exec::Pjrt(engine, opts.compiled_batch));
+        }
+        #[cfg(not(feature = "pjrt"))]
+        bail!("Backend::Pjrt requires building with `--features pjrt`");
+    }
+    let mut models = HashMap::new();
+    for k in keys {
+        models.insert(k.clone(), source.model(k)?);
+    }
+    match opts.backend {
+        Backend::Native => Ok(Exec::Native(models)),
+        Backend::Accel => {
+            let list: Vec<(String, QuantModel)> =
+                keys.iter().map(|k| (k.clone(), models.remove(k).expect("loaded above"))).collect();
+            Ok(Exec::Accel(Farm::start(list, opts.farm)?))
+        }
+        Backend::Pjrt => unreachable!("handled above"),
+    }
+}
+
 fn dispatcher(
-    manifest: Manifest,
+    source: ModelSource,
     keys: Vec<String>,
     opts: ServerOpts,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
-    // init: compile/load everything up front (AOT — no first-request jank)
-    let init = (|| -> Result<Exec> {
-        match opts.backend {
-            Backend::Pjrt => {
-                let mut engine = Engine::new()?;
-                for k in &keys {
-                    let entry = manifest.config(k)?;
-                    engine.load(&manifest, entry, opts.compiled_batch)?;
-                }
-                Ok(Exec::Pjrt(engine, opts.compiled_batch))
-            }
-            Backend::Native => {
-                let mut models = HashMap::new();
-                for k in &keys {
-                    let entry = manifest.config(k)?;
-                    models.insert(k.clone(), manifest.model(entry)?);
-                }
-                Ok(Exec::Native(models))
-            }
-        }
-    })();
-    let exec = match init {
+    let exec = match init_exec(&source, &keys, &opts) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
@@ -231,13 +350,41 @@ fn dispatcher(
         m.batches += 1;
         m.batched_samples += pending.len() as u64;
         match result {
-            Ok(preds) => {
+            Ok(BatchAnswer::Uniform(preds)) => {
                 for (req, pred) in pending.into_iter().zip(preds) {
                     let latency = req.enqueued.elapsed();
                     if let Some(h) = m.latency.as_mut() {
                         h.record(latency);
                     }
-                    let _ = req.resp.send(Ok(Response { pred, latency, batch_size: xs.len() }));
+                    let _ =
+                        req.resp.send(Ok(Response { pred, latency, batch_size: xs.len(), sim: None }));
+                }
+            }
+            Ok(BatchAnswer::PerSample(outs)) => {
+                if let Some(b) = exec.baseline_cycles(key) {
+                    m.baseline_cycles_per_inf = b;
+                }
+                for (req, out) in pending.into_iter().zip(outs) {
+                    let latency = req.enqueued.elapsed();
+                    match out {
+                        Ok(o) => {
+                            m.sim_samples += 1;
+                            m.sim_cycles += o.cycles;
+                            m.energy_mj += o.energy_mj;
+                            if let Some(h) = m.latency.as_mut() {
+                                h.record(latency);
+                            }
+                            let _ = req.resp.send(Ok(Response {
+                                pred: o.pred,
+                                latency,
+                                batch_size: xs.len(),
+                                sim: Some(SimCost { cycles: o.cycles, energy_mj: o.energy_mj }),
+                            }));
+                        }
+                        Err(e) => {
+                            let _ = req.resp.send(Err(anyhow!("inference failed: {e:#}")));
+                        }
+                    }
                 }
             }
             Err(e) => {
@@ -292,6 +439,9 @@ fn dispatcher(
                         Msg::Snapshot(tx) => {
                             let _ = tx.send(stats.clone());
                         }
+                        Msg::FarmSnapshot(tx) => {
+                            let _ = tx.send(exec.farm_metrics());
+                        }
                         Msg::Shutdown => shutdown = true,
                     }
                 }
@@ -313,6 +463,9 @@ fn dispatcher(
             }
             Ok(Msg::Snapshot(tx)) => {
                 let _ = tx.send(stats.clone());
+            }
+            Ok(Msg::FarmSnapshot(tx)) => {
+                let _ = tx.send(exec.farm_metrics());
             }
             Ok(Msg::Shutdown) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
@@ -345,5 +498,6 @@ fn dispatcher(
     }
 }
 
-// Integration tests live in rust/tests/coordinator.rs (they need the
-// artifacts on disk for the PJRT backend and exercise Native in-process).
+// Integration tests live in rust/tests/coordinator.rs: Native/Accel
+// run against in-memory models (no artifacts needed); the PJRT and
+// artifact-backed paths skip gracefully when artifacts are absent.

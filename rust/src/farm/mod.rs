@@ -1,0 +1,531 @@
+//! Accelerator farm: a sharded pool of cycle-level SoCs (SERV core +
+//! SVM CFU) that serves classification requests as the coordinator's
+//! third backend (`Backend::Accel`).
+//!
+//! Unlike the PJRT client, [`crate::program::run::ProgramRunner`] is
+//! `Send` (the whole SoC is plain data and `Cfu: Send`), so the farm
+//! runs N warm, model-loaded shards on OS threads:
+//!
+//!  * **Shards** — each shard thread owns one `ProgramRunner` per
+//!    config it has served, kept warm across requests (no program
+//!    regeneration or SoC rebuild on the hot path).
+//!  * **Affinity + least-loaded spill** — every config has a *home*
+//!    shard (round-robin at startup); jobs go home unless the home
+//!    queue is deeper than `spill_threshold`, in which case the
+//!    least-loaded shard takes the job and lazily builds the runner
+//!    (counted as a `model_loads` reload-churn event).
+//!  * **Backpressure** — per-shard job queues are bounded
+//!    (`queue_cap`); submission blocks when a queue is full, mirroring
+//!    the coordinator's bounded-ingress `ServerOpts` contract.
+//!  * **Graceful shutdown** — dropping the [`Farm`] enqueues a
+//!    shutdown marker behind any queued work; shards finish in-flight
+//!    jobs, answer them, and join.
+//!
+//! Every answer carries the simulated cycle count and FlexIC energy
+//! (`power::FlexicModel`), so the serving layer can extend Table I's
+//! speed/energy story to streaming workloads.  When
+//! `calibrate_baseline` is set, the farm also runs the software-only
+//! baseline program once per config at startup (in parallel) and
+//! exposes the calibrated cycles/inference for accel-vs-baseline
+//! ratios under load.
+//!
+//! [`scenario`] generates the steady / bursty / multi-tenant request
+//! streams the farm benches replay.
+
+pub mod scenario;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::power::FlexicModel;
+use crate::program::run::ProgramRunner;
+use crate::program::ProgramOpts;
+use crate::serv::TimingConfig;
+use crate::svm::QuantModel;
+
+/// Farm tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FarmOpts {
+    /// Number of shard threads (0 = one per available core, capped at 8).
+    pub shards: usize,
+    /// Bound of each shard's job queue; a full queue blocks submission
+    /// (backpressure).
+    pub queue_cap: usize,
+    /// Home-shard queue depth above which a job spills to the
+    /// least-loaded shard instead.
+    pub spill_threshold: usize,
+    /// SoC timing of the simulated hardware (paper: FE memory model).
+    pub timing: TimingConfig,
+    /// Program-generation options for the accelerated programs.
+    pub program: ProgramOpts,
+    /// Power model used for per-request energy accounting.
+    pub power: FlexicModel,
+    /// Run the software-only baseline program once per config at
+    /// startup so responses can be reported against the paper's
+    /// "w/o accel" cycle count.  Costs one (slow) baseline simulation
+    /// per config, run in parallel across configs.
+    pub calibrate_baseline: bool,
+}
+
+impl Default for FarmOpts {
+    fn default() -> Self {
+        FarmOpts {
+            shards: 0,
+            queue_cap: 256,
+            spill_threshold: 4,
+            timing: TimingConfig::flexic(),
+            program: ProgramOpts::default(),
+            power: FlexicModel::paper(),
+            calibrate_baseline: true,
+        }
+    }
+}
+
+/// Resolve a requested shard count (0 = auto) the same way
+/// [`Farm::start`] does — exposed so reports can label runs.
+pub fn resolve_shards(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+}
+
+/// One simulated inference answer.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelOutput {
+    /// Predicted class id.
+    pub pred: i32,
+    /// Simulated SoC cycles for this inference.
+    pub cycles: u64,
+    /// FlexIC energy for this inference in mJ (`cycles × T_clk × P`).
+    pub energy_mj: f64,
+}
+
+struct FarmConfig {
+    key: String,
+    model: QuantModel,
+    /// Home shard index (affinity: avoids reload churn).
+    home: usize,
+    /// Calibrated software-only cycles/inference (None when
+    /// calibration is disabled).
+    baseline_cycles: Option<f64>,
+}
+
+struct Job {
+    cfg: usize,
+    features: Vec<i32>,
+    resp: mpsc::SyncSender<Result<AccelOutput>>,
+}
+
+enum ShardMsg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Monotonic per-shard counters (lock-free snapshots).
+#[derive(Default)]
+struct ShardCounters {
+    jobs: AtomicU64,
+    sim_cycles: AtomicU64,
+    model_loads: AtomicU64,
+}
+
+struct Shard {
+    tx: mpsc::SyncSender<ShardMsg>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Queued + running jobs on this shard (scheduler load signal).
+    depth: Arc<AtomicUsize>,
+    counters: Arc<ShardCounters>,
+}
+
+/// Point-in-time farm statistics.
+#[derive(Debug, Clone)]
+pub struct FarmMetrics {
+    pub shards: Vec<ShardMetrics>,
+    /// Jobs routed away from their home shard by the load spill rule.
+    pub spills: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShardMetrics {
+    pub jobs: u64,
+    pub sim_cycles: u64,
+    /// Accelerated-program builds on this shard (home warm-up loads +
+    /// lazy spill loads).
+    pub model_loads: u64,
+}
+
+impl FarmMetrics {
+    pub fn total_jobs(&self) -> u64 {
+        self.shards.iter().map(|s| s.jobs).sum()
+    }
+
+    pub fn total_sim_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.sim_cycles).sum()
+    }
+}
+
+/// The shard pool.  Dropping the farm drains queued work and joins
+/// every shard thread.
+pub struct Farm {
+    configs: Arc<Vec<FarmConfig>>,
+    index: HashMap<String, usize>,
+    shards: Vec<Shard>,
+    spills: AtomicU64,
+    spill_threshold: usize,
+    power: FlexicModel,
+}
+
+impl Farm {
+    /// Start a farm serving the given models.  Every config's home
+    /// shard builds its accelerated program up front (warm start);
+    /// baseline calibration (when enabled) runs in parallel across
+    /// configs before the shards spin up.
+    pub fn start(models: Vec<(String, QuantModel)>, opts: FarmOpts) -> Result<Farm> {
+        if models.is_empty() {
+            bail!("farm needs at least one model");
+        }
+        let n_shards = resolve_shards(opts.shards);
+        let mut index = HashMap::new();
+        for (i, (key, _)) in models.iter().enumerate() {
+            if index.insert(key.clone(), i).is_some() {
+                bail!("duplicate config key {key:?}");
+            }
+        }
+
+        // Baseline calibration: one software-only inference per config
+        // on a mid-scale input (the shift-add mul32 cost is dominated
+        // by model shape, not operand values).  Parallel across
+        // configs — each runner is independent.
+        let mut baselines: Vec<Option<f64>> = vec![None; models.len()];
+        if opts.calibrate_baseline {
+            let results: Vec<Result<f64>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = models
+                    .iter()
+                    .map(|(_, m)| scope.spawn(move || baseline_cycles_for(m, opts.timing)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("calibration panicked")).collect()
+            });
+            for (slot, r) in baselines.iter_mut().zip(results) {
+                *slot = Some(r?);
+            }
+        }
+
+        let configs: Vec<FarmConfig> = models
+            .into_iter()
+            .zip(baselines)
+            .enumerate()
+            .map(|(i, ((key, model), baseline_cycles))| FarmConfig {
+                key,
+                model,
+                home: i % n_shards,
+                baseline_cycles,
+            })
+            .collect();
+        let configs = Arc::new(configs);
+
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut readies = Vec::with_capacity(n_shards);
+        for shard_idx in 0..n_shards {
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(opts.queue_cap.max(1));
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let depth = Arc::new(AtomicUsize::new(0));
+            let counters = Arc::new(ShardCounters::default());
+            let join = std::thread::Builder::new()
+                .name(format!("flexsvm-shard-{shard_idx}"))
+                .spawn({
+                    let configs = Arc::clone(&configs);
+                    let depth = Arc::clone(&depth);
+                    let counters = Arc::clone(&counters);
+                    move || shard_main(shard_idx, configs, opts, rx, depth, counters, ready_tx)
+                })?;
+            shards.push(Shard { tx, join: Some(join), depth, counters });
+            readies.push(ready_rx);
+        }
+        for (i, ready) in readies.into_iter().enumerate() {
+            ready.recv().with_context(|| format!("shard {i} died during warm-up"))??;
+        }
+        Ok(Farm {
+            configs,
+            index,
+            shards,
+            spills: AtomicU64::new(0),
+            spill_threshold: opts.spill_threshold,
+            power: opts.power,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Config keys this farm serves, in registration order.
+    pub fn keys(&self) -> Vec<String> {
+        self.configs.iter().map(|c| c.key.clone()).collect()
+    }
+
+    /// Calibrated software-only cycles/inference for a config (None
+    /// when calibration was disabled or the key is unknown).
+    pub fn baseline_cycles(&self, key: &str) -> Option<f64> {
+        self.index.get(key).and_then(|&i| self.configs[i].baseline_cycles)
+    }
+
+    /// The power model the farm charges energy with.
+    pub fn power(&self) -> &FlexicModel {
+        &self.power
+    }
+
+    pub fn metrics(&self) -> FarmMetrics {
+        FarmMetrics {
+            shards: self
+                .shards
+                .iter()
+                .map(|s| ShardMetrics {
+                    jobs: s.counters.jobs.load(Ordering::Relaxed),
+                    sim_cycles: s.counters.sim_cycles.load(Ordering::Relaxed),
+                    model_loads: s.counters.model_loads.load(Ordering::Relaxed),
+                })
+                .collect(),
+            spills: self.spills.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Affinity-with-spill scheduling: home shard unless its queue is
+    /// deeper than the spill threshold, else the least-loaded shard.
+    fn pick_shard(&self, home: usize, spill_threshold: usize) -> usize {
+        let home_depth = self.shards[home].depth.load(Ordering::Relaxed);
+        if home_depth <= spill_threshold {
+            return home;
+        }
+        let mut best = home;
+        let mut best_depth = home_depth;
+        for (i, s) in self.shards.iter().enumerate() {
+            let d = s.depth.load(Ordering::Relaxed);
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        if best != home {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+        }
+        best
+    }
+
+    /// Submit one job; returns the response receiver.  Blocks when the
+    /// chosen shard's queue is full (backpressure).
+    fn submit(&self, cfg: usize, features: Vec<i32>) -> Result<mpsc::Receiver<Result<AccelOutput>>> {
+        let shard = self.pick_shard(self.configs[cfg].home, self.spill_threshold);
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+        if self.shards[shard].tx.send(ShardMsg::Job(Job { cfg, features, resp: tx })).is_err() {
+            self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+            bail!("shard {shard} is down");
+        }
+        Ok(rx)
+    }
+
+    /// Classify one sample.
+    pub fn predict(&self, key: &str, x: &[i32]) -> Result<AccelOutput> {
+        let cfg = *self.index.get(key).ok_or_else(|| anyhow!("config {key:?} not served"))?;
+        let rx = self.submit(cfg, x.to_vec())?;
+        rx.recv().context("farm shard dropped the job")?
+    }
+
+    /// Classify a batch: samples fan out across shards and the results
+    /// come back in input order, **per sample** — one bad request (e.g.
+    /// out-of-range features) fails alone instead of poisoning its
+    /// batchmates.  The outer error covers submission/transport
+    /// failures only.  Submission applies backpressure; collection
+    /// never blocks a shard (per-job channels have room for the single
+    /// answer).
+    pub fn predict_batch(&self, key: &str, xs: &[Vec<i32>]) -> Result<Vec<Result<AccelOutput>>> {
+        let cfg = *self.index.get(key).ok_or_else(|| anyhow!("config {key:?} not served"))?;
+        let mut pending = Vec::with_capacity(xs.len());
+        for x in xs {
+            pending.push(self.submit(cfg, x.clone())?);
+        }
+        let mut out = Vec::with_capacity(xs.len());
+        for rx in pending {
+            out.push(rx.recv().context("farm shard dropped the job")?);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Farm {
+    fn drop(&mut self) {
+        // the shutdown marker queues *behind* outstanding work, so
+        // in-flight jobs are answered before the shard exits.
+        for s in &self.shards {
+            let _ = s.tx.send(ShardMsg::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+fn baseline_cycles_for(m: &QuantModel, timing: TimingConfig) -> Result<f64> {
+    let mut runner = ProgramRunner::baseline(m, timing)?;
+    let x = vec![7i32; m.n_features];
+    let (_, stats) = runner.run_sample(&x)?;
+    Ok(stats.total() as f64)
+}
+
+fn shard_main(
+    shard_idx: usize,
+    configs: Arc<Vec<FarmConfig>>,
+    opts: FarmOpts,
+    rx: mpsc::Receiver<ShardMsg>,
+    depth: Arc<AtomicUsize>,
+    counters: Arc<ShardCounters>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    // warm start: build the accelerated program for every home config
+    // before reporting ready (no first-request jank)
+    let mut runners: HashMap<usize, ProgramRunner> = HashMap::new();
+    let warm = (|| -> Result<()> {
+        for (ci, c) in configs.iter().enumerate() {
+            if c.home == shard_idx {
+                counters.model_loads.fetch_add(1, Ordering::Relaxed);
+                runners.insert(ci, ProgramRunner::accelerated(&c.model, opts.timing, opts.program)?);
+            }
+        }
+        Ok(())
+    })();
+    let ok = warm.is_ok();
+    let _ = ready.send(warm);
+    if !ok {
+        return;
+    }
+
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            ShardMsg::Job(j) => j,
+            ShardMsg::Shutdown => break,
+        };
+        let result = (|| -> Result<AccelOutput> {
+            let runner = match runners.entry(job.cfg) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    // spill load: this shard was not the config's home
+                    counters.model_loads.fetch_add(1, Ordering::Relaxed);
+                    let c = &configs[job.cfg];
+                    v.insert(ProgramRunner::accelerated(&c.model, opts.timing, opts.program)?)
+                }
+            };
+            let (pred, stats) = runner.run_sample(&job.features)?;
+            let cycles = stats.total();
+            counters.jobs.fetch_add(1, Ordering::Relaxed);
+            counters.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+            Ok(AccelOutput { pred, cycles, energy_mj: opts.power.energy_mj(cycles as f64) })
+        })();
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = job.resp.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::infer;
+    use crate::testing::gen;
+
+    fn tiny(key: &str, flip: bool) -> (String, QuantModel) {
+        (key.to_string(), gen::tiny_model(key, flip))
+    }
+
+    fn fast_opts() -> FarmOpts {
+        FarmOpts {
+            shards: 2,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn farm_predicts_like_native() {
+        let models = vec![tiny("a", false), tiny("b", true)];
+        let farm = Farm::start(models.clone(), fast_opts()).unwrap();
+        let xs: Vec<Vec<i32>> = vec![vec![15, 0, 3], vec![0, 15, 9], vec![9, 3, 7], vec![2, 11, 0]];
+        for (key, m) in &models {
+            let outs = farm.predict_batch(key, &xs).unwrap();
+            for (x, o) in xs.iter().zip(outs) {
+                let o = o.unwrap();
+                assert_eq!(o.pred, infer::predict(m, x), "{key} {x:?}");
+                assert!(o.cycles > 0);
+                assert!(o.energy_mj > 0.0);
+            }
+        }
+        let m = farm.metrics();
+        assert_eq!(m.total_jobs(), 8);
+        assert!(m.total_sim_cycles() > 0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let farm = Farm::start(vec![tiny("a", false)], fast_opts()).unwrap();
+        assert!(farm.predict("nope", &[0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn bad_features_answered_with_error_not_hang() {
+        let farm = Farm::start(vec![tiny("a", false)], fast_opts()).unwrap();
+        assert!(farm.predict("a", &[99, 0, 0]).is_err(), "out-of-range feature");
+        assert!(farm.predict("a", &[1]).is_err(), "wrong arity");
+        // shard still healthy afterwards
+        assert!(farm.predict("a", &[1, 2, 3]).is_ok());
+    }
+
+    #[test]
+    fn bad_sample_fails_alone_inside_a_batch() {
+        let farm = Farm::start(vec![tiny("a", false)], fast_opts()).unwrap();
+        let xs = vec![vec![3, 4, 5], vec![99, 0, 0], vec![5, 6, 7]];
+        let outs = farm.predict_batch("a", &xs).unwrap();
+        assert!(outs[0].is_ok());
+        assert!(outs[1].is_err(), "only the invalid sample errors");
+        assert!(outs[2].is_ok());
+    }
+
+    #[test]
+    fn baseline_calibration_exposed() {
+        let opts = FarmOpts { calibrate_baseline: true, ..fast_opts() };
+        let farm = Farm::start(vec![tiny("a", false)], opts).unwrap();
+        let base = farm.baseline_cycles("a").unwrap();
+        let accel = farm.predict("a", &[8, 8, 8]).unwrap().cycles as f64;
+        assert!(base > 0.0);
+        // the software mul32 loop makes the baseline strictly slower
+        assert!(base > accel, "baseline {base} vs accel {accel}");
+        assert!(farm.baseline_cycles("nope").is_none());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Farm::start(vec![tiny("a", false), tiny("a", true)], fast_opts()).is_err());
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly_with_queued_work() {
+        let farm = Farm::start(vec![tiny("a", false)], FarmOpts { queue_cap: 4, ..fast_opts() }).unwrap();
+        // leave answered-but-uncollected receivers around, then drop
+        let rx1 = farm.submit(0, vec![1, 2, 3]).unwrap();
+        let rx2 = farm.submit(0, vec![3, 4, 5]).unwrap();
+        drop(farm); // must drain both jobs, then join
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn resolve_shards_auto_positive() {
+        assert!(resolve_shards(0) >= 1);
+        assert_eq!(resolve_shards(3), 3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Serving-workload scenario generator: deterministic request streams
+//! for the farm and coordinator benches.
+//!
+//! Three traffic shapes cover the serving stories the paper's far-edge
+//! deployment implies:
+//!
+//!  * [`Traffic::Steady`] — Poisson arrivals at a target rate with a
+//!    uniform config mix (the sustained-monitoring workload).
+//!  * [`Traffic::Bursty`] — back-to-back bursts separated by idle gaps
+//!    (event-driven sensors); the mean rate still equals `rps`.
+//!  * [`Traffic::MultiTenant`] — Poisson arrivals with a Zipf-skewed
+//!    config mix (many tenants, a few hot models) probing shard
+//!    affinity and spill behaviour.
+//!
+//! A [`Scenario`] is a pure data object (seeded PCG32, no wall clock),
+//! so benches replay identical streams across backends and shard
+//! counts.
+
+use std::time::Duration;
+
+use crate::util::Pcg32;
+
+/// Traffic shape; rates are requests/second of simulated arrival time.
+#[derive(Debug, Clone, Copy)]
+pub enum Traffic {
+    /// Poisson arrivals, uniform config mix.
+    Steady { rps: f64 },
+    /// Bursts of `burst` simultaneous requests; exponential idle gaps
+    /// sized so the long-run rate is `rps`.
+    Bursty { rps: f64, burst: usize },
+    /// Poisson arrivals; config `i` drawn with weight `1/(i+1)^skew`.
+    MultiTenant { rps: f64, skew: f64 },
+}
+
+impl Traffic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Traffic::Steady { .. } => "steady",
+            Traffic::Bursty { .. } => "bursty",
+            Traffic::MultiTenant { .. } => "multi_tenant",
+        }
+    }
+}
+
+/// One request arrival: offset from stream start + config index.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    pub at: Duration,
+    pub config: usize,
+}
+
+/// A fully materialised request stream.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub traffic: Traffic,
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Scenario {
+    /// Arrival-time span of the stream.
+    pub fn duration(&self) -> Duration {
+        self.arrivals.last().map(|a| a.at).unwrap_or(Duration::ZERO)
+    }
+
+    /// Requests per config (mix inspection).
+    pub fn mix(&self, n_configs: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_configs];
+        for a in &self.arrivals {
+            counts[a.config] += 1;
+        }
+        counts
+    }
+}
+
+/// Exponential inter-arrival sample with the given rate (events/s).
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> f64 {
+    // f64() is in [0, 1), so 1-u is in (0, 1] and ln() is finite
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// Generate `n` arrivals over `n_configs` configs.
+pub fn generate(traffic: Traffic, n_configs: usize, n: usize, seed: u64) -> Scenario {
+    assert!(n_configs > 0, "need at least one config");
+    let mut rng = Pcg32::seeded(seed);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match traffic {
+        Traffic::Steady { rps } => {
+            for _ in 0..n {
+                t += exp_gap(&mut rng, rps);
+                arrivals.push(Arrival { at: Duration::from_secs_f64(t), config: rng.below(n_configs as u32) as usize });
+            }
+        }
+        Traffic::Bursty { rps, burst } => {
+            let burst = burst.max(1);
+            while arrivals.len() < n {
+                // gap carries the whole burst's worth of mean spacing
+                t += exp_gap(&mut rng, rps / burst as f64);
+                let at = Duration::from_secs_f64(t);
+                for _ in 0..burst.min(n - arrivals.len()) {
+                    arrivals.push(Arrival { at, config: rng.below(n_configs as u32) as usize });
+                }
+            }
+        }
+        Traffic::MultiTenant { rps, skew } => {
+            // cumulative Zipf weights over the config list
+            let weights: Vec<f64> = (0..n_configs).map(|i| 1.0 / ((i + 1) as f64).powf(skew)).collect();
+            let total: f64 = weights.iter().sum();
+            let mut cdf = Vec::with_capacity(n_configs);
+            let mut acc = 0.0;
+            for w in &weights {
+                acc += w / total;
+                cdf.push(acc);
+            }
+            for _ in 0..n {
+                t += exp_gap(&mut rng, rps);
+                let u = rng.f64();
+                let config = cdf.iter().position(|&c| u < c).unwrap_or(n_configs - 1);
+                arrivals.push(Arrival { at: Duration::from_secs_f64(t), config });
+            }
+        }
+    }
+    Scenario { traffic, arrivals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate(Traffic::Steady { rps: 100.0 }, 3, 50, 7);
+        let b = generate(Traffic::Steady { rps: 100.0 }, 3, 50, 7);
+        assert_eq!(a.arrivals.len(), 50);
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.config, y.config);
+        }
+        let c = generate(Traffic::Steady { rps: 100.0 }, 3, 50, 8);
+        assert!(a.arrivals.iter().zip(&c.arrivals).any(|(x, y)| x.at != y.at));
+    }
+
+    #[test]
+    fn steady_rate_approximates_target() {
+        let s = generate(Traffic::Steady { rps: 1000.0 }, 2, 4000, 1);
+        let rate = s.arrivals.len() as f64 / s.duration().as_secs_f64();
+        assert!((rate - 1000.0).abs() < 150.0, "observed rate {rate}");
+        assert!(s.mix(2).iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn bursty_groups_share_timestamps_and_keep_rate() {
+        let s = generate(Traffic::Bursty { rps: 1000.0, burst: 8 }, 2, 800, 2);
+        assert_eq!(s.arrivals.len(), 800);
+        // first burst: 8 identical timestamps
+        let t0 = s.arrivals[0].at;
+        assert!(s.arrivals[..8].iter().all(|a| a.at == t0));
+        assert!(s.arrivals[8].at > t0);
+        let rate = s.arrivals.len() as f64 / s.duration().as_secs_f64();
+        assert!((rate - 1000.0).abs() < 250.0, "observed rate {rate}");
+    }
+
+    #[test]
+    fn multi_tenant_skews_toward_first_config() {
+        let s = generate(Traffic::MultiTenant { rps: 500.0, skew: 1.2 }, 4, 2000, 3);
+        let mix = s.mix(4);
+        assert_eq!(mix.iter().sum::<usize>(), 2000);
+        assert!(mix[0] > mix[3] * 2, "mix {mix:?} should be Zipf-skewed");
+    }
+
+    #[test]
+    fn arrivals_are_time_ordered() {
+        for traffic in [
+            Traffic::Steady { rps: 200.0 },
+            Traffic::Bursty { rps: 200.0, burst: 4 },
+            Traffic::MultiTenant { rps: 200.0, skew: 1.0 },
+        ] {
+            let s = generate(traffic, 3, 300, 4);
+            assert!(s.arrivals.windows(2).all(|w| w[0].at <= w[1].at), "{}", traffic.name());
+        }
+    }
+}

@@ -1,13 +1,19 @@
 //! Flex-SVM: reproduction of "Support Vector Machines Classification on
 //! Bendable RISC-V" — see DESIGN.md for the system inventory and
 //! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Built without default features the crate is pure Rust (no XLA
+//! toolchain needed); the `pjrt` feature adds the AOT-compiled-HLO
+//! serving backend ([`runtime`]).
 
 pub mod accel;
+pub mod coordinator;
+pub mod farm;
 pub mod isa;
 pub mod power;
 pub mod program;
-pub mod coordinator;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serv;
 pub mod soc;

@@ -6,7 +6,7 @@
 //!   golden-check  cross-layer bit-exactness sweep over all 30 configs
 //!   sim           run one config's test set on the SoC (baseline+accel)
 //!   trace         Fig. 2 life-cycle trace of accelerator instructions
-//!   serve         demo serving loop over the PJRT engine
+//!   serve         demo serving loop (pjrt / native / accel-farm backends)
 //!
 //! Run with `--help` (or no arguments) for options.
 
@@ -36,7 +36,7 @@ USAGE: flexsvm <subcommand> [options]
   golden-check
   sim          --config <key> [--limit N]
   trace        --config <key> [--sample I] [--max-lines N]
-  serve        [--configs k1,k2] [--requests N] [--backend pjrt|native]
+  serve        [--configs k1,k2] [--requests N] [--backend pjrt|native|accel]
                [--batch-max N] [--linger-us N]
   asm          <file.s> [--out image.bin] [--run] [--max-cycles N]
   rtl-template [--out-dir DIR]     (emit Verilog + C header for the SVM CFU)
@@ -284,9 +284,12 @@ fn cmd_vcd(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let keys = args.list_or("configs", &["iris_ovr_w4", "bs_ovo_w8"]);
     let n_requests = args.usize_or("requests", 1000)?;
-    let backend = match args.str_or("backend", "pjrt") {
+    // default backend follows the build: pjrt when compiled in, else native
+    let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
+    let backend = match args.str_or("backend", default_backend) {
         "pjrt" => Backend::Pjrt,
         "native" => Backend::Native,
+        "accel" => Backend::Accel,
         other => bail!("unknown backend {other}"),
     };
     let opts = ServerOpts {
@@ -300,43 +303,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let client = server.client();
 
     // drive requests from worker threads using real test vectors
-    let mut testsets = Vec::new();
-    for k in &keys {
-        let entry = manifest.config(k)?;
-        testsets.push((k.clone(), manifest.test_set(&entry.dataset)?));
-    }
-    let t0 = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for w in 0..4usize {
-            let client = client.clone();
-            let testsets = &testsets;
-            handles.push(scope.spawn(move || -> Result<u64> {
-                let mut correct = 0u64;
-                for i in 0..n_requests / 4 {
-                    let (key, test) = &testsets[(w + i) % testsets.len()];
-                    let idx = (w * 7919 + i) % test.len();
-                    let resp = client.infer(key, &test.x_q[idx])?;
-                    if resp.pred == test.y[idx] {
-                        correct += 1;
-                    }
-                }
-                Ok(correct)
-            }));
-        }
-        for h in handles {
-            h.join().unwrap()?;
-        }
-        Ok(())
-    })?;
-    let dt = t0.elapsed();
-    let served = (n_requests / 4) * 4;
+    let testsets = flexsvm::util::benchkit::load_testsets(&manifest, &keys)?;
+    let r = flexsvm::util::benchkit::drive_clients(&client, &testsets, n_requests, 4, None)?;
     println!(
-        "served {served} requests in {:.2}s = {:.0} req/s",
-        dt.as_secs_f64(),
-        served as f64 / dt.as_secs_f64()
+        "served {} requests in {:.2}s = {:.0} req/s",
+        r.served,
+        r.wall.as_secs_f64(),
+        r.served as f64 / r.wall.as_secs_f64()
     );
-    for (key, m) in client.metrics()? {
+    let metrics = client.metrics()?;
+    for (key, m) in &metrics {
         let h = m.latency.as_ref().unwrap();
         println!(
             "  {key}: {} reqs, {} batches (mean {:.1}/batch), p50 {}us p99 {}us",
@@ -345,6 +321,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.mean_batch(),
             h.quantile_us(0.5),
             h.quantile_us(0.99)
+        );
+    }
+    if backend == Backend::Accel {
+        let farm = client.farm_metrics()?;
+        print!(
+            "{}",
+            report::serving::render(
+                &metrics,
+                r.wall,
+                farm.as_ref(),
+                &flexsvm::power::FlexicModel::paper()
+            )
         );
     }
     // keep the accelerator trait demonstrably object-safe in the binary

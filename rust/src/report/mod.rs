@@ -1,7 +1,9 @@
 //! Experiment regeneration: Table I, the §V-B area/power paragraph,
-//! and cycle-attribution reports (DESIGN.md §4 experiment index).
+//! cycle-attribution reports, and the serving energy report
+//! (DESIGN.md §4 experiment index).
 
 pub mod area_power;
+pub mod serving;
 pub mod table1;
 
 pub use table1::{run_table1, RowResult, Table1Opts};

@@ -1,0 +1,154 @@
+//! Serving report: Table I extended to streaming workloads.
+//!
+//! Renders what the paper's per-sample evaluation cannot show — the
+//! accelerator's speed/energy story *under load*:
+//!
+//!  * energy/request (FlexIC model, per config and in aggregate),
+//!  * simulated-hardware vs wall-clock throughput (how far the
+//!    cycle-level simulation is from real-time 52 kHz silicon),
+//!  * the accel-vs-baseline cycle ratio measured on the serving path
+//!    (Table I's speedup column, re-derived from live traffic),
+//!  * per-shard farm balance (jobs, simulated cycles, reload churn).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::coordinator::metrics::ConfigMetrics;
+use crate::farm::FarmMetrics;
+use crate::power::FlexicModel;
+use crate::util::Table;
+
+/// Render the serving section from a coordinator metrics snapshot.
+/// `farm` adds the per-shard table; `wall` is the driving run's
+/// wall-clock span.
+pub fn render(
+    per_config: &HashMap<String, ConfigMetrics>,
+    wall: Duration,
+    farm: Option<&FarmMetrics>,
+    power: &FlexicModel,
+) -> String {
+    let mut out = String::from("\n=== serving energy report (Table I under load) ===\n");
+    let mut keys: Vec<&String> = per_config.keys().collect();
+    keys.sort();
+
+    let mut t = Table::new([
+        "config", "reqs", "mJ/req", "kcyc/req", "accel-vs-base (x)", "hw req/s (1 SoC)",
+        "p50 (us)", "p99 (us)",
+    ]);
+    let mut total_reqs = 0u64;
+    let mut total_energy = 0.0f64;
+    let mut total_cycles = 0u64;
+    for key in keys {
+        let m = &per_config[key];
+        total_reqs += m.requests;
+        total_energy += m.energy_mj;
+        total_cycles += m.sim_cycles;
+        let (p50, p99) = m
+            .latency
+            .as_ref()
+            .map(|h| (h.quantile_us(0.50), h.quantile_us(0.99)))
+            .unwrap_or((0, 0));
+        let speedup = m.accel_speedup();
+        let hw_rps = if m.mean_sim_cycles() > 0.0 { power.clock_hz / m.mean_sim_cycles() } else { 0.0 };
+        t.row([
+            key.clone(),
+            m.requests.to_string(),
+            format!("{:.3}", m.mean_energy_mj()),
+            format!("{:.1}", m.mean_sim_cycles() / 1e3),
+            if speedup > 0.0 { format!("{speedup:.1}") } else { "-".to_string() },
+            format!("{hw_rps:.2}"),
+            p50.to_string(),
+            p99.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // aggregate: simulated hardware time vs the wall clock that served it
+    let n_socs = farm.map(|f| f.shards.len().max(1)).unwrap_or(1);
+    let sim_s = total_cycles as f64 / power.clock_hz;
+    let wall_s = wall.as_secs_f64();
+    out.push_str(&format!(
+        "\ntotal: {total_reqs} reqs | {total_energy:.1} mJ simulated energy | \
+         {:.2} Mcyc simulated ({sim_s:.1} s of 52 kHz FlexIC time across {n_socs} SoC shard(s))\n",
+        total_cycles as f64 / 1e6,
+    ));
+    if wall_s > 0.0 && total_cycles > 0 {
+        // >1 means the farm serves faster than the modelled silicon would
+        out.push_str(&format!(
+            "simulated-vs-wall: {:.2} s hw-time per SoC vs {wall_s:.2} s wall -> sim speed {:.2}x real time\n",
+            sim_s / n_socs as f64,
+            sim_s / n_socs as f64 / wall_s,
+        ));
+    }
+
+    if let Some(f) = farm {
+        let mut st = Table::new(["shard", "jobs", "sim Mcyc", "model loads"]);
+        for (i, s) in f.shards.iter().enumerate() {
+            st.row([
+                i.to_string(),
+                s.jobs.to_string(),
+                format!("{:.2}", s.sim_cycles as f64 / 1e6),
+                s.model_loads.to_string(),
+            ]);
+        }
+        out.push_str(&format!("\nfarm shards ({} spill(s) off the home shard):\n", f.spills));
+        out.push_str(&st.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::farm::ShardMetrics;
+
+    fn fake_metrics() -> HashMap<String, ConfigMetrics> {
+        let mut m = ConfigMetrics::new();
+        m.requests = 10;
+        m.batches = 5;
+        m.batched_samples = 10;
+        m.sim_samples = 10;
+        m.sim_cycles = 600_000; // 60 kcyc/req
+        m.energy_mj = 13.4;
+        m.baseline_cycles_per_inf = 2_100_000.0; // 35x
+        let mut map = HashMap::new();
+        map.insert("iris_ovr_w4".to_string(), m);
+        map
+    }
+
+    #[test]
+    fn render_contains_energy_and_ratio() {
+        let farm = FarmMetrics {
+            shards: vec![
+                ShardMetrics { jobs: 6, sim_cycles: 360_000, model_loads: 1 },
+                ShardMetrics { jobs: 4, sim_cycles: 240_000, model_loads: 1 },
+            ],
+            spills: 2,
+        };
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(2),
+            Some(&farm),
+            &FlexicModel::paper(),
+        );
+        assert!(s.contains("iris_ovr_w4"), "{s}");
+        assert!(s.contains("1.340"), "mean mJ/req: {s}");
+        assert!(s.contains("35.0"), "speedup column: {s}");
+        assert!(s.contains("2 spill(s)"), "{s}");
+        assert!(s.contains("simulated-vs-wall"), "{s}");
+    }
+
+    #[test]
+    fn render_without_farm_or_sim_samples() {
+        let mut map = fake_metrics();
+        let m = map.get_mut("iris_ovr_w4").unwrap();
+        m.sim_samples = 0;
+        m.sim_cycles = 0;
+        m.energy_mj = 0.0;
+        m.baseline_cycles_per_inf = 0.0;
+        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper());
+        assert!(s.contains("iris_ovr_w4"));
+        assert!(s.contains('-'), "uncalibrated ratio renders as dash");
+        assert!(!s.contains("farm shards"));
+    }
+}

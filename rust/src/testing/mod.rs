@@ -9,6 +9,35 @@
 
 pub use crate::util::Pcg32;
 
+use crate::svm::model::{artifacts_root, Manifest};
+
+/// Load the artifact manifest, or skip the calling test with a note
+/// when the artifacts are not on disk (tier-1 runs on machines without
+/// an XLA/JAX toolchain; artifact-backed tests degrade to no-ops there
+/// instead of failing).
+pub fn artifacts_or_skip(test: &str) -> Option<Manifest> {
+    match Manifest::load(&artifacts_root()) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping {test}: artifacts not present (run `make artifacts` first)");
+            None
+        }
+    }
+}
+
+/// Bind the artifact manifest, or return from the calling test with a
+/// skip note when artifacts are absent (shared by the integration-test
+/// crates).
+#[macro_export]
+macro_rules! manifest_or_return {
+    ($test:literal) => {
+        match $crate::testing::artifacts_or_skip($test) {
+            Some(m) => m,
+            None => return,
+        }
+    };
+}
+
 /// Run a property `cases` times with a deterministic base seed.
 pub fn check<F: FnMut(&mut Pcg32)>(name: &str, seed: u64, cases: u32, mut prop: F) {
     for case in 0..cases {
@@ -30,6 +59,24 @@ pub mod gen {
     /// A 4-bit unsigned feature vector.
     pub fn features(rng: &mut Pcg32, n: usize) -> Vec<i32> {
         (0..n).map(|_| rng.below(16) as i32).collect()
+    }
+
+    /// A deterministic 2-class, 3-feature toy model (shared fixture of
+    /// the farm/coordinator tests; `flip` mirrors the decision plane so
+    /// two distinct configs can be served side by side).
+    pub fn tiny_model(dataset: &str, flip: bool) -> QuantModel {
+        let (a, b) = if flip { (-7, 7) } else { (7, -7) };
+        QuantModel {
+            dataset: dataset.into(),
+            strategy: Strategy::Ovr,
+            bits: 4,
+            n_classes: 2,
+            n_features: 3,
+            weights: vec![vec![a, b, 1], vec![b, a, -1]],
+            biases: vec![0, 1],
+            pairs: vec![(0, 0), (1, 1)],
+            scale: 1.0,
+        }
     }
 
     /// A random well-formed quantized model.

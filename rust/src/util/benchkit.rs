@@ -3,8 +3,23 @@
 //! `cargo bench` targets use [`Bench`] for warmup, repeated timing and
 //! simple robust statistics.  Times are wall-clock; results print in a
 //! fixed tabular format so bench_output.txt diffs cleanly.
+//!
+//! The serving-side helpers ([`manifest_or_skip`], [`load_testsets`],
+//! [`drive_clients`], [`latency_summary`]) are the harness shared by
+//! the serving benches, `examples/serve_inference.rs` and the CLI's
+//! `serve` subcommand — one implementation of the multi-threaded
+//! client loop instead of a copy per driver.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::ConfigMetrics;
+use crate::coordinator::Client;
+use crate::svm::infer;
+use crate::svm::model::{Manifest, QuantModel, TestSet};
 
 /// Results of one benchmark case.
 #[derive(Debug, Clone, Copy)]
@@ -72,6 +87,113 @@ impl Bench {
     }
 }
 
+/// Load the artifact manifest, or print a skip note and return None
+/// (benches degrade gracefully on machines without `make artifacts`;
+/// same policy as the test suites).
+pub fn manifest_or_skip(context: &str) -> Option<Manifest> {
+    crate::testing::artifacts_or_skip(context)
+}
+
+/// Resolve `(key, TestSet)` pairs for a set of config keys.
+pub fn load_testsets(manifest: &Manifest, keys: &[String]) -> Result<Vec<(String, TestSet)>> {
+    keys.iter()
+        .map(|k| {
+            let entry = manifest.config(k)?;
+            Ok((k.clone(), manifest.test_set(&entry.dataset)?))
+        })
+        .collect()
+}
+
+/// Outcome of one multi-threaded client drive.
+#[derive(Debug, Clone, Copy)]
+pub struct DriveResult {
+    /// Requests answered (workers × per-worker share).
+    pub served: u64,
+    /// Answers equal to the test-set label.
+    pub label_correct: u64,
+    /// Answers that diverged from `svm::infer::predict` (only counted
+    /// when reference models are supplied; must be 0).
+    pub native_mismatch: u64,
+    pub wall: Duration,
+}
+
+/// Drive a serving client from `workers` threads over real test
+/// vectors, round-robining configs.  When `check_models` is given,
+/// every answer is additionally compared against the native integer
+/// spec (differential serving check).
+pub fn drive_clients(
+    client: &Client,
+    testsets: &[(String, TestSet)],
+    n_requests: usize,
+    workers: usize,
+    check_models: Option<&HashMap<String, QuantModel>>,
+) -> Result<DriveResult> {
+    assert!(workers > 0 && !testsets.is_empty());
+    let correct = AtomicU64::new(0);
+    let mismatch = AtomicU64::new(0);
+    let done = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let client = client.clone();
+            let (correct, mismatch, done) = (&correct, &mismatch, &done);
+            handles.push(scope.spawn(move || -> Result<()> {
+                for i in 0..n_requests / workers {
+                    let (key, test) = &testsets[(w + i) % testsets.len()];
+                    let idx = (w * 7919 + i * 31) % test.len();
+                    let resp = client.infer(key, &test.x_q[idx])?;
+                    if resp.pred == test.y[idx] {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if let Some(models) = check_models {
+                        if resp.pred != infer::predict(&models[key], &test.x_q[idx]) {
+                            mismatch.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client worker panicked")?;
+        }
+        Ok(())
+    })?;
+    Ok(DriveResult {
+        served: done.load(Ordering::Relaxed),
+        label_correct: correct.load(Ordering::Relaxed),
+        native_mismatch: mismatch.load(Ordering::Relaxed),
+        wall: t0.elapsed(),
+    })
+}
+
+/// Worst-case latency quantiles + mean batch size across configs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_batch: f64,
+}
+
+pub fn latency_summary(metrics: &HashMap<String, ConfigMetrics>) -> LatencySummary {
+    let mut s = LatencySummary::default();
+    let mut n = 0.0;
+    for m in metrics.values() {
+        if let Some(h) = m.latency.as_ref() {
+            s.p50_us = s.p50_us.max(h.quantile_us(0.50));
+            s.p99_us = s.p99_us.max(h.quantile_us(0.99));
+        }
+        s.mean_batch += m.mean_batch();
+        n += 1.0;
+    }
+    if n > 0.0 {
+        s.mean_batch /= n;
+    }
+    s
+}
+
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -103,5 +225,23 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
         assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn latency_summary_takes_worst_quantiles() {
+        let mut a = ConfigMetrics::new();
+        a.batches = 2;
+        a.batched_samples = 8; // mean 4
+        a.latency.as_mut().unwrap().record(Duration::from_micros(10));
+        let mut b = ConfigMetrics::new();
+        b.batches = 1;
+        b.batched_samples = 2; // mean 2
+        b.latency.as_mut().unwrap().record(Duration::from_micros(900));
+        let mut m = HashMap::new();
+        m.insert("a".to_string(), a);
+        m.insert("b".to_string(), b);
+        let s = latency_summary(&m);
+        assert!(s.p99_us >= 900, "{s:?}");
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
     }
 }

@@ -1,19 +1,169 @@
 //! Coordinator integration: routing, batching, metrics, and backend
-//! equivalence over the real artifacts.  Requires `make artifacts`.
+//! equivalence.  Native/Accel cases serve in-memory models (no
+//! artifacts needed); artifact-backed cases skip when `make artifacts`
+//! has not run.
 
 use std::time::Duration;
 
 use flexsvm::coordinator::{Backend, Server, ServerOpts};
-use flexsvm::svm::model::artifacts_root;
-use flexsvm::svm::{infer, Manifest};
+use flexsvm::farm::FarmOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::manifest_or_return;
+use flexsvm::svm::infer;
+use flexsvm::svm::model::{artifacts_root, QuantModel};
+use flexsvm::testing::gen;
 
 fn native_opts() -> ServerOpts {
     ServerOpts { backend: Backend::Native, linger: Duration::from_micros(200), ..Default::default() }
 }
 
+/// Accel opts tuned for tests: tiny models, ideal memory, no baseline
+/// calibration (it is covered separately), bounded farm queues.
+fn accel_opts() -> ServerOpts {
+    ServerOpts {
+        backend: Backend::Accel,
+        linger: Duration::from_micros(200),
+        farm: FarmOpts {
+            shards: 2,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn tiny_model(key: &str, flip: bool) -> (String, QuantModel) {
+    (key.to_string(), gen::tiny_model(key, flip))
+}
+
+// ---------------------------------------------------------------- accel farm
+
+#[test]
+fn accel_backend_matches_native_inference_and_reports_energy() {
+    let models = vec![tiny_model("cfg_a", false), tiny_model("cfg_b", true)];
+    let server = Server::start_with_models(models.clone(), accel_opts()).unwrap();
+    let client = server.client();
+    let xs: Vec<Vec<i32>> = vec![vec![15, 0, 3], vec![0, 15, 9], vec![7, 7, 7], vec![2, 11, 0]];
+    for (key, model) in &models {
+        for x in &xs {
+            let resp = client.infer(key, x).unwrap();
+            assert_eq!(resp.pred, infer::predict(model, x), "{key} {x:?}");
+            let sim = resp.sim.expect("accel responses carry sim cost");
+            assert!(sim.cycles > 0);
+            assert!(sim.energy_mj > 0.0);
+        }
+    }
+    let metrics = client.metrics().unwrap();
+    for (key, _) in &models {
+        let m = &metrics[key];
+        assert_eq!(m.requests, xs.len() as u64);
+        assert_eq!(m.sim_samples, xs.len() as u64);
+        assert!(m.sim_cycles > 0);
+        assert!(m.energy_mj > 0.0);
+        assert_eq!(m.accel_speedup(), 0.0, "calibration disabled");
+    }
+    let farm = client.farm_metrics().unwrap().expect("accel backend exposes farm metrics");
+    assert_eq!(farm.shards.len(), 2);
+    assert_eq!(farm.total_jobs(), (models.len() * xs.len()) as u64);
+}
+
+#[test]
+fn accel_baseline_calibration_yields_speedup_ratio() {
+    let opts = ServerOpts {
+        farm: FarmOpts { calibrate_baseline: true, ..accel_opts().farm },
+        ..accel_opts()
+    };
+    let server = Server::start_with_models(vec![tiny_model("cal", false)], opts).unwrap();
+    let client = server.client();
+    for _ in 0..3 {
+        client.infer("cal", &[9, 2, 4]).unwrap();
+    }
+    let metrics = client.metrics().unwrap();
+    let m = &metrics["cal"];
+    assert!(m.baseline_cycles_per_inf > 0.0);
+    // software mul32 loops make the baseline strictly slower even on a
+    // tiny model — the ratio is Table I's speedup measured while serving
+    assert!(m.accel_speedup() > 1.0, "speedup {}", m.accel_speedup());
+}
+
+#[test]
+fn accel_farm_backpressure_floods_without_loss() {
+    // tight queues everywhere: ingress 8, per-shard 2 — submission
+    // blocks rather than drops, and every request gets an answer
+    let opts = ServerOpts {
+        queue_cap: 8,
+        batch_max: 4,
+        compiled_batch: 4,
+        farm: FarmOpts { queue_cap: 2, spill_threshold: 1, ..accel_opts().farm },
+        ..accel_opts()
+    };
+    let models = vec![tiny_model("hot", false), tiny_model("cold", true)];
+    let server = Server::start_with_models(models.clone(), opts).unwrap();
+    let client = server.client();
+    let n_threads = 8;
+    let per_thread = 16;
+    std::thread::scope(|s| {
+        for w in 0..n_threads {
+            let client = client.clone();
+            let models = &models;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    // skew 3:1 toward "hot" to exercise the spill path
+                    let key = if (w + i) % 4 == 0 { &models[1].0 } else { &models[0].0 };
+                    let x = vec![(i % 16) as i32, (w % 16) as i32, 5];
+                    client.infer(key, &x).unwrap();
+                }
+            });
+        }
+    });
+    let metrics = client.metrics().unwrap();
+    let total: u64 = metrics.values().map(|m| m.requests).sum();
+    assert_eq!(total, (n_threads * per_thread) as u64, "no request lost under backpressure");
+    let answered: u64 = metrics.values().map(|m| m.sim_samples).sum();
+    assert_eq!(answered, total);
+}
+
+#[test]
+fn accel_bad_request_fails_alone_not_its_batchmates() {
+    // a request with out-of-range features must error without failing
+    // valid requests that share its batch
+    let server = Server::start_with_models(
+        vec![tiny_model("mix", false)],
+        ServerOpts { linger: Duration::from_millis(5), ..accel_opts() },
+    )
+    .unwrap();
+    let client = server.client();
+    std::thread::scope(|s| {
+        let good = s.spawn(|| client.infer("mix", &[1, 2, 3]));
+        let bad = s.spawn(|| client.infer("mix", &[99, 0, 0]));
+        assert!(good.join().unwrap().is_ok(), "valid batchmate must succeed");
+        assert!(bad.join().unwrap().is_err(), "invalid features must error");
+    });
+}
+
+#[test]
+fn accel_clean_shutdown_then_rejects_new_requests() {
+    let server = Server::start_with_models(vec![tiny_model("s", false)], accel_opts()).unwrap();
+    let client = server.client();
+    client.infer("s", &[1, 2, 3]).unwrap();
+    drop(server); // joins dispatcher, which drops (and joins) the farm
+    let err = client.infer("s", &[1, 2, 3]).unwrap_err();
+    assert!(err.to_string().contains("server is down"), "{err}");
+}
+
+#[test]
+fn start_with_models_rejects_pjrt_and_empty() {
+    let opts = ServerOpts { backend: Backend::Pjrt, ..Default::default() };
+    assert!(Server::start_with_models(vec![tiny_model("x", false)], opts).is_err());
+    assert!(Server::start_with_models(vec![], native_opts()).is_err());
+}
+
+// ------------------------------------------------------- artifact-backed
+
 #[test]
 fn native_backend_serves_correct_predictions() {
-    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let manifest = manifest_or_return!("native_backend_serves_correct_predictions");
     let keys = vec!["iris_ovr_w4".to_string(), "v3_ovo_w8".to_string()];
     let server = Server::start(artifacts_root(), keys.clone(), native_opts()).unwrap();
     let client = server.client();
@@ -24,13 +174,15 @@ fn native_backend_serves_correct_predictions() {
         for x in test.x_q.iter().take(20) {
             let resp = client.infer(key, x).unwrap();
             assert_eq!(resp.pred, infer::predict(&model, x), "{key}");
+            assert!(resp.sim.is_none(), "native responses carry no sim cost");
         }
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_and_native_backends_agree() {
-    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let manifest = manifest_or_return!("pjrt_and_native_backends_agree");
     let keys = vec!["seeds_ovo_w16".to_string()];
     let pjrt = Server::start(
         artifacts_root(),
@@ -50,7 +202,7 @@ fn pjrt_and_native_backends_agree() {
 
 #[test]
 fn batching_aggregates_concurrent_requests() {
-    let manifest = Manifest::load(&artifacts_root()).unwrap();
+    let manifest = manifest_or_return!("batching_aggregates_concurrent_requests");
     let key = "bs_ovr_w4".to_string();
     let server = Server::start(
         artifacts_root(),
@@ -96,17 +248,18 @@ fn batching_aggregates_concurrent_requests() {
 #[test]
 fn unknown_config_is_rejected_per_request() {
     let server =
-        Server::start(artifacts_root(), vec!["iris_ovr_w4".to_string()], native_opts()).unwrap();
+        Server::start_with_models(vec![tiny_model("known", false)], native_opts()).unwrap();
     let client = server.client();
-    let err = client.infer("nope_ovr_w4", &[0, 0, 0, 0]).unwrap_err();
+    let err = client.infer("nope_ovr_w4", &[0, 0, 0]).unwrap_err();
     assert!(err.to_string().contains("not served"), "{err}");
     // server still healthy afterwards
-    let ok = client.infer("iris_ovr_w4", &[5, 5, 5, 5]);
+    let ok = client.infer("known", &[5, 5, 5]);
     assert!(ok.is_ok());
 }
 
 #[test]
 fn server_start_fails_fast_on_bad_config() {
+    let _ = manifest_or_return!("server_start_fails_fast_on_bad_config");
     let err = Server::start(artifacts_root(), vec!["bogus".to_string()], native_opts());
     assert!(err.is_err());
 }
@@ -114,9 +267,8 @@ fn server_start_fails_fast_on_bad_config() {
 #[test]
 fn linger_flush_answers_single_requests() {
     // a lone request must not wait forever for batchmates
-    let server = Server::start(
-        artifacts_root(),
-        vec!["iris_ovr_w4".to_string()],
+    let server = Server::start_with_models(
+        vec![tiny_model("lone", false)],
         ServerOpts {
             backend: Backend::Native,
             batch_max: 64,
@@ -127,7 +279,7 @@ fn linger_flush_answers_single_requests() {
     .unwrap();
     let client = server.client();
     let t0 = std::time::Instant::now();
-    let resp = client.infer("iris_ovr_w4", &[1, 2, 3, 4]).unwrap();
+    let resp = client.infer("lone", &[1, 2, 3]).unwrap();
     assert!(t0.elapsed() < Duration::from_secs(1));
     assert_eq!(resp.batch_size, 1);
 }

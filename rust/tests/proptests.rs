@@ -4,6 +4,7 @@
 use flexsvm::accel::pe;
 use flexsvm::accel::svm::{result_class_id, result_sign_negative, SvmAccel};
 use flexsvm::accel::Cfu;
+use flexsvm::farm::{Farm, FarmOpts};
 use flexsvm::isa::{decode, encode::encode, svm_ops, CFU_FUNCT7_SVM};
 use flexsvm::program::run::ProgramRunner;
 use flexsvm::program::ProgramOpts;
@@ -165,6 +166,43 @@ fn prop_serv_programs_match_native() {
                 .unwrap();
         let (ap, _) = acc.run_sample(&x).unwrap();
         assert_eq!(ap, expect, "accel {m:?} x={x:?}");
+    });
+}
+
+/// Differential: the sharded SoC farm answers exactly like the native
+/// integer spec on random quantized models across all bit-widths
+/// (4/8/16) — the full `Backend::Accel` serving path minus the
+/// coordinator, with batches fanning out over multiple shards.
+#[test]
+fn prop_farm_predictions_match_native() {
+    check("farm-vs-native", 0x156, 10, |rng| {
+        let models: Vec<_> = (0..2)
+            .map(|i| {
+                let m = gen::quant_model(rng);
+                // index prefix keeps keys unique when shapes collide
+                (format!("m{i}_{}", m.config_key()), m)
+            })
+            .collect();
+        let farm = Farm::start(
+            models.clone(),
+            FarmOpts {
+                shards: 2,
+                timing: TimingConfig::ideal_mem(),
+                calibrate_baseline: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for (key, m) in &models {
+            let xs: Vec<Vec<i32>> = (0..4).map(|_| gen::features(rng, m.n_features)).collect();
+            let outs = farm.predict_batch(key, &xs).unwrap();
+            for (x, o) in xs.iter().zip(outs) {
+                let o = o.unwrap();
+                assert_eq!(o.pred, infer::predict(m, x), "{key} bits={} x={x:?}", m.bits);
+                assert!(o.cycles > 0, "{key}: simulated cycles must be charged");
+                assert!(o.energy_mj > 0.0, "{key}: energy must be charged");
+            }
+        }
     });
 }
 

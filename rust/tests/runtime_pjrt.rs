@@ -1,18 +1,16 @@
 //! Integration: PJRT-executed AOT artifacts vs golden vectors and the
 //! native Rust inference — the cross-layer bit-exactness anchor
-//! (DESIGN.md §6, level 4).  Requires `make artifacts`.
+//! (DESIGN.md §6, level 4).  Requires the `pjrt` feature and
+//! `make artifacts`; skips silently when the artifacts are absent.
+#![cfg(feature = "pjrt")]
 
 use flexsvm::runtime::Engine;
 use flexsvm::svm::{infer, Manifest};
-
-fn manifest() -> Manifest {
-    Manifest::load(&flexsvm::svm::model::artifacts_root())
-        .expect("run `make artifacts` before cargo test")
-}
+use flexsvm::manifest_or_return;
 
 #[test]
 fn golden_vectors_match_on_pjrt() {
-    let m = manifest();
+    let m: Manifest = manifest_or_return!("golden_vectors_match_on_pjrt");
     let mut engine = Engine::new().unwrap();
     // one config per (strategy, bits) — full 30-config sweep happens in
     // the report; keep the test suite fast but representative.
@@ -35,7 +33,7 @@ fn golden_vectors_match_on_pjrt() {
 
 #[test]
 fn pjrt_scores_match_native_rust() {
-    let m = manifest();
+    let m = manifest_or_return!("pjrt_scores_match_native_rust");
     let mut engine = Engine::new().unwrap();
     let entry = m.config("seeds_ovr_w8").unwrap();
     let model = m.model(entry).unwrap();
@@ -53,7 +51,7 @@ fn pjrt_scores_match_native_rust() {
 
 #[test]
 fn batched_execution_matches_single() {
-    let m = manifest();
+    let m = manifest_or_return!("batched_execution_matches_single");
     let mut engine = Engine::new().unwrap();
     let entry = m.config("bs_ovo_w4").unwrap();
     let test = m.test_set("bs").unwrap();
@@ -67,7 +65,7 @@ fn batched_execution_matches_single() {
 
 #[test]
 fn accuracy_matches_manifest_metric() {
-    let m = manifest();
+    let m = manifest_or_return!("accuracy_matches_manifest_metric");
     let mut engine = Engine::new().unwrap();
     for key in ["iris_ovr_w4", "v3_ovo_w16"] {
         let entry = m.config(key).unwrap();
