@@ -6,7 +6,8 @@
 //!   Layer 3 (this binary):  the Rust coordinator serves batched
 //!     classification requests — routing per config, dynamic batching,
 //!     backpressure — with Python nowhere on the request path, over
-//!     one of three backends:
+//!     one of the three in-tree `Engine` implementations (any other
+//!     backend plugs in through `Server::builder().engine(..)`):
 //!
 //!       pjrt    compiled HLO on the PJRT CPU client (`--features pjrt`)
 //!       native  pure-Rust integer inference
@@ -27,10 +28,10 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use flexsvm::coordinator::{Backend, Server, ServerOpts};
-use flexsvm::farm::resolve_shards;
+use flexsvm::coordinator::{Backend, Server};
+use flexsvm::farm::{resolve_shards, FarmOpts};
 use flexsvm::power::FlexicModel;
 use flexsvm::report::serving;
 use flexsvm::svm::model::artifacts_root;
@@ -42,19 +43,10 @@ const WORKERS: usize = 8;
 fn main() -> Result<()> {
     let n_requests: usize =
         std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(20_000);
-    let backend = match std::env::args().nth(2).as_deref() {
-        Some("native") => Backend::Native,
-        Some("accel") => Backend::Accel,
-        Some("pjrt") => Backend::Pjrt,
-        // default follows the build: pjrt when compiled in, else native
-        None => {
-            if cfg!(feature = "pjrt") {
-                Backend::Pjrt
-            } else {
-                Backend::Native
-            }
-        }
-        Some(other) => bail!("unknown backend {other:?} (pjrt|native|accel)"),
+    // default follows the build: pjrt when compiled in, else native
+    let backend: Backend = match std::env::args().nth(2) {
+        Some(s) => s.parse()?,
+        None => Backend::default_for_build(),
     };
     let keys: Vec<String> = ["iris_ovr_w4", "bs_ovo_w8", "seeds_ovo_w4", "derm_ovr_w16"]
         .iter()
@@ -72,25 +64,25 @@ fn main() -> Result<()> {
         ref_models.insert(k.clone(), manifest.model(manifest.config(k)?)?);
     }
 
-    let opts = ServerOpts {
-        backend,
-        batch_max: 64,
-        compiled_batch: 64,
-        linger: Duration::from_micros(500),
-        queue_cap: 4096,
-        eager_flush: true,
-        ..Default::default()
-    };
-    println!("starting coordinator ({backend:?}) serving {} configs ...", keys.len());
+    let farm_opts = FarmOpts::default();
+    println!("starting coordinator ({backend}) serving {} configs ...", keys.len());
     if backend == Backend::Accel {
         println!(
             "  farm: {} SoC shards, warm program load + baseline calibration (one software-only\n  \
              inference per config — the slow part of startup on large models)",
-            resolve_shards(opts.farm.shards)
+            resolve_shards(farm_opts.shards)
         );
     }
     let t_load = Instant::now();
-    let server = Server::start(artifacts_root(), keys.clone(), opts)?;
+    let server = Server::builder()
+        .artifacts(artifacts_root(), keys.clone())
+        .backend(backend)
+        .batch_max(64)
+        .compiled_batch(64)
+        .linger(Duration::from_micros(500))
+        .queue_cap(4096)
+        .farm(farm_opts)
+        .start()?;
     println!("  backend resident in {:.2}s", t_load.elapsed().as_secs_f64());
 
     let client = server.client();
@@ -129,7 +121,7 @@ fn main() -> Result<()> {
     }
 
     if backend == Backend::Accel {
-        let farm = client.farm_metrics()?;
+        let farm = client.engine_metrics()?.farm;
         print!("{}", serving::render(&metrics, r.wall, farm.as_ref(), &FlexicModel::paper()));
         // Table-I sanity: at least one served config's accel-vs-baseline
         // cycle ratio must sit inside the paper's reported speedup band
@@ -153,6 +145,7 @@ fn main() -> Result<()> {
         (acc - expect).abs() < 0.05,
         "online accuracy {acc:.3} diverges from expected {expect:.3}"
     );
+    server.shutdown()?;
     println!("serve_inference OK");
     Ok(())
 }

@@ -14,7 +14,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::coordinator::{Backend, Server};
 use flexsvm::farm::scenario::{self, Traffic};
 use flexsvm::farm::{Farm, FarmOpts};
 use flexsvm::power::FlexicModel;
@@ -130,14 +130,11 @@ fn main() -> anyhow::Result<()> {
     println!("\n### coordinator Backend::Accel (multi-tenant scenario)");
     let s = &scenarios[2];
     let xs = draw_features(&models, s, 0xbeef);
-    let server = Server::start_with_models(
-        models.clone(),
-        ServerOpts {
-            backend: Backend::Accel,
-            farm: FarmOpts { calibrate_baseline: true, ..Default::default() },
-            ..Default::default()
-        },
-    )?;
+    let server = Server::builder()
+        .models(models.clone())
+        .backend(Backend::Accel)
+        .farm(FarmOpts { calibrate_baseline: true, ..Default::default() })
+        .start()?;
     let client = server.client();
     let errors = AtomicU64::new(0);
     let wall = replay(s, &xs, |cfg, x| {
@@ -147,10 +144,11 @@ fn main() -> anyhow::Result<()> {
     });
     assert_eq!(errors.load(Ordering::Relaxed), 0);
     println!("served {n} requests in {:.2}s = {:.0} req/s", wall.as_secs_f64(), n as f64 / wall.as_secs_f64());
-    let farm_metrics = client.farm_metrics()?;
+    let farm_metrics = client.engine_metrics()?.farm;
     print!(
         "{}",
         serving::render(&client.metrics()?, wall, farm_metrics.as_ref(), &FlexicModel::paper())
     );
+    server.shutdown()?;
     Ok(())
 }

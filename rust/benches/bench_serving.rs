@@ -7,7 +7,7 @@
 
 use std::time::Duration;
 
-use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::coordinator::{Backend, Server};
 use flexsvm::svm::model::artifacts_root;
 use flexsvm::svm::TestSet;
 use flexsvm::util::benchkit::{drive_clients, latency_summary, load_testsets, manifest_or_skip};
@@ -24,19 +24,15 @@ fn drive(
     eager: bool,
 ) -> anyhow::Result<(f64, u64, u64, f64)> {
     let keys: Vec<String> = testsets.iter().map(|(k, _)| k.clone()).collect();
-    let server = Server::start(
-        artifacts_root(),
-        keys,
-        ServerOpts {
-            backend,
-            batch_max,
-            compiled_batch: 64,
-            linger: Duration::from_micros(linger_us),
-            queue_cap: 4096,
-            eager_flush: eager,
-            ..Default::default()
-        },
-    )?;
+    let server = Server::builder()
+        .artifacts(artifacts_root(), keys)
+        .backend(backend)
+        .batch_max(batch_max)
+        .compiled_batch(64)
+        .linger(Duration::from_micros(linger_us))
+        .queue_cap(4096)
+        .eager_flush(eager)
+        .start()?;
     let client = server.client();
     let r = drive_clients(&client, testsets, REQUESTS, WORKERS, None)?;
     let s = latency_summary(&client.metrics()?);
@@ -61,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         {
             let (rps, p50, p99, mb) = drive(&testsets, backend, batch_max, linger_us, eager)?;
             t.row([
-                format!("{backend:?}"),
+                backend.to_string(),
                 batch_max.to_string(),
                 format!("{linger_us}us"),
                 eager.to_string(),

@@ -1,55 +1,443 @@
 //! Inference coordinator: request router + dynamic batcher + serving
-//! loop over three interchangeable backends (Python is never on this
-//! path).
+//! loop over pluggable backends (Python is never on this path).
 //!
 //! Shape (vLLM-router-like, scaled to this paper's workload): client
 //! threads submit `(config, features)` requests through a bounded
 //! channel; the dispatcher thread routes them into per-config queues,
 //! flushes a queue when it reaches `batch_max` or its oldest request
-//! exceeds `linger`, executes the batch on the backend, and answers
+//! exceeds `linger`, executes the batch on the engine, and answers
 //! each request through its response channel.
 //!
-//! Backends:
+//! The serving loop is backend-agnostic: execution, simulated-hardware
+//! accounting, baseline calibration and engine statistics all flow
+//! through [`crate::engine::Engine`] (see that module for the in-tree
+//! `native`/`accel`/`pjrt` engines), and per-sample failure isolation
+//! is universal — a bad request fails alone instead of poisoning its
+//! batchmates.  Servers are built with [`Server::builder`]:
 //!
-//!  * [`Backend::Pjrt`] — AOT-compiled HLO on the PJRT CPU client
-//!    (`pjrt` cargo feature).  The client is not `Send`, so the engine
-//!    lives on the dispatcher thread — batching, not parallel
-//!    dispatch, is where CPU-PJRT throughput comes from.
-//!  * [`Backend::Native`] — pure-Rust integer inference (differential
-//!    testing / baseline).
-//!  * [`Backend::Accel`] — the cycle-level SoC farm
-//!    ([`crate::farm::Farm`]): batches fan out across warm SERV+CFU
-//!    shard threads, and every response carries simulated cycles and
-//!    FlexIC energy, aggregated into [`ConfigMetrics`] for the
-//!    serving report (`report::serving`).
+//! ```no_run
+//! use flexsvm::coordinator::{Backend, Server};
+//! # fn main() -> anyhow::Result<()> {
+//! let server = Server::builder()
+//!     .artifacts(flexsvm::svm::model::artifacts_root(), ["iris_ovr_w4"])
+//!     .backend(Backend::Accel)
+//!     .batch_max(32)
+//!     .linger(std::time::Duration::from_micros(500))
+//!     .start()?;
+//! let client = server.client();
+//! let resp = client.infer("iris_ovr_w4", &[5, 1, 3, 0])?;
+//! println!("pred {} (sim {:?})", resp.pred, resp.sim);
+//! server.shutdown()?;
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod metrics;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::farm::{AccelOutput, Farm, FarmMetrics, FarmOpts};
+use crate::engine::{batch_error, Engine, FarmEngine, ModelSource, NativeEngine};
+use crate::farm::{FarmMetrics, FarmOpts};
 use crate::svm::model::Manifest;
-use crate::svm::{infer, QuantModel};
+use crate::svm::QuantModel;
+
+pub use crate::engine::{Backend, EngineMetrics, ServeError, SimCost};
 
 use metrics::ConfigMetrics;
 
-/// Which compute backend serves the batches.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Backend {
-    /// AOT-compiled HLO on the PJRT CPU client (needs the `pjrt`
-    /// feature and on-disk artifacts).
-    Pjrt,
-    /// Native Rust integer inference (differential testing / baseline).
-    Native,
-    /// Sharded cycle-level SoC farm with per-request energy accounting.
-    Accel,
+/// A single inference answer.
+#[derive(Debug, Clone, Copy)]
+pub struct Response {
+    pub pred: i32,
+    /// Queue + execute time observed by the server.
+    pub latency: Duration,
+    /// How many samples shared the executed batch.
+    pub batch_size: usize,
+    /// Simulated cycles + energy (None on wall-clock-only engines).
+    pub sim: Option<SimCost>,
 }
 
-/// Server tuning knobs.
+struct Request {
+    key: String,
+    features: Vec<i32>,
+    enqueued: Instant,
+    resp: mpsc::SyncSender<Result<Response, ServeError>>,
+}
+
+enum Msg {
+    Req(Request),
+    Snapshot(mpsc::SyncSender<HashMap<String, ConfigMetrics>>),
+    EngineSnapshot(mpsc::SyncSender<EngineMetrics>),
+    Shutdown,
+}
+
+/// An in-flight request handle from [`Client::submit`]; redeem it with
+/// [`Pending::wait`] (or poll with [`Pending::try_wait`]).
+///
+/// The answer is delivered at most once: after `try_wait` returns
+/// `Some`, the handle is spent — later `try_wait` calls return `None`
+/// and `wait` reports the request as dropped.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Response, ServeError>>,
+    taken: bool,
+}
+
+impl Pending {
+    /// Block until the answer arrives.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        if self.taken {
+            return Err(ServeError::Dropped);
+        }
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Dropped),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the answer is still in flight
+    /// (or after it was already taken).
+    pub fn try_wait(&mut self) -> Option<Result<Response, ServeError>> {
+        if self.taken {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.taken = true;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.taken = true;
+                Some(Err(ServeError::Dropped))
+            }
+        }
+    }
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Msg>,
+}
+
+impl Client {
+    /// Non-blocking submit: enqueue the request (subject to ingress
+    /// backpressure) and return a [`Pending`] handle for the answer.
+    pub fn submit(&self, key: &str, features: &[i32]) -> Result<Pending, ServeError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Req(Request {
+                key: key.to_string(),
+                features: features.to_vec(),
+                enqueued: Instant::now(),
+                resp: tx,
+            }))
+            .map_err(|_| ServeError::ServerDown)?;
+        Ok(Pending { rx, taken: false })
+    }
+
+    /// Blocking single inference.
+    pub fn infer(&self, key: &str, features: &[i32]) -> Result<Response, ServeError> {
+        self.submit(key, features)?.wait()
+    }
+
+    /// Submit a whole batch for one config, then wait for every
+    /// answer; per-sample results come back in input order.
+    pub fn infer_many(
+        &self,
+        key: &str,
+        xs: &[Vec<i32>],
+    ) -> Result<Vec<Result<Response, ServeError>>, ServeError> {
+        let handles: Vec<Pending> =
+            xs.iter().map(|x| self.submit(key, x)).collect::<Result<_, _>>()?;
+        Ok(handles.into_iter().map(Pending::wait).collect())
+    }
+
+    /// Per-config serving metrics snapshot.
+    pub fn metrics(&self) -> Result<HashMap<String, ConfigMetrics>, ServeError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| ServeError::ServerDown)?;
+        rx.recv().map_err(|_| ServeError::Dropped)
+    }
+
+    /// Engine statistics snapshot ([`Engine::snapshot`]).
+    pub fn engine_metrics(&self) -> Result<EngineMetrics, ServeError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::EngineSnapshot(tx)).map_err(|_| ServeError::ServerDown)?;
+        rx.recv().map_err(|_| ServeError::Dropped)
+    }
+
+    /// Shard-level farm statistics (None on engines without shards).
+    #[deprecated(note = "use `engine_metrics()?.farm`")]
+    pub fn farm_metrics(&self) -> Result<Option<FarmMetrics>, ServeError> {
+        Ok(self.engine_metrics()?.farm)
+    }
+}
+
+/// Running server handle.  Prefer an explicit [`Server::shutdown`] —
+/// it surfaces a dispatcher panic as an error; plain `drop` only logs
+/// it to stderr.
+pub struct Server {
+    tx: mpsc::SyncSender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Fluent construction — see [`ServerBuilder`].
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::default()
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    /// Drain queued work, stop the dispatcher and join it.  A
+    /// dispatcher panic (engine bug, poisoned lock, ...) is returned
+    /// here with its payload instead of vanishing.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        join_dispatcher(&mut self.join)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Err(e) = join_dispatcher(&mut self.join) {
+            eprintln!("flexsvm coordinator: {e:#} (use Server::shutdown() to handle this)");
+        }
+    }
+}
+
+fn join_dispatcher(join: &mut Option<std::thread::JoinHandle<()>>) -> Result<()> {
+    match join.take() {
+        None => Ok(()),
+        Some(j) => match j.join() {
+            Ok(()) => Ok(()),
+            Err(payload) => Err(anyhow!("dispatcher thread panicked: {}", panic_message(&payload))),
+        },
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ------------------------------------------------------------ builder
+
+enum Source {
+    Unset,
+    Artifacts { root: PathBuf, keys: Vec<String> },
+    Models(Vec<(String, QuantModel)>),
+    Keys(Vec<String>),
+}
+
+/// Fluent server construction: pick a model source
+/// ([`artifacts`](Self::artifacts), [`models`](Self::models), or bare
+/// [`keys`](Self::keys) for engines that own their models), pick an
+/// engine ([`backend`](Self::backend) for the in-tree kinds or
+/// [`engine`](Self::engine) for anything implementing
+/// [`crate::engine::Engine`]), tune the batcher, then
+/// [`start`](Self::start).
+pub struct ServerBuilder {
+    source: Source,
+    engine: Option<Box<dyn Engine>>,
+    backend: Backend,
+    batch_max: usize,
+    compiled_batch: usize,
+    linger: Duration,
+    queue_cap: usize,
+    eager_flush: bool,
+    farm: FarmOpts,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder {
+            source: Source::Unset,
+            engine: None,
+            backend: Backend::Native,
+            batch_max: 64,
+            compiled_batch: 64,
+            linger: Duration::from_millis(2),
+            queue_cap: 1024,
+            eager_flush: true,
+            farm: FarmOpts::default(),
+        }
+    }
+}
+
+impl ServerBuilder {
+    /// Serve the given config keys of an on-disk artifact tree.
+    pub fn artifacts<I, S>(mut self, root: impl Into<PathBuf>, keys: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.source = Source::Artifacts {
+            root: root.into(),
+            keys: keys.into_iter().map(Into::into).collect(),
+        };
+        self
+    }
+
+    /// Serve in-memory models (no artifacts on disk required).
+    pub fn models(mut self, models: Vec<(String, QuantModel)>) -> Self {
+        self.source = Source::Models(models);
+        self
+    }
+
+    /// Serve bare config keys — for engines that own their models
+    /// (mocks, remote shards).
+    pub fn keys<I, S>(mut self, keys: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.source = Source::Keys(keys.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Pick an in-tree engine kind (ignored when [`engine`](Self::engine)
+    /// supplies a custom one).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Plug in a custom engine.
+    pub fn engine(mut self, engine: Box<dyn Engine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Max samples per flushed batch (≤ the compiled batch size).
+    pub fn batch_max(mut self, n: usize) -> Self {
+        self.batch_max = n;
+        self
+    }
+
+    /// Compiled batch size to load (PJRT: from the manifest's batch set).
+    pub fn compiled_batch(mut self, n: usize) -> Self {
+        self.compiled_batch = n;
+        self
+    }
+
+    /// How long a request may wait for batchmates.
+    pub fn linger(mut self, d: Duration) -> Self {
+        self.linger = d;
+        self
+    }
+
+    /// Bound of the ingress queue (backpressure).
+    pub fn queue_cap(mut self, n: usize) -> Self {
+        self.queue_cap = n;
+        self
+    }
+
+    /// Flush as soon as the ingress channel drains (EXPERIMENTS.md
+    /// §Perf, L3 iteration 5): whatever arrived together is batched
+    /// together, and nobody waits out the linger against an idle
+    /// channel.  The linger then only bounds worst-case wait under
+    /// sustained load.
+    pub fn eager_flush(mut self, on: bool) -> Self {
+        self.eager_flush = on;
+        self
+    }
+
+    /// Farm knobs (`Backend::Accel` only).
+    pub fn farm(mut self, opts: FarmOpts) -> Self {
+        self.farm = opts;
+        self
+    }
+
+    /// Validate, spawn the dispatcher, warm the engine, and return the
+    /// running server.  Fails fast — bad configs, an unloadable
+    /// manifest or an engine warm-up error all surface here, before
+    /// any traffic is accepted.
+    pub fn start(self) -> Result<Server> {
+        if self.batch_max == 0 {
+            bail!("batch_max must be >= 1");
+        }
+        let (source, keys) = match self.source {
+            Source::Unset => bail!("ServerBuilder needs .artifacts(..), .models(..) or .keys(..)"),
+            Source::Artifacts { root, keys } => {
+                // fail fast on bad configs before spawning
+                let manifest = Manifest::load(&root)?;
+                for k in &keys {
+                    manifest.config(k)?;
+                }
+                (ModelSource::Artifacts(manifest), keys)
+            }
+            Source::Models(models) => {
+                if models.is_empty() {
+                    bail!("no models to serve");
+                }
+                let keys: Vec<String> = models.iter().map(|(k, _)| k.clone()).collect();
+                let mut map = HashMap::new();
+                for (k, m) in models {
+                    if map.insert(k.clone(), m).is_some() {
+                        bail!("duplicate config key {k:?}");
+                    }
+                }
+                (ModelSource::Inline(map), keys)
+            }
+            Source::Keys(keys) => {
+                if keys.is_empty() {
+                    bail!("no config keys to serve");
+                }
+                (ModelSource::None, keys)
+            }
+        };
+        let engine: Box<dyn Engine> = match self.engine {
+            Some(e) => e,
+            None => match self.backend {
+                Backend::Native => Box::new(NativeEngine::new()),
+                Backend::Accel => Box::new(FarmEngine::new(self.farm)),
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt => {
+                    // PJRT-specific constraint, checked where the
+                    // compiled batch actually matters
+                    if self.batch_max > self.compiled_batch {
+                        bail!("batch_max must be <= compiled_batch for the pjrt backend");
+                    }
+                    Box::new(crate::engine::PjrtEngine::new(self.compiled_batch))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                Backend::Pjrt => bail!("Backend::Pjrt requires building with `--features pjrt`"),
+            },
+        };
+        let tuning = Tuning {
+            batch_max: self.batch_max,
+            linger: self.linger,
+            eager_flush: self.eager_flush,
+        };
+        let (tx, rx) = mpsc::sync_channel::<Msg>(self.queue_cap);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let join = std::thread::Builder::new()
+            .name("flexsvm-dispatcher".into())
+            .spawn(move || dispatcher(engine, source, keys, tuning, rx, ready_tx))?;
+        ready_rx.recv().context("dispatcher died during init")??;
+        Ok(Server { tx, join: Some(join) })
+    }
+}
+
+// ------------------------------------------------- deprecated shims
+
+/// Server tuning knobs (legacy construction surface).
+#[deprecated(note = "use Server::builder()")]
 #[derive(Debug, Clone, Copy)]
 pub struct ServerOpts {
     pub backend: Backend,
@@ -61,15 +449,13 @@ pub struct ServerOpts {
     pub linger: Duration,
     /// Bound of the ingress queue (backpressure).
     pub queue_cap: usize,
-    /// Flush as soon as the ingress channel drains (EXPERIMENTS.md §Perf,
-    /// L3 iteration 5): whatever arrived together is batched together,
-    /// and nobody waits out the linger against an idle channel.  The
-    /// linger then only bounds worst-case wait under sustained load.
+    /// Flush as soon as the ingress channel drains.
     pub eager_flush: bool,
     /// Farm knobs (Backend::Accel only).
     pub farm: FarmOpts,
 }
 
+#[allow(deprecated)]
 impl Default for ServerOpts {
     fn default() -> Self {
         ServerOpts {
@@ -84,317 +470,128 @@ impl Default for ServerOpts {
     }
 }
 
-/// Simulated-hardware accounting attached to `Backend::Accel` answers.
-#[derive(Debug, Clone, Copy)]
-pub struct SimCost {
-    /// SoC cycles the inference took on the simulated FlexIC hardware.
-    pub cycles: u64,
-    /// FlexIC energy for the inference in mJ.
-    pub energy_mj: f64,
-}
-
-/// A single inference answer.
-#[derive(Debug, Clone, Copy)]
-pub struct Response {
-    pub pred: i32,
-    /// Queue + execute time observed by the server.
-    pub latency: Duration,
-    /// How many samples shared the executed batch.
-    pub batch_size: usize,
-    /// Simulated cycles + energy (None on Pjrt/Native backends).
-    pub sim: Option<SimCost>,
-}
-
-struct Request {
-    key: String,
-    features: Vec<i32>,
-    enqueued: Instant,
-    resp: mpsc::SyncSender<Result<Response>>,
-}
-
-enum Msg {
-    Req(Request),
-    Snapshot(mpsc::SyncSender<HashMap<String, ConfigMetrics>>),
-    FarmSnapshot(mpsc::SyncSender<Option<FarmMetrics>>),
-    Shutdown,
-}
-
-/// Cloneable client handle.
-#[derive(Clone)]
-pub struct Client {
-    tx: mpsc::SyncSender<Msg>,
-}
-
-impl Client {
-    /// Blocking single inference.
-    pub fn infer(&self, key: &str, features: &[i32]) -> Result<Response> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Msg::Req(Request {
-                key: key.to_string(),
-                features: features.to_vec(),
-                enqueued: Instant::now(),
-                resp: tx,
-            }))
-            .map_err(|_| anyhow!("server is down"))?;
-        rx.recv().context("server dropped the request")?
-    }
-
-    /// Metrics snapshot.
-    pub fn metrics(&self) -> Result<HashMap<String, ConfigMetrics>> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server is down"))?;
-        rx.recv().context("server dropped the snapshot request")
-    }
-
-    /// Shard-level farm statistics (None on non-Accel backends).
-    pub fn farm_metrics(&self) -> Result<Option<FarmMetrics>> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx.send(Msg::FarmSnapshot(tx)).map_err(|_| anyhow!("server is down"))?;
-        rx.recv().context("server dropped the snapshot request")
+#[allow(deprecated)]
+impl ServerOpts {
+    fn into_builder(self) -> ServerBuilder {
+        Server::builder()
+            .backend(self.backend)
+            .batch_max(self.batch_max)
+            .compiled_batch(self.compiled_batch)
+            .linger(self.linger)
+            .queue_cap(self.queue_cap)
+            .eager_flush(self.eager_flush)
+            .farm(self.farm)
     }
 }
 
-/// Running server; dropping the handle shuts the dispatcher down.
-pub struct Server {
-    tx: mpsc::SyncSender<Msg>,
-    join: Option<std::thread::JoinHandle<()>>,
-}
-
-/// Where the dispatcher gets its models from.
-enum ModelSource {
-    /// On-disk artifact tree (all backends).
-    Artifacts(Manifest),
-    /// In-memory models (Native/Accel — lets tests and benches serve
-    /// synthetic models with no artifacts on disk).
-    Inline(HashMap<String, QuantModel>),
-}
-
-impl ModelSource {
-    fn model(&self, key: &str) -> Result<QuantModel> {
-        match self {
-            ModelSource::Artifacts(m) => {
-                let entry = m.config(key)?;
-                m.model(entry)
-            }
-            ModelSource::Inline(map) => {
-                map.get(key).cloned().with_context(|| format!("config {key:?} not provided"))
-            }
-        }
-    }
-}
-
+#[allow(deprecated)]
 impl Server {
     /// Start a server for the given config keys of an artifact tree.
-    pub fn start(artifacts_root: std::path::PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
-        // fail fast on bad configs before spawning
-        let manifest = Manifest::load(&artifacts_root)?;
-        for k in &keys {
-            manifest.config(k)?;
-        }
-        Self::spawn(ModelSource::Artifacts(manifest), keys, opts)
+    #[deprecated(note = "use Server::builder().artifacts(..)...start()")]
+    pub fn start(artifacts_root: PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
+        opts.into_builder().artifacts(artifacts_root, keys).start()
     }
 
     /// Start a server over in-memory models (Native/Accel backends;
     /// no artifacts on disk required).
+    #[deprecated(note = "use Server::builder().models(..)...start()")]
     pub fn start_with_models(models: Vec<(String, QuantModel)>, opts: ServerOpts) -> Result<Server> {
         if opts.backend == Backend::Pjrt {
             bail!("start_with_models serves Native/Accel only — Pjrt needs on-disk artifacts");
         }
-        if models.is_empty() {
-            bail!("no models to serve");
-        }
-        let keys: Vec<String> = models.iter().map(|(k, _)| k.clone()).collect();
-        let mut map = HashMap::new();
-        for (k, m) in models {
-            if map.insert(k.clone(), m).is_some() {
-                bail!("duplicate config key {k:?}");
+        opts.into_builder().models(models).start()
+    }
+}
+
+// ---------------------------------------------------------- dispatcher
+
+#[derive(Clone, Copy)]
+struct Tuning {
+    batch_max: usize,
+    linger: Duration,
+    eager_flush: bool,
+}
+
+/// Receive timeout while no request is queued (nothing to linger on).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Execute one queued batch on the engine and answer every request.
+/// Per-sample isolation is universal: a failed sample answers its own
+/// request with the engine's error while its batchmates succeed.
+fn flush(
+    engine: &dyn Engine,
+    key: &str,
+    q: &mut Vec<Request>,
+    stats: &mut HashMap<String, ConfigMetrics>,
+) {
+    if q.is_empty() {
+        return;
+    }
+    let pending: Vec<Request> = std::mem::take(q);
+    let xs: Vec<Vec<i32>> = pending.iter().map(|r| r.features.clone()).collect();
+    let mut answers = engine.run_batch(key, &xs);
+    if answers.len() != pending.len() {
+        // a misbehaving engine must not leave requests unanswered —
+        // and a wrong-length reply makes every answer's attribution
+        // suspect, so the whole batch fails
+        let msg = format!("engine answered {} samples for a batch of {}", answers.len(), pending.len());
+        answers = batch_error(pending.len(), ServeError::Engine(msg));
+    }
+    let m = stats.entry(key.to_string()).or_insert_with(ConfigMetrics::new);
+    m.batches += 1;
+    m.batched_samples += pending.len() as u64;
+    if let Some(b) = engine.baseline_cycles(key) {
+        m.baseline_cycles_per_inf = b;
+    }
+    for (req, answer) in pending.into_iter().zip(answers) {
+        let latency = req.enqueued.elapsed();
+        match answer {
+            Ok(s) => {
+                if let Some(sim) = s.sim {
+                    m.sim_samples += 1;
+                    m.sim_cycles += sim.cycles;
+                    m.energy_mj += sim.energy_mj;
+                }
+                if let Some(h) = m.latency.as_mut() {
+                    h.record(latency);
+                }
+                let _ = req.resp.send(Ok(Response {
+                    pred: s.pred,
+                    latency,
+                    batch_size: xs.len(),
+                    sim: s.sim,
+                }));
+            }
+            Err(e) => {
+                let _ = req.resp.send(Err(e));
             }
         }
-        Self::spawn(ModelSource::Inline(map), keys, opts)
-    }
-
-    fn spawn(source: ModelSource, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
-        if opts.batch_max == 0 || opts.batch_max > opts.compiled_batch {
-            bail!("batch_max must be in 1..=compiled_batch");
-        }
-        let (tx, rx) = mpsc::sync_channel::<Msg>(opts.queue_cap);
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
-        let join = std::thread::Builder::new()
-            .name("flexsvm-dispatcher".into())
-            .spawn(move || dispatcher(source, keys, opts, rx, ready_tx))?;
-        ready_rx.recv().context("dispatcher died during init")??;
-        Ok(Server { tx, join: Some(join) })
-    }
-
-    pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-enum Exec {
-    #[cfg(feature = "pjrt")]
-    Pjrt(crate::runtime::Engine, usize),
-    Native(HashMap<String, QuantModel>),
-    Accel(Farm),
-}
-
-/// One executed batch.  Pjrt/Native batches succeed or fail as a unit
-/// (execution cannot fail on input values); the farm answers per
-/// sample, so a bad request fails alone instead of poisoning its
-/// batchmates.
-enum BatchAnswer {
-    Uniform(Vec<i32>),
-    PerSample(Vec<Result<AccelOutput>>),
-}
-
-impl Exec {
-    fn run(&self, key: &str, xs: &[Vec<i32>]) -> Result<BatchAnswer> {
-        match self {
-            #[cfg(feature = "pjrt")]
-            Exec::Pjrt(engine, batch) => Ok(BatchAnswer::Uniform(engine.predict(key, *batch, xs)?)),
-            Exec::Native(models) => {
-                let m = models.get(key).ok_or_else(|| anyhow!("no model {key}"))?;
-                Ok(BatchAnswer::Uniform(xs.iter().map(|x| infer::predict(m, x)).collect()))
-            }
-            Exec::Accel(farm) => Ok(BatchAnswer::PerSample(farm.predict_batch(key, xs)?)),
-        }
-    }
-
-    fn baseline_cycles(&self, key: &str) -> Option<f64> {
-        match self {
-            Exec::Accel(farm) => farm.baseline_cycles(key),
-            _ => None,
-        }
-    }
-
-    fn farm_metrics(&self) -> Option<FarmMetrics> {
-        match self {
-            Exec::Accel(farm) => Some(farm.metrics()),
-            _ => None,
-        }
-    }
-}
-
-/// Init: compile/load everything up front (AOT — no first-request jank).
-fn init_exec(source: &ModelSource, keys: &[String], opts: &ServerOpts) -> Result<Exec> {
-    if opts.backend == Backend::Pjrt {
-        #[cfg(feature = "pjrt")]
-        {
-            let ModelSource::Artifacts(manifest) = source else {
-                bail!("the PJRT backend serves on-disk artifacts only");
-            };
-            let mut engine = crate::runtime::Engine::new()?;
-            for k in keys {
-                let entry = manifest.config(k)?;
-                engine.load(manifest, entry, opts.compiled_batch)?;
-            }
-            return Ok(Exec::Pjrt(engine, opts.compiled_batch));
-        }
-        #[cfg(not(feature = "pjrt"))]
-        bail!("Backend::Pjrt requires building with `--features pjrt`");
-    }
-    let mut models = HashMap::new();
-    for k in keys {
-        models.insert(k.clone(), source.model(k)?);
-    }
-    match opts.backend {
-        Backend::Native => Ok(Exec::Native(models)),
-        Backend::Accel => {
-            let list: Vec<(String, QuantModel)> =
-                keys.iter().map(|k| (k.clone(), models.remove(k).expect("loaded above"))).collect();
-            Ok(Exec::Accel(Farm::start(list, opts.farm)?))
-        }
-        Backend::Pjrt => unreachable!("handled above"),
     }
 }
 
 fn dispatcher(
+    mut engine: Box<dyn Engine>,
     source: ModelSource,
     keys: Vec<String>,
-    opts: ServerOpts,
+    tuning: Tuning,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
-    let exec = match init_exec(&source, &keys, &opts) {
-        Ok(e) => {
+    // AOT: compile/load everything up front — no first-request jank
+    match engine.warm(&source, &keys) {
+        Ok(()) => {
             let _ = ready.send(Ok(()));
-            e
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
-    };
+    }
+    drop(source); // models are resident in the engine now
+    let engine: &dyn Engine = engine.as_ref();
 
     let mut queues: HashMap<String, Vec<Request>> = HashMap::new();
     let mut stats: HashMap<String, ConfigMetrics> = HashMap::new();
-
-    let flush = |key: &str, q: &mut Vec<Request>, stats: &mut HashMap<String, ConfigMetrics>| {
-        if q.is_empty() {
-            return;
-        }
-        let pending: Vec<Request> = std::mem::take(q);
-        let xs: Vec<Vec<i32>> = pending.iter().map(|r| r.features.clone()).collect();
-        let result = exec.run(key, &xs);
-        let m = stats.entry(key.to_string()).or_insert_with(ConfigMetrics::new);
-        m.batches += 1;
-        m.batched_samples += pending.len() as u64;
-        match result {
-            Ok(BatchAnswer::Uniform(preds)) => {
-                for (req, pred) in pending.into_iter().zip(preds) {
-                    let latency = req.enqueued.elapsed();
-                    if let Some(h) = m.latency.as_mut() {
-                        h.record(latency);
-                    }
-                    let _ =
-                        req.resp.send(Ok(Response { pred, latency, batch_size: xs.len(), sim: None }));
-                }
-            }
-            Ok(BatchAnswer::PerSample(outs)) => {
-                if let Some(b) = exec.baseline_cycles(key) {
-                    m.baseline_cycles_per_inf = b;
-                }
-                for (req, out) in pending.into_iter().zip(outs) {
-                    let latency = req.enqueued.elapsed();
-                    match out {
-                        Ok(o) => {
-                            m.sim_samples += 1;
-                            m.sim_cycles += o.cycles;
-                            m.energy_mj += o.energy_mj;
-                            if let Some(h) = m.latency.as_mut() {
-                                h.record(latency);
-                            }
-                            let _ = req.resp.send(Ok(Response {
-                                pred: o.pred,
-                                latency,
-                                batch_size: xs.len(),
-                                sim: Some(SimCost { cycles: o.cycles, energy_mj: o.energy_mj }),
-                            }));
-                        }
-                        Err(e) => {
-                            let _ = req.resp.send(Err(anyhow!("inference failed: {e:#}")));
-                        }
-                    }
-                }
-            }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                for req in pending {
-                    let _ = req.resp.send(Err(anyhow!(msg.clone())));
-                }
-            }
-        }
-    };
 
     loop {
         // deadline of the oldest pending request across queues
@@ -402,11 +599,10 @@ fn dispatcher(
         let next_deadline = queues
             .values()
             .filter_map(|q| q.first())
-            .map(|r| r.enqueued + opts.linger)
+            .map(|r| r.enqueued + tuning.linger)
             .min();
-        let timeout = next_deadline
-            .map(|d| d.saturating_duration_since(now))
-            .unwrap_or(Duration::from_millis(50));
+        let timeout =
+            next_deadline.map(|d| d.saturating_duration_since(now)).unwrap_or(IDLE_POLL);
 
         match rx.recv_timeout(timeout) {
             Ok(Msg::Req(req)) => {
@@ -421,8 +617,9 @@ fn dispatcher(
                     match msg {
                         Msg::Req(req) => {
                             if !queues.contains_key(&req.key) && !keys.iter().any(|k| *k == req.key) {
-                                let _ =
-                                    req.resp.send(Err(anyhow!("config {:?} not served", req.key)));
+                                let _ = req
+                                    .resp
+                                    .send(Err(ServeError::UnknownConfig(req.key.clone())));
                                 continue;
                             }
                             let m =
@@ -430,33 +627,33 @@ fn dispatcher(
                             m.requests += 1;
                             let q = queues.entry(req.key.clone()).or_default();
                             q.push(req);
-                            if q.len() >= opts.batch_max {
+                            if q.len() >= tuning.batch_max {
                                 let key = q[0].key.clone();
                                 let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                                flush(&key, &mut taken, &mut stats);
+                                flush(engine, &key, &mut taken, &mut stats);
                             }
                         }
                         Msg::Snapshot(tx) => {
                             let _ = tx.send(stats.clone());
                         }
-                        Msg::FarmSnapshot(tx) => {
-                            let _ = tx.send(exec.farm_metrics());
+                        Msg::EngineSnapshot(tx) => {
+                            let _ = tx.send(engine.snapshot());
                         }
                         Msg::Shutdown => shutdown = true,
                     }
                 }
-                if opts.eager_flush {
+                if tuning.eager_flush {
                     // channel is drained: everything queued goes out now
                     let due: Vec<String> =
                         queues.iter().filter(|(_, q)| !q.is_empty()).map(|(k, _)| k.clone()).collect();
                     for key in due {
                         let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                        flush(&key, &mut taken, &mut stats);
+                        flush(engine, &key, &mut taken, &mut stats);
                     }
                 }
                 if shutdown {
                     for (key, mut q) in std::mem::take(&mut queues) {
-                        flush(&key, &mut q, &mut stats);
+                        flush(engine, &key, &mut q, &mut stats);
                     }
                     return;
                 }
@@ -464,12 +661,12 @@ fn dispatcher(
             Ok(Msg::Snapshot(tx)) => {
                 let _ = tx.send(stats.clone());
             }
-            Ok(Msg::FarmSnapshot(tx)) => {
-                let _ = tx.send(exec.farm_metrics());
+            Ok(Msg::EngineSnapshot(tx)) => {
+                let _ = tx.send(engine.snapshot());
             }
             Ok(Msg::Shutdown) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(&key, &mut q, &mut stats);
+                    flush(engine, &key, &mut q, &mut stats);
                 }
                 return;
             }
@@ -479,18 +676,18 @@ fn dispatcher(
                 let due: Vec<String> = queues
                     .iter()
                     .filter(|(_, q)| {
-                        q.first().map(|r| now >= r.enqueued + opts.linger).unwrap_or(false)
+                        q.first().map(|r| now >= r.enqueued + tuning.linger).unwrap_or(false)
                     })
                     .map(|(k, _)| k.clone())
                     .collect();
                 for key in due {
                     let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                    flush(&key, &mut taken, &mut stats);
+                    flush(engine, &key, &mut taken, &mut stats);
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(&key, &mut q, &mut stats);
+                    flush(engine, &key, &mut q, &mut stats);
                 }
                 return;
             }
@@ -498,6 +695,7 @@ fn dispatcher(
     }
 }
 
-// Integration tests live in rust/tests/coordinator.rs: Native/Accel
-// run against in-memory models (no artifacts needed); the PJRT and
-// artifact-backed paths skip gracefully when artifacts are absent.
+// Integration tests live in rust/tests/coordinator.rs: MockEngine
+// covers batching/linger/backpressure/failure-isolation with no
+// artifacts, Native/Accel run against in-memory models, and the PJRT
+// and artifact-backed paths skip gracefully when artifacts are absent.

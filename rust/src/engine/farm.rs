@@ -1,0 +1,125 @@
+//! Farm engine: the sharded cycle-level SoC pool ([`crate::farm`])
+//! behind the [`Engine`] contract.  Every answer carries simulated
+//! cycles + FlexIC energy, baseline calibration feeds the
+//! accel-vs-baseline ratio, and `snapshot` exposes per-shard balance.
+
+use anyhow::Result;
+
+use crate::farm::{Farm, FarmOpts};
+use crate::svm::QuantModel;
+
+use super::{batch_error, Engine, EngineMetrics, ModelSource, Sample, ServeError, SimCost};
+
+/// Cycle-level SoC farm as a serving engine.  The farm itself starts
+/// in `warm` (shard spin-up + program builds + optional baseline
+/// calibration happen before the server reports ready).
+pub struct FarmEngine {
+    opts: FarmOpts,
+    farm: Option<Farm>,
+}
+
+impl FarmEngine {
+    pub fn new(opts: FarmOpts) -> Self {
+        FarmEngine { opts, farm: None }
+    }
+}
+
+impl Engine for FarmEngine {
+    fn name(&self) -> &str {
+        "accel"
+    }
+
+    fn warm(&mut self, source: &ModelSource, keys: &[String]) -> Result<()> {
+        if self.farm.is_some() {
+            return Ok(()); // idempotent: already warmed
+        }
+        let models: Vec<(String, QuantModel)> =
+            keys.iter().map(|k| Ok((k.clone(), source.model(k)?))).collect::<Result<_>>()?;
+        self.farm = Some(Farm::start(models, self.opts)?);
+        Ok(())
+    }
+
+    fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        let Some(farm) = self.farm.as_ref() else {
+            return batch_error(xs.len(), ServeError::Engine("farm engine not warmed".into()));
+        };
+        match farm.predict_batch(key, xs) {
+            Ok(outs) => outs
+                .into_iter()
+                .map(|r| {
+                    r.map(|o| Sample {
+                        pred: o.pred,
+                        sim: Some(SimCost { cycles: o.cycles, energy_mj: o.energy_mj }),
+                    })
+                    .map_err(|e| ServeError::Engine(format!("inference failed: {e:#}")))
+                })
+                .collect(),
+            Err(e) => batch_error(xs.len(), ServeError::Engine(format!("batch execution failed: {e:#}"))),
+        }
+    }
+
+    fn baseline_cycles(&self, key: &str) -> Option<f64> {
+        self.farm.as_ref()?.baseline_cycles(key)
+    }
+
+    fn snapshot(&self) -> EngineMetrics {
+        EngineMetrics {
+            engine: self.name().to_string(),
+            farm: self.farm.as_ref().map(|f| f.metrics()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serv::TimingConfig;
+    use crate::svm::infer;
+    use crate::testing::gen;
+    use std::collections::HashMap;
+
+    fn warm_engine() -> (FarmEngine, QuantModel) {
+        let model = gen::tiny_model("f", false);
+        let mut src = HashMap::new();
+        src.insert("f".to_string(), model.clone());
+        let mut e = FarmEngine::new(FarmOpts {
+            shards: 1,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            ..Default::default()
+        });
+        e.warm(&ModelSource::Inline(src), &["f".to_string()]).unwrap();
+        (e, model)
+    }
+
+    #[test]
+    fn farm_engine_answers_with_sim_cost() {
+        let (e, model) = warm_engine();
+        let xs = vec![vec![3, 4, 5], vec![9, 1, 0]];
+        for (x, r) in xs.iter().zip(e.run_batch("f", &xs)) {
+            let s = r.unwrap();
+            assert_eq!(s.pred, infer::predict(&model, x));
+            let sim = s.sim.expect("farm answers carry sim cost");
+            assert!(sim.cycles > 0 && sim.energy_mj > 0.0);
+        }
+        let m = e.snapshot();
+        assert_eq!(m.engine, "accel");
+        assert_eq!(m.farm.expect("farm metrics").total_jobs(), 2);
+    }
+
+    #[test]
+    fn bad_sample_fails_alone() {
+        let (e, _) = warm_engine();
+        let out = e.run_batch("f", &[vec![1, 2, 3], vec![99, 0, 0]]);
+        assert!(out[0].is_ok());
+        assert!(matches!(&out[1], Err(ServeError::Engine(_))));
+    }
+
+    #[test]
+    fn unwarmed_engine_reports_cleanly() {
+        let e = FarmEngine::new(FarmOpts::default());
+        assert!(e.run_batch("f", &[vec![1]])[0].is_err());
+        assert!(e.baseline_cycles("f").is_none());
+        assert!(e.snapshot().farm.is_none());
+    }
+}

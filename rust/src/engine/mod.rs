@@ -1,0 +1,267 @@
+//! Pluggable serving engines: the backend contract behind the
+//! coordinator.
+//!
+//! The coordinator's serving loop (routing, batching, linger/eager
+//! flush, metrics) is backend-agnostic: everything a backend does —
+//! model residency, batch execution, simulated-hardware accounting,
+//! baseline calibration, statistics — flows through [`Engine`].  The
+//! three in-tree engines mirror the paper's evaluation stack:
+//!
+//!  * [`NativeEngine`] — pure-Rust integer inference (differential
+//!    testing / baseline);
+//!  * [`FarmEngine`] — the sharded cycle-level SoC farm
+//!    ([`crate::farm::Farm`]) with per-request cycle + FlexIC energy
+//!    accounting;
+//!  * `PjrtEngine` (`pjrt` cargo feature) — AOT-compiled HLO on the
+//!    PJRT CPU client.
+//!
+//! Out-of-tree engines (mocks, mixed-kernel accelerator variants,
+//! remote shards) plug in through
+//! [`ServerBuilder::engine`](crate::coordinator::ServerBuilder::engine);
+//! [`crate::testing::mock::MockEngine`] is the reference
+//! implementation used by the coordinator tests.
+
+mod farm;
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use farm::FarmEngine;
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
+
+use std::collections::HashMap;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::farm::FarmMetrics;
+use crate::svm::model::Manifest;
+use crate::svm::QuantModel;
+
+/// Which in-tree engine serves the batches (the backend *kind*; custom
+/// engines bypass this via `ServerBuilder::engine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled HLO on the PJRT CPU client (needs the `pjrt`
+    /// feature and on-disk artifacts).
+    Pjrt,
+    /// Native Rust integer inference (differential testing / baseline).
+    Native,
+    /// Sharded cycle-level SoC farm with per-request energy accounting.
+    Accel,
+}
+
+impl Backend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::Accel => "accel",
+        }
+    }
+
+    /// Default backend for this build: `pjrt` when the feature is
+    /// compiled in, `native` otherwise.
+    pub fn default_for_build() -> Backend {
+        if cfg!(feature = "pjrt") {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            "accel" => Ok(Backend::Accel),
+            other => bail!("unknown backend {other:?} (valid: pjrt, native, accel)"),
+        }
+    }
+}
+
+/// Typed request-path error.  Everything a client can see from
+/// `infer`/`submit`/`infer_many` is one of these (init-time problems
+/// stay `anyhow` on `ServerBuilder::start`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The requested config key is not in the served set.
+    UnknownConfig(String),
+    /// The server (dispatcher thread) is gone.
+    ServerDown,
+    /// The dispatcher dropped the request without answering — e.g. it
+    /// panicked mid-batch (see `Server::shutdown` for the payload).
+    Dropped,
+    /// The engine failed this sample or batch.
+    Engine(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownConfig(key) => write!(f, "config {key:?} not served"),
+            ServeError::ServerDown => f.write_str("server is down"),
+            ServeError::Dropped => f.write_str("server dropped the request"),
+            ServeError::Engine(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Simulated-hardware accounting attached to answers from cycle-level
+/// engines (the farm); wall-clock-only engines leave it `None`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimCost {
+    /// SoC cycles the inference took on the simulated FlexIC hardware.
+    pub cycles: u64,
+    /// FlexIC energy for the inference in mJ.
+    pub energy_mj: f64,
+}
+
+/// One answered sample of an executed batch.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Predicted class id.
+    pub pred: i32,
+    /// Simulated cycles + energy (engines without a hardware model
+    /// report `None`).
+    pub sim: Option<SimCost>,
+}
+
+/// Point-in-time engine statistics, snapshotted through the dispatcher.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    /// Engine label (`Engine::name`).
+    pub engine: String,
+    /// Shard-level statistics for sharded engines (the farm); `None`
+    /// for single-executor engines.
+    pub farm: Option<FarmMetrics>,
+}
+
+/// Where an engine's `warm` gets host-side models from.
+pub enum ModelSource {
+    /// On-disk artifact tree (all backends).
+    Artifacts(Manifest),
+    /// In-memory models (lets tests and benches serve synthetic models
+    /// with no artifacts on disk).
+    Inline(HashMap<String, QuantModel>),
+    /// No host-side models: the engine brings its own (mocks, remote
+    /// shards).
+    None,
+}
+
+impl ModelSource {
+    /// Load one model by config key.
+    pub fn model(&self, key: &str) -> Result<QuantModel> {
+        match self {
+            ModelSource::Artifacts(m) => {
+                let entry = m.config(key)?;
+                m.model(entry)
+            }
+            ModelSource::Inline(map) => {
+                map.get(key).cloned().with_context(|| format!("config {key:?} not provided"))
+            }
+            ModelSource::None => bail!("no model source: the engine must own its models"),
+        }
+    }
+
+    /// The artifact manifest, for engines that serve on-disk artifacts
+    /// only (PJRT).
+    pub fn manifest(&self) -> Option<&Manifest> {
+        match self {
+            ModelSource::Artifacts(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// The whole backend contract.  The coordinator moves the boxed engine
+/// onto its dispatcher thread, calls [`warm`](Engine::warm) once before
+/// accepting traffic, then drives batches through
+/// [`run_batch`](Engine::run_batch); per-sample failure isolation is
+/// universal — a bad request fails alone instead of poisoning its
+/// batchmates.
+pub trait Engine: Send {
+    /// Short engine label (shows up in reports and metrics).
+    fn name(&self) -> &str;
+
+    /// Load/compile everything for `keys` up front — AOT residency, no
+    /// first-request jank.  Runs on the dispatcher thread before the
+    /// server reports ready; an error here fails `start()`.
+    fn warm(&mut self, source: &ModelSource, keys: &[String]) -> Result<()>;
+
+    /// Execute one batch; one answer per input sample, in input order.
+    fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>>;
+
+    /// Calibrated software-only cycles/inference for the
+    /// accel-vs-baseline ratio (`None` for engines without a baseline
+    /// story).
+    fn baseline_cycles(&self, _key: &str) -> Option<f64> {
+        None
+    }
+
+    /// Point-in-time engine statistics.
+    fn snapshot(&self) -> EngineMetrics {
+        EngineMetrics { engine: self.name().to_string(), farm: None }
+    }
+}
+
+/// Replicate one batch-level failure across every sample slot (for
+/// engines whose execution succeeds or fails as a unit).
+pub fn batch_error(n: usize, err: ServeError) -> Vec<Result<Sample, ServeError>> {
+    (0..n).map(|_| Err(err.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_round_trips_through_str() {
+        for b in [Backend::Pjrt, Backend::Native, Backend::Accel] {
+            let parsed: Backend = b.as_str().parse().unwrap();
+            assert_eq!(parsed, b);
+            assert_eq!(b.to_string(), b.as_str());
+        }
+    }
+
+    #[test]
+    fn backend_parse_error_lists_valid_values() {
+        let err = "tpu".parse::<Backend>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt") && msg.contains("native") && msg.contains("accel"), "{msg}");
+    }
+
+    #[test]
+    fn serve_error_messages() {
+        assert_eq!(ServeError::ServerDown.to_string(), "server is down");
+        assert!(ServeError::UnknownConfig("k".into()).to_string().contains("not served"));
+        assert_eq!(ServeError::Engine("boom".into()).to_string(), "boom");
+    }
+
+    #[test]
+    fn batch_error_fills_every_slot() {
+        let v = batch_error(3, ServeError::Engine("x".into()));
+        assert_eq!(v.len(), 3);
+        assert!(v.iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn empty_model_source_refuses_lookups() {
+        assert!(ModelSource::None.model("k").is_err());
+        assert!(ModelSource::None.manifest().is_none());
+    }
+}

@@ -1,0 +1,82 @@
+//! Native engine: pure-Rust integer inference ([`crate::svm::infer`]),
+//! the Rust twin of `quantize.py` that every other backend must agree
+//! with.  No simulated-hardware accounting — answers carry `sim: None`.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::svm::{infer, QuantModel};
+
+use super::{batch_error, Engine, ModelSource, Sample, ServeError};
+
+/// The baseline backend: model lookup + `infer::predict` per sample.
+#[derive(Default)]
+pub struct NativeEngine {
+    models: HashMap<String, QuantModel>,
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn warm(&mut self, source: &ModelSource, keys: &[String]) -> Result<()> {
+        for k in keys {
+            if !self.models.contains_key(k) {
+                self.models.insert(k.clone(), source.model(k)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        let Some(m) = self.models.get(key) else {
+            return batch_error(xs.len(), ServeError::UnknownConfig(key.to_string()));
+        };
+        xs.iter().map(|x| Ok(Sample { pred: infer::predict(m, x), sim: None })).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen;
+
+    #[test]
+    fn warm_then_run_matches_infer() {
+        let model = gen::tiny_model("t", false);
+        let mut src = HashMap::new();
+        src.insert("t".to_string(), model.clone());
+        let mut e = NativeEngine::new();
+        e.warm(&ModelSource::Inline(src), &["t".to_string()]).unwrap();
+        let xs = vec![vec![15, 0, 3], vec![0, 15, 9]];
+        let out = e.run_batch("t", &xs);
+        assert_eq!(out.len(), 2);
+        for (x, r) in xs.iter().zip(out) {
+            let s = r.unwrap();
+            assert_eq!(s.pred, infer::predict(&model, x));
+            assert!(s.sim.is_none());
+        }
+    }
+
+    #[test]
+    fn unknown_key_fails_every_slot() {
+        let e = NativeEngine::new();
+        let out = e.run_batch("nope", &[vec![1, 2, 3]]);
+        assert!(matches!(&out[0], Err(ServeError::UnknownConfig(k)) if k == "nope"));
+    }
+
+    #[test]
+    fn warm_fails_on_missing_model() {
+        let mut e = NativeEngine::new();
+        assert!(e.warm(&ModelSource::Inline(HashMap::new()), &["absent".to_string()]).is_err());
+        assert!(e.warm(&ModelSource::None, &["absent".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT engine (`pjrt` cargo feature): AOT-compiled HLO on the PJRT
+//! CPU client ([`crate::runtime`]) behind the [`Engine`] contract.
+//! Serves on-disk artifacts only; batching, not parallel dispatch, is
+//! where CPU-PJRT throughput comes from.
+
+use anyhow::{bail, Result};
+
+use super::{batch_error, Engine, ModelSource, Sample, ServeError};
+
+/// Compiled-HLO serving engine.  The PJRT client is created lazily in
+/// `warm` so the un-warmed struct is plain data and can be moved onto
+/// the dispatcher thread.
+///
+/// Not constructible outside the crate: the only way to obtain one is
+/// `Server::builder().backend(Backend::Pjrt)`, which never hands the
+/// engine out — see the `Send` safety argument below.
+pub struct PjrtEngine {
+    /// Compiled batch size to load (from the manifest's batch set).
+    batch: usize,
+    runtime: Option<crate::runtime::Engine>,
+}
+
+impl PjrtEngine {
+    pub(crate) fn new(compiled_batch: usize) -> Self {
+        PjrtEngine { batch: compiled_batch, runtime: None }
+    }
+}
+
+// SAFETY: the PJRT client inside `crate::runtime::Engine` is not
+// `Send`.  This impl is sound because safe code outside the crate can
+// never move a *warmed* engine across threads: `PjrtEngine::new` is
+// `pub(crate)`, and the single construction site
+// (`ServerBuilder::start`) moves the engine onto the dispatcher
+// thread while `runtime` is still `None` (plain data).  `warm` then
+// creates the client on the dispatcher thread, and every later call
+// (`run_batch`, drop) stays on that thread for the engine's whole
+// life.  Any new crate-internal construction site must preserve this
+// move-before-warm invariant.
+unsafe impl Send for PjrtEngine {}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn warm(&mut self, source: &ModelSource, keys: &[String]) -> Result<()> {
+        let Some(manifest) = source.manifest() else {
+            bail!("the PJRT backend serves on-disk artifacts only");
+        };
+        let mut rt = crate::runtime::Engine::new()?;
+        for k in keys {
+            let entry = manifest.config(k)?;
+            rt.load(manifest, entry, self.batch)?;
+        }
+        self.runtime = Some(rt);
+        Ok(())
+    }
+
+    fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        let Some(rt) = self.runtime.as_ref() else {
+            return batch_error(xs.len(), ServeError::Engine("pjrt engine not warmed".into()));
+        };
+        match rt.predict(key, self.batch, xs) {
+            Ok(preds) => preds.into_iter().map(|pred| Ok(Sample { pred, sim: None })).collect(),
+            Err(e) => batch_error(xs.len(), ServeError::Engine(format!("batch execution failed: {e:#}"))),
+        }
+    }
+}

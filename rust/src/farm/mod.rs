@@ -16,7 +16,8 @@
 //!    (counted as a `model_loads` reload-churn event).
 //!  * **Backpressure** — per-shard job queues are bounded
 //!    (`queue_cap`); submission blocks when a queue is full, mirroring
-//!    the coordinator's bounded-ingress `ServerOpts` contract.
+//!    the coordinator's bounded-ingress contract
+//!    (`ServerBuilder::queue_cap`).
 //!  * **Graceful shutdown** — dropping the [`Farm`] enqueues a
 //!    shutdown marker behind any queued work; shards finish in-flight
 //!    jobs, answer them, and join.

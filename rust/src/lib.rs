@@ -8,6 +8,7 @@
 
 pub mod accel;
 pub mod coordinator;
+pub mod engine;
 pub mod farm;
 pub mod isa;
 pub mod power;

@@ -15,7 +15,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use flexsvm::accel::{pe, svm::SvmAccel, Cfu};
-use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::coordinator::{Backend, Server};
 use flexsvm::program::run::ProgramRunner;
 use flexsvm::program::ProgramOpts;
 use flexsvm::report::{self, table1::render, Table1Opts};
@@ -285,21 +285,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let keys = args.list_or("configs", &["iris_ovr_w4", "bs_ovo_w8"]);
     let n_requests = args.usize_or("requests", 1000)?;
     // default backend follows the build: pjrt when compiled in, else native
-    let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
-    let backend = match args.str_or("backend", default_backend) {
-        "pjrt" => Backend::Pjrt,
-        "native" => Backend::Native,
-        "accel" => Backend::Accel,
-        other => bail!("unknown backend {other}"),
-    };
-    let opts = ServerOpts {
-        backend,
-        batch_max: args.usize_or("batch-max", 64)?,
-        linger: std::time::Duration::from_micros(args.u64_or("linger-us", 2000)?),
-        ..Default::default()
-    };
+    let backend: Backend = args.str_or("backend", Backend::default_for_build().as_str()).parse()?;
     let manifest = Manifest::load(&artifacts_root())?;
-    let server = Server::start(artifacts_root(), keys.clone(), opts)?;
+    let server = Server::builder()
+        .artifacts(artifacts_root(), keys.clone())
+        .backend(backend)
+        .batch_max(args.usize_or("batch-max", 64)?)
+        .linger(std::time::Duration::from_micros(args.u64_or("linger-us", 2000)?))
+        .start()?;
     let client = server.client();
 
     // drive requests from worker threads using real test vectors
@@ -324,7 +317,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     if backend == Backend::Accel {
-        let farm = client.farm_metrics()?;
+        let farm = client.engine_metrics()?.farm;
         print!(
             "{}",
             report::serving::render(
@@ -335,6 +328,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
         );
     }
+    server.shutdown()?;
     // keep the accelerator trait demonstrably object-safe in the binary
     let _ = SvmAccel::new().name();
     Ok(())

@@ -1,0 +1,140 @@
+//! Deterministic mock [`Engine`] for coordinator tests: exercises
+//! batching, linger/eager flush, backpressure and per-sample failure
+//! isolation with no artifacts, no SoC simulation and no XLA
+//! toolchain.
+//!
+//! The mock owns its "models" (any key warms successfully), predicts
+//! `pred = x[0]`, and is scripted through the builder methods:
+//! per-batch latencies ([`MockEngine::with_delays`]), per-sample
+//! failures keyed on the first feature value
+//! ([`MockEngine::fail_when_first_feature_is`]), dispatcher-death
+//! injection ([`MockEngine::panic_when_first_feature_is`]) and a fixed
+//! [`SimCost`] per answer ([`MockEngine::with_sim`]).  Executed batch
+//! sizes are recorded in order through the handle returned by
+//! [`MockEngine::batch_log`].
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, ModelSource, Sample, ServeError, SimCost};
+
+/// Scripted, artifact-free serving engine.
+#[derive(Default)]
+pub struct MockEngine {
+    /// Batch `i` sleeps `delays[i % len]` before answering (empty =
+    /// answer immediately).
+    delays: Vec<Duration>,
+    /// Samples whose first feature equals this value fail alone.
+    fail_on: Option<i32>,
+    /// A batch containing this first-feature value panics the caller
+    /// (the dispatcher thread) — for `Server::shutdown` tests.
+    panic_on: Option<i32>,
+    /// Fixed simulated cost attached to every successful answer.
+    sim: Option<SimCost>,
+    /// Executed batch sizes, in execution order.
+    batches: Arc<Mutex<Vec<usize>>>,
+}
+
+impl MockEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_delays(mut self, delays: Vec<Duration>) -> Self {
+        self.delays = delays;
+        self
+    }
+
+    pub fn fail_when_first_feature_is(mut self, v: i32) -> Self {
+        self.fail_on = Some(v);
+        self
+    }
+
+    pub fn panic_when_first_feature_is(mut self, v: i32) -> Self {
+        self.panic_on = Some(v);
+        self
+    }
+
+    pub fn with_sim(mut self, sim: SimCost) -> Self {
+        self.sim = Some(sim);
+        self
+    }
+
+    /// Shared handle to the executed-batch-size log; clone it before
+    /// boxing the engine into the server.
+    pub fn batch_log(&self) -> Arc<Mutex<Vec<usize>>> {
+        Arc::clone(&self.batches)
+    }
+}
+
+impl Engine for MockEngine {
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn warm(&mut self, _source: &ModelSource, _keys: &[String]) -> Result<()> {
+        Ok(())
+    }
+
+    fn run_batch(&self, _key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        if let Some(v) = self.panic_on {
+            if xs.iter().any(|x| x.first() == Some(&v)) {
+                panic!("mock engine: scripted panic");
+            }
+        }
+        let batch_idx = {
+            let mut log = self.batches.lock().unwrap();
+            log.push(xs.len());
+            log.len() - 1
+        };
+        if !self.delays.is_empty() {
+            let d = self.delays[batch_idx % self.delays.len()];
+            if !d.is_zero() {
+                std::thread::sleep(d);
+            }
+        }
+        xs.iter()
+            .map(|x| {
+                let first = x.first().copied().unwrap_or(0);
+                if self.fail_on == Some(first) {
+                    Err(ServeError::Engine("mock engine: scripted failure".into()))
+                } else {
+                    Ok(Sample { pred: first, sim: self.sim })
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_predicts_first_feature_and_logs_batches() {
+        let e = MockEngine::new();
+        let log = e.batch_log();
+        let out = e.run_batch("any", &[vec![4, 0], vec![9, 1]]);
+        assert_eq!(out[0].as_ref().unwrap().pred, 4);
+        assert_eq!(out[1].as_ref().unwrap().pred, 9);
+        assert_eq!(*log.lock().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn scripted_failure_hits_only_marked_samples() {
+        let e = MockEngine::new().fail_when_first_feature_is(13);
+        let out = e.run_batch("any", &[vec![1], vec![13], vec![2]]);
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(matches!(&out[1], Err(ServeError::Engine(_))));
+    }
+
+    #[test]
+    fn sim_cost_attached_when_scripted() {
+        let e = MockEngine::new().with_sim(SimCost { cycles: 42, energy_mj: 0.5 });
+        let out = e.run_batch("any", &[vec![0]]);
+        let sim = out[0].as_ref().unwrap().sim.unwrap();
+        assert_eq!(sim.cycles, 42);
+    }
+}

@@ -6,8 +6,14 @@
 //! case index and re-runnable seed, then panics with the property's own
 //! assertion message.  No shrinking — generators here draw from small,
 //! structured domains where the raw counterexample is already readable.
+//!
+//! [`mock`] additionally hosts the scripted [`MockEngine`] the
+//! coordinator tests plug into the serving loop.
+
+pub mod mock;
 
 pub use crate::util::Pcg32;
+pub use mock::MockEngine;
 
 use crate::svm::model::{artifacts_root, Manifest};
 

@@ -118,9 +118,12 @@ pub struct DriveResult {
 }
 
 /// Drive a serving client from `workers` threads over real test
-/// vectors, round-robining configs.  When `check_models` is given,
-/// every answer is additionally compared against the native integer
-/// spec (differential serving check).
+/// vectors, round-robining configs.  Backend-agnostic: whatever
+/// engine the server was built with, answers come back through the
+/// same `Client::infer` path (typed `ServeError`s convert into the
+/// worker's `anyhow` result).  When `check_models` is given, every
+/// answer is additionally compared against the native integer spec
+/// (differential serving check).
 pub fn drive_clients(
     client: &Client,
     testsets: &[(String, TestSet)],

@@ -1,34 +1,29 @@
 //! Coordinator integration: routing, batching, metrics, and backend
-//! equivalence.  Native/Accel cases serve in-memory models (no
-//! artifacts needed); artifact-backed cases skip when `make artifacts`
-//! has not run.
+//! equivalence over the pluggable engine API.
+//!
+//! The `MockEngine` cases exercise batching, linger/eager flush,
+//! backpressure and per-sample failure isolation with no artifacts and
+//! no SoC simulation; Native/Accel cases serve in-memory models;
+//! artifact-backed cases skip when `make artifacts` has not run.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use flexsvm::coordinator::{Backend, Server, ServerOpts};
+use flexsvm::coordinator::{Backend, Server, ServeError};
+use flexsvm::engine::SimCost;
 use flexsvm::farm::FarmOpts;
-use flexsvm::serv::TimingConfig;
 use flexsvm::manifest_or_return;
+use flexsvm::serv::TimingConfig;
 use flexsvm::svm::infer;
 use flexsvm::svm::model::{artifacts_root, QuantModel};
-use flexsvm::testing::gen;
+use flexsvm::testing::{gen, MockEngine};
 
-fn native_opts() -> ServerOpts {
-    ServerOpts { backend: Backend::Native, linger: Duration::from_micros(200), ..Default::default() }
-}
-
-/// Accel opts tuned for tests: tiny models, ideal memory, no baseline
-/// calibration (it is covered separately), bounded farm queues.
-fn accel_opts() -> ServerOpts {
-    ServerOpts {
-        backend: Backend::Accel,
-        linger: Duration::from_micros(200),
-        farm: FarmOpts {
-            shards: 2,
-            timing: TimingConfig::ideal_mem(),
-            calibrate_baseline: false,
-            ..Default::default()
-        },
+/// Accel farm opts tuned for tests: tiny models, ideal memory, no
+/// baseline calibration (covered separately), bounded farm queues.
+fn test_farm() -> FarmOpts {
+    FarmOpts {
+        shards: 2,
+        timing: TimingConfig::ideal_mem(),
+        calibrate_baseline: false,
         ..Default::default()
     }
 }
@@ -37,12 +32,237 @@ fn tiny_model(key: &str, flip: bool) -> (String, QuantModel) {
     (key.to_string(), gen::tiny_model(key, flip))
 }
 
+// ----------------------------------------------------------- mock engine
+
+#[test]
+fn mock_engine_serves_and_batches_without_artifacts() {
+    // eager flush: co-arriving requests batch together and nobody
+    // waits out the (deliberately huge) linger
+    let engine = MockEngine::new().with_delays(vec![Duration::from_millis(20)]);
+    let log = engine.batch_log();
+    let server = Server::builder()
+        .keys(["m"])
+        .engine(Box::new(engine))
+        .batch_max(64)
+        .linger(Duration::from_secs(10))
+        .start()
+        .unwrap();
+    let client = server.client();
+
+    let t0 = Instant::now();
+    let n = 16;
+    let handles: Vec<_> = (0..n).map(|i| client.submit("m", &[i, 0]).unwrap()).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.pred, i as i32, "mock predicts x[0]");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "eager flush must beat the 10s linger");
+
+    let sizes = log.lock().unwrap().clone();
+    assert_eq!(sizes.iter().sum::<usize>(), n as usize, "every sample executed");
+    assert!(sizes.len() < n as usize, "expected batching: {sizes:?}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mock_linger_flushes_queued_requests_together() {
+    // eager flush off: requests queue until the oldest exceeds the
+    // linger, then flush as one batch
+    let engine = MockEngine::new();
+    let server = Server::builder()
+        .keys(["m"])
+        .engine(Box::new(engine))
+        .batch_max(64)
+        .linger(Duration::from_millis(300))
+        .eager_flush(false)
+        .start()
+        .unwrap();
+    let client = server.client();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..4).map(|i| client.submit("m", &[i, 0]).unwrap()).collect();
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.batch_size, 4, "all four queued requests share the linger flush");
+    }
+    let elapsed = t0.elapsed();
+    assert!(elapsed >= Duration::from_millis(150), "must wait out the linger, took {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(5));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mock_per_sample_failures_do_not_poison_batchmates() {
+    let engine = MockEngine::new()
+        .fail_when_first_feature_is(13)
+        .with_delays(vec![Duration::from_millis(30)]);
+    let log = engine.batch_log();
+    let server = Server::builder()
+        .keys(["m"])
+        .engine(Box::new(engine))
+        .linger(Duration::from_millis(5))
+        .start()
+        .unwrap();
+    let client = server.client();
+
+    // occupy the engine so the next three requests share a batch
+    let warmup = client.submit("m", &[5, 0]).unwrap();
+    let outs = client.infer_many("m", &[vec![1, 0], vec![13, 0], vec![2, 0]]).unwrap();
+    assert_eq!(outs[0].as_ref().unwrap().pred, 1);
+    assert!(matches!(&outs[1], Err(ServeError::Engine(_))), "marked sample fails alone");
+    assert_eq!(outs[2].as_ref().unwrap().pred, 2);
+    warmup.wait().unwrap();
+
+    let sizes = log.lock().unwrap().clone();
+    assert!(sizes.iter().any(|&s| s >= 2), "failure isolation exercised inside a real batch: {sizes:?}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mock_backpressure_floods_without_loss() {
+    // tight ingress queue + slow engine: submission blocks rather than
+    // drops, and every request gets an answer
+    let engine = MockEngine::new().with_delays(vec![Duration::from_millis(2)]);
+    let server = Server::builder()
+        .keys(["m"])
+        .engine(Box::new(engine))
+        .queue_cap(4)
+        .batch_max(2)
+        .linger(Duration::from_micros(200))
+        .start()
+        .unwrap();
+    let client = server.client();
+    let n_threads = 8;
+    let per_thread = 8;
+    std::thread::scope(|s| {
+        for w in 0..n_threads {
+            let client = client.clone();
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let x = vec![((w + i) % 16) as i32, 0];
+                    let resp = client.infer("m", &x).unwrap();
+                    assert_eq!(resp.pred, x[0]);
+                }
+            });
+        }
+    });
+    let metrics = client.metrics().unwrap();
+    let m = &metrics["m"];
+    assert_eq!(m.requests, (n_threads * per_thread) as u64, "no request lost under backpressure");
+    assert_eq!(m.latency.as_ref().unwrap().count(), m.requests);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mock_sim_cost_flows_through_generic_metrics_path() {
+    // sim accounting is engine-generic, not farm-only
+    let engine = MockEngine::new().with_sim(SimCost { cycles: 1_000, energy_mj: 0.25 });
+    let server = Server::builder().keys(["m"]).engine(Box::new(engine)).start().unwrap();
+    let client = server.client();
+    for i in 0..4 {
+        let resp = client.infer("m", &[i, 0]).unwrap();
+        let sim = resp.sim.expect("scripted sim cost reaches the response");
+        assert_eq!(sim.cycles, 1_000);
+    }
+    let metrics = client.metrics().unwrap();
+    let m = &metrics["m"];
+    assert_eq!(m.sim_samples, 4);
+    assert_eq!(m.sim_cycles, 4_000);
+    assert!((m.energy_mj - 1.0).abs() < 1e-12);
+    let em = client.engine_metrics().unwrap();
+    assert_eq!(em.engine, "mock");
+    assert!(em.farm.is_none());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn dispatcher_panic_surfaces_in_shutdown() {
+    let engine = MockEngine::new().panic_when_first_feature_is(7);
+    let server = Server::builder().keys(["m"]).engine(Box::new(engine)).start().unwrap();
+    let client = server.client();
+    client.infer("m", &[1, 0]).unwrap();
+    let err = client.infer("m", &[7, 0]).unwrap_err();
+    assert_eq!(err, ServeError::Dropped, "panicked dispatcher drops the request");
+    let err = server.shutdown().unwrap_err();
+    assert!(err.to_string().contains("scripted panic"), "panic payload surfaced: {err:#}");
+}
+
+#[test]
+fn clean_shutdown_returns_ok_then_clients_see_server_down() {
+    let server = Server::builder().keys(["m"]).engine(Box::new(MockEngine::new())).start().unwrap();
+    let client = server.client();
+    client.infer("m", &[3, 0]).unwrap();
+    server.shutdown().unwrap();
+    let err = client.infer("m", &[3, 0]).unwrap_err();
+    assert_eq!(err, ServeError::ServerDown);
+}
+
+#[test]
+fn submit_returns_nonblocking_pending_handles() {
+    let server = Server::builder().keys(["m"]).engine(Box::new(MockEngine::new())).start().unwrap();
+    let client = server.client();
+    let a = client.submit("m", &[1, 0]).unwrap();
+    let b = client.submit("m", &[2, 0]).unwrap();
+    // redeem out of submission order — the handles are independent
+    assert_eq!(b.wait().unwrap().pred, 2);
+    assert_eq!(a.wait().unwrap().pred, 1);
+    // try_wait sees an answered request without blocking
+    let mut c = client.submit("m", &[3, 0]).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match c.try_wait() {
+            Some(r) => {
+                assert_eq!(r.unwrap().pred, 3);
+                break;
+            }
+            None => {
+                assert!(Instant::now() < deadline, "answer never arrived");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    // the handle is spent: polling again is None, not a phantom error
+    assert!(c.try_wait().is_none());
+}
+
+#[test]
+fn builder_rejects_bad_configurations() {
+    assert!(Server::builder().start().is_err(), "no model source");
+    assert!(Server::builder().models(vec![]).start().is_err(), "no models");
+    assert!(Server::builder().keys(Vec::<String>::new()).start().is_err(), "no keys");
+    assert!(
+        Server::builder().keys(["m"]).engine(Box::new(MockEngine::new())).batch_max(0).start().is_err(),
+        "batch_max 0"
+    );
+    assert!(
+        Server::builder()
+            .models(vec![tiny_model("dup", false), tiny_model("dup", true)])
+            .start()
+            .is_err(),
+        "duplicate keys"
+    );
+    #[cfg(not(feature = "pjrt"))]
+    assert!(
+        Server::builder().models(vec![tiny_model("m", false)]).backend(Backend::Pjrt).start().is_err(),
+        "pjrt backend without the pjrt feature"
+    );
+}
+
+// (Backend FromStr/Display round-trips are unit-tested in
+// rust/src/engine/mod.rs.)
+
 // ---------------------------------------------------------------- accel farm
 
 #[test]
 fn accel_backend_matches_native_inference_and_reports_energy() {
     let models = vec![tiny_model("cfg_a", false), tiny_model("cfg_b", true)];
-    let server = Server::start_with_models(models.clone(), accel_opts()).unwrap();
+    let server = Server::builder()
+        .models(models.clone())
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .farm(test_farm())
+        .start()
+        .unwrap();
     let client = server.client();
     let xs: Vec<Vec<i32>> = vec![vec![15, 0, 3], vec![0, 15, 9], vec![7, 7, 7], vec![2, 11, 0]];
     for (key, model) in &models {
@@ -63,18 +283,22 @@ fn accel_backend_matches_native_inference_and_reports_energy() {
         assert!(m.energy_mj > 0.0);
         assert_eq!(m.accel_speedup(), 0.0, "calibration disabled");
     }
-    let farm = client.farm_metrics().unwrap().expect("accel backend exposes farm metrics");
+    let em = client.engine_metrics().unwrap();
+    assert_eq!(em.engine, "accel");
+    let farm = em.farm.expect("accel engine exposes farm metrics");
     assert_eq!(farm.shards.len(), 2);
     assert_eq!(farm.total_jobs(), (models.len() * xs.len()) as u64);
 }
 
 #[test]
 fn accel_baseline_calibration_yields_speedup_ratio() {
-    let opts = ServerOpts {
-        farm: FarmOpts { calibrate_baseline: true, ..accel_opts().farm },
-        ..accel_opts()
-    };
-    let server = Server::start_with_models(vec![tiny_model("cal", false)], opts).unwrap();
+    let server = Server::builder()
+        .models(vec![tiny_model("cal", false)])
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .farm(FarmOpts { calibrate_baseline: true, ..test_farm() })
+        .start()
+        .unwrap();
     let client = server.client();
     for _ in 0..3 {
         client.infer("cal", &[9, 2, 4]).unwrap();
@@ -91,15 +315,16 @@ fn accel_baseline_calibration_yields_speedup_ratio() {
 fn accel_farm_backpressure_floods_without_loss() {
     // tight queues everywhere: ingress 8, per-shard 2 — submission
     // blocks rather than drops, and every request gets an answer
-    let opts = ServerOpts {
-        queue_cap: 8,
-        batch_max: 4,
-        compiled_batch: 4,
-        farm: FarmOpts { queue_cap: 2, spill_threshold: 1, ..accel_opts().farm },
-        ..accel_opts()
-    };
     let models = vec![tiny_model("hot", false), tiny_model("cold", true)];
-    let server = Server::start_with_models(models.clone(), opts).unwrap();
+    let server = Server::builder()
+        .models(models.clone())
+        .backend(Backend::Accel)
+        .queue_cap(8)
+        .batch_max(4)
+        .linger(Duration::from_micros(200))
+        .farm(FarmOpts { queue_cap: 2, spill_threshold: 1, ..test_farm() })
+        .start()
+        .unwrap();
     let client = server.client();
     let n_threads = 8;
     let per_thread = 16;
@@ -128,11 +353,13 @@ fn accel_farm_backpressure_floods_without_loss() {
 fn accel_bad_request_fails_alone_not_its_batchmates() {
     // a request with out-of-range features must error without failing
     // valid requests that share its batch
-    let server = Server::start_with_models(
-        vec![tiny_model("mix", false)],
-        ServerOpts { linger: Duration::from_millis(5), ..accel_opts() },
-    )
-    .unwrap();
+    let server = Server::builder()
+        .models(vec![tiny_model("mix", false)])
+        .backend(Backend::Accel)
+        .linger(Duration::from_millis(5))
+        .farm(test_farm())
+        .start()
+        .unwrap();
     let client = server.client();
     std::thread::scope(|s| {
         let good = s.spawn(|| client.infer("mix", &[1, 2, 3]));
@@ -144,19 +371,38 @@ fn accel_bad_request_fails_alone_not_its_batchmates() {
 
 #[test]
 fn accel_clean_shutdown_then_rejects_new_requests() {
-    let server = Server::start_with_models(vec![tiny_model("s", false)], accel_opts()).unwrap();
+    let server = Server::builder()
+        .models(vec![tiny_model("s", false)])
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .farm(test_farm())
+        .start()
+        .unwrap();
     let client = server.client();
     client.infer("s", &[1, 2, 3]).unwrap();
-    drop(server); // joins dispatcher, which drops (and joins) the farm
+    // shutdown joins the dispatcher, which drops (and joins) the farm
+    server.shutdown().unwrap();
     let err = client.infer("s", &[1, 2, 3]).unwrap_err();
-    assert!(err.to_string().contains("server is down"), "{err}");
+    assert_eq!(err, ServeError::ServerDown);
 }
 
+// ------------------------------------------------------ deprecated shims
+
 #[test]
-fn start_with_models_rejects_pjrt_and_empty() {
-    let opts = ServerOpts { backend: Backend::Pjrt, ..Default::default() };
-    assert!(Server::start_with_models(vec![tiny_model("x", false)], opts).is_err());
-    assert!(Server::start_with_models(vec![], native_opts()).is_err());
+#[allow(deprecated)]
+fn deprecated_server_opts_shims_still_serve() {
+    use flexsvm::coordinator::ServerOpts;
+    let opts = ServerOpts { linger: Duration::from_micros(200), ..Default::default() };
+    let server = Server::start_with_models(vec![tiny_model("old", false)], opts).unwrap();
+    let client = server.client();
+    let (key, model) = tiny_model("old", false);
+    let resp = client.infer(&key, &[5, 5, 5]).unwrap();
+    assert_eq!(resp.pred, infer::predict(&model, &[5, 5, 5]));
+    assert!(client.farm_metrics().unwrap().is_none(), "native engine has no farm");
+
+    let pjrt_opts = ServerOpts { backend: Backend::Pjrt, ..Default::default() };
+    assert!(Server::start_with_models(vec![tiny_model("x", false)], pjrt_opts).is_err());
+    assert!(Server::start_with_models(vec![], ServerOpts::default()).is_err());
 }
 
 // ------------------------------------------------------- artifact-backed
@@ -165,7 +411,11 @@ fn start_with_models_rejects_pjrt_and_empty() {
 fn native_backend_serves_correct_predictions() {
     let manifest = manifest_or_return!("native_backend_serves_correct_predictions");
     let keys = vec!["iris_ovr_w4".to_string(), "v3_ovo_w8".to_string()];
-    let server = Server::start(artifacts_root(), keys.clone(), native_opts()).unwrap();
+    let server = Server::builder()
+        .artifacts(artifacts_root(), keys.clone())
+        .linger(Duration::from_micros(200))
+        .start()
+        .unwrap();
     let client = server.client();
     for key in &keys {
         let entry = manifest.config(key).unwrap();
@@ -184,13 +434,17 @@ fn native_backend_serves_correct_predictions() {
 fn pjrt_and_native_backends_agree() {
     let manifest = manifest_or_return!("pjrt_and_native_backends_agree");
     let keys = vec!["seeds_ovo_w16".to_string()];
-    let pjrt = Server::start(
-        artifacts_root(),
-        keys.clone(),
-        ServerOpts { backend: Backend::Pjrt, ..native_opts() },
-    )
-    .unwrap();
-    let native = Server::start(artifacts_root(), keys.clone(), native_opts()).unwrap();
+    let pjrt = Server::builder()
+        .artifacts(artifacts_root(), keys.clone())
+        .backend(Backend::Pjrt)
+        .linger(Duration::from_micros(200))
+        .start()
+        .unwrap();
+    let native = Server::builder()
+        .artifacts(artifacts_root(), keys.clone())
+        .linger(Duration::from_micros(200))
+        .start()
+        .unwrap();
     let test = manifest.test_set("seeds").unwrap();
     let (pc, nc) = (pjrt.client(), native.client());
     for x in test.x_q.iter().take(30) {
@@ -204,17 +458,12 @@ fn pjrt_and_native_backends_agree() {
 fn batching_aggregates_concurrent_requests() {
     let manifest = manifest_or_return!("batching_aggregates_concurrent_requests");
     let key = "bs_ovr_w4".to_string();
-    let server = Server::start(
-        artifacts_root(),
-        vec![key.clone()],
-        ServerOpts {
-            backend: Backend::Native,
-            batch_max: 16,
-            linger: Duration::from_millis(5),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let server = Server::builder()
+        .artifacts(artifacts_root(), [key.clone()])
+        .batch_max(16)
+        .linger(Duration::from_millis(5))
+        .start()
+        .unwrap();
     let client = server.client();
     let test = manifest.test_set("bs").unwrap();
     let n = 64usize;
@@ -247,10 +496,14 @@ fn batching_aggregates_concurrent_requests() {
 
 #[test]
 fn unknown_config_is_rejected_per_request() {
-    let server =
-        Server::start_with_models(vec![tiny_model("known", false)], native_opts()).unwrap();
+    let server = Server::builder()
+        .models(vec![tiny_model("known", false)])
+        .linger(Duration::from_micros(200))
+        .start()
+        .unwrap();
     let client = server.client();
     let err = client.infer("nope_ovr_w4", &[0, 0, 0]).unwrap_err();
+    assert_eq!(err, ServeError::UnknownConfig("nope_ovr_w4".to_string()));
     assert!(err.to_string().contains("not served"), "{err}");
     // server still healthy afterwards
     let ok = client.infer("known", &[5, 5, 5]);
@@ -260,23 +513,19 @@ fn unknown_config_is_rejected_per_request() {
 #[test]
 fn server_start_fails_fast_on_bad_config() {
     let _ = manifest_or_return!("server_start_fails_fast_on_bad_config");
-    let err = Server::start(artifacts_root(), vec!["bogus".to_string()], native_opts());
+    let err = Server::builder().artifacts(artifacts_root(), ["bogus"]).start();
     assert!(err.is_err());
 }
 
 #[test]
 fn linger_flush_answers_single_requests() {
     // a lone request must not wait forever for batchmates
-    let server = Server::start_with_models(
-        vec![tiny_model("lone", false)],
-        ServerOpts {
-            backend: Backend::Native,
-            batch_max: 64,
-            linger: Duration::from_millis(1),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let server = Server::builder()
+        .models(vec![tiny_model("lone", false)])
+        .batch_max(64)
+        .linger(Duration::from_millis(1))
+        .start()
+        .unwrap();
     let client = server.client();
     let t0 = std::time::Instant::now();
     let resp = client.infer("lone", &[1, 2, 3]).unwrap();
