@@ -7,14 +7,14 @@ use flexsvm::accel::svm::SvmAccel;
 use flexsvm::accel::{pe, Cfu};
 use flexsvm::isa::svm_ops;
 use flexsvm::svm::pack;
-use flexsvm::util::benchkit::{manifest_or_skip, Bench};
+use flexsvm::util::benchkit::{manifest_or_skip, write_report, Bench};
 use flexsvm::util::Pcg32;
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Pcg32::seeded(0xbe);
 
     // --- PE datapath ---
-    let b = Bench::new("PE datapath (nibble-decomposed MAC)");
+    let mut b = Bench::new("PE datapath (nibble-decomposed MAC)");
     for mode in [pe::Mode::W4, pe::Mode::W8, pe::Mode::W16] {
         let qmax = (1i32 << (mode.bits() - 1)) - 1;
         let pairs: Vec<(u32, u32)> = (0..1024)
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- full accelerator instruction stream ---
-    let b2 = Bench::new("SvmAccel op stream (calc4 x 8 + res4)");
+    let mut b2 = Bench::new("SvmAccel op stream (calc4 x 8 + res4)");
     let mut accel = SvmAccel::new();
     let ops: Vec<(u32, u32)> = (0..8)
         .map(|_| {
@@ -58,9 +58,11 @@ fn main() -> anyhow::Result<()> {
 
     // --- packing ---
     let Some(manifest) = manifest_or_skip("bench_accel packing/PJRT sections") else {
+        let path = write_report("accel", &[&b, &b2])?;
+        println!("\nwrote {}", path.display());
         return Ok(());
     };
-    let b3 = Bench::new("operand packing (host side)");
+    let mut b3 = Bench::new("operand packing (host side)");
     let entry = manifest.config("derm_ovo_w16")?;
     let model = manifest.model(entry)?;
     let test = manifest.test_set("derm")?;
@@ -73,8 +75,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- PJRT compiled-graph execution (pjrt feature only) ---
     #[cfg(feature = "pjrt")]
-    {
-        let b4 = Bench::new("PJRT execution (AOT HLO on CPU client)");
+    let path = {
+        let mut b4 = Bench::new("PJRT execution (AOT HLO on CPU client)");
         let mut engine = flexsvm::runtime::Engine::new()?;
         for key in ["iris_ovr_w4", "derm_ovo_w16"] {
             let entry = manifest.config(key)?;
@@ -96,8 +98,13 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
-    }
+        write_report("accel", &[&b, &b2, &b3, &b4])?
+    };
     #[cfg(not(feature = "pjrt"))]
-    println!("\n(PJRT section skipped: built without the `pjrt` feature)");
+    let path = {
+        println!("\n(PJRT section skipped: built without the `pjrt` feature)");
+        write_report("accel", &[&b, &b2, &b3])?
+    };
+    println!("\nwrote {}", path.display());
     Ok(())
 }

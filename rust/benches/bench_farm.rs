@@ -21,7 +21,7 @@ use flexsvm::power::FlexicModel;
 use flexsvm::report::serving;
 use flexsvm::svm::QuantModel;
 use flexsvm::testing::gen;
-use flexsvm::util::benchkit::manifest_or_skip;
+use flexsvm::util::benchkit::{manifest_or_skip, quick, write_report, Bench};
 use flexsvm::util::{Pcg32, Table};
 
 const WORKERS: usize = 8;
@@ -80,7 +80,9 @@ where
 }
 
 fn main() -> anyhow::Result<()> {
-    let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(1_200);
+    let default_n = if quick() { 200 } else { 1_200 };
+    let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(default_n);
+    let mut report = Bench::new("farm serving (scenario x shard sweep)");
     let models = build_models();
     let n_cfg = models.len();
     let scenarios = [
@@ -122,6 +124,16 @@ fn main() -> anyhow::Result<()> {
                 format!("{}/{}", jobs.iter().max().unwrap(), jobs.iter().min().unwrap()),
                 lazy.to_string(),
             ]);
+            report.metric(
+                &format!("{} shards={shards} req/s", s.traffic.name()),
+                n as f64 / wall.as_secs_f64(),
+                "req/s",
+            );
+            report.metric(
+                &format!("{} shards={shards} sim throughput", s.traffic.name()),
+                m.total_sim_cycles() as f64 / wall.as_secs_f64() / 1e6,
+                "Mcyc/s",
+            );
         }
     }
     print!("{}", t.render());
@@ -144,11 +156,17 @@ fn main() -> anyhow::Result<()> {
     });
     assert_eq!(errors.load(Ordering::Relaxed), 0);
     println!("served {n} requests in {:.2}s = {:.0} req/s", wall.as_secs_f64(), n as f64 / wall.as_secs_f64());
+    report.metric("coordinator accel req/s", n as f64 / wall.as_secs_f64(), "req/s");
     let farm_metrics = client.engine_metrics()?.farm;
+    if let Some(fm) = farm_metrics.as_ref() {
+        report.metric("coordinator accel sim Mcyc", fm.total_sim_cycles() as f64 / 1e6, "Mcyc");
+    }
     print!(
         "{}",
         serving::render(&client.metrics()?, wall, farm_metrics.as_ref(), &FlexicModel::paper())
     );
     server.shutdown()?;
+    let path = write_report("farm", &[&report])?;
+    println!("wrote {}", path.display());
     Ok(())
 }

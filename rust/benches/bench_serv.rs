@@ -1,7 +1,12 @@
-//! SERV simulator performance (the L3 hot path of every Table-I run):
-//! simulated cycles/s and instructions/s over representative programs.
+//! SERV simulator performance (the L3 hot path of every Table-I run
+//! and of the farm's serving path): simulated cycles/s over
+//! representative programs, block-compiled engine vs step interpreter.
 //!
 //!     cargo bench --bench bench_serv
+//!
+//! Writes `BENCH_serv.json` at the repo root (cases, ns, Mcyc/s,
+//! block-vs-step speedups).  `FLEXSVM_BENCH_QUICK=1` runs a reduced
+//! iteration count (CI perf smoke).
 
 use flexsvm::isa::reg::*;
 use flexsvm::isa::Asm;
@@ -9,7 +14,7 @@ use flexsvm::program::run::ProgramRunner;
 use flexsvm::program::ProgramOpts;
 use flexsvm::serv::TimingConfig;
 use flexsvm::soc::Soc;
-use flexsvm::util::benchkit::{manifest_or_skip, Bench};
+use flexsvm::util::benchkit::{manifest_or_skip, write_report, Bench};
 
 /// A compute-heavy loop: N iterations of add/xor/shift/branch.
 fn alu_loop(n: i32) -> Asm {
@@ -49,35 +54,52 @@ fn mem_loop(n: i32) -> Asm {
 }
 
 fn main() -> anyhow::Result<()> {
-    let b = Bench::new("SERV simulator throughput");
+    let mut b = Bench::new("SERV simulator throughput: block engine vs step interpreter");
 
     for (name, asm) in [("alu_loop_5k", alu_loop(5000)), ("mem_loop_5k", mem_loop(5000))] {
         let image = asm.assemble_bytes()?;
+
+        // block-compiled engine: the translation is built once and
+        // survives rearm() — exactly the farm's warm-runner hot path
+        let mut blk = Soc::new(&image, TimingConfig::flexic());
         let mut cycles = 0u64;
         let mut instrs = 0u64;
-        let s = b.case(name, 2, 10, || {
-            let mut soc = Soc::new(&image, TimingConfig::flexic());
-            let r = soc.run(100_000_000).unwrap();
+        let s_blk = b.case(&format!("{name} block"), 2, 10, || {
+            blk.rearm();
+            let r = blk.run(100_000_000).unwrap();
             cycles = r.stats.total();
             instrs = r.stats.instret;
         });
+
+        // step interpreter (the traced path) on an identical SoC
+        let mut stp = Soc::new(&image, TimingConfig::flexic());
+        let mut cycles_step = 0u64;
+        let s_stp = b.case(&format!("{name} step"), 2, 10, || {
+            stp.rearm();
+            let r = stp.run_traced(100_000_000, None).unwrap();
+            cycles_step = r.stats.total();
+        });
+        assert_eq!(cycles, cycles_step, "{name}: engines must account identical cycles");
+
+        let mcyc_blk = cycles as f64 / s_blk.median.as_secs_f64() / 1e6;
+        let mcyc_stp = cycles_step as f64 / s_stp.median.as_secs_f64() / 1e6;
+        b.metric(&format!("{name} block"), mcyc_blk, "Mcyc/s");
+        b.metric(&format!("{name} step"), mcyc_stp, "Mcyc/s");
         b.metric(
-            &format!("{name} simulated"),
-            cycles as f64 / s.median.as_secs_f64() / 1e6,
-            "Mcyc/s",
-        );
-        b.metric(
-            &format!("{name} retired"),
-            instrs as f64 / s.median.as_secs_f64() / 1e6,
+            &format!("{name} retired (block)"),
+            instrs as f64 / s_blk.median.as_secs_f64() / 1e6,
             "Minstr/s",
         );
+        b.metric(&format!("{name} block/step speedup"), mcyc_blk / mcyc_stp, "x");
     }
 
     // end-to-end inference programs (what bench_table1 spends time in)
     let Some(manifest) = manifest_or_skip("bench_serv inference section") else {
+        let path = write_report("serv", &[&b])?;
+        println!("\nwrote {}", path.display());
         return Ok(());
     };
-    let b2 = Bench::new("inference program simulation");
+    let mut b2 = Bench::new("inference program simulation");
     for key in ["iris_ovr_w4", "derm_ovo_w16"] {
         let entry = manifest.config(key)?;
         let model = manifest.model(entry)?;
@@ -96,5 +118,7 @@ fn main() -> anyhow::Result<()> {
             acc.run_sample(x).unwrap();
         });
     }
+    let path = write_report("serv", &[&b, &b2])?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

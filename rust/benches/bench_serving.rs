@@ -10,11 +10,20 @@ use std::time::Duration;
 use flexsvm::coordinator::{Backend, Server};
 use flexsvm::svm::model::artifacts_root;
 use flexsvm::svm::TestSet;
-use flexsvm::util::benchkit::{drive_clients, latency_summary, load_testsets, manifest_or_skip};
+use flexsvm::util::benchkit::{
+    drive_clients, latency_summary, load_testsets, manifest_or_skip, quick, write_report, Bench,
+};
 use flexsvm::util::Table;
 
-const REQUESTS: usize = 8_000;
 const WORKERS: usize = 8;
+
+fn requests() -> usize {
+    if quick() {
+        800
+    } else {
+        8_000
+    }
+}
 
 fn drive(
     testsets: &[(String, TestSet)],
@@ -34,7 +43,7 @@ fn drive(
         .eager_flush(eager)
         .start()?;
     let client = server.client();
-    let r = drive_clients(&client, testsets, REQUESTS, WORKERS, None)?;
+    let r = drive_clients(&client, testsets, requests(), WORKERS, None)?;
     let s = latency_summary(&client.metrics()?);
     Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch))
 }
@@ -45,7 +54,8 @@ fn main() -> anyhow::Result<()> {
     };
     let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
     let testsets = load_testsets(&manifest, &keys)?;
-    println!("### coordinator serving: {REQUESTS} requests, {WORKERS} client threads");
+    println!("### coordinator serving: {} requests, {WORKERS} client threads", requests());
+    let mut report = Bench::new("coordinator serving (batch policy x backend)");
     #[cfg(feature = "pjrt")]
     let backends = [Backend::Pjrt, Backend::Native];
     #[cfg(not(feature = "pjrt"))]
@@ -56,6 +66,11 @@ fn main() -> anyhow::Result<()> {
             [(1usize, 0u64, false), (8, 200, false), (64, 500, false), (64, 2000, false), (64, 500, true)]
         {
             let (rps, p50, p99, mb) = drive(&testsets, backend, batch_max, linger_us, eager)?;
+            report.metric(
+                &format!("{backend} batch_max={batch_max} linger={linger_us}us eager={eager}"),
+                rps,
+                "req/s",
+            );
             t.row([
                 backend.to_string(),
                 batch_max.to_string(),
@@ -71,5 +86,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
     println!("\n(batch_max=1 is the no-batching baseline; PJRT gains come from batch formation.");
     println!(" The Accel backend has its own bench: cargo bench --bench bench_farm)");
+    let path = write_report("serving", &[&report])?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::engine::{batch_error, Engine, FarmEngine, ModelSource, NativeEngine};
-use crate::farm::{FarmMetrics, FarmOpts};
+use crate::farm::FarmOpts;
 use crate::svm::model::Manifest;
 use crate::svm::QuantModel;
 
@@ -170,12 +170,6 @@ impl Client {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx.send(Msg::EngineSnapshot(tx)).map_err(|_| ServeError::ServerDown)?;
         rx.recv().map_err(|_| ServeError::Dropped)
-    }
-
-    /// Shard-level farm statistics (None on engines without shards).
-    #[deprecated(note = "use `engine_metrics()?.farm`")]
-    pub fn farm_metrics(&self) -> Result<Option<FarmMetrics>, ServeError> {
-        Ok(self.engine_metrics()?.farm)
     }
 }
 
@@ -431,75 +425,6 @@ impl ServerBuilder {
             .spawn(move || dispatcher(engine, source, keys, tuning, rx, ready_tx))?;
         ready_rx.recv().context("dispatcher died during init")??;
         Ok(Server { tx, join: Some(join) })
-    }
-}
-
-// ------------------------------------------------- deprecated shims
-
-/// Server tuning knobs (legacy construction surface).
-#[deprecated(note = "use Server::builder()")]
-#[derive(Debug, Clone, Copy)]
-pub struct ServerOpts {
-    pub backend: Backend,
-    /// Max samples per flushed batch (≤ the compiled batch size).
-    pub batch_max: usize,
-    /// Compiled batch size to load (from the manifest's batch set).
-    pub compiled_batch: usize,
-    /// How long a request may wait for batchmates.
-    pub linger: Duration,
-    /// Bound of the ingress queue (backpressure).
-    pub queue_cap: usize,
-    /// Flush as soon as the ingress channel drains.
-    pub eager_flush: bool,
-    /// Farm knobs (Backend::Accel only).
-    pub farm: FarmOpts,
-}
-
-#[allow(deprecated)]
-impl Default for ServerOpts {
-    fn default() -> Self {
-        ServerOpts {
-            backend: Backend::Native,
-            batch_max: 64,
-            compiled_batch: 64,
-            linger: Duration::from_millis(2),
-            queue_cap: 1024,
-            eager_flush: true,
-            farm: FarmOpts::default(),
-        }
-    }
-}
-
-#[allow(deprecated)]
-impl ServerOpts {
-    fn into_builder(self) -> ServerBuilder {
-        Server::builder()
-            .backend(self.backend)
-            .batch_max(self.batch_max)
-            .compiled_batch(self.compiled_batch)
-            .linger(self.linger)
-            .queue_cap(self.queue_cap)
-            .eager_flush(self.eager_flush)
-            .farm(self.farm)
-    }
-}
-
-#[allow(deprecated)]
-impl Server {
-    /// Start a server for the given config keys of an artifact tree.
-    #[deprecated(note = "use Server::builder().artifacts(..)...start()")]
-    pub fn start(artifacts_root: PathBuf, keys: Vec<String>, opts: ServerOpts) -> Result<Server> {
-        opts.into_builder().artifacts(artifacts_root, keys).start()
-    }
-
-    /// Start a server over in-memory models (Native/Accel backends;
-    /// no artifacts on disk required).
-    #[deprecated(note = "use Server::builder().models(..)...start()")]
-    pub fn start_with_models(models: Vec<(String, QuantModel)>, opts: ServerOpts) -> Result<Server> {
-        if opts.backend == Backend::Pjrt {
-            bail!("start_with_models serves Native/Accel only — Pjrt needs on-disk artifacts");
-        }
-        opts.into_builder().models(models).start()
     }
 }
 

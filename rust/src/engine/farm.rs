@@ -2,6 +2,9 @@
 //! behind the [`Engine`] contract.  Every answer carries simulated
 //! cycles + FlexIC energy, baseline calibration feeds the
 //! accel-vs-baseline ratio, and `snapshot` exposes per-shard balance.
+//! Shards execute on the block-compiled SERV engine over one shared
+//! `Arc`'d translation per config (`warm` compiles each program
+//! exactly once), so requests never re-generate or re-decode anything.
 
 use anyhow::Result;
 

@@ -8,7 +8,12 @@
 //!
 //!  * **Shards** — each shard thread owns one `ProgramRunner` per
 //!    config it has served, kept warm across requests (no program
-//!    regeneration or SoC rebuild on the hot path).
+//!    regeneration or SoC rebuild on the hot path).  The generated
+//!    program is compiled (block-translated) **once per config** at
+//!    farm start — shards instantiate runners from the shared
+//!    `Arc<CompiledProgram>`, so neither warm-up nor spill loads
+//!    re-generate or re-decode anything, and `Soc::rearm` keeps the
+//!    translation across requests.
 //!  * **Affinity + least-loaded spill** — every config has a *home*
 //!    shard (round-robin at startup); jobs go home unless the home
 //!    queue is deeper than `spill_threshold`, in which case the
@@ -42,7 +47,7 @@ use std::sync::{mpsc, Arc};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::power::FlexicModel;
-use crate::program::run::ProgramRunner;
+use crate::program::run::{CompiledProgram, ProgramRunner};
 use crate::program::ProgramOpts;
 use crate::serv::TimingConfig;
 use crate::svm::QuantModel;
@@ -108,7 +113,9 @@ pub struct AccelOutput {
 
 struct FarmConfig {
     key: String,
-    model: QuantModel,
+    /// The accelerated program, generated and block-translated once;
+    /// every shard's runner executes this shared compilation.
+    program: Arc<CompiledProgram>,
     /// Home shard index (affinity: avoids reload churn).
     home: usize,
     /// Calibrated software-only cycles/inference (None when
@@ -216,17 +223,27 @@ impl Farm {
             }
         }
 
+        // generate + block-translate each accelerated program exactly
+        // once (in parallel across configs, like calibration); shards
+        // share the compilation through the Arc
+        let compiled: Vec<Result<Arc<CompiledProgram>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = models
+                .iter()
+                .map(|(_, m)| scope.spawn(move || CompiledProgram::accelerated(m, opts.program)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("program compile panicked")).collect()
+        });
         let configs: Vec<FarmConfig> = models
             .into_iter()
             .zip(baselines)
+            .zip(compiled)
             .enumerate()
-            .map(|(i, ((key, model), baseline_cycles))| FarmConfig {
-                key,
-                model,
-                home: i % n_shards,
-                baseline_cycles,
+            .map(|(i, (((key, _), baseline_cycles), program))| -> Result<FarmConfig> {
+                let program =
+                    program.with_context(|| format!("compiling program for config {key:?}"))?;
+                Ok(FarmConfig { key, program, home: i % n_shards, baseline_cycles })
             })
-            .collect();
+            .collect::<Result<_>>()?;
         let configs = Arc::new(configs);
 
         let mut shards = Vec::with_capacity(n_shards);
@@ -278,6 +295,12 @@ impl Farm {
     /// The power model the farm charges energy with.
     pub fn power(&self) -> &FlexicModel {
         &self.power
+    }
+
+    /// The compiled (generated + block-translated) program a config is
+    /// served with — one per config, shared by every shard's runner.
+    pub fn compiled(&self, key: &str) -> Option<Arc<CompiledProgram>> {
+        self.index.get(key).map(|&i| Arc::clone(&self.configs[i].program))
     }
 
     pub fn metrics(&self) -> FarmMetrics {
@@ -389,14 +412,15 @@ fn shard_main(
     counters: Arc<ShardCounters>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
-    // warm start: build the accelerated program for every home config
-    // before reporting ready (no first-request jank)
+    // warm start: instantiate a runner over the shared compiled
+    // program for every home config before reporting ready (no
+    // first-request jank; no per-shard generation or re-decoding)
     let mut runners: HashMap<usize, ProgramRunner> = HashMap::new();
     let warm = (|| -> Result<()> {
         for (ci, c) in configs.iter().enumerate() {
             if c.home == shard_idx {
                 counters.model_loads.fetch_add(1, Ordering::Relaxed);
-                runners.insert(ci, ProgramRunner::accelerated(&c.model, opts.timing, opts.program)?);
+                runners.insert(ci, ProgramRunner::from_compiled(&c.program, opts.timing)?);
             }
         }
         Ok(())
@@ -417,9 +441,10 @@ fn shard_main(
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                 std::collections::hash_map::Entry::Vacant(v) => {
                     // spill load: this shard was not the config's home
+                    // (still no re-compilation — the translation is shared)
                     counters.model_loads.fetch_add(1, Ordering::Relaxed);
                     let c = &configs[job.cfg];
-                    v.insert(ProgramRunner::accelerated(&c.model, opts.timing, opts.program)?)
+                    v.insert(ProgramRunner::from_compiled(&c.program, opts.timing)?)
                 }
             };
             let (pred, stats) = runner.run_sample(&job.features)?;
@@ -522,6 +547,25 @@ mod tests {
         drop(farm); // must drain both jobs, then join
         assert!(rx1.recv().unwrap().is_ok());
         assert!(rx2.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn translation_shared_and_no_per_request_reloads() {
+        let farm = Farm::start(vec![tiny("a", false)], FarmOpts { shards: 1, ..fast_opts() }).unwrap();
+        for _ in 0..24 {
+            farm.predict("a", &[1, 2, 3]).unwrap();
+        }
+        let m = farm.metrics();
+        assert_eq!(m.total_jobs(), 24);
+        let loads: u64 = m.shards.iter().map(|s| s.model_loads).sum();
+        assert_eq!(loads, 1, "one warm load; requests must not re-load or re-decode");
+        // the shard's runner executes the farm's shared translation
+        let c = farm.compiled("a").expect("served config has a compiled program");
+        assert!(
+            Arc::strong_count(c.decoded()) >= 2,
+            "decoded program shared: the compiled program + the shard runner's SoC"
+        );
+        assert!(farm.compiled("nope").is_none());
     }
 
     #[test]

@@ -1,11 +1,20 @@
 //! Host-side harness: build a program, load it into an SoC, feed test
 //! samples, collect per-inference cycle statistics.
+//!
+//! [`CompiledProgram`] is the build-once artifact: generated machine
+//! code plus its block translation ([`crate::soc::DecodedProgram`]) in
+//! an `Arc`.  Any number of [`ProgramRunner`]s (e.g. the farm's
+//! shards) instantiate from the same compiled program without
+//! re-generating or re-decoding anything — each runner only allocates
+//! its own SoC memory.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::accel::svm::SvmAccel;
 use crate::serv::{CycleStats, Exit, TimingConfig};
-use crate::soc::Soc;
+use crate::soc::{DecodedProgram, Soc};
 use crate::svm::model::QuantModel;
 use crate::svm::pack;
 
@@ -14,11 +23,56 @@ use super::{accel, baseline, BuiltProgram, ProgramKind, ProgramOpts};
 /// Default per-inference cycle budget (Dermatology baseline runs ~10^7).
 pub const DEFAULT_BUDGET: u64 = 500_000_000;
 
-pub struct ProgramRunner {
-    soc: Soc,
+/// A generated inference program compiled (block-translated) exactly
+/// once, shareable across any number of runners and farm shards.
+pub struct CompiledProgram {
     prog: BuiltProgram,
+    decoded: Arc<DecodedProgram>,
     bits: u8,
     n_features: usize,
+}
+
+impl CompiledProgram {
+    /// Compile the software-only ("w/o accel") program for a model.
+    pub fn baseline(m: &QuantModel) -> Result<Arc<CompiledProgram>> {
+        let prog = baseline::build(m)?;
+        Ok(Arc::new(CompiledProgram {
+            decoded: Arc::new(DecodedProgram::translate(&prog.image)),
+            prog,
+            bits: m.bits,
+            n_features: m.n_features,
+        }))
+    }
+
+    /// Compile the accelerated (Algorithm 1) program for a model.
+    pub fn accelerated(m: &QuantModel, opts: ProgramOpts) -> Result<Arc<CompiledProgram>> {
+        let prog = accel::build(m, opts)?;
+        Ok(Arc::new(CompiledProgram {
+            decoded: Arc::new(DecodedProgram::translate(&prog.image)),
+            prog,
+            bits: m.bits,
+            n_features: m.n_features,
+        }))
+    }
+
+    pub fn kind(&self) -> ProgramKind {
+        self.prog.kind
+    }
+
+    pub fn built(&self) -> &BuiltProgram {
+        &self.prog
+    }
+
+    /// The shared block translation (one per compiled program, however
+    /// many runners execute it).
+    pub fn decoded(&self) -> &Arc<DecodedProgram> {
+        &self.decoded
+    }
+}
+
+pub struct ProgramRunner {
+    soc: Soc,
+    prog: Arc<CompiledProgram>,
     budget: u64,
 }
 
@@ -27,25 +81,31 @@ impl ProgramRunner {
     /// if the program tried to issue an accelerator instruction the SoC
     /// would fault, proving the baseline really is pure RV32I.
     pub fn baseline(m: &QuantModel, timing: TimingConfig) -> Result<ProgramRunner> {
-        let prog = baseline::build(m)?;
-        let soc = Soc::new(&prog.image, timing);
-        Ok(ProgramRunner { soc, prog, bits: m.bits, n_features: m.n_features, budget: DEFAULT_BUDGET })
+        Self::from_compiled(&CompiledProgram::baseline(m)?, timing)
     }
 
     /// Accelerated configuration: SVM CFU at funct7 = 1.
     pub fn accelerated(m: &QuantModel, timing: TimingConfig, opts: ProgramOpts) -> Result<ProgramRunner> {
-        let prog = accel::build(m, opts)?;
-        let mut soc = Soc::new(&prog.image, timing);
-        soc.register_cfu(crate::isa::CFU_FUNCT7_SVM, Box::new(SvmAccel::new()))?;
-        Ok(ProgramRunner { soc, prog, bits: m.bits, n_features: m.n_features, budget: DEFAULT_BUDGET })
+        Self::from_compiled(&CompiledProgram::accelerated(m, opts)?, timing)
+    }
+
+    /// Instantiate a runner from an already-compiled program: no
+    /// program generation, no decode — just a fresh SoC over the
+    /// shared translation.
+    pub fn from_compiled(c: &Arc<CompiledProgram>, timing: TimingConfig) -> Result<ProgramRunner> {
+        let mut soc = Soc::with_program(Arc::clone(c.decoded()), timing);
+        if c.kind() == ProgramKind::Accelerated {
+            soc.register_cfu(crate::isa::CFU_FUNCT7_SVM, Box::new(SvmAccel::new()))?;
+        }
+        Ok(ProgramRunner { soc, prog: Arc::clone(c), budget: DEFAULT_BUDGET })
     }
 
     pub fn kind(&self) -> ProgramKind {
-        self.prog.kind
+        self.prog.kind()
     }
 
     pub fn program(&self) -> &BuiltProgram {
-        &self.prog
+        self.prog.built()
     }
 
     pub fn set_budget(&mut self, cycles: u64) {
@@ -59,18 +119,19 @@ impl ProgramRunner {
 
     /// Write the feature words for one sample into the program's buffer.
     pub fn poke_features(&mut self, x_q: &[i32]) -> Result<()> {
-        if x_q.len() != self.n_features {
-            bail!("expected {} features, got {}", self.n_features, x_q.len());
+        if x_q.len() != self.prog.n_features {
+            bail!("expected {} features, got {}", self.prog.n_features, x_q.len());
         }
         if x_q.iter().any(|&v| !(0..=15).contains(&v)) {
             bail!("features must be 4-bit unsigned");
         }
-        let words: Vec<u32> = match self.prog.kind {
+        let built = self.prog.built();
+        let words: Vec<u32> = match built.kind {
             ProgramKind::Baseline => x_q.iter().map(|&v| v as u32).collect(),
-            ProgramKind::Accelerated => pack::feature_words(x_q, self.bits),
+            ProgramKind::Accelerated => pack::feature_words(x_q, self.prog.bits),
         };
-        debug_assert_eq!(words.len(), self.prog.n_feature_words);
-        self.soc.mem.poke_words(self.prog.feature_addr, &words);
+        debug_assert_eq!(words.len(), built.n_feature_words);
+        self.soc.mem.poke_words(built.feature_addr, &words);
         Ok(())
     }
 
@@ -166,6 +227,21 @@ mod tests {
         let mut r = ProgramRunner::baseline(&m, TimingConfig::ideal_mem()).unwrap();
         assert!(r.run_sample(&[16, 0]).is_err());
         assert!(r.run_sample(&[1]).is_err());
+    }
+
+    #[test]
+    fn runners_share_one_compiled_translation() {
+        let m = tiny_model();
+        let c = CompiledProgram::accelerated(&m, ProgramOpts::default()).unwrap();
+        let mut r1 = ProgramRunner::from_compiled(&c, TimingConfig::ideal_mem()).unwrap();
+        let mut r2 = ProgramRunner::from_compiled(&c, TimingConfig::ideal_mem()).unwrap();
+        // both SoCs execute the same Arc'd DecodedProgram
+        assert!(Arc::ptr_eq(r1.soc_mut().program(), r2.soc_mut().program()));
+        assert!(Arc::strong_count(c.decoded()) >= 3, "compiled + two runners");
+        let (p1, s1) = r1.run_sample(&[9, 2]).unwrap();
+        let (p2, s2) = r2.run_sample(&[9, 2]).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -74,6 +74,21 @@ impl ServCore {
         ServCore { regs: [0; 32], pc, decode_cache: Vec::new() }
     }
 
+    /// Reset architectural state (registers + PC) for another run of
+    /// the same image.  The decode cache is *kept*: entries are
+    /// memoised against the raw fetched word, so they stay valid
+    /// across runs and a re-armed core does not re-decode the image.
+    pub fn reset(&mut self, pc: u32) {
+        self.regs = [0; 32];
+        self.pc = pc;
+    }
+
+    /// Decode-cache occupancy (tests pin that `reset` keeps it).
+    #[cfg(test)]
+    pub(crate) fn decode_cache_entries(&self) -> usize {
+        self.decode_cache.iter().filter(|(raw, _)| *raw != CACHE_EMPTY).count()
+    }
+
     #[inline]
     fn rd_write(&mut self, rd: u8, value: u32) {
         if rd != 0 {

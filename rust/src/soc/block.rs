@@ -1,0 +1,662 @@
+//! Block-compiled SERV execution engine (EXPERIMENTS.md §Perf, L3
+//! iteration 6).
+//!
+//! The step interpreter ([`crate::serv::ServCore::step`]) pays a fetch
+//! bus transaction, a decode-cache probe, a full `StepInfo` and several
+//! `CycleStats` field updates for *every* retired instruction.  None of
+//! that work depends on run-time values: the instruction stream of a
+//! loaded image is fixed, and on the bit-serial SERV almost every cycle
+//! cost is static — the fetch transaction, the 32-cycle serial ALU
+//! passes, the load/store memory latencies and the shift-in cost are
+//! all known per instruction at translation time.
+//!
+//! So the image is translated **once** into a [`DecodedProgram`]: a
+//! dense `Vec` of pre-decoded micro-ops indexed by `pc/4`, partitioned
+//! into basic blocks (maximal straight-line runs cut after control
+//! flow and before undecodable words), with the static cycle cost of
+//! every block suffix precomputed.  Execution then runs block-at-a-time
+//! in a tight loop: one `CycleStats` update per block, no fetch calls,
+//! no `StepInfo`.  Only genuinely dynamic costs are accounted at run
+//! time: taken-branch PC updates, register-count shifts (`sll/srl/sra`
+//! with the amount in rs2), and the CFU handshake + accelerator compute.
+//! The accounting is **bit-identical** to the step interpreter —
+//! `rust/tests/proptests.rs` pins exit value, registers and the full
+//! `CycleStats` on random programs and random quantized models.
+//!
+//! The `DecodedProgram` is immutable and lives in an `Arc`, so the farm
+//! shares one translation across all shards and `Soc::rearm` keeps it
+//! across runs.  Per-SoC mutable state lives in [`BlockCtx`]:
+//!
+//!  * **Self-modifying code.**  A store into a slot covered by a
+//!    translated block ends the current block (its unexecuted suffix is
+//!    discounted), marks the slot dirty, and drops the overlay cache.
+//!    Blocks intersecting dirty slots are re-translated from memory
+//!    into per-SoC owned blocks, so patched instructions execute with
+//!    their new semantics and costs — exactly like the interpreter's
+//!    raw-word-keyed decode cache, at block granularity.
+//!  * **Untranslated regions.**  Entry at an undecodable slot or past
+//!    the image falls back to the step interpreter one instruction at a
+//!    time (its decode cache re-validates against the raw word, so code
+//!    written into data regions at run time stays correct).
+//!
+//! Host-side `mem.poke*` writes bypass the simulated store path, so
+//! they must only touch data (feature buffers), never executed text —
+//! the same contract the generators already follow.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::accel::CfuBank;
+use crate::isa::{self, AluOp, BranchOp, Instr, LoadOp, StoreOp};
+use crate::serv::{CycleStats, Exit, ServCore, TimingConfig};
+
+use super::mem::Memory;
+use super::RunResult;
+
+/// Pre-decoded micro-op: the run-time-relevant fields of an
+/// instruction with everything PC-relative folded in at translation
+/// time (AUIPC values, JAL/branch targets, link addresses).
+#[derive(Debug, Clone, Copy)]
+enum UOp {
+    Lui { rd: u8, imm: u32 },
+    /// AUIPC with `pc + imm` precomputed.
+    Auipc { rd: u8, value: u32 },
+    Jal { rd: u8, link: u32, target: u32 },
+    Jalr { rd: u8, rs1: u8, link: u32, offset: u32 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, target: u32 },
+    Load { op: LoadOp, rd: u8, rs1: u8, offset: u32 },
+    Store { size: u8, rs1: u8, rs2: u8, offset: u32 },
+    AluImm { op: AluOp, rd: u8, rs1: u8, imm: u32 },
+    AluReg { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    Cfu { funct7: u8, funct3: u8, rd: u8, rs1: u8, rs2: u8 },
+    Fence,
+    Ecall,
+    Ebreak,
+    /// Word that does not decode (data, or garbage): never part of a
+    /// block; entering here falls back to the step interpreter.
+    Invalid,
+}
+
+fn lower(instr: Instr, pc: u32) -> UOp {
+    match instr {
+        Instr::Lui { rd, imm } => UOp::Lui { rd, imm: imm as u32 },
+        Instr::Auipc { rd, imm } => UOp::Auipc { rd, value: pc.wrapping_add(imm as u32) },
+        Instr::Jal { rd, offset } => {
+            UOp::Jal { rd, link: pc.wrapping_add(4), target: pc.wrapping_add(offset as u32) }
+        }
+        Instr::Jalr { rd, rs1, offset } => {
+            UOp::Jalr { rd, rs1, link: pc.wrapping_add(4), offset: offset as u32 }
+        }
+        Instr::Branch { op, rs1, rs2, offset } => {
+            UOp::Branch { op, rs1, rs2, target: pc.wrapping_add(offset as u32) }
+        }
+        Instr::Load { op, rd, rs1, offset } => UOp::Load { op, rd, rs1, offset: offset as u32 },
+        Instr::Store { op, rs1, rs2, offset } => {
+            let size = match op {
+                StoreOp::Sb => 1,
+                StoreOp::Sh => 2,
+                StoreOp::Sw => 4,
+            };
+            UOp::Store { size, rs1, rs2, offset: offset as u32 }
+        }
+        Instr::OpImm { op, rd, rs1, imm } => UOp::AluImm { op, rd, rs1, imm: imm as u32 },
+        Instr::Op { op, rd, rs1, rs2 } => UOp::AluReg { op, rd, rs1, rs2 },
+        Instr::Custom { funct7, funct3, rd, rs1, rs2 } => {
+            UOp::Cfu { funct7, funct3, rd, rs1, rs2 }
+        }
+        Instr::Fence => UOp::Fence,
+        Instr::Ecall => UOp::Ecall,
+        Instr::Ebreak => UOp::Ebreak,
+    }
+}
+
+/// Control flow ends a basic block.
+fn is_terminator(u: UOp) -> bool {
+    matches!(
+        u,
+        UOp::Jal { .. } | UOp::Jalr { .. } | UOp::Branch { .. } | UOp::Ecall | UOp::Ebreak
+    )
+}
+
+/// Timing-independent static cost of a block suffix, aggregated at
+/// translation time.  [`charge`](StaticCost::charge) turns it into the
+/// same `CycleStats` the step interpreter would have accumulated
+/// (dynamic costs — taken branches, register-count shifts, CFU — are
+/// added separately at run time).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct StaticCost {
+    /// Retired instructions (also the number of fetch transactions).
+    n: u32,
+    /// Serial execute cycles excluding the per-load shift-in cost.
+    exec: u32,
+    loads: u32,
+    stores: u32,
+}
+
+impl StaticCost {
+    fn of(u: UOp) -> StaticCost {
+        let mut c = StaticCost { n: 1, exec: 32, loads: 0, stores: 0 };
+        match u {
+            UOp::Load { .. } => c.loads = 1,
+            UOp::Store { .. } => c.stores = 1,
+            UOp::AluImm { op: AluOp::Sll | AluOp::Srl | AluOp::Sra, imm, .. } => {
+                // immediate shift amount is known at translation time
+                c.exec += imm & 0x1f;
+            }
+            // CFU cost is entirely dynamic (handshake + compute)
+            UOp::Cfu { .. } => c.exec = 0,
+            _ => {}
+        }
+        c
+    }
+
+    fn add(&mut self, o: StaticCost) {
+        self.n += o.n;
+        self.exec += o.exec;
+        self.loads += o.loads;
+        self.stores += o.stores;
+    }
+
+    fn minus(self, o: StaticCost) -> StaticCost {
+        StaticCost {
+            n: self.n - o.n,
+            exec: self.exec - o.exec,
+            loads: self.loads - o.loads,
+            stores: self.stores - o.stores,
+        }
+    }
+
+    fn charge(self, t: &TimingConfig, stats: &mut CycleStats) {
+        let (n, loads, stores) = (self.n as u64, self.loads as u64, self.stores as u64);
+        stats.fetch += n * t.fetch_cost();
+        stats.exec += self.exec as u64 + loads * t.load_shift_in;
+        stats.data_mem += loads * t.load_cost() + stores * t.store_cost();
+        stats.loads += loads;
+        stats.stores += stores;
+        stats.instret += n;
+    }
+}
+
+/// An image translated once: per-slot (`pc/4`) micro-ops, basic-block
+/// partition, and precomputed static cycle cost for every block suffix.
+/// Immutable — share it with `Arc` across SoCs/shards and across
+/// `Soc::rearm` calls.
+pub struct DecodedProgram {
+    image: Vec<u8>,
+    uops: Vec<UOp>,
+    /// Static cost from each slot to the end of its basic block
+    /// (inclusive); zero for `Invalid` slots.
+    suffix: Vec<StaticCost>,
+    /// Inclusive last slot of the basic block containing each slot.
+    block_end: Vec<u32>,
+}
+
+impl DecodedProgram {
+    /// Decode and block-partition a program image.  Words that do not
+    /// decode (data sections, padding) become `Invalid` boundary
+    /// markers; they are never part of a block.
+    pub fn translate(image: &[u8]) -> DecodedProgram {
+        let n = image.len() / 4;
+        let mut uops = Vec::with_capacity(n);
+        for s in 0..n {
+            let word = u32::from_le_bytes(image[s * 4..s * 4 + 4].try_into().unwrap());
+            let pc = (s as u32) * 4;
+            uops.push(match isa::decode(word) {
+                Ok(i) => lower(i, pc),
+                Err(_) => UOp::Invalid,
+            });
+        }
+        let mut suffix = vec![StaticCost::default(); n];
+        let mut block_end = vec![0u32; n];
+        for s in (0..n).rev() {
+            block_end[s] = s as u32;
+            let u = uops[s];
+            if matches!(u, UOp::Invalid) {
+                continue; // zero suffix, own (degenerate) block
+            }
+            let mut c = StaticCost::of(u);
+            if !is_terminator(u) && s + 1 < n && !matches!(uops[s + 1], UOp::Invalid) {
+                c.add(suffix[s + 1]);
+                block_end[s] = block_end[s + 1];
+            }
+            suffix[s] = c;
+        }
+        DecodedProgram { image: image.to_vec(), uops, suffix, block_end }
+    }
+
+    /// The original image bytes (memory initialisation).
+    pub fn image(&self) -> &[u8] {
+        &self.image
+    }
+
+    /// Number of translated word slots.
+    pub fn n_slots(&self) -> usize {
+        self.uops.len()
+    }
+
+    /// Number of basic blocks (excluding `Invalid` boundary slots).
+    pub fn n_blocks(&self) -> usize {
+        let mut n = 0;
+        let mut s = 0;
+        while s < self.uops.len() {
+            if !matches!(self.uops[s], UOp::Invalid) {
+                n += 1;
+            }
+            s = self.block_end[s] as usize + 1;
+        }
+        n
+    }
+}
+
+/// A block re-translated from *memory* after self-modifying code
+/// diverged it from the baked image (per-SoC, not shared).
+struct OwnedBlock {
+    uops: Vec<UOp>,
+    suffix: Vec<StaticCost>,
+}
+
+fn translate_owned(mem: &Memory, start: usize, limit: usize) -> OwnedBlock {
+    let mut uops = Vec::new();
+    for s in start..limit {
+        let word = mem.peek32((s as u32) * 4);
+        let Ok(instr) = isa::decode(word) else { break };
+        let u = lower(instr, (s as u32) * 4);
+        uops.push(u);
+        if is_terminator(u) {
+            break;
+        }
+    }
+    let mut suffix = vec![StaticCost::default(); uops.len()];
+    for k in (0..uops.len()).rev() {
+        let mut c = StaticCost::of(uops[k]);
+        if k + 1 < uops.len() {
+            c.add(suffix[k + 1]);
+        }
+        suffix[k] = c;
+    }
+    OwnedBlock { uops, suffix }
+}
+
+/// Per-SoC mutable execution state for the block engine: which slots
+/// are covered by a translation (so stores there must invalidate),
+/// which slots have diverged from the baked image, and the re-translated
+/// overlay blocks for diverged regions.
+pub(crate) struct BlockCtx {
+    covered: Vec<u64>,
+    dirty: HashSet<u32>,
+    overlay: HashMap<u32, OwnedBlock>,
+}
+
+fn bit(v: &[u64], s: usize) -> bool {
+    s / 64 < v.len() && (v[s / 64] >> (s % 64)) & 1 == 1
+}
+
+fn set_bit(v: &mut [u64], s: usize) {
+    if s / 64 < v.len() {
+        v[s / 64] |= 1 << (s % 64);
+    }
+}
+
+impl BlockCtx {
+    pub(crate) fn new(prog: &DecodedProgram) -> BlockCtx {
+        let n = prog.n_slots();
+        let mut covered = vec![0u64; n.div_ceil(64)];
+        for (s, u) in prog.uops.iter().enumerate() {
+            if !matches!(u, UOp::Invalid) {
+                set_bit(&mut covered, s);
+            }
+        }
+        BlockCtx { covered, dirty: HashSet::new(), overlay: HashMap::new() }
+    }
+}
+
+/// How a block finished.
+enum BlockExit {
+    /// Control transfer (or fall-through) to this PC.
+    Jump(u32),
+    /// Program exit; PC after the exiting instruction.
+    Done(Exit, u32),
+    /// A store hit a translated slot: block ended early (unexecuted
+    /// suffix discounted), caller must invalidate and resume.
+    Smc { next_pc: u32, slot: u32 },
+}
+
+#[inline]
+fn r(regs: &[u32; 32], i: u8) -> u32 {
+    regs[(i & 31) as usize]
+}
+
+#[inline]
+fn w(regs: &mut [u32; 32], rd: u8, value: u32) {
+    if rd != 0 {
+        regs[(rd & 31) as usize] = value;
+    }
+}
+
+#[inline]
+fn alu_value(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Sll => a << (b & 0x1f),
+        AluOp::Srl => a >> (b & 0x1f),
+        AluOp::Sra => ((a as i32) >> (b & 0x1f)) as u32,
+    }
+}
+
+/// Execute one basic block entered at `base_slot`.  Charges the static
+/// suffix cost (minus any unexecuted remainder on an SMC abort) plus
+/// the dynamic costs in a single `stats` update.
+#[allow(clippy::too_many_arguments)]
+fn exec_block(
+    base_slot: usize,
+    uops: &[UOp],
+    suffix: &[StaticCost],
+    covered: &[u64],
+    regs: &mut [u32; 32],
+    mem: &mut Memory,
+    cfus: &mut CfuBank,
+    t: &TimingConfig,
+    stats: &mut CycleStats,
+) -> Result<BlockExit> {
+    let mut charged = suffix[0];
+    let mut dyn_exec = 0u64;
+    let mut cfu_cyc = 0u64;
+    let mut cfu_n = 0u64;
+    let mut ended = None;
+    for (k, uop) in uops.iter().enumerate() {
+        let pc = ((base_slot + k) as u32) << 2;
+        match *uop {
+            UOp::Lui { rd, imm } => w(regs, rd, imm),
+            UOp::Auipc { rd, value } => w(regs, rd, value),
+            UOp::AluImm { op, rd, rs1, imm } => {
+                let v = alu_value(op, r(regs, rs1), imm);
+                w(regs, rd, v);
+            }
+            UOp::AluReg { op, rd, rs1, rs2 } => {
+                let b = r(regs, rs2);
+                if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                    // register-count shift: circulation cycles are dynamic
+                    dyn_exec += (b & 0x1f) as u64;
+                }
+                let v = alu_value(op, r(regs, rs1), b);
+                w(regs, rd, v);
+            }
+            UOp::Load { op, rd, rs1, offset } => {
+                let addr = r(regs, rs1).wrapping_add(offset);
+                let (size, signed) = match op {
+                    LoadOp::Lb => (1, true),
+                    LoadOp::Lbu => (1, false),
+                    LoadOp::Lh => (2, true),
+                    LoadOp::Lhu => (2, false),
+                    LoadOp::Lw => (4, false),
+                };
+                let raw = crate::serv::Bus::load(mem, addr, size)?;
+                let value = if signed {
+                    match size {
+                        1 => raw as u8 as i8 as i32 as u32,
+                        2 => raw as u16 as i16 as i32 as u32,
+                        _ => raw,
+                    }
+                } else {
+                    raw
+                };
+                w(regs, rd, value);
+            }
+            UOp::Store { size, rs1, rs2, offset } => {
+                let addr = r(regs, rs1).wrapping_add(offset);
+                let slot = (addr >> 2) as usize;
+                // raw-word-keyed like the step decode cache: only a
+                // store that actually CHANGES a translated word
+                // invalidates (covered slots are always in peek range)
+                let watched = bit(covered, slot);
+                let before = if watched { mem.peek32(addr & !3) } else { 0 };
+                crate::serv::Bus::store(mem, addr, r(regs, rs2), size)?;
+                if watched && mem.peek32(addr & !3) != before {
+                    // self-modifying code: stop before the (now stale)
+                    // rest of this block and let the caller re-translate
+                    if k + 1 < uops.len() {
+                        charged = charged.minus(suffix[k + 1]);
+                    }
+                    ended =
+                        Some(BlockExit::Smc { next_pc: pc.wrapping_add(4), slot: slot as u32 });
+                    break;
+                }
+            }
+            UOp::Jal { rd, link, target } => {
+                w(regs, rd, link);
+                ended = Some(BlockExit::Jump(target));
+                break;
+            }
+            UOp::Jalr { rd, rs1, link, offset } => {
+                let target = r(regs, rs1).wrapping_add(offset) & !1;
+                w(regs, rd, link);
+                ended = Some(BlockExit::Jump(target));
+                break;
+            }
+            UOp::Branch { op, rs1, rs2, target } => {
+                let a = r(regs, rs1);
+                let b = r(regs, rs2);
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                let next = if taken {
+                    dyn_exec += t.branch_taken_extra;
+                    target
+                } else {
+                    pc.wrapping_add(4)
+                };
+                ended = Some(BlockExit::Jump(next));
+                break;
+            }
+            UOp::Cfu { funct7, funct3, rd, rs1, rs2 } => {
+                let a = r(regs, rs1);
+                let b = r(regs, rs2);
+                let cfu = cfus.get_mut(funct7).ok_or_else(|| {
+                    anyhow!("no CFU registered for funct7={funct7} at pc {pc:#010x}")
+                })?;
+                let out = cfu.execute(funct3, a, b)?;
+                let mut c = t.cfu_setup + t.cfu_tx + out.compute_cycles;
+                if rd != 0 {
+                    c += t.cfu_wb;
+                    w(regs, rd, out.value);
+                }
+                cfu_cyc += c;
+                cfu_n += 1;
+            }
+            UOp::Fence => {}
+            UOp::Ecall => {
+                ended = Some(BlockExit::Done(
+                    Exit::Ecall { a0: r(regs, 10), a1: r(regs, 11) },
+                    pc.wrapping_add(4),
+                ));
+                break;
+            }
+            UOp::Ebreak => {
+                ended = Some(BlockExit::Done(Exit::Ebreak, pc.wrapping_add(4)));
+                break;
+            }
+            UOp::Invalid => {
+                // blocks are cut before undecodable words at translation
+                bail!("block engine entered an untranslated word at pc {pc:#010x}");
+            }
+        }
+    }
+    // fall-through off the end of the block (next slot starts a new one)
+    let ended =
+        ended.unwrap_or_else(|| BlockExit::Jump(((base_slot + uops.len()) as u32) << 2));
+    charged.charge(t, stats);
+    stats.exec += dyn_exec;
+    stats.cfu += cfu_cyc;
+    stats.cfu_ops += cfu_n;
+    mem.counters.ifetches += charged.n as u64;
+    Ok(ended)
+}
+
+/// Drive a program to completion block-at-a-time; bit-identical
+/// `CycleStats`, registers and exit value to the step interpreter.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_blocks(
+    prog: &DecodedProgram,
+    ctx: &mut BlockCtx,
+    core: &mut ServCore,
+    mem: &mut Memory,
+    cfus: &mut CfuBank,
+    t: &TimingConfig,
+    max_cycles: u64,
+) -> Result<RunResult> {
+    let mut stats = CycleStats::default();
+    loop {
+        let pc = core.pc;
+        if pc % 4 != 0 {
+            bail!("misaligned PC {pc:#010x}");
+        }
+        let slot = (pc / 4) as usize;
+        let translated = slot < prog.n_slots() && !matches!(prog.uops[slot], UOp::Invalid);
+        let mut ended = None;
+        if translated {
+            let end = prog.block_end[slot] as usize;
+            let needs_overlay = !ctx.dirty.is_empty()
+                && ctx.dirty.iter().any(|&d| slot as u32 <= d && d <= end as u32);
+            if needs_overlay {
+                if !ctx.overlay.contains_key(&(slot as u32)) {
+                    let ob = translate_owned(mem, slot, prog.n_slots());
+                    for s in slot..slot + ob.uops.len() {
+                        set_bit(&mut ctx.covered, s);
+                    }
+                    ctx.overlay.insert(slot as u32, ob);
+                }
+                let ob = &ctx.overlay[&(slot as u32)];
+                if !ob.uops.is_empty() {
+                    ended = Some(exec_block(
+                        slot,
+                        &ob.uops,
+                        &ob.suffix,
+                        &ctx.covered,
+                        &mut core.regs,
+                        mem,
+                        cfus,
+                        t,
+                        &mut stats,
+                    )?);
+                }
+            } else {
+                ended = Some(exec_block(
+                    slot,
+                    &prog.uops[slot..=end],
+                    &prog.suffix[slot..=end],
+                    &ctx.covered,
+                    &mut core.regs,
+                    mem,
+                    cfus,
+                    t,
+                    &mut stats,
+                )?);
+            }
+        }
+        match ended {
+            Some(BlockExit::Jump(next)) => core.pc = next,
+            Some(BlockExit::Smc { next_pc, slot }) => {
+                core.pc = next_pc;
+                ctx.dirty.insert(slot);
+                ctx.overlay.clear();
+            }
+            Some(BlockExit::Done(exit, next_pc)) => {
+                core.pc = next_pc;
+                return Ok(RunResult { exit, stats });
+            }
+            None => {
+                // untranslated (data word / past the image / patched to
+                // garbage): interpret one instruction — the step
+                // decoder re-validates against the raw memory word
+                let info = core.step(mem, cfus, t, &mut stats)?;
+                // interpreted stores can also self-modify translated
+                // text; stores don't write rd, so the EA is still
+                // computable from the post-step registers
+                if let Instr::Store { rs1, offset, .. } = info.instr {
+                    let s =
+                        (core.regs[rs1 as usize].wrapping_add(offset as u32) >> 2) as usize;
+                    if bit(&ctx.covered, s) {
+                        ctx.dirty.insert(s as u32);
+                        ctx.overlay.clear();
+                    }
+                }
+                if let Some(exit) = info.exit {
+                    return Ok(RunResult { exit, stats });
+                }
+            }
+        }
+        if stats.total() > max_cycles {
+            bail!(
+                "cycle budget exceeded ({max_cycles}) at pc {:#010x} after {} instructions",
+                core.pc,
+                stats.instret
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+    use crate::isa::Asm;
+
+    #[test]
+    fn translate_partitions_blocks() {
+        let mut a = Asm::new(0);
+        a.li(T0, 3); // addi
+        a.label("loop");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop"); // terminator
+        a.ecall(); // terminator
+        a.label("data");
+        a.zeros(2); // invalid words
+        let p = DecodedProgram::translate(&a.assemble_bytes().unwrap());
+        assert_eq!(p.n_slots(), 6);
+        // blocks: [li addi bne] [ecall]; two zero words are boundaries
+        assert_eq!(p.n_blocks(), 2);
+        assert_eq!(p.block_end[0], 2);
+        assert_eq!(p.block_end[1], 2);
+        assert_eq!(p.block_end[3], 3);
+        // suffix cost of the whole first block: 3 instrs, 3x32 exec
+        assert_eq!(p.suffix[0], StaticCost { n: 3, exec: 96, loads: 0, stores: 0 });
+        // mid-block entry (the loop back-edge target) covers 2 instrs
+        assert_eq!(p.suffix[1], StaticCost { n: 2, exec: 64, loads: 0, stores: 0 });
+        // invalid slots carry no cost
+        assert_eq!(p.suffix[4], StaticCost::default());
+    }
+
+    #[test]
+    fn static_cost_knows_imm_shift_amounts() {
+        let mut a = Asm::new(0);
+        a.slli(T0, T0, 9);
+        a.ecall();
+        let p = DecodedProgram::translate(&a.assemble_bytes().unwrap());
+        assert_eq!(p.suffix[0].exec, 32 + 9 + 32, "slli 9 + ecall");
+    }
+
+    #[test]
+    fn charge_matches_timing_components() {
+        let t = TimingConfig::flexic();
+        let c = StaticCost { n: 3, exec: 96, loads: 1, stores: 1 };
+        let mut stats = CycleStats::default();
+        c.charge(&t, &mut stats);
+        assert_eq!(stats.fetch, 3 * t.fetch_cost());
+        assert_eq!(stats.exec, 96 + t.load_shift_in);
+        assert_eq!(stats.data_mem, t.load_cost() + t.store_cost());
+        assert_eq!(stats.instret, 3);
+        assert_eq!((stats.loads, stats.stores), (1, 1));
+    }
+}

@@ -1,12 +1,19 @@
 //! System-on-chip: SERV core + memory + CFU bank, wired per Fig. 1/5.
 //!
 //! `Soc::run` drives the core to completion and returns the exit value
-//! with full cycle attribution.  An optional tracer receives one event
-//! per retired instruction — `examples/cycle_sim.rs` uses it to render
-//! the Fig. 2 handshake life-cycle.
+//! with full cycle attribution.  Untraced runs execute on the
+//! [`block`]-compiled engine (pre-decoded basic blocks, one stats
+//! update per block); `Soc::run_traced` keeps the per-instruction step
+//! interpreter — an optional tracer receives one event per retired
+//! instruction, and `examples/cycle_sim.rs` uses it to render the
+//! Fig. 2 handshake life-cycle.  Both paths produce bit-identical
+//! `CycleStats` (pinned by `rust/tests/proptests.rs`).
 
+pub mod block;
 pub mod mem;
 pub mod vcd;
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -14,6 +21,7 @@ use crate::accel::CfuBank;
 use crate::isa::disasm;
 use crate::serv::{CfuEvent, CycleStats, Exit, ServCore, StepInfo, TimingConfig};
 
+pub use block::DecodedProgram;
 pub use mem::{Memory, DEFAULT_SIZE, STACK_TOP, TEXT_BASE};
 
 /// Outcome of a completed program run.
@@ -41,27 +49,68 @@ pub struct Soc {
     pub mem: Memory,
     pub cfus: CfuBank,
     pub timing: TimingConfig,
+    /// Shared block translation of the loaded image (see [`block`]);
+    /// survives `rearm` and is shared across SoCs built from the same
+    /// `Arc` (the farm's shards).
+    program: Arc<DecodedProgram>,
+    /// Per-SoC block-engine state (SMC invalidation, overlay blocks).
+    blocks: block::BlockCtx,
 }
 
 impl Soc {
     /// Build an SoC with the program image loaded at `TEXT_BASE`, the
     /// stack pointer initialised to `STACK_TOP`, and PC at the entry.
+    /// The image is block-translated once, here.
     pub fn new(image: &[u8], timing: TimingConfig) -> Self {
-        let mem = Memory::with_image(image, DEFAULT_SIZE);
+        Self::with_program(Arc::new(DecodedProgram::translate(image)), timing)
+    }
+
+    /// Build an SoC around an already-translated program — shards of a
+    /// farm share one `Arc<DecodedProgram>` instead of re-decoding the
+    /// image per SoC.
+    pub fn with_program(program: Arc<DecodedProgram>, timing: TimingConfig) -> Self {
+        let mem = Memory::with_image(program.image(), DEFAULT_SIZE);
         let mut core = ServCore::new(TEXT_BASE);
         core.regs[2] = STACK_TOP; // sp
-        Soc { core, mem, cfus: CfuBank::new(), timing }
+        let blocks = block::BlockCtx::new(&program);
+        Soc { core, mem, cfus: CfuBank::new(), timing, program, blocks }
+    }
+
+    /// The shared block translation this SoC executes.
+    pub fn program(&self) -> &Arc<DecodedProgram> {
+        &self.program
     }
 
     pub fn register_cfu(&mut self, funct7: u8, cfu: Box<dyn crate::accel::Cfu>) -> Result<()> {
         self.cfus.register(funct7, cfu)
     }
 
-    /// Run to `ecall`/`ebreak` or the cycle budget.
+    /// Run to `ecall`/`ebreak` or the cycle budget on the
+    /// block-compiled engine (bit-identical accounting to
+    /// [`run_traced`](Self::run_traced), measurably faster).
+    ///
+    /// The budget is a runaway guard and is enforced at *block*
+    /// granularity: a run may overshoot `max_cycles` by up to one
+    /// basic block's cost before bailing (and completes successfully
+    /// if it exits within that block), where the step interpreter
+    /// checks after every instruction.  Successful runs under budget
+    /// are unaffected.
     pub fn run(&mut self, max_cycles: u64) -> Result<RunResult> {
-        self.run_traced(max_cycles, None)
+        let program = Arc::clone(&self.program);
+        block::run_blocks(
+            &program,
+            &mut self.blocks,
+            &mut self.core,
+            &mut self.mem,
+            &mut self.cfus,
+            &self.timing,
+            max_cycles,
+        )
     }
 
+    /// Step-interpreted run: one event per retired instruction for the
+    /// tracer.  Also the differential reference the block engine is
+    /// pinned against.
     pub fn run_traced(&mut self, max_cycles: u64, mut tracer: Option<Tracer>) -> Result<RunResult> {
         let mut stats = CycleStats::default();
         loop {
@@ -84,9 +133,12 @@ impl Soc {
 
     /// Re-arm the SoC for another run of the same image: reset PC/regs
     /// (but NOT memory — programs may carry state between runs; reload
-    /// the image if isolation is needed).
+    /// the image if isolation is needed).  Decoded/translated state is
+    /// kept: the block translation, its SMC overlay, and the step
+    /// interpreter's decode cache all survive, so warm re-runs skip
+    /// re-decoding entirely.
     pub fn rearm(&mut self) {
-        self.core = ServCore::new(TEXT_BASE);
+        self.core.reset(TEXT_BASE);
         self.core.regs[2] = STACK_TOP;
         self.cfus.reset_all();
     }
@@ -174,5 +226,73 @@ mod tests {
         assert_eq!(soc.run(100_000).unwrap().value(), 1);
         soc.rearm();
         assert_eq!(soc.run(100_000).unwrap().value(), 1, "a0 must reset");
+    }
+
+    #[test]
+    fn rearm_keeps_decoded_state() {
+        let mut a = Asm::new(0);
+        a.li(T0, 2);
+        a.label("l");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "l");
+        a.li(A0, 9);
+        a.ecall();
+        let mut soc = Soc::new(&a.assemble_bytes().unwrap(), TimingConfig::flexic());
+        // step path fills the decode cache; rearm must not discard it
+        assert_eq!(soc.run_traced(100_000, None).unwrap().value(), 9);
+        let warm = soc.core.decode_cache_entries();
+        assert!(warm > 0);
+        soc.rearm();
+        assert_eq!(soc.core.decode_cache_entries(), warm, "decode cache survives rearm");
+        // and the shared block translation survives too
+        let prog = Arc::clone(soc.program());
+        soc.rearm();
+        assert!(Arc::ptr_eq(&prog, soc.program()));
+        assert_eq!(soc.run(100_000).unwrap().value(), 9);
+    }
+
+    #[test]
+    fn socs_can_share_one_translation() {
+        let mut a = Asm::new(0);
+        a.li(A0, 5);
+        a.ecall();
+        let prog = Arc::new(DecodedProgram::translate(&a.assemble_bytes().unwrap()));
+        let mut s1 = Soc::with_program(Arc::clone(&prog), TimingConfig::flexic());
+        let mut s2 = Soc::with_program(Arc::clone(&prog), TimingConfig::flexic());
+        assert!(Arc::ptr_eq(s1.program(), s2.program()));
+        let r1 = s1.run(100_000).unwrap();
+        let r2 = s2.run(100_000).unwrap();
+        assert_eq!(r1.value(), 5);
+        assert_eq!(r1.stats, r2.stats);
+    }
+
+    #[test]
+    fn block_and_step_agree_on_a_looping_program() {
+        let mut a = Asm::new(0);
+        a.la(S0, "buf");
+        a.li(T0, 25);
+        a.li(T1, 0);
+        a.label("loop");
+        a.add(T1, T1, T0);
+        a.sw(S0, T1, 0);
+        a.lw(T1, S0, 0);
+        a.slli(T2, T1, 3);
+        a.sll(T2, T2, T0); // register-count shift: dynamic cycles
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop");
+        a.mv(A0, T1);
+        a.ecall();
+        a.label("buf");
+        a.zeros(1);
+        let image = a.assemble_bytes().unwrap();
+        let mut blk = Soc::new(&image, TimingConfig::flexic());
+        let mut stp = Soc::new(&image, TimingConfig::flexic());
+        let rb = blk.run(100_000_000).unwrap();
+        let rs = stp.run_traced(100_000_000, None).unwrap();
+        assert_eq!(rb.exit, rs.exit);
+        assert_eq!(rb.stats, rs.stats, "cycle accounting must be bit-identical");
+        assert_eq!(blk.core.regs, stp.core.regs);
+        assert_eq!(blk.core.pc, stp.core.pc);
+        assert_eq!(blk.mem.counters, stp.mem.counters);
     }
 }

@@ -2,7 +2,11 @@
 //!
 //! `cargo bench` targets use [`Bench`] for warmup, repeated timing and
 //! simple robust statistics.  Times are wall-clock; results print in a
-//! fixed tabular format so bench_output.txt diffs cleanly.
+//! fixed tabular format so bench_output.txt diffs cleanly.  Every case
+//! and derived metric is also recorded, and [`write_report`] emits them
+//! as `BENCH_<name>.json` at the repo root so the perf trajectory is
+//! machine-readable across PRs.  Setting `FLEXSVM_BENCH_QUICK=1` cuts
+//! warmup/iteration counts for CI smoke runs ([`quick`]).
 //!
 //! The serving-side helpers ([`manifest_or_skip`], [`load_testsets`],
 //! [`drive_clients`], [`latency_summary`]) are the harness shared by
@@ -52,19 +56,55 @@ pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Sample {
     }
 }
 
-/// Formatting helper: a benchmark section with aligned case rows.
+/// One recorded timing case (for the JSON report).
+#[derive(Debug, Clone)]
+pub struct CaseRow {
+    pub name: String,
+    pub mean_ns: u64,
+    pub median_ns: u64,
+    pub min_ns: u64,
+    pub iters: u32,
+}
+
+/// One recorded derived metric (for the JSON report).
+#[derive(Debug, Clone)]
+pub struct MetricRow {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Quick mode for CI perf-smoke jobs: `FLEXSVM_BENCH_QUICK=1` reduces
+/// warmup/iteration counts (results still get recorded and reported).
+pub fn quick() -> bool {
+    std::env::var_os("FLEXSVM_BENCH_QUICK").is_some()
+}
+
+fn scaled(warmup: u32, iters: u32) -> (u32, u32) {
+    if quick() {
+        (warmup.min(1), iters.clamp(1, 3))
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// A benchmark section: prints aligned case rows and records every
+/// case/metric for [`write_report`].
 pub struct Bench {
     section: String,
+    cases: Vec<CaseRow>,
+    metrics: Vec<MetricRow>,
 }
 
 impl Bench {
     pub fn new(section: &str) -> Self {
         println!("\n### {section}");
         println!("{:<44} {:>12} {:>12} {:>12} {:>8}", "case", "mean", "median", "min", "iters");
-        Bench { section: section.to_string() }
+        Bench { section: section.to_string(), cases: Vec::new(), metrics: Vec::new() }
     }
 
-    pub fn case<F: FnMut()>(&self, name: &str, warmup: u32, iters: u32, f: F) -> Sample {
+    pub fn case<F: FnMut()>(&mut self, name: &str, warmup: u32, iters: u32, f: F) -> Sample {
+        let (warmup, iters) = scaled(warmup, iters);
         let s = measure(warmup, iters, f);
         println!(
             "{:<44} {:>12} {:>12} {:>12} {:>8}",
@@ -74,17 +114,100 @@ impl Bench {
             fmt_dur(s.min),
             s.iters
         );
+        self.cases.push(CaseRow {
+            name: name.to_string(),
+            mean_ns: s.mean.as_nanos() as u64,
+            median_ns: s.median.as_nanos() as u64,
+            min_ns: s.min.as_nanos() as u64,
+            iters: s.iters,
+        });
         s
     }
 
     /// Report a derived throughput-style metric on its own row.
-    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
         println!("{:<44} {value:>12.2} {unit}", format!("  -> {name}"));
+        self.metrics.push(MetricRow { name: name.to_string(), value, unit: unit.to_string() });
     }
 
     pub fn section(&self) -> &str {
         &self.section
     }
+
+    pub fn cases(&self) -> &[CaseRow] {
+        &self.cases
+    }
+
+    pub fn metrics(&self) -> &[MetricRow] {
+        &self.metrics
+    }
+}
+
+/// Serialise bench sections to `BENCH_<name>.json` at the repo root
+/// (next to the workspace `Cargo.toml`), so the perf trajectory is
+/// tracked across PRs; returns the written path.
+pub fn write_report(name: &str, sections: &[&Bench]) -> Result<std::path::PathBuf> {
+    let path = repo_root().join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, report_json(name, sections).to_string())?;
+    Ok(path)
+}
+
+/// The report document (separated from the file write for testing).
+fn report_json(name: &str, sections: &[&Bench]) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    let sections_json: Vec<Json> = sections
+        .iter()
+        .map(|b| {
+            obj([
+                ("section", b.section.as_str().into()),
+                (
+                    "cases",
+                    Json::Arr(
+                        b.cases
+                            .iter()
+                            .map(|c| {
+                                obj([
+                                    ("name", c.name.as_str().into()),
+                                    ("mean_ns", c.mean_ns.into()),
+                                    ("median_ns", c.median_ns.into()),
+                                    ("min_ns", c.min_ns.into()),
+                                    ("iters", Json::Num(c.iters as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "metrics",
+                    Json::Arr(
+                        b.metrics
+                            .iter()
+                            .map(|m| {
+                                obj([
+                                    ("name", m.name.as_str().into()),
+                                    ("value", Json::Num(m.value)),
+                                    ("unit", m.unit.as_str().into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    obj([
+        ("bench", name.into()),
+        ("quick", Json::Bool(quick())),
+        ("sections", Json::Arr(sections_json)),
+    ])
+}
+
+/// The workspace root: the `rust/` crate directory's parent.
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
 }
 
 /// Load the artifact manifest, or print a skip note and return None
@@ -221,6 +344,27 @@ mod tests {
         assert_eq!(n, 7);
         assert_eq!(s.iters, 5);
         assert!(s.min <= s.median && s.median <= s.mean * 3);
+    }
+
+    #[test]
+    fn bench_records_cases_and_metrics_for_the_report() {
+        let mut b = Bench::new("unit section");
+        b.case("c1", 0, 3, || {});
+        b.metric("m1", 12.5, "Mcyc/s");
+        assert_eq!(b.cases().len(), 1);
+        assert_eq!(b.cases()[0].iters, 3);
+        assert_eq!(b.metrics()[0].unit, "Mcyc/s");
+        let doc = report_json("unit", &[&b]);
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        let sections = doc.get("sections").unwrap().as_arr().unwrap();
+        assert_eq!(sections.len(), 1);
+        let cases = sections[0].get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "c1");
+        assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        let metrics = sections[0].get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(metrics[0].get("value").unwrap().as_f64().unwrap(), 12.5);
+        // round-trips through the parser
+        assert!(crate::util::json::Json::parse(&doc.to_string()).is_ok());
     }
 
     #[test]

@@ -386,25 +386,6 @@ fn accel_clean_shutdown_then_rejects_new_requests() {
     assert_eq!(err, ServeError::ServerDown);
 }
 
-// ------------------------------------------------------ deprecated shims
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_server_opts_shims_still_serve() {
-    use flexsvm::coordinator::ServerOpts;
-    let opts = ServerOpts { linger: Duration::from_micros(200), ..Default::default() };
-    let server = Server::start_with_models(vec![tiny_model("old", false)], opts).unwrap();
-    let client = server.client();
-    let (key, model) = tiny_model("old", false);
-    let resp = client.infer(&key, &[5, 5, 5]).unwrap();
-    assert_eq!(resp.pred, infer::predict(&model, &[5, 5, 5]));
-    assert!(client.farm_metrics().unwrap().is_none(), "native engine has no farm");
-
-    let pjrt_opts = ServerOpts { backend: Backend::Pjrt, ..Default::default() };
-    assert!(Server::start_with_models(vec![tiny_model("x", false)], pjrt_opts).is_err());
-    assert!(Server::start_with_models(vec![], ServerOpts::default()).is_err());
-}
-
 // ------------------------------------------------------- artifact-backed
 
 #[test]

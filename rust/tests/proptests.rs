@@ -206,6 +206,200 @@ fn prop_farm_predictions_match_native() {
     });
 }
 
+/// Random-but-terminating RV32I programs for the block-vs-step
+/// differential: straight-line ALU work, aligned loads/stores into a
+/// scratch buffer, forward branches, bounded down-counting loops, and
+/// calls to a leaf function.
+fn random_program(rng: &mut flexsvm::testing::Pcg32) -> flexsvm::isa::Asm {
+    use flexsvm::isa::reg::*;
+    use flexsvm::isa::Asm;
+    // rd pool: never S0 (scratch pointer), SP, RA or T5 (loop counter)
+    const RD: [u8; 9] = [T0, T1, T2, T4, A0, A1, A2, A3, S1];
+    const RS: [u8; 11] = [T0, T1, T2, T4, A0, A1, A2, A3, S1, ZERO, S0];
+    let mut a = Asm::new(0);
+    a.la(S0, "buf");
+    for r in [T0, T1, T2, T4, A0, A1, A2, A3, S1] {
+        a.li(r, rng.range_i32(-1_000_000, 1_000_000));
+    }
+    let mut label = 0usize;
+    let mut fresh = || {
+        label += 1;
+        format!("l{label}")
+    };
+    let n_segments = 5 + rng.below(40);
+    for _ in 0..n_segments {
+        let rd = *rng.choose(&RD);
+        let rs1 = *rng.choose(&RS);
+        let rs2 = *rng.choose(&RS);
+        match rng.below(12) {
+            0 => {
+                a.add(rd, rs1, rs2);
+            }
+            1 => {
+                a.sub(rd, rs1, rs2);
+            }
+            2 => match rng.below(5) {
+                0 => {
+                    a.xor(rd, rs1, rs2);
+                }
+                1 => {
+                    a.or(rd, rs1, rs2);
+                }
+                2 => {
+                    a.and(rd, rs1, rs2);
+                }
+                3 => {
+                    a.slt(rd, rs1, rs2);
+                }
+                _ => {
+                    a.sltu(rd, rs1, rs2);
+                }
+            },
+            3 => {
+                // immediate shifts: static shamt cycles
+                let sh = rng.below(32) as i32;
+                match rng.below(3) {
+                    0 => a.slli(rd, rs1, sh),
+                    1 => a.srli(rd, rs1, sh),
+                    _ => a.srai(rd, rs1, sh),
+                };
+            }
+            4 => {
+                // register-count shifts: dynamic shamt cycles
+                match rng.below(3) {
+                    0 => a.sll(rd, rs1, rs2),
+                    1 => a.srl(rd, rs1, rs2),
+                    _ => a.sra(rd, rs1, rs2),
+                };
+            }
+            5 => {
+                let imm = rng.range_i32(-2048, 2047);
+                match rng.below(4) {
+                    0 => a.addi(rd, rs1, imm),
+                    1 => a.xori(rd, rs1, imm),
+                    2 => a.ori(rd, rs1, imm),
+                    _ => a.andi(rd, rs1, imm),
+                };
+            }
+            6 => {
+                // aligned scratch-buffer store
+                match rng.below(3) {
+                    0 => a.sw(S0, rs1, (rng.below(16) * 4) as i32),
+                    1 => a.sh(S0, rs1, (rng.below(32) * 2) as i32),
+                    _ => a.sb(S0, rs1, rng.below(64) as i32),
+                };
+            }
+            7 => {
+                match rng.below(5) {
+                    0 => a.lw(rd, S0, (rng.below(16) * 4) as i32),
+                    1 => a.lh(rd, S0, (rng.below(32) * 2) as i32),
+                    2 => a.lhu(rd, S0, (rng.below(32) * 2) as i32),
+                    3 => a.lb(rd, S0, rng.below(64) as i32),
+                    _ => a.lbu(rd, S0, rng.below(64) as i32),
+                };
+            }
+            8 => {
+                // forward branch over a couple of filler ops
+                let l = fresh();
+                match rng.below(6) {
+                    0 => a.beq(rs1, rs2, &l),
+                    1 => a.bne(rs1, rs2, &l),
+                    2 => a.blt(rs1, rs2, &l),
+                    3 => a.bge(rs1, rs2, &l),
+                    4 => a.bltu(rs1, rs2, &l),
+                    _ => a.bgeu(rs1, rs2, &l),
+                };
+                a.addi(rd, rd, 1);
+                a.xori(rd, rd, 0x2a);
+                a.label(&l);
+            }
+            9 => {
+                // bounded down-counting loop
+                let l = fresh();
+                a.li(T5, 1 + rng.below(5) as i32);
+                a.label(&l);
+                a.add(rd, rd, rs1);
+                a.addi(T5, T5, -1);
+                a.bne(T5, ZERO, &l);
+            }
+            10 => {
+                // leaf call (jal/jalr link + return)
+                a.call("leaf");
+            }
+            _ => {
+                match rng.below(2) {
+                    0 => a.lui(rd, rng.range_i32(0, 0xfffff) << 12),
+                    _ => a.auipc(rd, rng.range_i32(0, 0xfff) << 12),
+                };
+            }
+        }
+    }
+    a.mv(A0, *rng.choose(&RD));
+    a.j("end");
+    a.label("leaf");
+    a.add(A1, A1, A1);
+    a.ret();
+    a.label("end");
+    a.ecall();
+    a.label("buf");
+    a.zeros(16);
+    a
+}
+
+/// Tentpole differential: the block-compiled engine and the step
+/// interpreter produce identical exit value, registers and *full*
+/// `CycleStats` on random programs under randomized SoC timing.
+#[test]
+fn prop_block_engine_matches_step_interpreter() {
+    use flexsvm::soc::Soc;
+    check("block-vs-step-programs", 0x157, 120, |rng| {
+        let a = random_program(rng);
+        let image = a.assemble_bytes().unwrap();
+        let mut t = TimingConfig::flexic();
+        t.mem_read = 1 + rng.below(80) as u64;
+        t.mem_write = 1 + rng.below(80) as u64;
+        t.mem_overhead = rng.below(80) as u64;
+        t.branch_taken_extra = rng.below(40) as u64;
+        t.load_shift_in = rng.below(40) as u64;
+        let mut blk = Soc::new(&image, t);
+        let mut stp = Soc::new(&image, t);
+        let rb = blk.run(50_000_000).unwrap();
+        let rs = stp.run_traced(50_000_000, None).unwrap();
+        assert_eq!(rb.exit, rs.exit, "exit value");
+        assert_eq!(rb.stats, rs.stats, "full CycleStats must be bit-identical");
+        assert_eq!(blk.core.regs, stp.core.regs, "architectural registers");
+        assert_eq!(blk.core.pc, stp.core.pc);
+        assert_eq!(blk.mem.counters, stp.mem.counters, "memory transaction counters");
+    });
+}
+
+/// The same differential over the real workload: baseline and
+/// accelerated inference programs for random quantized models at
+/// 4/8/16 bits — prediction and cycle accounting agree between the
+/// block engine (`run_sample`) and the step interpreter.
+#[test]
+fn prop_block_engine_matches_step_on_models() {
+    use flexsvm::program::run::DEFAULT_BUDGET;
+    check("block-vs-step-models", 0x158, 12, |rng| {
+        let m = gen::quant_model(rng);
+        let x = gen::features(rng, m.n_features);
+        let runners = [
+            ProgramRunner::baseline(&m, TimingConfig::flexic()).unwrap(),
+            ProgramRunner::accelerated(&m, TimingConfig::flexic(), ProgramOpts::default())
+                .unwrap(),
+        ];
+        for mut runner in runners {
+            let (pred, stats) = runner.run_sample(&x).unwrap();
+            // step-interpreted reference over the same rearm/poke flow
+            runner.soc_mut().rearm();
+            runner.poke_features(&x).unwrap();
+            let r = runner.soc_mut().run_traced(DEFAULT_BUDGET, None).unwrap();
+            assert_eq!(pred, r.value() as i32, "bits={}", m.bits);
+            assert_eq!(stats, r.stats, "bits={}: block and step cycle accounting", m.bits);
+        }
+    });
+}
+
 /// PE is linear in the feature vector under every mode.
 #[test]
 fn prop_pe_linear_in_features() {

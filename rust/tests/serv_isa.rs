@@ -171,6 +171,131 @@ fn halfword_sign_extension() {
     assert_eq!(soc2.run(1_000_000).unwrap().value(), 0xffff_1234);
 }
 
+/// Run one image on both engines and require identical results and
+/// cycle accounting (the self-modifying-code differential).
+fn block_step_agree(a: &Asm, budget: u64) -> u32 {
+    let image = a.assemble_bytes().unwrap();
+    let mut blk = Soc::new(&image, TimingConfig::flexic());
+    let mut stp = Soc::new(&image, TimingConfig::flexic());
+    let rb = blk.run(budget).unwrap();
+    let rs = stp.run_traced(budget, None).unwrap();
+    assert_eq!(rb.exit, rs.exit, "exit must match the step interpreter");
+    assert_eq!(rb.stats, rs.stats, "cycle accounting must match the step interpreter");
+    assert_eq!(blk.core.regs, stp.core.regs);
+    rb.value()
+}
+
+#[test]
+fn smc_store_into_text_retranslates_the_block() {
+    use flexsvm::isa::encode::encode;
+    use flexsvm::isa::{AluOp, Instr};
+    // overwrite an upcoming `addi a0,a0,1` with `slli a0,a0,3` — the
+    // patched instruction must execute with its new semantics AND its
+    // new cycle cost (shift amount adds serial cycles)
+    let patch = encode(Instr::OpImm { op: AluOp::Sll, rd: A0, rs1: A0, imm: 3 });
+    let mut a = Asm::new(0);
+    a.li(A0, 5);
+    a.la(T0, "site");
+    a.li(T1, patch as i32);
+    a.sw(T0, T1, 0);
+    a.label("site");
+    a.addi(A0, A0, 1); // dead after the patch
+    a.ecall();
+    assert_eq!(block_step_agree(&a, 1_000_000), 40, "5 << 3, not 5 + 1");
+}
+
+#[test]
+fn smc_patch_can_change_the_block_shape() {
+    use flexsvm::isa::encode::encode;
+    use flexsvm::isa::Instr;
+    // patch a nop into `j +8`: the patched word turns a straight-line
+    // block into a terminator, skipping the poison instruction
+    let patch = encode(Instr::Jal { rd: ZERO, offset: 8 });
+    let mut a = Asm::new(0);
+    a.li(A0, 7);
+    a.la(T0, "site");
+    a.li(T1, patch as i32);
+    a.sw(T0, T1, 0);
+    a.label("site");
+    a.nop(); // becomes j +8
+    a.li(A0, -1); // must be skipped
+    a.ecall();
+    assert_eq!(block_step_agree(&a, 1_000_000), 7);
+}
+
+#[test]
+fn smc_loop_over_patched_site_stays_consistent() {
+    use flexsvm::isa::encode::encode;
+    use flexsvm::isa::{AluOp, Instr};
+    // a loop whose body patches its own next iteration: add -> xor
+    let patch = encode(Instr::Op { op: AluOp::Xor, rd: A0, rs1: A0, rs2: T2 });
+    let mut a = Asm::new(0);
+    a.li(A0, 0);
+    a.li(T2, 3);
+    a.li(T0, 4); // iterations
+    a.la(T1, "site");
+    a.li(T3, patch as i32);
+    a.label("loop");
+    a.sw(T1, T3, 0); // every iteration re-stores the patch word
+    a.label("site");
+    a.add(A0, A0, T2); // patched to xor before its first execution
+    a.addi(T0, T0, -1);
+    a.bne(T0, ZERO, "loop");
+    a.ecall();
+    // the site executes as xor on all four passes: 0^3^3^3^3 = 0
+    assert_eq!(block_step_agree(&a, 1_000_000), 0, "four self-inverse xors");
+}
+
+#[test]
+fn smc_from_interpreted_code_invalidates_translations() {
+    use flexsvm::isa::encode::encode;
+    use flexsvm::isa::{AluOp, Instr, StoreOp};
+    // main writes a 2-instruction trampoline into its DATA section
+    // (executed via the step-interpreter fallback), and the trampoline
+    // stores a patch into translated TEXT: `addi a0,a0,1` -> `addi
+    // a0,a0,41`.  The interpreted store must invalidate the block
+    // translation just like a block-mode store.
+    let patch = encode(Instr::OpImm { op: AluOp::Add, rd: A0, rs1: A0, imm: 41 });
+    let tramp_sw = encode(Instr::Store { op: StoreOp::Sw, rs1: T3, rs2: T2, offset: 0 });
+    let tramp_ret = encode(Instr::Jalr { rd: ZERO, rs1: RA, offset: 0 });
+    let mut a = Asm::new(0);
+    a.li(A0, 1);
+    a.la(T3, "site");
+    a.li(T2, patch as i32);
+    a.la(T0, "tramp");
+    a.li(T1, tramp_sw as i32);
+    a.sw(T0, T1, 0);
+    a.li(T1, tramp_ret as i32);
+    a.sw(T0, T1, 4);
+    a.jalr(RA, T0, 0); // call the freshly written trampoline
+    a.label("site");
+    a.addi(A0, A0, 1); // patched to addi a0,a0,41 by the trampoline
+    a.ecall();
+    a.label("tramp");
+    a.zeros(2);
+    assert_eq!(block_step_agree(&a, 1_000_000), 42, "1 + 41 via the patched site");
+}
+
+#[test]
+fn stores_into_data_do_not_disturb_the_block_engine() {
+    // plain data stores (the mem_loop pattern) must not trigger any
+    // re-translation; results and accounting stay identical
+    let mut a = Asm::new(0);
+    a.la(S0, "buf");
+    a.li(T0, 50);
+    a.label("loop");
+    a.lw(T1, S0, 0);
+    a.addi(T1, T1, 7);
+    a.sw(S0, T1, 0);
+    a.addi(T0, T0, -1);
+    a.bne(T0, ZERO, "loop");
+    a.lw(A0, S0, 0);
+    a.ecall();
+    a.label("buf");
+    a.zeros(2);
+    assert_eq!(block_step_agree(&a, 10_000_000), 350);
+}
+
 #[test]
 fn bit_serial_timing_costs() {
     // a dependent chain of N adds costs N * (fetch + 32) under ideal mem
