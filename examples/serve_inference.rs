@@ -22,16 +22,23 @@
 //! (energy/request, simulated cycles, accel-vs-baseline ratio).
 //! The numbers land in EXPERIMENTS.md §E2E.
 //!
+//! With `--listen` the same drive runs over the wire instead: the
+//! server goes behind `net::server` on a loopback socket and every
+//! request is a real HTTP `POST /v1/infer` — re-checking
+//! `native_mismatch == 0` across the process boundary (the §6
+//! contract extended over the wire).
+//!
 //!     make artifacts && cargo run --release --example serve_inference
-//!     (options: serve_inference <n_requests> <backend pjrt|native|accel>)
+//!     (options: serve_inference [n_requests] [pjrt|native|accel] [--listen])
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use flexsvm::coordinator::{Backend, Server};
+use flexsvm::coordinator::{Backend, Client, Server};
 use flexsvm::farm::{resolve_shards, FarmOpts};
+use flexsvm::net::{drive_http, NetOpts, NetServer};
 use flexsvm::power::FlexicModel;
 use flexsvm::report::serving;
 use flexsvm::svm::model::artifacts_root;
@@ -40,11 +47,22 @@ use flexsvm::util::benchkit::{drive_clients, load_testsets};
 
 const WORKERS: usize = 8;
 
+/// Shared shape of the wire and in-process drive results.
+struct Outcome {
+    served: u64,
+    label_correct: u64,
+    native_mismatch: u64,
+    shed: u64,
+    wall: Duration,
+}
+
 fn main() -> Result<()> {
-    let n_requests: usize =
-        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(20_000);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let listen = args.iter().any(|a| a == "--listen");
+    let pos: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
+    let n_requests: usize = pos.first().map(|s| s.parse()).transpose()?.unwrap_or(20_000);
     // default follows the build: pjrt when compiled in, else native
-    let backend: Backend = match std::env::args().nth(2) {
+    let backend: Backend = match pos.get(1) {
         Some(s) => s.parse()?,
         None => Backend::default_for_build(),
     };
@@ -85,17 +103,47 @@ fn main() -> Result<()> {
         .start()?;
     println!("  backend resident in {:.2}s", t_load.elapsed().as_secs_f64());
 
-    let client = server.client();
-    let r = drive_clients(&client, &testsets, n_requests, WORKERS, Some(&ref_models))?;
+    // drive either in-process or over a loopback socket; both paths
+    // cross-check every answer against the native integer spec
+    let (r, client, net, server): (Outcome, Client, Option<NetServer>, Option<Server>) = if listen
+    {
+        let net = NetServer::bind(server, "127.0.0.1:0", NetOpts::default())?;
+        println!("  wire path: serving over http://{}", net.addr());
+        let client = net.client();
+        let d = drive_http(&net.addr().to_string(), &testsets, n_requests, WORKERS, Some(&ref_models))?;
+        let r = Outcome {
+            served: d.served,
+            label_correct: d.label_correct,
+            native_mismatch: d.native_mismatch,
+            shed: d.shed,
+            wall: d.wall,
+        };
+        (r, client, Some(net), None)
+    } else {
+        let client = server.client();
+        let d = drive_clients(&client, &testsets, n_requests, WORKERS, Some(&ref_models))?;
+        let r = Outcome {
+            served: d.served,
+            label_correct: d.label_correct,
+            native_mismatch: d.native_mismatch,
+            shed: 0,
+            wall: d.wall,
+        };
+        (r, client, None, Some(server))
+    };
     let acc = r.label_correct as f64 / r.served as f64;
 
     println!("\n=== E2E results ===");
     println!(
-        "served {} requests from {WORKERS} clients in {:.2}s  ->  {:.0} req/s",
+        "served {} requests from {WORKERS} clients in {:.2}s  ->  {:.0} req/s{}",
         r.served,
         r.wall.as_secs_f64(),
-        r.served as f64 / r.wall.as_secs_f64()
+        r.served as f64 / r.wall.as_secs_f64(),
+        if listen { " (over loopback HTTP)" } else { "" }
     );
+    if r.shed > 0 {
+        println!("({} requests shed with 503 by admission control)", r.shed);
+    }
     println!("online accuracy over the mixed stream: {:.1}%", acc * 100.0);
     anyhow::ensure!(
         r.native_mismatch == 0,
@@ -145,7 +193,10 @@ fn main() -> Result<()> {
         (acc - expect).abs() < 0.05,
         "online accuracy {acc:.3} diverges from expected {expect:.3}"
     );
-    server.shutdown()?;
+    match net {
+        Some(n) => n.shutdown()?,
+        None => server.expect("in-process mode keeps the server").shutdown()?,
+    }
     println!("serve_inference OK");
     Ok(())
 }

@@ -12,7 +12,6 @@
 //!     cargo bench --bench bench_farm [n_requests]
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
 
 use flexsvm::coordinator::{Backend, Server};
 use flexsvm::farm::scenario::{self, Traffic};
@@ -48,43 +47,14 @@ fn build_models() -> Vec<(String, QuantModel)> {
         .collect()
 }
 
-/// Pre-draw one feature vector per arrival (outside the timed region).
-fn draw_features(models: &[(String, QuantModel)], s: &scenario::Scenario, seed: u64) -> Vec<Vec<i32>> {
-    let mut rng = Pcg32::seeded(seed);
-    s.arrivals.iter().map(|a| gen::features(&mut rng, models[a.config].1.n_features)).collect()
-}
-
-/// Replay arrivals against `f`, paced to their timestamps, from
-/// WORKERS threads (round-robin partition).  Returns the wall time.
-fn replay<F>(s: &scenario::Scenario, xs: &[Vec<i32>], f: F) -> std::time::Duration
-where
-    F: Fn(usize, &[i32]) + Sync,
-{
-    let start = Instant::now();
-    std::thread::scope(|scope| {
-        for w in 0..WORKERS {
-            let f = &f;
-            scope.spawn(move || {
-                for (i, a) in s.arrivals.iter().enumerate().skip(w).step_by(WORKERS) {
-                    let target = start + a.at;
-                    let now = Instant::now();
-                    if target > now {
-                        std::thread::sleep(target - now);
-                    }
-                    f(a.config, &xs[i]);
-                }
-            });
-        }
-    });
-    start.elapsed()
-}
-
 fn main() -> anyhow::Result<()> {
     let default_n = if quick() { 200 } else { 1_200 };
     let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(default_n);
     let mut report = Bench::new("farm serving (scenario x shard sweep)");
     let models = build_models();
     let n_cfg = models.len();
+    // feature widths per config, for the shared arrival pre-draw
+    let nf: Vec<usize> = models.iter().map(|(_, m)| m.n_features).collect();
     let scenarios = [
         scenario::generate(Traffic::Steady { rps: 2_000.0 }, n_cfg, n, 0xa1),
         scenario::generate(Traffic::Bursty { rps: 2_000.0, burst: 32 }, n_cfg, n, 0xa2),
@@ -97,15 +67,15 @@ fn main() -> anyhow::Result<()> {
         "scenario", "shards", "req/s", "sim Mcyc", "spills", "max/min shard jobs", "lazy loads",
     ]);
     for s in &scenarios {
-        let xs = draw_features(&models, s, 0xfeed);
+        let xs = gen::arrival_features(0xfeed, &nf, s);
         for shards in [1usize, 2, 4] {
             let farm = Farm::start(
                 models.clone(),
                 FarmOpts { shards, calibrate_baseline: false, ..Default::default() },
             )?;
             let errors = AtomicU64::new(0);
-            let wall = replay(s, &xs, |cfg, x| {
-                if farm.predict(&models[cfg].0, x).is_err() {
+            let wall = s.replay(WORKERS, |_| (), |_, i, a| {
+                if farm.predict(&models[a.config].0, &xs[i]).is_err() {
                     errors.fetch_add(1, Ordering::Relaxed);
                 }
             });
@@ -141,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     // ---- part B: behind the coordinator, with energy accounting ------------
     println!("\n### coordinator Backend::Accel (multi-tenant scenario)");
     let s = &scenarios[2];
-    let xs = draw_features(&models, s, 0xbeef);
+    let xs = gen::arrival_features(0xbeef, &nf, s);
     let server = Server::builder()
         .models(models.clone())
         .backend(Backend::Accel)
@@ -149,8 +119,8 @@ fn main() -> anyhow::Result<()> {
         .start()?;
     let client = server.client();
     let errors = AtomicU64::new(0);
-    let wall = replay(s, &xs, |cfg, x| {
-        if client.infer(&models[cfg].0, x).is_err() {
+    let wall = s.replay(WORKERS, |_| (), |_, i, a| {
+        if client.infer(&models[a.config].0, &xs[i]).is_err() {
             errors.fetch_add(1, Ordering::Relaxed);
         }
     });

@@ -1,0 +1,156 @@
+//! Wire-front serving benchmark: the `farm::scenario` steady / bursty /
+//! multi-tenant streams replayed over loopback sockets against
+//! `net::server` (coordinator + accel farm behind it).
+//!
+//! Arrivals are paced open-loop to the scenario's schedule (transport
+//! concurrency is bounded by the client worker pool); every request is
+//! a real HTTP `POST /v1/infer`, so the numbers include JSON
+//! serialization, socket hops and the net layer's admission control.
+//! Recorded per scenario: throughput, client-observed p50/p99 wall
+//! latency, and shed rate; energy/request comes from
+//! `report::serving` over the farm's sim accounting.  Results land in
+//! `BENCH_net.json` through benchkit.
+//!
+//!     cargo bench --bench bench_net [n_requests]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use flexsvm::coordinator::metrics::Histogram;
+use flexsvm::coordinator::{Backend, Server};
+use flexsvm::farm::scenario::{self, Traffic};
+use flexsvm::farm::FarmOpts;
+use flexsvm::net::{wire, HttpClient, NetOpts, NetServer};
+use flexsvm::power::FlexicModel;
+use flexsvm::report::serving;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::QuantModel;
+use flexsvm::testing::gen;
+use flexsvm::util::benchkit::{quick, write_report, Bench};
+use flexsvm::util::Table;
+
+const WORKERS: usize = 8;
+
+/// Four tiny synthetic configs: the bench needs no artifacts, and tiny
+/// models keep the simulated farm fast enough to stress the wire.
+fn build_models() -> Vec<(String, QuantModel)> {
+    ["syn_a", "syn_b", "syn_c", "syn_d"]
+        .iter()
+        .enumerate()
+        .map(|(i, k)| (k.to_string(), gen::tiny_model(k, i % 2 == 1)))
+        .collect()
+}
+
+/// Replay one scenario over HTTP (paced by `Scenario::replay`, one
+/// keep-alive client per worker); returns (wall, served, shed,
+/// client-side latency histogram).
+fn replay_http(
+    addr: &str,
+    s: &scenario::Scenario,
+    xs: &[Vec<i32>],
+    models: &[(String, QuantModel)],
+) -> (Duration, u64, u64, Histogram) {
+    let served = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let hist = Mutex::new(Histogram::new());
+    let wall = s.replay(
+        WORKERS,
+        |_| HttpClient::new(addr),
+        |client, i, a| {
+            let t0 = Instant::now();
+            let body = wire::infer_body(&models[a.config].0, &xs[i]);
+            match client.post_json("/v1/infer", &body) {
+                Ok(resp) if resp.status == 200 => {
+                    hist.lock().unwrap().record(t0.elapsed());
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(resp) if resp.status == 503 => {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(resp) => panic!("unexpected status {}: {}", resp.status, resp.body),
+                Err(e) => panic!("wire error: {e}"),
+            }
+        },
+    );
+    (wall, served.load(Ordering::Relaxed), shed.load(Ordering::Relaxed), hist.into_inner().unwrap())
+}
+
+fn main() -> anyhow::Result<()> {
+    let default_n = if quick() { 200 } else { 1_500 };
+    let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(default_n);
+    let mut report = Bench::new("net serving (wire front over loopback)");
+    let models = build_models();
+    let n_cfg = models.len();
+
+    let server = Server::builder()
+        .models(models.clone())
+        .backend(Backend::Accel)
+        .queue_cap(512)
+        .linger(Duration::from_micros(500))
+        .farm(FarmOpts {
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            ..Default::default()
+        })
+        .start()?;
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOpts { workers: WORKERS, ..Default::default() })?;
+    let addr = net.addr().to_string();
+    let client = net.client();
+    println!("### wire front on {addr}: {n} paced requests/scenario, {WORKERS} HTTP clients");
+
+    // single-request wire round trip (serialization + socket + farm)
+    let mut rtt_client = HttpClient::new(addr.clone());
+    report.case("wire rtt single infer", 20, 200, || {
+        let r = rtt_client.post_json("/v1/infer", &wire::infer_body(&models[0].0, &[1, 2, 3])).unwrap();
+        assert_eq!(r.status, 200);
+    });
+    drop(rtt_client);
+
+    let scenarios = [
+        scenario::generate(Traffic::Steady { rps: 2_000.0 }, n_cfg, n, 0xb1),
+        scenario::generate(Traffic::Bursty { rps: 2_000.0, burst: 32 }, n_cfg, n, 0xb2),
+        scenario::generate(Traffic::MultiTenant { rps: 2_000.0, skew: 1.2 }, n_cfg, n, 0xb3),
+    ];
+    let nf: Vec<usize> = models.iter().map(|(_, m)| m.n_features).collect();
+    let mut t = Table::new(["scenario", "req/s", "served", "shed", "shed %", "p50 (us)", "p99 (us)"]);
+    let t_all = Instant::now();
+    for s in &scenarios {
+        let xs = gen::arrival_features(0xcafe, &nf, s);
+        let (wall, served, shed, hist) = replay_http(&addr, s, &xs, &models);
+        let total = served + shed;
+        let rate = total as f64 / wall.as_secs_f64();
+        let shed_pct = 100.0 * shed as f64 / total.max(1) as f64;
+        t.row([
+            s.traffic.name().to_string(),
+            format!("{rate:.0}"),
+            served.to_string(),
+            shed.to_string(),
+            format!("{shed_pct:.1}"),
+            hist.quantile_us(0.50).to_string(),
+            hist.quantile_us(0.99).to_string(),
+        ]);
+        report.metric(&format!("{} req/s", s.traffic.name()), rate, "req/s");
+        report.metric(&format!("{} p50 latency", s.traffic.name()), hist.quantile_us(0.50) as f64, "us");
+        report.metric(&format!("{} p99 latency", s.traffic.name()), hist.quantile_us(0.99) as f64, "us");
+        report.metric(&format!("{} shed rate", s.traffic.name()), shed_pct, "%");
+    }
+    print!("{}", t.render());
+
+    // energy/request + sim-vs-wall from the farm behind the socket
+    let metrics = client.metrics()?;
+    let farm = client.engine_metrics()?.farm;
+    print!("{}", serving::render(&metrics, t_all.elapsed(), farm.as_ref(), &FlexicModel::paper()));
+    if let Some(fm) = farm.as_ref() {
+        report.metric("farm sim Mcyc over the wire", fm.total_sim_cycles() as f64 / 1e6, "Mcyc");
+    }
+    let nm = net.metrics();
+    report.metric("net accepted connections", nm.accepted as f64, "conns");
+    report.metric("net requests", nm.requests as f64, "reqs");
+    report.metric("net bytes out", nm.bytes_out as f64, "bytes");
+    net.shutdown()?;
+
+    let path = write_report("net", &[&report])?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

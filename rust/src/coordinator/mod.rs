@@ -69,6 +69,20 @@ struct Request {
     resp: mpsc::SyncSender<Result<Response, ServeError>>,
 }
 
+fn make_request(
+    key: &str,
+    features: &[i32],
+) -> (Request, mpsc::Receiver<Result<Response, ServeError>>) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    let req = Request {
+        key: key.to_string(),
+        features: features.to_vec(),
+        enqueued: Instant::now(),
+        resp: tx,
+    };
+    (req, rx)
+}
+
 enum Msg {
     Req(Request),
     Snapshot(mpsc::SyncSender<HashMap<String, ConfigMetrics>>),
@@ -129,15 +143,20 @@ impl Client {
     /// Non-blocking submit: enqueue the request (subject to ingress
     /// backpressure) and return a [`Pending`] handle for the answer.
     pub fn submit(&self, key: &str, features: &[i32]) -> Result<Pending, ServeError> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Msg::Req(Request {
-                key: key.to_string(),
-                features: features.to_vec(),
-                enqueued: Instant::now(),
-                resp: tx,
-            }))
-            .map_err(|_| ServeError::ServerDown)?;
+        let (req, rx) = make_request(key, features);
+        self.tx.send(Msg::Req(req)).map_err(|_| ServeError::ServerDown)?;
+        Ok(Pending { rx, taken: false })
+    }
+
+    /// Admission-controlled submit: like [`submit`](Self::submit), but
+    /// when the bounded ingress queue is full the request is shed with
+    /// [`ServeError::Overloaded`] instead of blocking the caller.  The
+    /// wire front (`net::server`) uses this to answer
+    /// `503 + Retry-After` under saturation rather than stalling the
+    /// socket.
+    pub fn try_submit(&self, key: &str, features: &[i32]) -> Result<Pending, ServeError> {
+        let (req, rx) = make_request(key, features);
+        self.tx.try_send(Msg::Req(req)).map_err(try_send_error)?;
         Ok(Pending { rx, taken: false })
     }
 
@@ -165,11 +184,52 @@ impl Client {
         rx.recv().map_err(|_| ServeError::Dropped)
     }
 
+    /// Non-blocking [`metrics`](Self::metrics): sheds with
+    /// [`ServeError::Overloaded`] when the bounded ingress is full, and
+    /// again when the answer does not arrive within [`PROBE_TIMEOUT`]
+    /// (deep backlog ahead of the probe) — so the wire front's
+    /// `/v1/metrics` and `/healthz` never park a socket worker behind
+    /// the serving queue.
+    pub fn try_metrics(&self) -> Result<HashMap<String, ConfigMetrics>, ServeError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.try_send(Msg::Snapshot(tx)).map_err(try_send_error)?;
+        recv_probe(&rx)
+    }
+
     /// Engine statistics snapshot ([`Engine::snapshot`]).
     pub fn engine_metrics(&self) -> Result<EngineMetrics, ServeError> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx.send(Msg::EngineSnapshot(tx)).map_err(|_| ServeError::ServerDown)?;
         rx.recv().map_err(|_| ServeError::Dropped)
+    }
+
+    /// Non-blocking [`engine_metrics`](Self::engine_metrics) — same
+    /// shedding contract as [`try_metrics`](Self::try_metrics).
+    pub fn try_engine_metrics(&self) -> Result<EngineMetrics, ServeError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx.try_send(Msg::EngineSnapshot(tx)).map_err(try_send_error)?;
+        recv_probe(&rx)
+    }
+}
+
+/// How long a `try_*` probe waits for its answer before shedding.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(1);
+
+fn recv_probe<T>(rx: &mpsc::Receiver<T>) -> Result<T, ServeError> {
+    match rx.recv_timeout(PROBE_TIMEOUT) {
+        Ok(v) => Ok(v),
+        // the probe is queued behind a deep backlog: shed it (the
+        // dispatcher's late answer lands in a dropped channel, which
+        // it tolerates)
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Overloaded),
+        Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Dropped),
+    }
+}
+
+fn try_send_error(e: mpsc::TrySendError<Msg>) -> ServeError {
+    match e {
+        mpsc::TrySendError::Full(_) => ServeError::Overloaded,
+        mpsc::TrySendError::Disconnected(_) => ServeError::ServerDown,
     }
 }
 
@@ -178,6 +238,7 @@ impl Client {
 /// it to stderr.
 pub struct Server {
     tx: mpsc::SyncSender<Msg>,
+    keys: Vec<String>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -189,6 +250,11 @@ impl Server {
 
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
+    }
+
+    /// The config keys this server was started with (the served set).
+    pub fn keys(&self) -> &[String] {
+        &self.keys
     }
 
     /// Drain queued work, stop the dispatcher and join it.  A
@@ -420,11 +486,12 @@ impl ServerBuilder {
         };
         let (tx, rx) = mpsc::sync_channel::<Msg>(self.queue_cap);
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let served_keys = keys.clone();
         let join = std::thread::Builder::new()
             .name("flexsvm-dispatcher".into())
             .spawn(move || dispatcher(engine, source, keys, tuning, rx, ready_tx))?;
         ready_rx.recv().context("dispatcher died during init")??;
-        Ok(Server { tx, join: Some(join) })
+        Ok(Server { tx, keys: served_keys, join: Some(join) })
     }
 }
 

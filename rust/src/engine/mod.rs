@@ -104,6 +104,10 @@ pub enum ServeError {
     /// The dispatcher dropped the request without answering — e.g. it
     /// panicked mid-batch (see `Server::shutdown` for the payload).
     Dropped,
+    /// The server's bounded ingress is saturated; the request was shed
+    /// instead of queued (`Client::try_submit`, mapped to
+    /// `503 + Retry-After` by the wire front).  Retry after backing off.
+    Overloaded,
     /// The engine failed this sample or batch.
     Engine(String),
 }
@@ -114,6 +118,7 @@ impl fmt::Display for ServeError {
             ServeError::UnknownConfig(key) => write!(f, "config {key:?} not served"),
             ServeError::ServerDown => f.write_str("server is down"),
             ServeError::Dropped => f.write_str("server dropped the request"),
+            ServeError::Overloaded => f.write_str("server overloaded; retry later"),
             ServeError::Engine(msg) => f.write_str(msg),
         }
     }
@@ -249,6 +254,7 @@ mod tests {
     fn serve_error_messages() {
         assert_eq!(ServeError::ServerDown.to_string(), "server is down");
         assert!(ServeError::UnknownConfig("k".into()).to_string().contains("not served"));
+        assert!(ServeError::Overloaded.to_string().contains("overloaded"));
         assert_eq!(ServeError::Engine("boom".into()).to_string(), "boom");
     }
 

@@ -14,9 +14,10 @@
 //!
 //! A [`Scenario`] is a pure data object (seeded PCG32, no wall clock),
 //! so benches replay identical streams across backends and shard
-//! counts.
+//! counts; [`Scenario::replay`] is the shared multi-threaded paced
+//! replayer those benches drive (`bench_farm`, `bench_net`).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::Pcg32;
 
@@ -69,6 +70,38 @@ impl Scenario {
             counts[a.config] += 1;
         }
         counts
+    }
+
+    /// Replay the stream paced to its arrival times from `workers`
+    /// threads (round-robin partition): `init(w)` builds per-worker
+    /// state (an HTTP connection, nothing, ...), `f(state, i, arrival)`
+    /// issues request `i`.  Returns the wall-clock span.  Shared by
+    /// `bench_farm` and `bench_net` so the pacing logic lives once.
+    pub fn replay<S, I, F>(&self, workers: usize, init: I, f: F) -> Duration
+    where
+        S: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize, &Arrival) + Sync,
+    {
+        assert!(workers > 0);
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let (init, f) = (&init, &f);
+                scope.spawn(move || {
+                    let mut state = init(w);
+                    for (i, a) in self.arrivals.iter().enumerate().skip(w).step_by(workers) {
+                        let target = start + a.at;
+                        let now = Instant::now();
+                        if target > now {
+                            std::thread::sleep(target - now);
+                        }
+                        f(&mut state, i, a);
+                    }
+                });
+            }
+        });
+        start.elapsed()
     }
 }
 
@@ -166,6 +199,23 @@ mod tests {
         let mix = s.mix(4);
         assert_eq!(mix.iter().sum::<usize>(), 2000);
         assert!(mix[0] > mix[3] * 2, "mix {mix:?} should be Zipf-skewed");
+    }
+
+    #[test]
+    fn replay_visits_every_arrival_once_with_per_worker_state() {
+        let s = generate(Traffic::Steady { rps: 1e6 }, 2, 40, 9);
+        let hits = std::sync::Mutex::new(vec![0u32; 40]);
+        let wall = s.replay(
+            4,
+            |w| w,
+            |w, i, a| {
+                assert!(a.config < 2);
+                assert_eq!(i % 4, *w, "round-robin partition");
+                hits.lock().unwrap()[i] += 1;
+            },
+        );
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1), "every arrival replayed once");
+        assert!(wall >= s.duration(), "pacing must wait out the schedule");
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod farm;
 pub mod isa;
+pub mod net;
 pub mod power;
 pub mod program;
 pub mod report;

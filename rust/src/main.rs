@@ -6,22 +6,25 @@
 //!   golden-check  cross-layer bit-exactness sweep over all 30 configs
 //!   sim           run one config's test set on the SoC (baseline+accel)
 //!   trace         Fig. 2 life-cycle trace of accelerator instructions
-//!   serve         demo serving loop (pjrt / native / accel-farm backends)
+//!   serve         serving loop: local drive, or `--listen` for the wire
+//!                 front, `--remote` to execute on remote flexsvm nodes
 //!
 //! Run with `--help` (or no arguments) for options.
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use flexsvm::accel::{pe, svm::SvmAccel, Cfu};
 use flexsvm::coordinator::{Backend, Server};
+use flexsvm::net::{NetOpts, NetServer, RemoteEngine};
 use flexsvm::program::run::ProgramRunner;
 use flexsvm::program::ProgramOpts;
 use flexsvm::report::{self, table1::render, Table1Opts};
 use flexsvm::serv::TimingConfig;
 use flexsvm::soc::format_trace_line;
-use flexsvm::svm::model::{artifacts_root, Manifest};
+use flexsvm::svm::model::{artifacts_root, Manifest, TestSet};
 use flexsvm::svm::{infer, pack};
 use flexsvm::util::Args;
 
@@ -37,7 +40,12 @@ USAGE: flexsvm <subcommand> [options]
   sim          --config <key> [--limit N]
   trace        --config <key> [--sample I] [--max-lines N]
   serve        [--configs k1,k2] [--requests N] [--backend pjrt|native|accel]
-               [--batch-max N] [--linger-us N]
+               [--batch-max N] [--linger-us N] [--queue-cap N] [--synthetic]
+               [--listen HOST:PORT] [--remote HOST:PORT,...]
+               --listen serves HTTP (POST /v1/infer, GET /healthz, GET
+               /v1/metrics) until ctrl-c, which drains in-flight requests;
+               --remote executes batches on remote `serve --listen` nodes;
+               --synthetic serves built-in tiny models (no artifacts needed)
   asm          <file.s> [--out image.bin] [--run] [--max-cycles N]
   rtl-template [--out-dir DIR]     (emit Verilog + C header for the SVM CFU)
   vcd          --config <key> [--sample I] [--out trace.vcd]
@@ -281,22 +289,116 @@ fn cmd_vcd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flipped by the SIGINT/SIGTERM handler; `serve --listen` polls it so
+/// the wire front drains in-flight requests and shuts the coordinator
+/// down cleanly (surfacing dispatcher panics) instead of dying
+/// mid-batch.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_ctrlc() -> &'static AtomicBool {
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    // std already links libc on unix; declaring `signal` here keeps the
+    // no-new-deps rule (the libc crate is not in the vendor set)
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    unsafe {
+        signal(2, on_signal); // SIGINT
+        signal(15, on_signal); // SIGTERM
+    }
+    &STOP
+}
+
+#[cfg(not(unix))]
+fn install_ctrlc() -> &'static AtomicBool {
+    // no handler wired: the process stops on plain kill
+    &STOP
+}
+
+/// Deterministic in-memory models for `--synthetic` (the CI socket
+/// smoke runs without artifacts): two mirrored tiny 2-class configs.
+fn synthetic_models() -> Vec<(String, flexsvm::svm::QuantModel)> {
+    vec![
+        ("syn_a".to_string(), flexsvm::testing::gen::tiny_model("syn_a", false)),
+        ("syn_b".to_string(), flexsvm::testing::gen::tiny_model("syn_b", true)),
+    ]
+}
+
+/// Seeded feature streams over the synthetic models, labelled by the
+/// native integer spec (so the drive's accuracy check is exact).
+fn synthetic_testsets() -> Vec<(String, TestSet)> {
+    let mut rng = flexsvm::util::Pcg32::seeded(0x5e1f);
+    synthetic_models()
+        .into_iter()
+        .map(|(key, model)| {
+            let x_q: Vec<Vec<i32>> =
+                (0..64).map(|_| flexsvm::testing::gen::features(&mut rng, model.n_features)).collect();
+            let y: Vec<i32> = x_q.iter().map(|x| infer::predict(&model, x)).collect();
+            let t = TestSet {
+                name: key.clone(),
+                n_classes: model.n_classes,
+                n_features: model.n_features,
+                x_q,
+                y,
+            };
+            (key, t)
+        })
+        .collect()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let keys = args.list_or("configs", &["iris_ovr_w4", "bs_ovo_w8"]);
+    let synthetic = args.flag("synthetic");
+    let remotes = args.list_or("remote", &[]);
+    let keys: Vec<String> = if synthetic {
+        synthetic_models().into_iter().map(|(k, _)| k).collect()
+    } else {
+        args.list_or("configs", &["iris_ovr_w4", "bs_ovo_w8"])
+    };
     let n_requests = args.usize_or("requests", 1000)?;
     // default backend follows the build: pjrt when compiled in, else native
     let backend: Backend = args.str_or("backend", Backend::default_for_build().as_str()).parse()?;
-    let manifest = Manifest::load(&artifacts_root())?;
-    let server = Server::builder()
-        .artifacts(artifacts_root(), keys.clone())
-        .backend(backend)
-        .batch_max(args.usize_or("batch-max", 64)?)
-        .linger(std::time::Duration::from_micros(args.u64_or("linger-us", 2000)?))
-        .start()?;
-    let client = server.client();
 
-    // drive requests from worker threads using real test vectors
-    let testsets = flexsvm::util::benchkit::load_testsets(&manifest, &keys)?;
+    let builder = Server::builder()
+        .batch_max(args.usize_or("batch-max", 64)?)
+        .linger(Duration::from_micros(args.u64_or("linger-us", 2000)?))
+        .queue_cap(args.usize_or("queue-cap", 1024)?);
+    let from_artifacts = remotes.is_empty() && !synthetic;
+    let builder = if !remotes.is_empty() {
+        // multi-node: batches execute on remote `serve --listen` nodes
+        builder.keys(keys.clone()).engine(Box::new(RemoteEngine::new(remotes.clone())?))
+    } else if synthetic {
+        builder.models(synthetic_models()).backend(backend)
+    } else {
+        builder.artifacts(artifacts_root(), keys.clone()).backend(backend)
+    };
+    let server = builder.start().map_err(|e| {
+        if from_artifacts {
+            anyhow::anyhow!("{e:#}\n(hint: `--synthetic` serves without artifacts)")
+        } else {
+            e
+        }
+    })?;
+
+    if let Some(listen) = args.opt_str("listen") {
+        return serve_listen(server, listen, &keys);
+    }
+
+    let client = server.client();
+    // drive requests from worker threads using real (or synthetic,
+    // natively-labelled) test vectors
+    let testsets = if synthetic {
+        synthetic_testsets()
+    } else {
+        // with `--remote` the artifacts may live only on the nodes —
+        // the local drive still needs them for test vectors
+        let manifest = Manifest::load(&artifacts_root()).map_err(|e| {
+            anyhow::anyhow!("{e:#}\n(hint: `--synthetic` drives without local artifacts)")
+        })?;
+        flexsvm::util::benchkit::load_testsets(&manifest, &keys)?
+    };
     let r = flexsvm::util::benchkit::drive_clients(&client, &testsets, n_requests, 4, None)?;
     println!(
         "served {} requests in {:.2}s = {:.0} req/s",
@@ -316,14 +418,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             h.quantile_us(0.99)
         );
     }
-    if backend == Backend::Accel {
-        let farm = client.engine_metrics()?.farm;
+    // any engine whose answers carry sim costs (the farm, or remote
+    // nodes running farms) gets the serving energy report
+    let engine = client.engine_metrics()?;
+    if engine.farm.is_some() {
         print!(
             "{}",
             report::serving::render(
                 &metrics,
                 r.wall,
-                farm.as_ref(),
+                engine.farm.as_ref(),
                 &flexsvm::power::FlexicModel::paper()
             )
         );
@@ -331,5 +435,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.shutdown()?;
     // keep the accelerator trait demonstrably object-safe in the binary
     let _ = SvmAccel::new().name();
+    Ok(())
+}
+
+/// `serve --listen`: put the coordinator on a socket and run until
+/// ctrl-c, then drain and shut down.
+fn serve_listen(server: Server, listen: &str, keys: &[String]) -> Result<()> {
+    let stop = install_ctrlc();
+    let net = NetServer::bind(server, listen, NetOpts::default())?;
+    println!("flexsvm net: listening on {}", net.addr());
+    println!("  configs: {}", keys.join(", "));
+    println!("  endpoints: GET /healthz | GET /v1/metrics | POST /v1/infer");
+    println!("  ctrl-c drains in-flight requests and stops");
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    eprintln!("flexsvm net: signal received; draining in-flight requests");
+    let m = net.metrics();
+    net.shutdown()?;
+    println!(
+        "flexsvm net: drained and stopped ({} requests served, {} shed, {} bytes out)",
+        m.requests, m.shed, m.bytes_out
+    );
     Ok(())
 }

@@ -1,0 +1,268 @@
+//! Wire client: a keep-alive HTTP/1.1 client over one `TcpStream`,
+//! with connect/read timeouts and bounded reconnect.
+//!
+//! [`HttpClient`] is deliberately small: `get` / `post_json` against a
+//! single `host:port`, reusing the connection across requests.  A
+//! request against a dead cached connection is retried once on a fresh
+//! connection (every endpoint this repo serves is idempotent —
+//! inference is a pure function of the request).  Connection attempts
+//! themselves are bounded by [`HttpClientOpts::connect_attempts`] with
+//! a linear backoff, so a down peer fails fast instead of hanging.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::util::json::{Json, Limits};
+
+use super::http::{Conn, HttpError};
+
+/// Typed transport error — `net::remote` maps these onto `ServeError`.
+#[derive(Debug)]
+pub enum NetError {
+    /// Could not establish a connection (after bounded retries).
+    Connect(String),
+    /// The peer did not answer within the I/O timeout.
+    Timeout(String),
+    /// The connection broke mid-request.
+    Io(String),
+    /// The peer answered bytes that are not valid HTTP/JSON.
+    Protocol(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Connect(msg) => write!(f, "connect failed: {msg}"),
+            NetError::Timeout(msg) => write!(f, "timeout: {msg}"),
+            NetError::Io(msg) => write!(f, "transport: {msg}"),
+            NetError::Protocol(msg) => write!(f, "protocol: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Client knobs.
+#[derive(Debug, Clone)]
+pub struct HttpClientOpts {
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on an established connection.
+    pub io_timeout: Duration,
+    /// Connection attempts before giving up (bounded reconnect).
+    pub connect_attempts: u32,
+    /// Sleep between connection attempts (linear backoff: attempt i
+    /// waits `i * backoff`).
+    pub backoff: Duration,
+    /// Response body cap.
+    pub max_response_bytes: usize,
+}
+
+impl Default for HttpClientOpts {
+    fn default() -> Self {
+        HttpClientOpts {
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(10),
+            connect_attempts: 3,
+            backoff: Duration::from_millis(50),
+            max_response_bytes: 8 << 20,
+        }
+    }
+}
+
+/// One HTTP response.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        super::http::header(&self.headers, name)
+    }
+
+    /// Parse the body as JSON (under the wire limits).
+    pub fn json(&self) -> Result<Json, NetError> {
+        Json::parse_limited(&self.body, &Limits { max_bytes: self.body.len(), max_depth: 64 })
+            .map_err(|e| NetError::Protocol(format!("bad JSON body: {e:#}")))
+    }
+}
+
+/// Keep-alive HTTP client against one `host:port`.
+pub struct HttpClient {
+    addr: String,
+    opts: HttpClientOpts,
+    conn: Option<Conn>,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        Self::with_opts(addr, HttpClientOpts::default())
+    }
+
+    pub fn with_opts(addr: impl Into<String>, opts: HttpClientOpts) -> HttpClient {
+        HttpClient { addr: addr.into(), opts, conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<HttpResponse, NetError> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<HttpResponse, NetError> {
+        self.request("POST", path, Some(body.to_string()))
+    }
+
+    /// One request/response exchange.  A cached keep-alive connection
+    /// that turns out dead is replaced once and the request retried.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<String>,
+    ) -> Result<HttpResponse, NetError> {
+        let had_cached = self.conn.is_some();
+        match self.exchange(method, path, body.as_deref()) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.conn = None;
+                // a dead cached connection is expected (server-side
+                // keep-alive timeout) — retry once on a fresh one;
+                // fresh-connection failures are real errors
+                if had_cached && !matches!(e, NetError::Timeout(_)) {
+                    let retried = self.exchange(method, path, body.as_deref());
+                    if retried.is_err() {
+                        self.conn = None;
+                    }
+                    retried
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn exchange(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpResponse, NetError> {
+        let body_cap = self.opts.max_response_bytes;
+        let host = self.addr.clone();
+        let conn = self.ensure_conn()?;
+        let mut headers: Vec<(&str, String)> = vec![("Host", host), ("Connection", "keep-alive".into())];
+        if body.is_some() {
+            headers.push(("Content-Type", "application/json".into()));
+        }
+        let payload = body.unwrap_or("").as_bytes();
+        conn.write_message(&format!("{method} {path} HTTP/1.1"), &headers, payload)
+            .map_err(http_to_net)?;
+        let msg = conn.read_message(body_cap).map_err(http_to_net)?;
+        let status = parse_status_line(&msg.start_line)?;
+        let body = String::from_utf8(msg.body)
+            .map_err(|_| NetError::Protocol("response body is not UTF-8".into()))?;
+        let close = msg.header("Connection").is_some_and(|v| v.eq_ignore_ascii_case("close"));
+        let headers = msg.headers;
+        if close {
+            self.conn = None;
+        }
+        Ok(HttpResponse { status, headers, body })
+    }
+
+    /// Cached connection, or a fresh one after bounded retries.
+    fn ensure_conn(&mut self) -> Result<&mut Conn, NetError> {
+        if self.conn.is_none() {
+            let sock_addr = self
+                .addr
+                .to_socket_addrs()
+                .map_err(|e| NetError::Connect(format!("{}: bad address: {e}", self.addr)))?
+                .next()
+                .ok_or_else(|| NetError::Connect(format!("{}: no address", self.addr)))?;
+            let attempts = self.opts.connect_attempts.max(1);
+            let mut last = String::new();
+            for attempt in 0..attempts {
+                if attempt > 0 {
+                    std::thread::sleep(self.opts.backoff * attempt);
+                }
+                match TcpStream::connect_timeout(&sock_addr, self.opts.connect_timeout) {
+                    Ok(stream) => {
+                        let _ = stream.set_read_timeout(Some(self.opts.io_timeout));
+                        let _ = stream.set_write_timeout(Some(self.opts.io_timeout));
+                        let _ = stream.set_nodelay(true);
+                        self.conn = Some(Conn::new(stream));
+                        break;
+                    }
+                    Err(e) => last = e.to_string(),
+                }
+            }
+            if self.conn.is_none() {
+                return Err(NetError::Connect(format!(
+                    "{}: {last} (after {attempts} attempts)",
+                    self.addr
+                )));
+            }
+        }
+        Ok(self.conn.as_mut().unwrap())
+    }
+}
+
+fn http_to_net(e: HttpError) -> NetError {
+    match e {
+        HttpError::Timeout => NetError::Timeout("peer did not answer in time".into()),
+        HttpError::Closed => NetError::Io("connection closed by peer".into()),
+        HttpError::Io(e) => NetError::Io(e.to_string()),
+        HttpError::TooLarge(what) => NetError::Protocol(format!("response {what} too large")),
+        HttpError::Malformed(msg) => NetError::Protocol(msg),
+    }
+}
+
+fn parse_status_line(line: &str) -> Result<u16, NetError> {
+    let mut parts = line.split_whitespace();
+    match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| NetError::Protocol(format!("bad status line {line:?}"))),
+        _ => Err(NetError::Protocol(format!("bad status line {line:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_line_parses() {
+        assert_eq!(parse_status_line("HTTP/1.1 200 OK").unwrap(), 200);
+        assert_eq!(parse_status_line("HTTP/1.1 503 Service Unavailable").unwrap(), 503);
+        assert!(parse_status_line("ICY 200 OK").is_err());
+        assert!(parse_status_line("HTTP/1.1").is_err());
+    }
+
+    #[test]
+    fn connect_to_dead_port_fails_fast_and_bounded() {
+        // a freshly bound-then-dropped port refuses connections
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = HttpClientOpts {
+            connect_attempts: 2,
+            backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut c = HttpClient::with_opts(addr, opts);
+        let t0 = std::time::Instant::now();
+        match c.get("/healthz") {
+            Err(NetError::Connect(msg)) => assert!(msg.contains("2 attempts"), "{msg}"),
+            other => panic!("expected Connect error, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "bounded reconnect must fail fast");
+    }
+}

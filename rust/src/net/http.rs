@@ -1,0 +1,268 @@
+//! Minimal HTTP/1.1 message layer shared by the wire server and
+//! client (no hyper/reqwest in the offline vendor set).
+//!
+//! One [`Conn`] wraps a `TcpStream` with a read buffer so keep-alive
+//! connections can carry back-to-back (even pipelined) messages.
+//! [`Conn::read_message`] returns the raw start-line, headers and body
+//! of the next message — the server parses the start-line as a request
+//! line, the client as a status line.  Bodies are `Content-Length`
+//! framed only (chunked transfer encoding is rejected); head and body
+//! sizes are capped so a hostile peer cannot balloon memory.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Hard cap on the start-line + headers block.
+pub const HEAD_LIMIT: usize = 16 * 1024;
+
+/// What went wrong reading one HTTP message.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before any byte of the next message (keep-alive peer
+    /// went away between requests).
+    Closed,
+    /// The socket read timed out.
+    Timeout,
+    /// Head or body exceeded its size cap (maps to `413`).
+    TooLarge(&'static str),
+    /// The bytes were not a valid HTTP/1.1 message (maps to `400`).
+    Malformed(String),
+    /// Transport error mid-message.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => f.write_str("connection closed"),
+            HttpError::Timeout => f.write_str("socket read timed out"),
+            HttpError::TooLarge(what) => write!(f, "{what} too large"),
+            HttpError::Malformed(msg) => write!(f, "malformed HTTP message: {msg}"),
+            HttpError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+fn io_error(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Io(e),
+    }
+}
+
+/// One parsed message: start-line, headers, body.
+#[derive(Debug)]
+pub struct Message {
+    pub start_line: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Message {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+}
+
+/// Case-insensitive header lookup over a parsed header list.
+pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k.eq_ignore_ascii_case(name)).map(|(_, v)| v.as_str())
+}
+
+/// A TCP connection with a read buffer (leftover bytes between
+/// keep-alive messages) and byte counters for the net-layer metrics.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn { stream, buf: Vec::new(), bytes_in: 0, bytes_out: 0 }
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    /// Read the next message off the connection; `body_cap` bounds the
+    /// accepted `Content-Length`.
+    pub fn read_message(&mut self, body_cap: usize) -> Result<Message, HttpError> {
+        let head_end = self.fill_until_head_end()?;
+        // split head off the buffer; keep any body/pipelined bytes
+        let head_bytes: Vec<u8> = self.buf.drain(..head_end + 4).collect();
+        let head = std::str::from_utf8(&head_bytes[..head_end])
+            .map_err(|_| HttpError::Malformed("head is not UTF-8".into()))?;
+        let mut lines = head.split("\r\n");
+        let start_line = lines
+            .next()
+            .filter(|l| !l.is_empty())
+            .ok_or_else(|| HttpError::Malformed("empty start line".into()))?
+            .to_string();
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(':')
+                .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        if header(&headers, "Transfer-Encoding").is_some() {
+            return Err(HttpError::Malformed("chunked transfer encoding not supported".into()));
+        }
+        let body_len = match header(&headers, "Content-Length") {
+            None => 0usize,
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| HttpError::Malformed(format!("bad Content-Length {v:?}")))?,
+        };
+        if body_len > body_cap {
+            return Err(HttpError::TooLarge("body"));
+        }
+        while self.buf.len() < body_len {
+            self.fill_some()?;
+        }
+        let body: Vec<u8> = self.buf.drain(..body_len).collect();
+        Ok(Message { start_line, headers, body })
+    }
+
+    /// Write one message; returns when the bytes are handed to the OS.
+    pub fn write_message(
+        &mut self,
+        start_line: &str,
+        headers: &[(&str, String)],
+        body: &[u8],
+    ) -> Result<(), HttpError> {
+        let mut head = String::with_capacity(128);
+        head.push_str(start_line);
+        head.push_str("\r\n");
+        for (k, v) in headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+        self.stream.write_all(head.as_bytes()).map_err(io_error)?;
+        self.stream.write_all(body).map_err(io_error)?;
+        self.stream.flush().map_err(io_error)?;
+        self.bytes_out += (head.len() + body.len()) as u64;
+        Ok(())
+    }
+
+    /// Grow the buffer until it contains the `\r\n\r\n` head terminator;
+    /// returns its offset.
+    fn fill_until_head_end(&mut self) -> Result<usize, HttpError> {
+        loop {
+            if let Some(pos) = find_head_end(&self.buf) {
+                return Ok(pos);
+            }
+            if self.buf.len() > HEAD_LIMIT {
+                return Err(HttpError::TooLarge("head"));
+            }
+            let was_empty = self.buf.is_empty();
+            match self.fill_some() {
+                Ok(()) => {}
+                // EOF between messages is a clean keep-alive close;
+                // EOF mid-head is a protocol error
+                Err(HttpError::Closed) if !was_empty => {
+                    return Err(HttpError::Malformed("EOF mid-head".into()))
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One `read` into the buffer; maps EOF to [`HttpError::Closed`].
+    fn fill_some(&mut self) -> Result<(), HttpError> {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk).map_err(io_error)?;
+        if n == 0 {
+            return Err(HttpError::Closed);
+        }
+        self.bytes_in += n as u64;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Loopback pair for message-layer tests.
+    fn pair() -> (Conn, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (Conn::new(a), Conn::new(b))
+    }
+
+    #[test]
+    fn round_trips_messages_with_bodies_and_keepalive() {
+        let (mut c, mut s) = pair();
+        c.write_message("POST /v1/infer HTTP/1.1", &[("Host", "x".into())], b"{\"a\":1}").unwrap();
+        c.write_message("GET /healthz HTTP/1.1", &[], b"").unwrap();
+        let m1 = s.read_message(1024).unwrap();
+        assert_eq!(m1.start_line, "POST /v1/infer HTTP/1.1");
+        assert_eq!(m1.header("host"), Some("x"), "case-insensitive lookup");
+        assert_eq!(m1.body, b"{\"a\":1}");
+        // second (pipelined) message comes straight out of the buffer
+        let m2 = s.read_message(1024).unwrap();
+        assert_eq!(m2.start_line, "GET /healthz HTTP/1.1");
+        assert!(m2.body.is_empty());
+        assert!(s.bytes_in() > 0 && c.bytes_out() == s.bytes_in());
+    }
+
+    #[test]
+    fn oversized_body_is_too_large() {
+        let (mut c, mut s) = pair();
+        c.write_message("POST /x HTTP/1.1", &[], &[b'a'; 64]).unwrap();
+        match s.read_message(16) {
+            Err(HttpError::TooLarge("body")) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_between_messages_is_closed() {
+        let (c, mut s) = pair();
+        drop(c);
+        match s.read_message(16) {
+            Err(HttpError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_head_is_malformed() {
+        let (mut c, mut s) = pair();
+        c.write_message("NOT A HEADER LINE", &[("broken", String::new())], b"").unwrap();
+        // header "broken: " parses fine; inject a truly bad one manually
+        let m = s.read_message(16).unwrap();
+        assert_eq!(m.start_line, "NOT A HEADER LINE");
+        drop(m);
+        c.stream.write_all(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap();
+        match s.read_message(16) {
+            Err(HttpError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+}

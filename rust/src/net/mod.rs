@@ -1,0 +1,419 @@
+//! Wire-protocol serving front: the coordinator on a socket.
+//!
+//! Everything below `net/` is std-only (matching the repo's no-deps
+//! substrate style in `util/`): a from-scratch HTTP/1.1 layer
+//! ([`http`]), a serving front that puts a [`crate::coordinator::Server`]
+//! behind a `TcpListener` ([`server`]), a keep-alive wire client
+//! ([`client`]), and [`remote::RemoteEngine`] — an implementation of
+//! [`crate::engine::Engine`] that executes batches on remote flexsvm
+//! nodes, so one coordinator can fan out to N machines (the first
+//! multi-node topology; see DESIGN.md §"The network front").
+//!
+//! Endpoints:
+//!
+//! | route             | method | body / answer |
+//! |-------------------|--------|----------------|
+//! | `/healthz`        | GET    | `{"status":"ok","engine":..,"configs":[..]}` |
+//! | `/v1/infer`       | POST   | `{"config":k,"features":[..]}` → one answer; `{"config":k,"batch":[[..],..]}` → `{"results":[..]}` with per-sample isolation |
+//! | `/v1/metrics`     | GET    | `ConfigMetrics` + `EngineMetrics` + net counters |
+//!
+//! Admission control: request bodies are parsed under
+//! [`crate::util::json::Limits`], and submission uses the coordinator's
+//! non-blocking [`crate::coordinator::Client::try_submit`] — when the
+//! bounded ingress is saturated the request is shed with
+//! `503 + Retry-After` instead of blocking the socket.  The [`wire`]
+//! module pins the JSON encoding of answers and the typed
+//! [`ServeError`](crate::engine::ServeError) ↔ status-code mapping that
+//! both sides of the protocol share, which is what keeps served
+//! predictions bit-identical across process boundaries (DESIGN.md §6).
+
+pub mod client;
+pub mod http;
+pub mod remote;
+pub mod server;
+
+pub use client::{HttpClient, HttpClientOpts, HttpResponse, NetError};
+pub use remote::RemoteEngine;
+pub use server::{NetMetricsSnapshot, NetOpts, NetServer};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::Histogram;
+use crate::svm::infer;
+use crate::svm::model::{QuantModel, TestSet};
+
+/// The JSON encoding both sides of the wire protocol share.
+pub mod wire {
+    use std::collections::HashMap;
+
+    use anyhow::Result;
+
+    use crate::coordinator::metrics::ConfigMetrics;
+    use crate::coordinator::Response;
+    use crate::engine::{EngineMetrics, Sample, ServeError, SimCost};
+    use crate::farm::{FarmMetrics, ShardMetrics};
+    use crate::util::json::{obj, Json};
+
+    pub fn features_json(x: &[i32]) -> Json {
+        Json::Arr(x.iter().map(|&v| v.into()).collect())
+    }
+
+    pub fn mat_json(xs: &[Vec<i32>]) -> Json {
+        Json::Arr(xs.iter().map(|x| features_json(x)).collect())
+    }
+
+    /// `POST /v1/infer` body for one sample.
+    pub fn infer_body(config: &str, x: &[i32]) -> Json {
+        obj([("config", config.into()), ("features", features_json(x))])
+    }
+
+    /// `POST /v1/infer` body for a batch.
+    pub fn infer_batch_body(config: &str, xs: &[Vec<i32>]) -> Json {
+        obj([("config", config.into()), ("batch", mat_json(xs))])
+    }
+
+    pub fn sim_json(sim: Option<SimCost>) -> Json {
+        match sim {
+            None => Json::Null,
+            Some(s) => obj([("cycles", s.cycles.into()), ("energy_mj", s.energy_mj.into())]),
+        }
+    }
+
+    pub fn sim_from_json(v: &Json) -> Result<Option<SimCost>> {
+        match v {
+            Json::Null => Ok(None),
+            v => Ok(Some(SimCost {
+                cycles: v.get("cycles")?.as_i64()? as u64,
+                energy_mj: v.get("energy_mj")?.as_f64()?,
+            })),
+        }
+    }
+
+    /// One successful coordinator answer.
+    pub fn response_json(r: &Response) -> Json {
+        obj([
+            ("pred", r.pred.into()),
+            ("batch_size", Json::Num(r.batch_size as f64)),
+            ("latency_us", (r.latency.as_micros() as u64).into()),
+            ("sim", sim_json(r.sim)),
+        ])
+    }
+
+    /// Parse an answer object back into the engine-level [`Sample`].
+    pub fn sample_from_json(v: &Json) -> Result<Sample> {
+        Ok(Sample {
+            pred: v.get("pred")?.as_i32()?,
+            sim: sim_from_json(v.opt("sim").unwrap_or(&Json::Null))?,
+        })
+    }
+
+    /// HTTP status a typed request-path error maps to.
+    pub fn status_for(e: &ServeError) -> u16 {
+        match e {
+            ServeError::UnknownConfig(_) => 404,
+            ServeError::Overloaded => 503,
+            ServeError::ServerDown => 503,
+            ServeError::Dropped => 500,
+            ServeError::Engine(_) => 500,
+        }
+    }
+
+    fn kind_for(e: &ServeError) -> &'static str {
+        match e {
+            ServeError::UnknownConfig(_) => "unknown_config",
+            ServeError::Overloaded => "overloaded",
+            ServeError::ServerDown => "server_down",
+            ServeError::Dropped => "dropped",
+            ServeError::Engine(_) => "engine",
+        }
+    }
+
+    /// `{"error":{"kind":..,"message":..}}` — the wire form of a typed
+    /// error; [`error_from_json`] inverts it.
+    pub fn error_body(e: &ServeError) -> Json {
+        let mut pairs = vec![("kind", kind_for(e).into()), ("message", e.to_string().into())];
+        if let ServeError::UnknownConfig(key) = e {
+            pairs.push(("config", key.as_str().into()));
+        }
+        obj([("error", obj(pairs))])
+    }
+
+    /// Map a wire error body back to the typed error (tolerant: an
+    /// unrecognised shape degrades to `ServeError::Engine`).
+    pub fn error_from_json(body: &Json) -> ServeError {
+        let Some(err) = body.opt("error") else {
+            let raw = body.to_string();
+            return ServeError::Engine(format!("unrecognised error body: {raw}"));
+        };
+        let kind = err.opt("kind").and_then(|k| k.as_str().ok()).unwrap_or("engine");
+        let message = err
+            .opt("message")
+            .and_then(|m| m.as_str().ok())
+            .unwrap_or("remote error")
+            .to_string();
+        match kind {
+            "unknown_config" => ServeError::UnknownConfig(
+                err.opt("config")
+                    .and_then(|c| c.as_str().ok())
+                    .unwrap_or("<unknown>")
+                    .to_string(),
+            ),
+            "overloaded" => ServeError::Overloaded,
+            "server_down" => ServeError::ServerDown,
+            "dropped" => ServeError::Dropped,
+            _ => ServeError::Engine(message),
+        }
+    }
+
+    pub fn farm_json(f: &FarmMetrics) -> Json {
+        obj([
+            ("spills", f.spills.into()),
+            (
+                "shards",
+                Json::Arr(
+                    f.shards
+                        .iter()
+                        .map(|s| {
+                            obj([
+                                ("jobs", s.jobs.into()),
+                                ("sim_cycles", s.sim_cycles.into()),
+                                ("model_loads", s.model_loads.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn farm_from_json(v: &Json) -> Result<FarmMetrics> {
+        let shards = v
+            .get("shards")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(ShardMetrics {
+                    jobs: s.get("jobs")?.as_i64()? as u64,
+                    sim_cycles: s.get("sim_cycles")?.as_i64()? as u64,
+                    model_loads: s.get("model_loads")?.as_i64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FarmMetrics { shards, spills: v.get("spills")?.as_i64()? as u64 })
+    }
+
+    pub fn engine_metrics_json(em: &EngineMetrics) -> Json {
+        obj([
+            ("name", em.engine.as_str().into()),
+            ("farm", em.farm.as_ref().map(farm_json).unwrap_or(Json::Null)),
+        ])
+    }
+
+    /// Per-config serving counters + latency summary (the histogram
+    /// itself stays server-side; quantiles travel).
+    pub fn config_metrics_json(m: &ConfigMetrics) -> Json {
+        let (p50, p99, mean, max) = m
+            .latency
+            .as_ref()
+            .map(|h| (h.quantile_us(0.50), h.quantile_us(0.99), h.mean_us(), h.max_us()))
+            .unwrap_or((0, 0, 0.0, 0));
+        obj([
+            ("requests", m.requests.into()),
+            ("batches", m.batches.into()),
+            ("batched_samples", m.batched_samples.into()),
+            ("sim_samples", m.sim_samples.into()),
+            ("sim_cycles", m.sim_cycles.into()),
+            ("energy_mj", m.energy_mj.into()),
+            ("baseline_cycles_per_inf", m.baseline_cycles_per_inf.into()),
+            ("p50_us", p50.into()),
+            ("p99_us", p99.into()),
+            ("mean_us", mean.into()),
+            ("max_us", max.into()),
+        ])
+    }
+
+    /// The whole `/v1/metrics` document.
+    pub fn metrics_body(
+        configs: &HashMap<String, ConfigMetrics>,
+        engine: &EngineMetrics,
+        net: &super::NetMetricsSnapshot,
+    ) -> Json {
+        let mut cfg = std::collections::BTreeMap::new();
+        for (k, m) in configs {
+            cfg.insert(k.clone(), config_metrics_json(m));
+        }
+        obj([
+            ("configs", Json::Obj(cfg)),
+            ("engine", engine_metrics_json(engine)),
+            (
+                "net",
+                obj([
+                    ("accepted", net.accepted.into()),
+                    ("active", net.active.into()),
+                    ("shed", net.shed.into()),
+                    ("requests", net.requests.into()),
+                    ("bytes_in", net.bytes_in.into()),
+                    ("bytes_out", net.bytes_out.into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Outcome of one multi-threaded HTTP client drive (the wire twin of
+/// [`crate::util::benchkit::drive_clients`]).
+#[derive(Debug)]
+pub struct HttpDriveResult {
+    /// Requests answered `200`.
+    pub served: u64,
+    /// Answers equal to the test-set label.
+    pub label_correct: u64,
+    /// Answers that diverged from `svm::infer::predict` (only counted
+    /// when reference models are supplied; must be 0).
+    pub native_mismatch: u64,
+    /// Requests shed by admission control (`503`).
+    pub shed: u64,
+    pub wall: Duration,
+    /// Client-observed wall latency of successful requests.
+    pub latency: Histogram,
+}
+
+/// Drive a wire server from `workers` threads over real test vectors,
+/// round-robining configs — same access pattern as
+/// `benchkit::drive_clients`, but over loopback (or real) sockets, so
+/// the §6 bit-exactness contract can be checked across the wire.
+/// `503` answers count as shed (not errors); any other non-200 answer
+/// fails the drive.
+pub fn drive_http(
+    addr: &str,
+    testsets: &[(String, TestSet)],
+    n_requests: usize,
+    workers: usize,
+    check_models: Option<&HashMap<String, QuantModel>>,
+) -> Result<HttpDriveResult> {
+    assert!(workers > 0 && !testsets.is_empty());
+    let correct = AtomicU64::new(0);
+    let mismatch = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let latency = Mutex::new(Histogram::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let (correct, mismatch, served, shed) = (&correct, &mismatch, &served, &shed);
+            let latency = &latency;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut client = HttpClient::new(addr);
+                for i in 0..n_requests / workers {
+                    let (key, test) = &testsets[(w + i) % testsets.len()];
+                    let idx = (w * 7919 + i * 31) % test.len();
+                    let x = &test.x_q[idx];
+                    let t_req = Instant::now();
+                    let resp = client.post_json("/v1/infer", &wire::infer_body(key, x))?;
+                    match resp.status {
+                        200 => {
+                            latency.lock().unwrap().record(t_req.elapsed());
+                            let pred = resp.json()?.get("pred")?.as_i32()?;
+                            served.fetch_add(1, Ordering::Relaxed);
+                            if pred == test.y[idx] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                            if let Some(models) = check_models {
+                                if pred != infer::predict(&models[key], x) {
+                                    mismatch.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        503 => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        s => bail!("unexpected status {s}: {}", resp.body),
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("http drive worker panicked").context("http drive worker")?;
+        }
+        Ok(())
+    })?;
+    Ok(HttpDriveResult {
+        served: served.load(Ordering::Relaxed),
+        label_correct: correct.load(Ordering::Relaxed),
+        native_mismatch: mismatch.load(Ordering::Relaxed),
+        shed: shed.load(Ordering::Relaxed),
+        wall: t0.elapsed(),
+        latency: latency.into_inner().unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::wire;
+    use crate::engine::{ServeError, SimCost};
+    use crate::farm::{FarmMetrics, ShardMetrics};
+    use crate::util::json::Json;
+
+    #[test]
+    fn typed_errors_round_trip_the_wire_encoding() {
+        for e in [
+            ServeError::UnknownConfig("iris_ovr_w4".into()),
+            ServeError::Overloaded,
+            ServeError::ServerDown,
+            ServeError::Dropped,
+            ServeError::Engine("boom".into()),
+        ] {
+            let body = wire::error_body(&e);
+            let parsed = Json::parse(&body.to_string()).unwrap();
+            assert_eq!(wire::error_from_json(&parsed), e, "{body:?}");
+        }
+    }
+
+    #[test]
+    fn status_mapping_is_stable() {
+        assert_eq!(wire::status_for(&ServeError::UnknownConfig("k".into())), 404);
+        assert_eq!(wire::status_for(&ServeError::Overloaded), 503);
+        assert_eq!(wire::status_for(&ServeError::Engine("x".into())), 500);
+    }
+
+    #[test]
+    fn samples_and_sim_costs_round_trip() {
+        let j = wire::sim_json(Some(SimCost { cycles: 1234, energy_mj: 0.5 }));
+        let back = wire::sim_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap().unwrap();
+        assert_eq!(back.cycles, 1234);
+        assert!((back.energy_mj - 0.5).abs() < 1e-12);
+        assert!(wire::sim_from_json(&Json::Null).unwrap().is_none());
+    }
+
+    #[test]
+    fn farm_metrics_round_trip() {
+        let f = FarmMetrics {
+            shards: vec![
+                ShardMetrics { jobs: 3, sim_cycles: 999, model_loads: 1 },
+                ShardMetrics { jobs: 5, sim_cycles: 1000, model_loads: 2 },
+            ],
+            spills: 4,
+        };
+        let j = Json::parse(&wire::farm_json(&f).to_string()).unwrap();
+        let back = wire::farm_from_json(&j).unwrap();
+        assert_eq!(back.spills, 4);
+        assert_eq!(back.shards.len(), 2);
+        assert_eq!(back.total_jobs(), 8);
+        assert_eq!(back.shards[1].sim_cycles, 1000);
+    }
+
+    #[test]
+    fn unknown_error_shape_degrades_to_engine() {
+        let v = Json::parse(r#"{"weird": true}"#).unwrap();
+        assert!(matches!(wire::error_from_json(&v), ServeError::Engine(_)));
+        let v = Json::parse(r#"{"error":{"kind":"martian"}}"#).unwrap();
+        assert!(matches!(wire::error_from_json(&v), ServeError::Engine(_)));
+    }
+}

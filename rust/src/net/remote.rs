@@ -1,0 +1,317 @@
+//! [`RemoteEngine`]: the coordinator's [`Engine`] contract executed on
+//! remote flexsvm nodes over the wire protocol.
+//!
+//! This is the piece that takes the serving stack multi-node: a local
+//! coordinator built with `Server::builder().keys(..).engine(..)` keeps
+//! its whole batching/metrics/failure-isolation loop, while batches
+//! execute on N remote `net::server` nodes.  Per batch, the sample
+//! slice is split into contiguous chunks — one per node — and the
+//! chunks are posted concurrently; each node's own coordinator then
+//! re-batches and runs them on whatever engine *it* was built with
+//! (native, the SoC farm, PJRT, or another `RemoteEngine` one hop
+//! further out).
+//!
+//! Failure mapping is typed end to end: per-sample wire errors come
+//! back as their original [`ServeError`] variants (per-sample isolation
+//! crosses the machine boundary), connect failures after the client's
+//! bounded reconnect map to [`ServeError::ServerDown`], timeouts and
+//! transport drops to [`ServeError::Engine`] — a dead node fails its
+//! chunk alone, not the whole batch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::engine::{batch_error, Engine, EngineMetrics, ModelSource, Sample, ServeError};
+use crate::farm::FarmMetrics;
+use crate::util::json::Json;
+
+use super::client::{HttpClient, HttpClientOpts, NetError};
+use super::wire;
+
+/// Remote-node serving engine (see the module docs).
+pub struct RemoteEngine {
+    name: String,
+    nodes: Vec<Mutex<HttpClient>>,
+    /// Remote per-config software-baseline cycles, fetched at warm.
+    baselines: HashMap<String, f64>,
+    /// Rotating start node, so small (even single-sample) batches
+    /// spread across the fleet instead of pinning node 0.
+    next: AtomicUsize,
+}
+
+impl RemoteEngine {
+    /// Fan out to the given `host:port` nodes with default client
+    /// options.
+    pub fn new<I, S>(addrs: I) -> Result<RemoteEngine>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Self::with_opts(addrs, HttpClientOpts::default())
+    }
+
+    pub fn with_opts<I, S>(addrs: I, opts: HttpClientOpts) -> Result<RemoteEngine>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let addrs: Vec<String> = addrs.into_iter().map(Into::into).collect();
+        if addrs.is_empty() {
+            bail!("RemoteEngine needs at least one node address");
+        }
+        let name = format!("remote({})", addrs.join(","));
+        let nodes = addrs
+            .into_iter()
+            .map(|a| Mutex::new(HttpClient::with_opts(a, opts.clone())))
+            .collect();
+        Ok(RemoteEngine { name, nodes, baselines: HashMap::new(), next: AtomicUsize::new(0) })
+    }
+
+    /// Node count (chunks per batch).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Execute one contiguous chunk on one node.
+    fn run_chunk(&self, node: usize, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        let mut client = self.nodes[node].lock().unwrap();
+        let resp = match client.post_json("/v1/infer", &wire::infer_batch_body(key, xs)) {
+            Ok(r) => r,
+            Err(e) => return batch_error(xs.len(), net_to_serve(e)),
+        };
+        if resp.status != 200 {
+            return batch_error(xs.len(), status_to_serve(resp.status, &resp.body));
+        }
+        let doc = match resp.json() {
+            Ok(d) => d,
+            Err(e) => return batch_error(xs.len(), ServeError::Engine(e.to_string())),
+        };
+        let results = match doc.get("results").and_then(|r| r.as_arr().map(|a| a.to_vec())) {
+            Ok(r) => r,
+            Err(e) => {
+                return batch_error(xs.len(), ServeError::Engine(format!("bad results: {e:#}")))
+            }
+        };
+        if results.len() != xs.len() {
+            let msg = format!("node answered {} samples for a chunk of {}", results.len(), xs.len());
+            return batch_error(xs.len(), ServeError::Engine(msg));
+        }
+        results
+            .iter()
+            .map(|item| {
+                if item.opt("error").is_some() {
+                    Err(wire::error_from_json(item))
+                } else {
+                    wire::sample_from_json(item)
+                        .map_err(|e| ServeError::Engine(format!("bad sample: {e:#}")))
+                }
+            })
+            .collect()
+    }
+}
+
+fn net_to_serve(e: NetError) -> ServeError {
+    match e {
+        // the node is unreachable even after bounded reconnect
+        NetError::Connect(_) => ServeError::ServerDown,
+        NetError::Timeout(msg) => ServeError::Engine(format!("remote timeout: {msg}")),
+        NetError::Io(msg) => ServeError::Engine(format!("remote transport: {msg}")),
+        NetError::Protocol(msg) => ServeError::Engine(format!("remote protocol: {msg}")),
+    }
+}
+
+fn status_to_serve(status: u16, body: &str) -> ServeError {
+    if let Ok(doc) = Json::parse(body) {
+        if doc.opt("error").is_some() {
+            return wire::error_from_json(&doc);
+        }
+    }
+    ServeError::Engine(format!("remote answered HTTP {status}"))
+}
+
+impl Engine for RemoteEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Probe every node's `/healthz`, check it serves all requested
+    /// keys, and fetch the remote baseline calibration.
+    fn warm(&mut self, _source: &ModelSource, keys: &[String]) -> Result<()> {
+        for node in &self.nodes {
+            let mut client = node.lock().unwrap();
+            let addr = client.addr().to_string();
+            let resp = client
+                .get("/healthz")
+                .map_err(anyhow::Error::from)
+                .with_context(|| format!("probing node {addr}"))?;
+            if resp.status != 200 {
+                bail!("node {addr} unhealthy: HTTP {} ({})", resp.status, resp.body);
+            }
+            let doc = resp.json().map_err(anyhow::Error::from)?;
+            let served: Vec<String> = doc
+                .get("configs")?
+                .as_arr()?
+                .iter()
+                .map(|k| Ok(k.as_str()?.to_string()))
+                .collect::<Result<_>>()?;
+            for key in keys {
+                if !served.iter().any(|s| s == key) {
+                    bail!("node {addr} does not serve config {key:?} (serves {served:?})");
+                }
+            }
+        }
+        // baseline calibration travels from node 0's metrics (all nodes
+        // serve the same configs; Table I's ratio needs one source)
+        let mut client = self.nodes[0].lock().unwrap();
+        if let Ok(resp) = client.get("/v1/metrics") {
+            if resp.status == 200 {
+                if let Ok(doc) = resp.json() {
+                    if let Ok(configs) = doc.get("configs").and_then(|c| c.as_obj().cloned()) {
+                        for (key, m) in &configs {
+                            if let Some(b) =
+                                m.opt("baseline_cycles_per_inf").and_then(|v| v.as_f64().ok())
+                            {
+                                if b > 0.0 {
+                                    self.baselines.insert(key.clone(), b);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let n_nodes = self.nodes.len();
+        // rotate the start node per batch: small batches (down to the
+        // single-sample flushes of a lightly-loaded front) spread over
+        // the fleet instead of pinning node 0
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n_nodes;
+        if n_nodes == 1 || xs.len() == 1 {
+            return self.run_chunk(start, key, xs);
+        }
+        // contiguous chunks, one per node, posted concurrently
+        let chunk = xs.len().div_ceil(n_nodes);
+        let chunks: Vec<&[Vec<i32>]> = xs.chunks(chunk).collect();
+        let mut out = Vec::with_capacity(xs.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .enumerate()
+                .map(|(i, c)| scope.spawn(move || self.run_chunk((start + i) % n_nodes, key, c)))
+                .collect();
+            for (h, c) in handles.into_iter().zip(&chunks) {
+                match h.join() {
+                    Ok(answers) => out.extend(answers),
+                    Err(_) => out.extend(batch_error(
+                        c.len(),
+                        ServeError::Engine("remote chunk worker panicked".into()),
+                    )),
+                }
+            }
+        });
+        out
+    }
+
+    fn baseline_cycles(&self, key: &str) -> Option<f64> {
+        self.baselines.get(key).copied()
+    }
+
+    /// Merge the nodes' farm shards into one view (jobs/cycles per
+    /// remote shard, spills summed) so `report::serving` can show the
+    /// whole fleet.  Nodes are probed concurrently: this runs on the
+    /// coordinator's dispatcher thread, so a dead node must cost one
+    /// bounded reconnect, not one per node in series.
+    fn snapshot(&self) -> EngineMetrics {
+        let farms: Vec<Option<FarmMetrics>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .nodes
+                .iter()
+                .map(|node| {
+                    scope.spawn(move || {
+                        let mut client = node.lock().unwrap();
+                        let resp = client.get("/v1/metrics").ok()?;
+                        if resp.status != 200 {
+                            return None;
+                        }
+                        let doc = resp.json().ok()?;
+                        let farm_json = doc.opt("engine").and_then(|e| e.opt("farm"))?;
+                        if matches!(farm_json, Json::Null) {
+                            return None;
+                        }
+                        wire::farm_from_json(farm_json).ok()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+        });
+        let mut merged: Option<FarmMetrics> = None;
+        for f in farms.into_iter().flatten() {
+            match merged.as_mut() {
+                None => merged = Some(f),
+                Some(m) => {
+                    m.spills += f.spills;
+                    m.shards.extend(f.shards);
+                }
+            }
+        }
+        EngineMetrics { engine: self.name.clone(), farm: merged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_at_least_one_node() {
+        assert!(RemoteEngine::new(Vec::<String>::new()).is_err());
+        let e = RemoteEngine::new(["127.0.0.1:9", "127.0.0.1:10"]).unwrap();
+        assert_eq!(e.n_nodes(), 2);
+        assert_eq!(e.name(), "remote(127.0.0.1:9,127.0.0.1:10)");
+    }
+
+    #[test]
+    fn unreachable_node_maps_to_server_down() {
+        // port reserved then released: nothing listens there
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = HttpClientOpts {
+            connect_attempts: 1,
+            backoff: std::time::Duration::from_millis(1),
+            ..Default::default()
+        };
+        let engine = RemoteEngine::with_opts([addr], opts).unwrap();
+        let out = engine.run_batch("k", &[vec![1], vec![2]]);
+        assert_eq!(out.len(), 2);
+        for r in &out {
+            assert_eq!(r.as_ref().unwrap_err(), &ServeError::ServerDown);
+        }
+    }
+
+    #[test]
+    fn warm_fails_fast_against_a_dead_node() {
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = HttpClientOpts {
+            connect_attempts: 1,
+            backoff: std::time::Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut engine = RemoteEngine::with_opts([addr], opts).unwrap();
+        let err = engine.warm(&ModelSource::None, &["k".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("probing node"), "{err:#}");
+    }
+}

@@ -1,0 +1,505 @@
+//! The serving front: a `coordinator::Server` behind a `TcpListener`.
+//!
+//! Shape: one acceptor thread pushes accepted connections into a
+//! bounded queue drained by a fixed worker pool; each worker speaks
+//! keep-alive HTTP/1.1 on its connection and drives requests into the
+//! coordinator.  Admission control is two-stage and never blocks the
+//! socket:
+//!
+//!  * a full connection queue sheds the connection itself with a
+//!    one-shot `503 + Retry-After`;
+//!  * a saturated coordinator ingress sheds the *request* the same way
+//!    (`Client::try_submit` → [`ServeError::Overloaded`] →
+//!    `503 + Retry-After`) while accepted batchmates still complete.
+//!
+//! Slow or idle peers are bounded by the keep-alive read timeout, and
+//! request bodies by [`NetOpts::body_limit`] (both the raw read and the
+//! JSON parse enforce it).  [`NetServer::shutdown`] stops accepting,
+//! drains in-flight connections, then shuts the coordinator down —
+//! surfacing dispatcher panics like `Server::shutdown` does.
+
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::{Client, Server};
+use crate::engine::ServeError;
+use crate::util::json::{obj, Json, Limits};
+
+use super::http::{Conn, HttpError, Message};
+use super::wire;
+
+/// Net-layer knobs.
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    /// Connection-handling worker threads (= max concurrent
+    /// connections being served).
+    pub workers: usize,
+    /// Bound of the accepted-connection queue; overflow is shed with
+    /// `503`.
+    pub conn_backlog: usize,
+    /// Request-body cap in bytes (raw read and JSON parse).
+    pub body_limit: usize,
+    /// Keep-alive read timeout: how long an idle (or stalled) peer may
+    /// hold a worker before the connection is closed.
+    pub keep_alive: Duration,
+    /// Value of the `Retry-After` header on shed requests.
+    pub retry_after: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        NetOpts {
+            workers: 8,
+            conn_backlog: 64,
+            body_limit: 1 << 20,
+            keep_alive: Duration::from_secs(2),
+            retry_after: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Point-in-time net-layer counters (`/v1/metrics` → `"net"`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetMetricsSnapshot {
+    /// Connections accepted off the listener.
+    pub accepted: u64,
+    /// Connections currently being served.
+    pub active: u64,
+    /// Requests (and overflow connections) shed with `503`.
+    pub shed: u64,
+    /// HTTP requests parsed.
+    pub requests: u64,
+    /// Bytes read off completed requests.
+    pub bytes_in: u64,
+    /// Bytes written in answers.
+    pub bytes_out: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    shed: AtomicU64,
+    requests: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetMetricsSnapshot {
+        NetMetricsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared state between the acceptor and the workers.
+struct Ctx {
+    client: Client,
+    keys: Vec<String>,
+    counters: Counters,
+    stop: AtomicBool,
+    opts: NetOpts,
+}
+
+/// Running wire front.  Owns the wrapped coordinator server; prefer an
+/// explicit [`shutdown`](Self::shutdown) (drains in-flight requests and
+/// surfaces dispatcher panics) over plain drop.
+pub struct NetServer {
+    addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    coordinator: Option<Server>,
+}
+
+impl NetServer {
+    /// Put `server` on a socket.  `listen` is `host:port`; port `0`
+    /// picks a free port — read it back from [`addr`](Self::addr).
+    pub fn bind(server: Server, listen: &str, opts: NetOpts) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr()?;
+        let ctx = Arc::new(Ctx {
+            client: server.client(),
+            keys: server.keys().to_vec(),
+            counters: Counters::default(),
+            stop: AtomicBool::new(false),
+            opts: opts.clone(),
+        });
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(opts.conn_backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(opts.workers.max(1));
+        for i in 0..opts.workers.max(1) {
+            let rx = Arc::clone(&conn_rx);
+            let wctx = Arc::clone(&ctx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("flexsvm-net-{i}"))
+                    .spawn(move || worker_loop(rx, wctx))?,
+            );
+        }
+        let actx = Arc::clone(&ctx);
+        let acceptor = std::thread::Builder::new()
+            .name("flexsvm-net-accept".into())
+            .spawn(move || acceptor_loop(listener, conn_tx, actx))?;
+        Ok(NetServer { addr, ctx, acceptor: Some(acceptor), workers, coordinator: Some(server) })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// In-process handle to the wrapped coordinator (metrics, local
+    /// traffic next to the socket).
+    pub fn client(&self) -> Client {
+        self.ctx.client.clone()
+    }
+
+    /// Net-layer counters.
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        self.ctx.counters.snapshot()
+    }
+
+    /// Stop accepting, drain in-flight connections, then shut the
+    /// coordinator down (dispatcher panics surface here).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_net();
+        match self.coordinator.take() {
+            Some(server) => server.shutdown(),
+            None => Ok(()),
+        }
+    }
+
+    /// Idempotent net-side teardown (shared by `shutdown` and `Drop`).
+    fn stop_net(&mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        // wake the blocking `accept` with a throwaway connection; an
+        // unspecified bind address (0.0.0.0 / [::]) is not
+        // self-connectable on every platform, so aim at its loopback
+        // equivalent, and never hang the teardown on the connect
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_net();
+        // the coordinator Server's own Drop handles dispatcher
+        // teardown (panics are logged, not surfaced — use
+        // NetServer::shutdown to handle them)
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, conn_tx: mpsc::SyncSender<TcpStream>, ctx: Arc<Ctx>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return; // the shutdown wake-up
+                }
+                ctx.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(stream)) => {
+                        // every worker busy and the backlog full: shed
+                        // the connection instead of letting it queue
+                        // unboundedly behind the socket
+                        ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream, &ctx.opts);
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(_) => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // transient accept error (EMFILE, aborted handshake):
+                // back off briefly instead of spinning a core while
+                // the condition persists
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Best-effort one-shot `503` on a connection we cannot serve.
+fn shed_connection(stream: TcpStream, opts: &NetOpts) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let mut conn = Conn::new(stream);
+    let _ = conn.write_message(
+        "HTTP/1.1 503 Service Unavailable",
+        &[
+            ("Content-Type", "application/json".to_string()),
+            ("Retry-After", opts.retry_after.as_secs().max(1).to_string()),
+            ("Connection", "close".to_string()),
+        ],
+        wire::error_body(&ServeError::Overloaded).to_string().as_bytes(),
+    );
+}
+
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, ctx: Arc<Ctx>) {
+    loop {
+        // holding the lock while blocked in `recv` is the shared-
+        // consumer idiom: whoever holds it takes the next connection,
+        // then releases the lock for the next idle worker
+        let stream = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_connection(s, &ctx),
+            // acceptor gone and queue drained: clean exit
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(ctx.opts.keep_alive));
+    let _ = stream.set_nodelay(true);
+    ctx.counters.active.fetch_add(1, Ordering::SeqCst);
+    let mut conn = Conn::new(stream);
+    let (mut folded_in, mut folded_out) = (0u64, 0u64);
+    loop {
+        match conn.read_message(ctx.opts.body_limit) {
+            Ok(msg) => {
+                ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                let close_requested = msg
+                    .header("Connection")
+                    .map(|v| v.eq_ignore_ascii_case("close"))
+                    .unwrap_or(false);
+                let answer = route(ctx, &msg);
+                let keep = !close_requested && !ctx.stop.load(Ordering::SeqCst);
+                let write_ok = write_answer(&mut conn, &answer, keep, &ctx.opts).is_ok();
+                ctx.counters.bytes_in.fetch_add(conn.bytes_in() - folded_in, Ordering::Relaxed);
+                ctx.counters.bytes_out.fetch_add(conn.bytes_out() - folded_out, Ordering::Relaxed);
+                folded_in = conn.bytes_in();
+                folded_out = conn.bytes_out();
+                if !write_ok || !keep {
+                    break;
+                }
+            }
+            Err(HttpError::TooLarge(what)) => {
+                let a = Answer::plain(413, "Payload Too Large", &format!("request {what} too large"));
+                let _ = write_answer(&mut conn, &a, false, &ctx.opts);
+                break;
+            }
+            Err(HttpError::Malformed(m)) => {
+                let a = Answer::plain(400, "Bad Request", &m);
+                let _ = write_answer(&mut conn, &a, false, &ctx.opts);
+                break;
+            }
+            // clean close, idle/stalled timeout, or transport error
+            Err(HttpError::Closed | HttpError::Timeout | HttpError::Io(_)) => break,
+        }
+    }
+    // fold whatever the in-loop folds missed (error answers, partial
+    // requests) so the byte counters cover every exit path
+    ctx.counters.bytes_in.fetch_add(conn.bytes_in() - folded_in, Ordering::Relaxed);
+    ctx.counters.bytes_out.fetch_add(conn.bytes_out() - folded_out, Ordering::Relaxed);
+    ctx.counters.active.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// One routed answer, ready to serialize.
+struct Answer {
+    status: u16,
+    reason: &'static str,
+    body: Json,
+    retry_after: bool,
+}
+
+impl Answer {
+    fn ok(body: Json) -> Answer {
+        Answer { status: 200, reason: "OK", body, retry_after: false }
+    }
+
+    fn plain(status: u16, reason: &'static str, message: &str) -> Answer {
+        let body = obj([(
+            "error",
+            obj([("kind", reason_kind(status).into()), ("message", message.into())]),
+        )]);
+        Answer { status, reason, body, retry_after: false }
+    }
+
+    fn from_serve_error(e: ServeError) -> Answer {
+        let status = wire::status_for(&e);
+        Answer {
+            status,
+            reason: reason_phrase(status),
+            retry_after: matches!(e, ServeError::Overloaded),
+            body: wire::error_body(&e),
+        }
+    }
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+fn reason_kind(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        413 => "too_large",
+        _ => "error",
+    }
+}
+
+fn route(ctx: &Ctx, msg: &Message) -> Answer {
+    let mut parts = msg.start_line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m, p),
+        _ => return Answer::plain(400, "Bad Request", "bad request line"),
+    };
+    match (method, path) {
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/v1/metrics") => metrics(ctx),
+        ("POST", "/v1/infer") => infer(ctx, &msg.body),
+        (_, "/healthz" | "/v1/metrics" | "/v1/infer") => {
+            Answer::plain(405, "Method Not Allowed", &format!("{method} not allowed here"))
+        }
+        _ => Answer::plain(404, "Not Found", &format!("no route {path:?}")),
+    }
+}
+
+/// Typed error → answer, counting `Overloaded` sheds in the net stats.
+fn shed_aware_error(ctx: &Ctx, e: ServeError) -> Answer {
+    if matches!(e, ServeError::Overloaded) {
+        ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+    }
+    Answer::from_serve_error(e)
+}
+
+fn healthz(ctx: &Ctx) -> Answer {
+    // the round-trip through the dispatcher doubles as a liveness
+    // probe; non-blocking so a saturated ingress sheds the probe with
+    // 503 instead of parking this worker
+    match ctx.client.try_engine_metrics() {
+        Ok(em) => Answer::ok(obj([
+            ("status", "ok".into()),
+            ("engine", em.engine.as_str().into()),
+            ("configs", Json::Arr(ctx.keys.iter().map(|k| k.as_str().into()).collect())),
+        ])),
+        Err(e) => shed_aware_error(ctx, e),
+    }
+}
+
+fn metrics(ctx: &Ctx) -> Answer {
+    let configs = match ctx.client.try_metrics() {
+        Ok(c) => c,
+        Err(e) => return shed_aware_error(ctx, e),
+    };
+    let engine = match ctx.client.try_engine_metrics() {
+        Ok(em) => em,
+        Err(e) => return shed_aware_error(ctx, e),
+    };
+    Answer::ok(wire::metrics_body(&configs, &engine, &ctx.counters.snapshot()))
+}
+
+fn infer(ctx: &Ctx, body: &[u8]) -> Answer {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Answer::plain(400, "Bad Request", "body is not UTF-8"),
+    };
+    let limits = Limits { max_bytes: ctx.opts.body_limit, max_depth: 64 };
+    let doc = match Json::parse_limited(text, &limits) {
+        Ok(d) => d,
+        Err(e) => return Answer::plain(400, "Bad Request", &format!("bad JSON: {e:#}")),
+    };
+    let key = match doc.get("config").and_then(|c| c.as_str()) {
+        Ok(k) => k.to_string(),
+        Err(e) => return Answer::plain(400, "Bad Request", &format!("{e:#}")),
+    };
+    if let Some(batch) = doc.opt("batch") {
+        let xs = match batch.as_mat_i32() {
+            Ok(xs) => xs,
+            Err(e) => return Answer::plain(400, "Bad Request", &format!("bad batch: {e:#}")),
+        };
+        // admission is per sample: shed samples answer `overloaded` in
+        // their slot while accepted batchmates still complete
+        let handles: Vec<_> = xs.iter().map(|x| ctx.client.try_submit(&key, x)).collect();
+        let mut any_shed = false;
+        let results: Vec<Json> = handles
+            .into_iter()
+            .map(|h| match h.and_then(|p| p.wait()) {
+                Ok(resp) => wire::response_json(&resp),
+                Err(e) => {
+                    if matches!(e, ServeError::Overloaded) {
+                        any_shed = true;
+                        ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    wire::error_body(&e)
+                }
+            })
+            .collect();
+        let mut a = Answer::ok(obj([("results", Json::Arr(results))]));
+        a.retry_after = any_shed;
+        a
+    } else if let Some(features) = doc.opt("features") {
+        let x = match features.as_vec_i32() {
+            Ok(x) => x,
+            Err(e) => return Answer::plain(400, "Bad Request", &format!("bad features: {e:#}")),
+        };
+        match ctx.client.try_submit(&key, &x).and_then(|p| p.wait()) {
+            Ok(resp) => Answer::ok(wire::response_json(&resp)),
+            Err(e) => shed_aware_error(ctx, e),
+        }
+    } else {
+        Answer::plain(400, "Bad Request", "need \"features\" or \"batch\"")
+    }
+}
+
+fn write_answer(
+    conn: &mut Conn,
+    a: &Answer,
+    keep: bool,
+    opts: &NetOpts,
+) -> Result<(), HttpError> {
+    let mut headers: Vec<(&str, String)> = vec![
+        ("Content-Type", "application/json".to_string()),
+        ("Connection", if keep { "keep-alive" } else { "close" }.to_string()),
+    ];
+    if a.retry_after {
+        headers.push(("Retry-After", opts.retry_after.as_secs().max(1).to_string()));
+    }
+    conn.write_message(
+        &format!("HTTP/1.1 {} {}", a.status, a.reason),
+        &headers,
+        a.body.to_string().as_bytes(),
+    )
+}

@@ -67,6 +67,18 @@ pub mod gen {
         (0..n).map(|_| rng.below(16) as i32).collect()
     }
 
+    /// One pre-drawn feature vector per scenario arrival (outside the
+    /// timed region of a replay); `n_features[cfg]` is each config's
+    /// input width.  Shared by the scenario-driven benches.
+    pub fn arrival_features(
+        seed: u64,
+        n_features: &[usize],
+        s: &crate::farm::scenario::Scenario,
+    ) -> Vec<Vec<i32>> {
+        let mut rng = Pcg32::seeded(seed);
+        s.arrivals.iter().map(|a| features(&mut rng, n_features[a.config])).collect()
+    }
+
     /// A deterministic 2-class, 3-feature toy model (shared fixture of
     /// the farm/coordinator tests; `flip` mirrors the decision plane so
     /// two distinct configs can be served side by side).

@@ -4,6 +4,11 @@
 //! objects, arrays, strings (with escapes), numbers, booleans, null.
 //! Numbers are stored as f64 — all our integers (quantized weights,
 //! 4-bit inputs, int32 scores) are ≤ 2^31, far inside f64's exact range.
+//!
+//! Since the wire front (`net/`) parses untrusted request bodies with
+//! this module, parsing is guarded: [`Json::parse_limited`] enforces an
+//! explicit byte budget + nesting-depth bound, and even the plain
+//! [`Json::parse`] bounds depth so no input can overflow the stack.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -21,9 +26,44 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse guards for wire duty: a byte budget (a malicious request body
+/// must not balloon memory) and a nesting-depth bound (deep `[[[[...`
+/// must not overflow the parser's stack).
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Maximum input size in bytes (checked before parsing).
+    pub max_bytes: usize,
+    /// Maximum object/array nesting depth.
+    pub max_depth: usize,
+}
+
+impl Default for Limits {
+    /// Wire defaults: 1 MiB bodies, 64 nesting levels.
+    fn default() -> Self {
+        Limits { max_bytes: 1 << 20, max_depth: 64 }
+    }
+}
+
+/// Depth bound applied by the plain [`Json::parse`] (generous — trusted
+/// local files — but still finite so no input can overflow the stack).
+const DEFAULT_MAX_DEPTH: usize = 512;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        Self::parse_with_depth(text, DEFAULT_MAX_DEPTH)
+    }
+
+    /// Parse untrusted input under explicit [`Limits`] (the wire front
+    /// runs every request body through this).
+    pub fn parse_limited(text: &str, limits: &Limits) -> Result<Json> {
+        if text.len() > limits.max_bytes {
+            bail!("input of {} bytes exceeds the {}-byte budget", text.len(), limits.max_bytes);
+        }
+        Self::parse_with_depth(text, limits.max_depth)
+    }
+
+    fn parse_with_depth(text: &str, max_depth: usize) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0, max_depth };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -130,7 +170,11 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+                if !n.is_finite() {
+                    // NaN/inf have no JSON spelling; `write!("{n}")`
+                    // would emit invalid output the parser rejects
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -220,6 +264,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -244,8 +290,15 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            c @ (b'{' | b'[') => {
+                if self.depth >= self.max_depth {
+                    bail!("nesting exceeds {} levels at offset {}", self.max_depth, self.i);
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -451,5 +504,95 @@ mod tests {
         let v = Json::parse("2147483647").unwrap();
         assert_eq!(v.as_i32().unwrap(), i32::MAX);
         assert!(Json::parse("3.5").unwrap().as_i64().is_err());
+    }
+
+    // ---- wire-duty hardening (net/ serves untrusted bodies) ----------
+
+    /// A string drawn from the hostile-ish pool: quotes, backslashes,
+    /// every escaped control char, multibyte UTF-8 and an astral char.
+    fn gen_string(rng: &mut crate::util::Pcg32) -> String {
+        const POOL: &[char] = &[
+            'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}',
+            '\u{1f}', '\u{7f}', 'α', 'ß', '—', '\u{1F600}',
+        ];
+        (0..rng.below(12)).map(|_| *rng.choose(POOL)).collect()
+    }
+
+    /// Numbers across the exact-integer envelope and float fractions.
+    fn gen_num(rng: &mut crate::util::Pcg32) -> Json {
+        let max_exact = (1i64 << 53) - 1;
+        match rng.below(4) {
+            0 => Json::Num(max_exact as f64 * if rng.below(2) == 0 { 1.0 } else { -1.0 }),
+            1 => Json::Num(rng.range_i32(i32::MIN + 1, i32::MAX) as f64),
+            2 => Json::Num(rng.f64() * 1e6 - 5e5),
+            _ => Json::Num(rng.below(100) as f64 / 8.0),
+        }
+    }
+
+    fn gen_value(rng: &mut crate::util::Pcg32, depth: usize) -> Json {
+        let arms = if depth >= 5 { 4 } else { 6 };
+        match rng.below(arms) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => gen_num(rng),
+            3 => Json::Str(gen_string(rng)),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4)).map(|_| (gen_string(rng), gen_value(rng, depth + 1))).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_over_random_documents() {
+        crate::testing::check("json-roundtrip", 0x9e1, 300, |rng| {
+            let v = gen_value(rng, 0);
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap_or_else(|e| panic!("{e:#} parsing {text:?}"));
+            assert_eq!(back, v, "parse(write(v)) != v for {text:?}");
+            // serialization is a fixed point of the round trip
+            assert_eq!(back.to_string(), text);
+        });
+    }
+
+    #[test]
+    fn parse_limited_enforces_byte_budget() {
+        let limits = Limits { max_bytes: 16, max_depth: 8 };
+        assert!(Json::parse_limited("[1,2,3]", &limits).is_ok());
+        let err = Json::parse_limited("[1,2,3,4,5,6,7,8,9]", &limits).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn parse_limited_bounds_nesting_depth() {
+        let deep = "[[[[[0]]]]]"; // 5 levels
+        assert!(Json::parse_limited(deep, &Limits { max_bytes: 1024, max_depth: 4 }).is_err());
+        assert!(Json::parse_limited(deep, &Limits { max_bytes: 1024, max_depth: 5 }).is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_attack_is_an_error_not_a_stack_overflow() {
+        let attack = format!("{}0{}", "[".repeat(100_000), "]".repeat(100_000));
+        let err = Json::parse(&attack).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // `write!("{n}")` would emit `NaN`/`inf`, which no JSON parser
+        // (including this one) accepts back
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let doc = Json::Arr(vec![Json::Num(f64::NEG_INFINITY), Json::Num(1.0)]);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), Json::Arr(vec![Json::Null, Json::Num(1.0)]));
+    }
+
+    #[test]
+    fn huge_integers_round_trip_exactly() {
+        for n in [(1i64 << 53) - 1, -(1i64 << 53) + 1] {
+            let v = Json::parse(&n.to_string()).unwrap();
+            assert_eq!(v.as_i64().unwrap(), n);
+            assert_eq!(v.to_string(), n.to_string());
+        }
     }
 }
