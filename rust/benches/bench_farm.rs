@@ -3,7 +3,10 @@
 //!
 //! Part A drives the raw [`Farm`] (scheduler + shard balance + spill
 //! behaviour, paced by the scenario generator's arrival times).
-//! Part B serves the same traffic through the coordinator
+//! Part B races the analytic fast path against full simulation on the
+//! same steady-scenario requests, unpaced, and emits the
+//! `fastpath_speedup` metric CI gates on (audits must stay clean).
+//! Part C serves the same traffic through the coordinator
 //! (`Backend::Accel`) and prints the serving energy report.
 //!
 //! Runs against the real Table-I artifacts when present, otherwise
@@ -108,7 +111,75 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.render());
 
-    // ---- part B: behind the coordinator, with energy accounting ------------
+    // ---- part B: analytic fast path vs full simulation ---------------------
+    // same steady-scenario requests, driven UNPACED (the replay pacer
+    // would hide any engine speedup behind arrival waits)
+    println!("\n### analytic fast path vs full simulation (steady scenario, unpaced)");
+    {
+        let s = &scenarios[0];
+        let xs = gen::arrival_features(0xfa57, &nf, s);
+        let drive = |farm: &Farm| {
+            let errors = AtomicU64::new(0);
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for w in 0..WORKERS {
+                    let errors = &errors;
+                    let xs = &xs;
+                    let models = &models;
+                    scope.spawn(move || {
+                        for (i, a) in s.arrivals.iter().enumerate() {
+                            if i % WORKERS != w {
+                                continue;
+                            }
+                            if farm.predict(&models[a.config].0, &xs[i]).is_err() {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(errors.load(Ordering::Relaxed), 0, "farm must answer every request");
+            t0.elapsed()
+        };
+        let sim_farm = Farm::start(
+            models.clone(),
+            FarmOpts { shards: 4, calibrate_baseline: false, ..Default::default() },
+        )?;
+        let wall_sim = drive(&sim_farm);
+        let fast_farm = Farm::start(
+            models.clone(),
+            FarmOpts {
+                shards: 4,
+                calibrate_baseline: false,
+                fastpath: true,
+                audit_rate: 32,
+                ..Default::default()
+            },
+        )?;
+        let wall_fast = drive(&fast_farm);
+        let fm = fast_farm.metrics();
+        assert_eq!(fm.fast.mismatches, 0, "differential audit must stay clean");
+        assert_eq!(
+            fm.fast.fastpath_configs as usize,
+            models.len(),
+            "every accelerated config must derive an analytic model"
+        );
+        let speedup = wall_sim.as_secs_f64() / wall_fast.as_secs_f64().max(1e-9);
+        println!(
+            "full-sim {:.3}s vs fastpath {:.3}s -> {speedup:.1}x \
+             ({} analytic answers, {} audits, {} mismatches)",
+            wall_sim.as_secs_f64(),
+            wall_fast.as_secs_f64(),
+            fm.fast.fast_jobs,
+            fm.fast.audits,
+            fm.fast.mismatches,
+        );
+        report.metric("fastpath_speedup", speedup, "x");
+        report.metric("fastpath_audit_mismatches", fm.fast.mismatches as f64, "count");
+        report.metric("fastpath_audits", fm.fast.audits as f64, "count");
+    }
+
+    // ---- part C: behind the coordinator, with energy accounting ------------
     println!("\n### coordinator Backend::Accel (multi-tenant scenario)");
     let s = &scenarios[2];
     let xs = gen::arrival_features(0xbeef, &nf, s);

@@ -3,17 +3,26 @@
 //! lives in `util::benchkit::drive_clients`, shared with
 //! `examples/serve_inference.rs` and the farm bench.
 //!
+//! Runs against the real Table-I artifacts when present, otherwise
+//! against the synthetic tiny models — either way it emits
+//! `BENCH_serving.json` (CI uploads it), including the serving-level
+//! `fastpath_speedup` of the analytic fast path over full simulation
+//! on the Accel backend.
+//!
 //!     cargo bench --bench bench_serving
 
 use std::time::Duration;
 
 use flexsvm::coordinator::{Backend, Server};
+use flexsvm::farm::FarmOpts;
+use flexsvm::svm::infer;
 use flexsvm::svm::model::artifacts_root;
-use flexsvm::svm::TestSet;
+use flexsvm::svm::{QuantModel, TestSet};
+use flexsvm::testing::gen;
 use flexsvm::util::benchkit::{
     drive_clients, latency_summary, load_testsets, manifest_or_skip, quick, write_report, Bench,
 };
-use flexsvm::util::Table;
+use flexsvm::util::{Pcg32, Table};
 
 const WORKERS: usize = 8;
 
@@ -25,23 +34,56 @@ fn requests() -> usize {
     }
 }
 
+/// Deterministic in-memory models + natively-labelled feature streams
+/// (the artifact-free fallback, mirroring `serve --synthetic`).
+fn synthetic_setup() -> (Vec<(String, QuantModel)>, Vec<(String, TestSet)>) {
+    let models = vec![
+        ("syn_a".to_string(), gen::tiny_model("syn_a", false)),
+        ("syn_b".to_string(), gen::tiny_model("syn_b", true)),
+    ];
+    let mut rng = Pcg32::seeded(0x5e1f);
+    let testsets = models
+        .iter()
+        .map(|(key, model)| {
+            let x_q: Vec<Vec<i32>> =
+                (0..64).map(|_| gen::features(&mut rng, model.n_features)).collect();
+            let y: Vec<i32> = x_q.iter().map(|x| infer::predict(model, x)).collect();
+            let t = TestSet {
+                name: key.clone(),
+                n_classes: model.n_classes,
+                n_features: model.n_features,
+                x_q,
+                y,
+            };
+            (key.clone(), t)
+        })
+        .collect();
+    (models, testsets)
+}
+
 fn drive(
     testsets: &[(String, TestSet)],
+    models: Option<&[(String, QuantModel)]>,
     backend: Backend,
+    farm: FarmOpts,
     batch_max: usize,
     linger_us: u64,
     eager: bool,
 ) -> anyhow::Result<(f64, u64, u64, f64)> {
     let keys: Vec<String> = testsets.iter().map(|(k, _)| k.clone()).collect();
-    let server = Server::builder()
-        .artifacts(artifacts_root(), keys)
+    let builder = Server::builder()
         .backend(backend)
         .batch_max(batch_max)
         .compiled_batch(64)
         .linger(Duration::from_micros(linger_us))
         .queue_cap(4096)
         .eager_flush(eager)
-        .start()?;
+        .farm(farm);
+    let builder = match models {
+        Some(ms) => builder.models(ms.to_vec()),
+        None => builder.artifacts(artifacts_root(), keys),
+    };
+    let server = builder.start()?;
     let client = server.client();
     let r = drive_clients(&client, testsets, requests(), WORKERS, None)?;
     let s = latency_summary(&client.metrics()?);
@@ -49,11 +91,20 @@ fn drive(
 }
 
 fn main() -> anyhow::Result<()> {
-    let Some(manifest) = manifest_or_skip("bench_serving") else {
-        return Ok(());
+    // real Table-I testsets when artifacts exist, synthetic otherwise —
+    // the bench must always produce its artifact for CI
+    let (models, testsets) = match manifest_or_skip("bench_serving: real Table-I configs") {
+        Some(manifest) => {
+            let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
+            (None, load_testsets(&manifest, &keys)?)
+        }
+        None => {
+            println!("bench_serving: using synthetic models instead");
+            let (m, t) = synthetic_setup();
+            (Some(m), t)
+        }
     };
-    let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
-    let testsets = load_testsets(&manifest, &keys)?;
+    let models_ref = models.as_deref();
     println!("### coordinator serving: {} requests, {WORKERS} client threads", requests());
     let mut report = Bench::new("coordinator serving (batch policy x backend)");
     #[cfg(feature = "pjrt")]
@@ -65,7 +116,15 @@ fn main() -> anyhow::Result<()> {
         for (batch_max, linger_us, eager) in
             [(1usize, 0u64, false), (8, 200, false), (64, 500, false), (64, 2000, false), (64, 500, true)]
         {
-            let (rps, p50, p99, mb) = drive(&testsets, backend, batch_max, linger_us, eager)?;
+            let (rps, p50, p99, mb) = drive(
+                &testsets,
+                models_ref,
+                backend,
+                FarmOpts::default(),
+                batch_max,
+                linger_us,
+                eager,
+            )?;
             report.metric(
                 &format!("{backend} batch_max={batch_max} linger={linger_us}us eager={eager}"),
                 rps,
@@ -83,9 +142,43 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
     }
+
+    // Accel backend: full simulation vs the analytic fast path on the
+    // same requests (identical batch policy), end to end through the
+    // coordinator — the serving-level view of bench_farm's raw number
+    let farm_base = FarmOpts { shards: 4, calibrate_baseline: false, ..Default::default() };
+    let farm_fast = FarmOpts { fastpath: true, audit_rate: 32, ..farm_base };
+    let (rps_sim, p50s, p99s, mbs) =
+        drive(&testsets, models_ref, Backend::Accel, farm_base, 8, 200, false)?;
+    let (rps_fast, p50f, p99f, mbf) =
+        drive(&testsets, models_ref, Backend::Accel, farm_fast, 8, 200, false)?;
+    t.row([
+        "accel (full sim)".to_string(),
+        "8".to_string(),
+        "200us".to_string(),
+        "false".to_string(),
+        format!("{rps_sim:.0}"),
+        p50s.to_string(),
+        p99s.to_string(),
+        format!("{mbs:.1}"),
+    ]);
+    t.row([
+        "accel (fastpath)".to_string(),
+        "8".to_string(),
+        "200us".to_string(),
+        "false".to_string(),
+        format!("{rps_fast:.0}"),
+        p50f.to_string(),
+        p99f.to_string(),
+        format!("{mbf:.1}"),
+    ]);
+    report.metric("accel full-sim req/s", rps_sim, "req/s");
+    report.metric("accel fastpath req/s", rps_fast, "req/s");
+    report.metric("fastpath_speedup", rps_fast / rps_sim.max(1e-9), "x");
+
     print!("{}", t.render());
     println!("\n(batch_max=1 is the no-batching baseline; PJRT gains come from batch formation.");
-    println!(" The Accel backend has its own bench: cargo bench --bench bench_farm)");
+    println!(" Raw-farm fastpath numbers live in: cargo bench --bench bench_farm)");
     let path = write_report("serving", &[&report])?;
     println!("wrote {}", path.display());
     Ok(())

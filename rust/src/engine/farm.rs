@@ -1,10 +1,15 @@
 //! Farm engine: the sharded cycle-level SoC pool ([`crate::farm`])
-//! behind the [`Engine`] contract.  Every answer carries simulated
-//! cycles + FlexIC energy, baseline calibration feeds the
-//! accel-vs-baseline ratio, and `snapshot` exposes per-shard balance.
-//! Shards execute on the block-compiled SERV engine over one shared
-//! `Arc`'d translation per config (`warm` compiles each program
-//! exactly once), so requests never re-generate or re-decode anything.
+//! behind the [`Engine`] contract.  Every answer carries cycles +
+//! FlexIC energy (simulated, or analytic under `FarmOpts::fastpath` —
+//! kept bit-identical by the farm's differential audit), and
+//! `snapshot` exposes per-shard balance plus the fast-path/audit
+//! counters.  `baseline_cycles` is `Some` for every served config the
+//! moment `warm` returns: the farm seeds the accel-vs-baseline ratio
+//! from the closed-form static estimate and upgrades it in place once
+//! background calibration lands.  Shards execute on the block-compiled
+//! SERV engine over one shared `Arc`'d translation per config (`warm`
+//! compiles each program exactly once), so requests never re-generate
+//! or re-decode anything.
 
 use anyhow::Result;
 
@@ -124,5 +129,40 @@ mod tests {
         assert!(e.run_batch("f", &[vec![1]])[0].is_err());
         assert!(e.baseline_cycles("f").is_none());
         assert!(e.snapshot().farm.is_none());
+    }
+
+    #[test]
+    fn baseline_ratio_available_from_warm() {
+        // calibration is off in the fixture: the estimate must serve
+        // ratios anyway, from the very first request
+        let (e, _) = warm_engine();
+        let base = e.baseline_cycles("f").expect("estimate-seeded baseline");
+        assert!(base > 0.0);
+        assert!(e.baseline_cycles("nope").is_none());
+    }
+
+    #[test]
+    fn fastpath_engine_snapshot_carries_audit_counters() {
+        let model = gen::tiny_model("f", false);
+        let mut src = HashMap::new();
+        src.insert("f".to_string(), model.clone());
+        let mut e = FarmEngine::new(FarmOpts {
+            shards: 1,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            fastpath: true,
+            audit_rate: 2,
+            ..Default::default()
+        });
+        e.warm(&ModelSource::Inline(src), &["f".to_string()]).unwrap();
+        let xs = vec![vec![3, 4, 5], vec![9, 1, 0], vec![0, 2, 4], vec![7, 7, 7]];
+        for (x, r) in xs.iter().zip(e.run_batch("f", &xs)) {
+            assert_eq!(r.unwrap().pred, infer::predict(&model, x));
+        }
+        let farm = e.snapshot().farm.expect("farm metrics");
+        assert_eq!(farm.total_jobs(), 4);
+        assert_eq!(farm.fast.fast_jobs, 2, "requests 1 and 3 analytic");
+        assert_eq!(farm.fast.audits, 2, "requests 0 and 2 audited");
+        assert_eq!(farm.fast.mismatches, 0);
     }
 }

@@ -31,9 +31,22 @@
 //! (`power::FlexicModel`), so the serving layer can extend Table I's
 //! speed/energy story to streaming workloads.  When
 //! `calibrate_baseline` is set, the farm also runs the software-only
-//! baseline program once per config at startup (in parallel) and
-//! exposes the calibrated cycles/inference for accel-vs-baseline
-//! ratios under load.
+//! baseline program once per config (in the background, after the
+//! shards are up) and exposes the calibrated cycles/inference for
+//! accel-vs-baseline ratios under load; until that lands — and from
+//! the very first request — the ratio is seeded from the closed-form
+//! static estimate ([`crate::program::cost::baseline_estimate`]).
+//!
+//! **Fast path** (`FarmOpts::fastpath`, ISSUE 6 tentpole): at startup
+//! the farm derives an [`AnalyticModel`] per config — prediction by
+//! `svm::infer` at native speed, cycle/energy bill from the affine
+//! cost law validated bit-exactly against the block-compiled SoC.
+//! Requests then skip the shards entirely, except that every
+//! `audit_rate`-th request per config still rides a shard and its
+//! `CycleStats` must equal the analytic bill **bit-for-bit** (the
+//! continuous differential audit).  Any mismatch — or a config whose
+//! derivation failed — permanently demotes that config to full
+//! simulation and surfaces in [`FastPathMetrics`].
 //!
 //! [`scenario`] generates the steady / bursty / multi-tenant request
 //! streams the farm benches replay.
@@ -41,15 +54,16 @@
 pub mod scenario;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::power::FlexicModel;
+use crate::program::cost::{baseline_estimate_cycles, AnalyticModel};
 use crate::program::run::{CompiledProgram, ProgramRunner};
 use crate::program::ProgramOpts;
-use crate::serv::TimingConfig;
+use crate::serv::{CycleStats, TimingConfig};
 use crate::svm::QuantModel;
 
 /// Farm tuning knobs.
@@ -69,11 +83,24 @@ pub struct FarmOpts {
     pub program: ProgramOpts,
     /// Power model used for per-request energy accounting.
     pub power: FlexicModel,
-    /// Run the software-only baseline program once per config at
-    /// startup so responses can be reported against the paper's
-    /// "w/o accel" cycle count.  Costs one (slow) baseline simulation
-    /// per config, run in parallel across configs.
+    /// Run the software-only baseline program once per config so
+    /// responses can be reported against the paper's "w/o accel"
+    /// cycle count.  The (slow) calibration simulations run on a
+    /// background thread after the shards are up; until each lands,
+    /// [`Farm::baseline_cycles`] serves the closed-form static
+    /// estimate.
     pub calibrate_baseline: bool,
+    /// Serve requests from the analytic cost model
+    /// ([`crate::program::cost::AnalyticModel`]) instead of simulating
+    /// every one.  Configs whose model fails probe validation — or a
+    /// later differential audit — transparently stay on full
+    /// simulation.
+    pub fastpath: bool,
+    /// With `fastpath`, still simulate every Nth request per config
+    /// and require the analytic bill to match the SoC's `CycleStats`
+    /// bit-for-bit (0 disables auditing).  The first request per
+    /// config is always audited.
+    pub audit_rate: u64,
 }
 
 impl Default for FarmOpts {
@@ -86,6 +113,8 @@ impl Default for FarmOpts {
             program: ProgramOpts::default(),
             power: FlexicModel::paper(),
             calibrate_baseline: true,
+            fastpath: false,
+            audit_rate: 16,
         }
     }
 }
@@ -100,33 +129,83 @@ pub fn resolve_shards(requested: usize) -> usize {
     }
 }
 
-/// One simulated inference answer.
+/// How an answer was produced (the audit story in every response).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Full cycle-level simulation on a shard SoC.
+    Sim,
+    /// Analytic fast path: native prediction, closed-form cycle bill.
+    Fast,
+    /// Fast path, *and* this request was simulated too — the answer is
+    /// the SoC's, checked bit-for-bit against the analytic bill.
+    Audited,
+}
+
+/// One inference answer.
 #[derive(Debug, Clone, Copy)]
 pub struct AccelOutput {
     /// Predicted class id.
     pub pred: i32,
-    /// Simulated SoC cycles for this inference.
+    /// SoC cycles for this inference (simulated or analytic — the
+    /// differential audit keeps them bit-identical).
     pub cycles: u64,
     /// FlexIC energy for this inference in mJ (`cycles × T_clk × P`).
     pub energy_mj: f64,
+    /// Which path produced this answer.
+    pub mode: ExecMode,
+}
+
+/// Per-config fast-path state (lock-free; shared with nobody — the
+/// shards never see it, only the routing front).
+#[derive(Default)]
+struct FastState {
+    /// Requests routed so far (drives the 1-in-N audit cadence).
+    seq: AtomicU64,
+    /// Answers served analytically (audited requests count as shard
+    /// jobs instead — the two never double-count).
+    fast_jobs: AtomicU64,
+    /// Cycles billed analytically.
+    fast_cycles: AtomicU64,
+    audits: AtomicU64,
+    mismatches: AtomicU64,
+    /// A failed audit poisons the config: all later requests simulate.
+    poisoned: AtomicBool,
+    /// Fault injection: extra exec cycles added to every analytic bill
+    /// (tests use this to prove the audit trips the fallback).
+    skew: AtomicU64,
 }
 
 struct FarmConfig {
     key: String,
+    /// The served model (the fast path predicts with it natively).
+    model: QuantModel,
     /// The accelerated program, generated and block-translated once;
     /// every shard's runner executes this shared compilation.
     program: Arc<CompiledProgram>,
     /// Home shard index (affinity: avoids reload churn).
     home: usize,
-    /// Calibrated software-only cycles/inference (None when
-    /// calibration is disabled).
-    baseline_cycles: Option<f64>,
+    /// Probe-validated analytic cost model (None: full sim only).
+    analytic: Option<AnalyticModel>,
+    /// Closed-form static estimate of the software-only baseline
+    /// cycles — available from request one.
+    baseline_est: f64,
+    /// Measured baseline cycles, set by the background calibration
+    /// thread when `calibrate_baseline` is on.
+    baseline_cal: OnceLock<f64>,
+    fast: FastState,
+}
+
+/// What a shard answers with: the prediction plus the full simulated
+/// stats vector, so audits can compare every lane — not just totals.
+struct SimAnswer {
+    pred: i32,
+    stats: CycleStats,
 }
 
 struct Job {
     cfg: usize,
     features: Vec<i32>,
-    resp: mpsc::SyncSender<Result<AccelOutput>>,
+    resp: mpsc::SyncSender<Result<SimAnswer>>,
 }
 
 enum ShardMsg {
@@ -156,6 +235,8 @@ pub struct FarmMetrics {
     pub shards: Vec<ShardMetrics>,
     /// Jobs routed away from their home shard by the load spill rule.
     pub spills: u64,
+    /// Analytic fast-path counters (all zero with `fastpath` off).
+    pub fast: FastPathMetrics,
 }
 
 #[derive(Debug, Clone)]
@@ -167,9 +248,40 @@ pub struct ShardMetrics {
     pub model_loads: u64,
 }
 
+/// Aggregated fast-path/audit counters across a farm's configs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FastPathMetrics {
+    /// Answers served from the analytic model (no simulation).
+    pub fast_jobs: u64,
+    /// Cycles billed analytically.
+    pub fast_cycles: u64,
+    /// Requests simulated *in addition* to the analytic bill for the
+    /// differential audit (these count as shard jobs, not fast jobs).
+    pub audits: u64,
+    /// Audits where the SoC's answer diverged from the analytic bill.
+    pub mismatches: u64,
+    /// Configs serving on the fast path.
+    pub fastpath_configs: u64,
+    /// Configs demoted to full simulation by a failed audit.
+    pub poisoned_configs: u64,
+}
+
+impl FastPathMetrics {
+    /// Fold another snapshot in (multi-node aggregation).
+    pub fn merge(&mut self, o: &FastPathMetrics) {
+        self.fast_jobs += o.fast_jobs;
+        self.fast_cycles += o.fast_cycles;
+        self.audits += o.audits;
+        self.mismatches += o.mismatches;
+        self.fastpath_configs += o.fastpath_configs;
+        self.poisoned_configs += o.poisoned_configs;
+    }
+}
+
 impl FarmMetrics {
+    /// All answered requests: simulated (shard) jobs + analytic ones.
     pub fn total_jobs(&self) -> u64 {
-        self.shards.iter().map(|s| s.jobs).sum()
+        self.shards.iter().map(|s| s.jobs).sum::<u64>() + self.fast.fast_jobs
     }
 
     pub fn total_sim_cycles(&self) -> u64 {
@@ -178,7 +290,7 @@ impl FarmMetrics {
 }
 
 /// The shard pool.  Dropping the farm drains queued work and joins
-/// every shard thread.
+/// every shard thread (and the background calibration thread).
 pub struct Farm {
     configs: Arc<Vec<FarmConfig>>,
     index: HashMap<String, usize>,
@@ -186,13 +298,16 @@ pub struct Farm {
     spills: AtomicU64,
     spill_threshold: usize,
     power: FlexicModel,
+    audit_rate: u64,
+    cal_join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Farm {
     /// Start a farm serving the given models.  Every config's home
-    /// shard builds its accelerated program up front (warm start);
-    /// baseline calibration (when enabled) runs in parallel across
-    /// configs before the shards spin up.
+    /// shard builds its accelerated program up front (warm start) and,
+    /// with `fastpath` on, derives + probe-validates its analytic cost
+    /// model; baseline calibration (when enabled) runs on a background
+    /// thread so startup never waits on the slow software-only sims.
     pub fn start(models: Vec<(String, QuantModel)>, opts: FarmOpts) -> Result<Farm> {
         if models.is_empty() {
             bail!("farm needs at least one model");
@@ -205,27 +320,9 @@ impl Farm {
             }
         }
 
-        // Baseline calibration: one software-only inference per config
-        // on a mid-scale input (the shift-add mul32 cost is dominated
-        // by model shape, not operand values).  Parallel across
-        // configs — each runner is independent.
-        let mut baselines: Vec<Option<f64>> = vec![None; models.len()];
-        if opts.calibrate_baseline {
-            let results: Vec<Result<f64>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = models
-                    .iter()
-                    .map(|(_, m)| scope.spawn(move || baseline_cycles_for(m, opts.timing)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("calibration panicked")).collect()
-            });
-            for (slot, r) in baselines.iter_mut().zip(results) {
-                *slot = Some(r?);
-            }
-        }
-
         // generate + block-translate each accelerated program exactly
-        // once (in parallel across configs, like calibration); shards
-        // share the compilation through the Arc
+        // once (in parallel across configs); shards share the
+        // compilation through the Arc
         let compiled: Vec<Result<Arc<CompiledProgram>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = models
                 .iter()
@@ -233,18 +330,65 @@ impl Farm {
                 .collect();
             handles.into_iter().map(|h| h.join().expect("program compile panicked")).collect()
         });
-        let configs: Vec<FarmConfig> = models
+        let mut configs: Vec<FarmConfig> = models
             .into_iter()
-            .zip(baselines)
             .zip(compiled)
             .enumerate()
-            .map(|(i, (((key, _), baseline_cycles), program))| -> Result<FarmConfig> {
+            .map(|(i, ((key, model), program))| -> Result<FarmConfig> {
                 let program =
                     program.with_context(|| format!("compiling program for config {key:?}"))?;
-                Ok(FarmConfig { key, program, home: i % n_shards, baseline_cycles })
+                let baseline_est = baseline_estimate_cycles(&model, &opts.timing);
+                Ok(FarmConfig {
+                    key,
+                    model,
+                    program,
+                    home: i % n_shards,
+                    analytic: None,
+                    baseline_est,
+                    baseline_cal: OnceLock::new(),
+                    fast: FastState::default(),
+                })
             })
             .collect::<Result<_>>()?;
+
+        // fast path: derive + probe-validate the analytic model per
+        // config (in parallel — each derivation runs a few probe sims);
+        // a config whose validation fails simply stays on full sim
+        if opts.fastpath {
+            let analytics: Vec<Option<AnalyticModel>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = configs
+                    .iter()
+                    .map(|c| {
+                        scope.spawn(move || AnalyticModel::derive(&c.model, &c.program, opts.timing))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("cost derivation panicked")).collect()
+            });
+            for (c, a) in configs.iter_mut().zip(analytics) {
+                c.analytic = a;
+            }
+        }
         let configs = Arc::new(configs);
+
+        // Baseline calibration: one software-only inference per config
+        // on a mid-scale input (the shift-add mul32 cost is dominated
+        // by model shape, not operand values).  Runs in the background
+        // — the static estimate serves ratios until each sim lands; a
+        // sim failure just leaves the estimate in place.
+        let cal_join = if opts.calibrate_baseline {
+            let cfgs = Arc::clone(&configs);
+            Some(
+                std::thread::Builder::new().name("flexsvm-calibrate".into()).spawn(move || {
+                    for c in cfgs.iter() {
+                        if let Ok(cycles) = baseline_cycles_for(&c.model, opts.timing) {
+                            let _ = c.baseline_cal.set(cycles);
+                        }
+                    }
+                })?,
+            )
+        } else {
+            None
+        };
 
         let mut shards = Vec::with_capacity(n_shards);
         let mut readies = Vec::with_capacity(n_shards);
@@ -274,6 +418,8 @@ impl Farm {
             spills: AtomicU64::new(0),
             spill_threshold: opts.spill_threshold,
             power: opts.power,
+            audit_rate: opts.audit_rate,
+            cal_join,
         })
     }
 
@@ -286,10 +432,15 @@ impl Farm {
         self.configs.iter().map(|c| c.key.clone()).collect()
     }
 
-    /// Calibrated software-only cycles/inference for a config (None
-    /// when calibration was disabled or the key is unknown).
+    /// Software-only cycles/inference for a config: the measured
+    /// calibration value once the background sim lands, the
+    /// closed-form static estimate before that (so speedup ratios are
+    /// available from request one).  None only for unknown keys.
     pub fn baseline_cycles(&self, key: &str) -> Option<f64> {
-        self.index.get(key).and_then(|&i| self.configs[i].baseline_cycles)
+        self.index.get(key).map(|&i| {
+            let c = &self.configs[i];
+            c.baseline_cal.get().copied().unwrap_or(c.baseline_est)
+        })
     }
 
     /// The power model the farm charges energy with.
@@ -304,6 +455,20 @@ impl Farm {
     }
 
     pub fn metrics(&self) -> FarmMetrics {
+        let mut fast = FastPathMetrics::default();
+        for c in self.configs.iter() {
+            fast.fast_jobs += c.fast.fast_jobs.load(Ordering::Relaxed);
+            fast.fast_cycles += c.fast.fast_cycles.load(Ordering::Relaxed);
+            fast.audits += c.fast.audits.load(Ordering::Relaxed);
+            fast.mismatches += c.fast.mismatches.load(Ordering::Relaxed);
+            let poisoned = c.fast.poisoned.load(Ordering::Relaxed);
+            if c.analytic.is_some() && !poisoned {
+                fast.fastpath_configs += 1;
+            }
+            if poisoned {
+                fast.poisoned_configs += 1;
+            }
+        }
         FarmMetrics {
             shards: self
                 .shards
@@ -315,6 +480,7 @@ impl Farm {
                 })
                 .collect(),
             spills: self.spills.load(Ordering::Relaxed),
+            fast,
         }
     }
 
@@ -340,9 +506,9 @@ impl Farm {
         best
     }
 
-    /// Submit one job; returns the response receiver.  Blocks when the
-    /// chosen shard's queue is full (backpressure).
-    fn submit(&self, cfg: usize, features: Vec<i32>) -> Result<mpsc::Receiver<Result<AccelOutput>>> {
+    /// Submit one job to a shard; returns the response receiver.
+    /// Blocks when the chosen shard's queue is full (backpressure).
+    fn submit(&self, cfg: usize, features: Vec<i32>) -> Result<mpsc::Receiver<Result<SimAnswer>>> {
         let shard = self.pick_shard(self.configs[cfg].home, self.spill_threshold);
         let (tx, rx) = mpsc::sync_channel(1);
         self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
@@ -353,32 +519,127 @@ impl Farm {
         Ok(rx)
     }
 
-    /// Classify one sample.
-    pub fn predict(&self, key: &str, x: &[i32]) -> Result<AccelOutput> {
-        let cfg = *self.index.get(key).ok_or_else(|| anyhow!("config {key:?} not served"))?;
-        let rx = self.submit(cfg, x.to_vec())?;
-        rx.recv().context("farm shard dropped the job")?
+    fn output(&self, pred: i32, cycles: u64, mode: ExecMode) -> AccelOutput {
+        AccelOutput { pred, cycles, energy_mj: self.power.energy_mj(cycles as f64), mode }
     }
 
-    /// Classify a batch: samples fan out across shards and the results
-    /// come back in input order, **per sample** — one bad request (e.g.
-    /// out-of-range features) fails alone instead of poisoning its
-    /// batchmates.  The outer error covers submission/transport
-    /// failures only.  Submission applies backpressure; collection
-    /// never blocks a shard (per-job channels have room for the single
-    /// answer).
+    /// Route one request: analytic fast path when the config has a
+    /// live cost model (resolving inline, no shard round-trip), full
+    /// simulation otherwise — and on the audit cadence, *both*.
+    fn route(&self, cfg: usize, features: Vec<i32>) -> Result<Pending> {
+        let c = &self.configs[cfg];
+        if let Some(am) = &c.analytic {
+            if !c.fast.poisoned.load(Ordering::Relaxed) {
+                let n = c.fast.seq.fetch_add(1, Ordering::Relaxed);
+                let audited = self.audit_rate > 0 && n % self.audit_rate == 0;
+                return match am.predict(&features) {
+                    // the analytic path rejects exactly what the sim
+                    // path would (same validation) — answer inline
+                    Err(e) => Ok(Pending::Ready(Err(e))),
+                    Ok((pred, mut stats)) => {
+                        stats.exec += c.fast.skew.load(Ordering::Relaxed);
+                        if audited {
+                            let rx = self.submit(cfg, features)?;
+                            Ok(Pending::Audit { cfg, rx, pred, stats })
+                        } else {
+                            c.fast.fast_jobs.fetch_add(1, Ordering::Relaxed);
+                            c.fast.fast_cycles.fetch_add(stats.total(), Ordering::Relaxed);
+                            Ok(Pending::Ready(Ok(self.output(
+                                pred,
+                                stats.total(),
+                                ExecMode::Fast,
+                            ))))
+                        }
+                    }
+                };
+            }
+        }
+        Ok(Pending::Sim(self.submit(cfg, features)?))
+    }
+
+    /// Wait out a routed request.  Outer error = transport failure;
+    /// inner = the per-sample answer.  Audited requests compare the
+    /// SoC's `CycleStats` to the analytic bill **bit-for-bit**; any
+    /// divergence counts a mismatch and poisons the config (all later
+    /// requests simulate) — the simulator's answer is returned either
+    /// way, as ground truth.
+    fn resolve(&self, p: Pending) -> Result<Result<AccelOutput>> {
+        match p {
+            Pending::Ready(r) => Ok(r),
+            Pending::Sim(rx) => {
+                let r = rx.recv().context("farm shard dropped the job")?;
+                Ok(r.map(|a| self.output(a.pred, a.stats.total(), ExecMode::Sim)))
+            }
+            Pending::Audit { cfg, rx, pred, stats } => {
+                let c = &self.configs[cfg];
+                c.fast.audits.fetch_add(1, Ordering::Relaxed);
+                let r = rx.recv().context("farm shard dropped the job")?;
+                Ok(match r {
+                    Ok(a) => {
+                        if a.pred != pred || a.stats != stats {
+                            c.fast.mismatches.fetch_add(1, Ordering::Relaxed);
+                            c.fast.poisoned.store(true, Ordering::Relaxed);
+                        }
+                        Ok(self.output(a.pred, a.stats.total(), ExecMode::Audited))
+                    }
+                    Err(e) => {
+                        // the analytic model accepted what the SoC
+                        // rejected: that is itself an audit failure
+                        c.fast.mismatches.fetch_add(1, Ordering::Relaxed);
+                        c.fast.poisoned.store(true, Ordering::Relaxed);
+                        Err(e)
+                    }
+                })
+            }
+        }
+    }
+
+    fn lookup(&self, key: &str) -> Result<usize> {
+        self.index.get(key).copied().ok_or_else(|| anyhow!("config {key:?} not served"))
+    }
+
+    /// Classify one sample.
+    pub fn predict(&self, key: &str, x: &[i32]) -> Result<AccelOutput> {
+        let cfg = self.lookup(key)?;
+        let p = self.route(cfg, x.to_vec())?;
+        self.resolve(p)?
+    }
+
+    /// Classify a batch: fast-path samples answer inline, simulated
+    /// ones fan out across shards; results come back in input order,
+    /// **per sample** — one bad request (e.g. out-of-range features)
+    /// fails alone instead of poisoning its batchmates.  The outer
+    /// error covers submission/transport failures only.  Submission
+    /// applies backpressure; collection never blocks a shard (per-job
+    /// channels have room for the single answer).
     pub fn predict_batch(&self, key: &str, xs: &[Vec<i32>]) -> Result<Vec<Result<AccelOutput>>> {
-        let cfg = *self.index.get(key).ok_or_else(|| anyhow!("config {key:?} not served"))?;
+        let cfg = self.lookup(key)?;
         let mut pending = Vec::with_capacity(xs.len());
         for x in xs {
-            pending.push(self.submit(cfg, x.clone())?);
+            pending.push(self.route(cfg, x.clone())?);
         }
         let mut out = Vec::with_capacity(xs.len());
-        for rx in pending {
-            out.push(rx.recv().context("farm shard dropped the job")?);
+        for p in pending {
+            out.push(self.resolve(p)?);
         }
         Ok(out)
     }
+
+    /// Fault injection for tests and drills: add `extra_exec` cycles
+    /// to every analytic bill of `key`, guaranteeing the next audit
+    /// mismatches and demotes the config to full simulation.
+    pub fn inject_analytic_skew(&self, key: &str, extra_exec: u64) -> Result<()> {
+        let cfg = self.lookup(key)?;
+        self.configs[cfg].fast.skew.store(extra_exec, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// A routed-but-unresolved request (fast answers carry no receiver).
+enum Pending {
+    Ready(Result<AccelOutput>),
+    Sim(mpsc::Receiver<Result<SimAnswer>>),
+    Audit { cfg: usize, rx: mpsc::Receiver<Result<SimAnswer>>, pred: i32, stats: CycleStats },
 }
 
 impl Drop for Farm {
@@ -392,6 +653,9 @@ impl Drop for Farm {
             if let Some(j) = s.join.take() {
                 let _ = j.join();
             }
+        }
+        if let Some(j) = self.cal_join.take() {
+            let _ = j.join();
         }
     }
 }
@@ -436,7 +700,7 @@ fn shard_main(
             ShardMsg::Job(j) => j,
             ShardMsg::Shutdown => break,
         };
-        let result = (|| -> Result<AccelOutput> {
+        let result = (|| -> Result<SimAnswer> {
             let runner = match runners.entry(job.cfg) {
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                 std::collections::hash_map::Entry::Vacant(v) => {
@@ -448,10 +712,9 @@ fn shard_main(
                 }
             };
             let (pred, stats) = runner.run_sample(&job.features)?;
-            let cycles = stats.total();
             counters.jobs.fetch_add(1, Ordering::Relaxed);
-            counters.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
-            Ok(AccelOutput { pred, cycles, energy_mj: opts.power.energy_mj(cycles as f64) })
+            counters.sim_cycles.fetch_add(stats.total(), Ordering::Relaxed);
+            Ok(SimAnswer { pred, stats })
         })();
         depth.fetch_sub(1, Ordering::Relaxed);
         let _ = job.resp.send(result);
@@ -572,5 +835,91 @@ mod tests {
     fn resolve_shards_auto_positive() {
         assert!(resolve_shards(0) >= 1);
         assert_eq!(resolve_shards(3), 3);
+    }
+
+    fn fastpath_opts(audit_rate: u64) -> FarmOpts {
+        FarmOpts { fastpath: true, audit_rate, ..fast_opts() }
+    }
+
+    #[test]
+    fn fastpath_predicts_and_bills_like_the_simulator() {
+        let models = vec![tiny("a", false), tiny("b", true)];
+        let fast = Farm::start(models.clone(), fastpath_opts(4)).unwrap();
+        let slow = Farm::start(models.clone(), fast_opts()).unwrap();
+        let mut rng = crate::util::Pcg32::seeded(0xfa51);
+        for (key, m) in &models {
+            for i in 0..8 {
+                let x: Vec<i32> = (0..3).map(|_| rng.below(16) as i32).collect();
+                let f = fast.predict(key, &x).unwrap();
+                let s = slow.predict(key, &x).unwrap();
+                assert_eq!(f.pred, infer::predict(m, &x), "{key} {x:?}");
+                assert_eq!(f.cycles, s.cycles, "analytic bill == simulated bill ({key} {x:?})");
+                let want = if i % 4 == 0 { ExecMode::Audited } else { ExecMode::Fast };
+                assert_eq!(f.mode, want, "{key} request {i}");
+                assert_eq!(s.mode, ExecMode::Sim);
+            }
+        }
+        let m = fast.metrics();
+        assert_eq!(m.fast.fast_jobs, 12, "6 of 8 per config served analytically");
+        assert_eq!(m.fast.audits, 4, "requests 0 and 4 of each config audited");
+        assert_eq!(m.fast.mismatches, 0);
+        assert_eq!(m.fast.fastpath_configs, 2);
+        assert_eq!(m.fast.poisoned_configs, 0);
+        assert!(m.fast.fast_cycles > 0);
+        assert_eq!(m.total_jobs(), 16, "fast answers count as jobs too");
+    }
+
+    #[test]
+    fn audit_failure_poisons_config_and_surfaces() {
+        let farm = Farm::start(vec![tiny("a", false)], fastpath_opts(2)).unwrap();
+        farm.inject_analytic_skew("a", 7).unwrap();
+        // request 0 is audited: the skewed bill diverges from the SoC
+        // → mismatch, but the caller still gets the simulator's answer
+        let o = farm.predict("a", &[1, 2, 3]).unwrap();
+        assert_eq!(o.mode, ExecMode::Audited);
+        assert_eq!(o.pred, infer::predict(&gen::tiny_model("a", false), &[1, 2, 3]));
+        // ...and the poisoned config simulates from then on
+        for _ in 0..3 {
+            assert_eq!(farm.predict("a", &[1, 2, 3]).unwrap().mode, ExecMode::Sim);
+        }
+        let m = farm.metrics();
+        assert_eq!(m.fast.audits, 1);
+        assert_eq!(m.fast.mismatches, 1);
+        assert_eq!(m.fast.poisoned_configs, 1);
+        assert_eq!(m.fast.fastpath_configs, 0, "a poisoned config is not serving fast");
+        assert_eq!(m.fast.fast_jobs, 0);
+        assert_eq!(m.total_jobs(), 4, "audit + 3 fallback sims");
+    }
+
+    #[test]
+    fn fastpath_validates_features_like_the_simulator() {
+        // audit_rate 0: pure fast path, no simulation in the loop
+        let farm = Farm::start(vec![tiny("a", false)], fastpath_opts(0)).unwrap();
+        assert!(farm.predict("a", &[99, 0, 0]).is_err(), "out-of-range feature");
+        assert!(farm.predict("a", &[1]).is_err(), "wrong arity");
+        assert_eq!(farm.predict("a", &[1, 2, 3]).unwrap().mode, ExecMode::Fast);
+        let m = farm.metrics();
+        assert_eq!(m.fast.audits, 0);
+        assert_eq!(m.total_jobs(), 1, "rejected requests are not jobs");
+    }
+
+    #[test]
+    fn bad_sample_fails_alone_on_the_fast_path() {
+        let farm = Farm::start(vec![tiny("a", false)], fastpath_opts(0)).unwrap();
+        let xs = vec![vec![3, 4, 5], vec![99, 0, 0], vec![5, 6, 7]];
+        let outs = farm.predict_batch("a", &xs).unwrap();
+        assert!(outs[0].is_ok());
+        assert!(outs[1].is_err(), "only the invalid sample errors");
+        assert!(outs[2].is_ok());
+    }
+
+    #[test]
+    fn baseline_ratio_available_from_request_one() {
+        // calibration off: the closed-form static estimate still
+        // seeds the accel-vs-baseline ratio
+        let farm = Farm::start(vec![tiny("a", false)], fast_opts()).unwrap();
+        let est = farm.baseline_cycles("a").expect("estimate available immediately");
+        let accel = farm.predict("a", &[8, 8, 8]).unwrap().cycles as f64;
+        assert!(est > accel, "estimate {est} vs accel {accel}");
     }
 }

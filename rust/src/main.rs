@@ -41,11 +41,15 @@ USAGE: flexsvm <subcommand> [options]
   trace        --config <key> [--sample I] [--max-lines N]
   serve        [--configs k1,k2] [--requests N] [--backend pjrt|native|accel]
                [--batch-max N] [--linger-us N] [--queue-cap N] [--synthetic]
+               [--fastpath] [--audit-rate N]
                [--listen HOST:PORT] [--remote HOST:PORT,...]
                --listen serves HTTP (POST /v1/infer, GET /healthz, GET
                /v1/metrics) until ctrl-c, which drains in-flight requests;
                --remote executes batches on remote `serve --listen` nodes;
-               --synthetic serves built-in tiny models (no artifacts needed)
+               --synthetic serves built-in tiny models (no artifacts needed);
+               --fastpath (accel backend) answers from the analytic cost
+               model, auditing every Nth request (--audit-rate, default 16)
+               bit-exactly against the simulated SoC
   asm          <file.s> [--out image.bin] [--run] [--max-cycles N]
   rtl-template [--out-dir DIR]     (emit Verilog + C header for the SVM CFU)
   vcd          --config <key> [--sample I] [--out trace.vcd]
@@ -360,11 +364,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 1000)?;
     // default backend follows the build: pjrt when compiled in, else native
     let backend: Backend = args.str_or("backend", Backend::default_for_build().as_str()).parse()?;
+    let farm_opts = flexsvm::farm::FarmOpts {
+        fastpath: args.flag("fastpath"),
+        audit_rate: args.u64_or("audit-rate", 16)?,
+        ..Default::default()
+    };
 
     let builder = Server::builder()
         .batch_max(args.usize_or("batch-max", 64)?)
         .linger(Duration::from_micros(args.u64_or("linger-us", 2000)?))
-        .queue_cap(args.usize_or("queue-cap", 1024)?);
+        .queue_cap(args.usize_or("queue-cap", 1024)?)
+        .farm(farm_opts);
     let from_artifacts = remotes.is_empty() && !synthetic;
     let builder = if !remotes.is_empty() {
         // multi-node: batches execute on remote `serve --listen` nodes

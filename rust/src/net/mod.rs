@@ -56,7 +56,7 @@ pub mod wire {
     use crate::coordinator::metrics::ConfigMetrics;
     use crate::coordinator::Response;
     use crate::engine::{EngineMetrics, Sample, ServeError, SimCost};
-    use crate::farm::{FarmMetrics, ShardMetrics};
+    use crate::farm::{FarmMetrics, FastPathMetrics, ShardMetrics};
     use crate::util::json::{obj, Json};
 
     pub fn features_json(x: &[i32]) -> Json {
@@ -188,6 +188,17 @@ pub mod wire {
                         .collect(),
                 ),
             ),
+            (
+                "fast",
+                obj([
+                    ("fast_jobs", f.fast.fast_jobs.into()),
+                    ("fast_cycles", f.fast.fast_cycles.into()),
+                    ("audits", f.fast.audits.into()),
+                    ("mismatches", f.fast.mismatches.into()),
+                    ("fastpath_configs", f.fast.fastpath_configs.into()),
+                    ("poisoned_configs", f.fast.poisoned_configs.into()),
+                ]),
+            ),
         ])
     }
 
@@ -204,7 +215,20 @@ pub mod wire {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(FarmMetrics { shards, spills: v.get("spills")?.as_i64()? as u64 })
+        // "fast" is absent from pre-fastpath servers: default to zeros
+        // so mixed-version fleets keep aggregating
+        let fast = match v.opt("fast") {
+            Some(fj) => FastPathMetrics {
+                fast_jobs: fj.get("fast_jobs")?.as_i64()? as u64,
+                fast_cycles: fj.get("fast_cycles")?.as_i64()? as u64,
+                audits: fj.get("audits")?.as_i64()? as u64,
+                mismatches: fj.get("mismatches")?.as_i64()? as u64,
+                fastpath_configs: fj.get("fastpath_configs")?.as_i64()? as u64,
+                poisoned_configs: fj.get("poisoned_configs")?.as_i64()? as u64,
+            },
+            None => FastPathMetrics::default(),
+        };
+        Ok(FarmMetrics { shards, spills: v.get("spills")?.as_i64()? as u64, fast })
     }
 
     pub fn engine_metrics_json(em: &EngineMetrics) -> Json {
@@ -358,7 +382,7 @@ pub fn drive_http(
 mod tests {
     use super::wire;
     use crate::engine::{ServeError, SimCost};
-    use crate::farm::{FarmMetrics, ShardMetrics};
+    use crate::farm::{FarmMetrics, FastPathMetrics, ShardMetrics};
     use crate::util::json::Json;
 
     #[test]
@@ -400,13 +424,34 @@ mod tests {
                 ShardMetrics { jobs: 5, sim_cycles: 1000, model_loads: 2 },
             ],
             spills: 4,
+            fast: FastPathMetrics {
+                fast_jobs: 40,
+                fast_cycles: 123_456,
+                audits: 5,
+                mismatches: 1,
+                fastpath_configs: 2,
+                poisoned_configs: 1,
+            },
         };
         let j = Json::parse(&wire::farm_json(&f).to_string()).unwrap();
         let back = wire::farm_from_json(&j).unwrap();
         assert_eq!(back.spills, 4);
         assert_eq!(back.shards.len(), 2);
-        assert_eq!(back.total_jobs(), 8);
+        assert_eq!(back.total_jobs(), 48, "fast jobs ride the wire too");
         assert_eq!(back.shards[1].sim_cycles, 1000);
+        assert_eq!(back.fast, f.fast);
+    }
+
+    #[test]
+    fn farm_metrics_tolerate_pre_fastpath_peers() {
+        // a server predating the fast path sends no "fast" object
+        let v = Json::parse(
+            r#"{"spills":0,"shards":[{"jobs":2,"sim_cycles":70,"model_loads":1}]}"#,
+        )
+        .unwrap();
+        let back = wire::farm_from_json(&v).unwrap();
+        assert_eq!(back.fast, FastPathMetrics::default());
+        assert_eq!(back.total_jobs(), 2);
     }
 
     #[test]

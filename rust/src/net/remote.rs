@@ -259,6 +259,7 @@ impl Engine for RemoteEngine {
                 None => merged = Some(f),
                 Some(m) => {
                     m.spills += f.spills;
+                    m.fast.merge(&f.fast);
                     m.shards.extend(f.shards);
                 }
             }

@@ -1,0 +1,436 @@
+//! Analytic cost models: sim-grade cycle bills without simulating
+//! (ISSUE 6 tentpole).
+//!
+//! ## The accelerated program's affine cycle law
+//!
+//! On the block-compiled engine every cycle of a generated program is
+//! either **static** (fixed at translation time: fetch transactions,
+//! 32-cycle serial ALU passes, load/store latencies, immediate shift
+//! amounts — see [`crate::soc::block`]) or **dynamic** from a short,
+//! enumerable list: taken branches, register-count shifts, CFU
+//! handshakes.  The accelerated inference program
+//! ([`crate::program::accel`]) has *no* register-count shifts and a
+//! CFU stream whose length depends only on the model shape, so its
+//! entire data dependence sits in two branch sites:
+//!
+//!  * the OvO **vote detour** — a classifier with a negative score
+//!    takes the `lw`+`j` side of the sign test instead of the taken
+//!    `beq`: one extra instruction, minus the `branch_taken_extra`
+//!    cycles (OvR programs have no such branch at all);
+//!  * the **argmax update** — each strict running-max improvement in
+//!    the OvO vote argmax executes `mv`+`mv` instead of `j`: one extra
+//!    instruction, plus a taken `blt`.
+//!
+//! Everything else is one shared constant.  So the exact bill is
+//! affine: `cost(x) = base + n_neg(x)·Dv + n_upd(x)·Du`, with `n_neg`
+//! and `n_upd` computable natively from [`crate::svm::infer`] scores.
+//! [`AnalyticModel::derive`] measures `base` from one probe inference
+//! on the real block-compiled SoC, then **validates the whole law
+//! bit-exactly** (full `CycleStats` and the prediction) on a probe
+//! battery; any divergence disqualifies the model and the caller
+//! (the farm) keeps that config on full simulation.
+//!
+//! ## The baseline static estimate
+//!
+//! [`baseline_estimate`] prices the software-only program
+//! ([`crate::program::baseline`]) by the same static/dynamic split,
+//! but fully closed-form — per shift-add `mul32` call the iteration
+//! count is the multiplier's bit length and the add count its
+//! popcount, both model constants.  It exists to seed
+//! accel-vs-baseline speedup ratios *before* the slow calibration
+//! simulation lands (the baseline program is exactly the thing too
+//! expensive to simulate eagerly), and is pinned within 10 % of the
+//! simulator by tests.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::serv::{CycleStats, TimingConfig};
+use crate::soc::cost::CostVec;
+use crate::svm::infer;
+use crate::svm::model::{QuantModel, Strategy};
+use crate::util::Pcg32;
+
+use super::run::{CompiledProgram, ProgramRunner};
+use super::ProgramKind;
+
+/// Per-negative-score delta of the accelerated OvO vote code: the
+/// not-taken sign test falls through `lw`+`j` (11 instructions)
+/// instead of the taken `beq` path (10), trading one
+/// `branch_taken_extra` for one extra fetched+executed instruction.
+fn vote_detour(t: &TimingConfig) -> CostVec {
+    CostVec {
+        fetch: t.fetch_cost() as i64,
+        exec: 32 - t.branch_taken_extra as i64,
+        instret: 1,
+        ..Default::default()
+    }
+}
+
+/// Per-strict-improvement delta of the vote argmax: the update arm
+/// runs `mv`+`mv` after a taken `blt` where the no-update arm jumps
+/// away — one extra instruction plus the taken-branch cycles.
+fn argmax_update(t: &TimingConfig) -> CostVec {
+    CostVec {
+        fetch: t.fetch_cost() as i64,
+        exec: 32 + t.branch_taken_extra as i64,
+        instret: 1,
+        ..Default::default()
+    }
+}
+
+/// Native evaluation of one sample: `(pred, n_neg, n_upd)` — the
+/// prediction plus the two data-dependent term counts of the affine
+/// law (both zero for OvR, whose accelerated program is branch-free
+/// in the data).
+fn terms(m: &QuantModel, x_q: &[i32]) -> (i32, i64, i64) {
+    let s = infer::scores(m, x_q);
+    match m.strategy {
+        Strategy::Ovr => (infer::argmax_first(&s) as i32, 0, 0),
+        Strategy::Ovo => {
+            let n_neg = s.iter().filter(|&&v| v < 0).count() as i64;
+            let votes = infer::ovo_votes(m, &s);
+            let mut best = votes[0];
+            let mut best_i = 0usize;
+            let mut n_upd = 0i64;
+            for (i, &v) in votes.iter().enumerate().skip(1) {
+                if v > best {
+                    best = v;
+                    best_i = i;
+                    n_upd += 1;
+                }
+            }
+            (best_i as i32, n_neg, n_upd)
+        }
+    }
+}
+
+/// The derived, probe-validated cost model of one accelerated
+/// `CompiledProgram`: prediction at native speed, cycle bill from the
+/// affine law — bit-identical to the block-compiled SoC or the farm's
+/// differential audit demotes the config back to full simulation.
+#[derive(Debug, Clone)]
+pub struct AnalyticModel {
+    model: QuantModel,
+    base: CostVec,
+    dv: CostVec,
+    du: CostVec,
+}
+
+impl AnalyticModel {
+    /// Derive the cost model for an accelerated compiled program.
+    ///
+    /// Anchors `base` on one measured probe inference, then demands
+    /// the law reproduce the simulator **bit-exactly** (prediction and
+    /// full `CycleStats`) on fixed corner probes (`[0;F]`, `[15;F]`,
+    /// `[7;F]`) and seeded random ones.  Returns `None` for baseline
+    /// programs, on any simulation failure, or on any divergence —
+    /// callers must then keep simulating.
+    pub fn derive(
+        m: &QuantModel,
+        program: &Arc<CompiledProgram>,
+        timing: TimingConfig,
+    ) -> Option<AnalyticModel> {
+        if program.kind() != ProgramKind::Accelerated {
+            return None;
+        }
+        let mut runner = ProgramRunner::from_compiled(program, timing).ok()?;
+        let f = m.n_features;
+        let mut probes: Vec<Vec<i32>> = vec![vec![0; f], vec![15; f], vec![7; f]];
+        let mut rng = Pcg32::seeded(0xc057_ab1e);
+        for _ in 0..3 {
+            probes.push((0..f).map(|_| rng.below(16) as i32).collect());
+        }
+        let dv = vote_detour(&timing);
+        let du = argmax_update(&timing);
+        let (_, n_neg0, n_upd0) = terms(m, &probes[0]);
+        let (_, s0) = runner.run_sample(&probes[0]).ok()?;
+        let base = CostVec::from_stats(&s0).sub(dv.scaled(n_neg0)).sub(du.scaled(n_upd0));
+        let am = AnalyticModel { model: m.clone(), base, dv, du };
+        for x in &probes {
+            let (pred, stats) = am.predict(x).ok()?;
+            let (sim_pred, sim_stats) = runner.run_sample(x).ok()?;
+            if pred != sim_pred || stats != sim_stats {
+                return None;
+            }
+        }
+        Some(am)
+    }
+
+    /// Classify one sample natively and bill it analytically.  Feature
+    /// validation mirrors the simulator's
+    /// ([`ProgramRunner::poke_features`]) so the fast path rejects
+    /// exactly what the sim path rejects.
+    pub fn predict(&self, x_q: &[i32]) -> Result<(i32, CycleStats)> {
+        if x_q.len() != self.model.n_features {
+            bail!("expected {} features, got {}", self.model.n_features, x_q.len());
+        }
+        if x_q.iter().any(|&v| !(0..=15).contains(&v)) {
+            bail!("features must be 4-bit unsigned");
+        }
+        let (pred, n_neg, n_upd) = terms(&self.model, x_q);
+        let cost = self.base.add(self.dv.scaled(n_neg)).add(self.du.scaled(n_upd));
+        let stats = cost
+            .to_stats()
+            .ok_or_else(|| anyhow!("analytic cost model produced a negative cycle lane"))?;
+        Ok((pred, stats))
+    }
+}
+
+/// Static instruction-count accumulator for the closed-form baseline
+/// estimate.
+#[derive(Default)]
+struct Count {
+    /// Retired instructions.
+    n: u64,
+    /// Immediate-shift extra exec cycles (`slli`/`srli` amounts).
+    sh: u64,
+    taken: u64,
+    loads: u64,
+    stores: u64,
+}
+
+impl Count {
+    fn stats(&self, t: &TimingConfig) -> CycleStats {
+        CycleStats {
+            fetch: self.n * t.fetch_cost(),
+            exec: 32 * self.n + self.sh + t.load_shift_in * self.loads
+                + t.branch_taken_extra * self.taken,
+            data_mem: self.loads * t.load_cost() + self.stores * t.store_cost(),
+            cfu: 0,
+            instret: self.n,
+            loads: self.loads,
+            stores: self.stores,
+            cfu_ops: 0,
+        }
+    }
+}
+
+/// Words a `li` expands to (addi, lui, or lui+addi).
+fn li_len(v: i32) -> u64 {
+    if (-2048..=2047).contains(&v) {
+        1
+    } else if (v << 20) >> 20 != 0 {
+        2
+    } else {
+        1
+    }
+}
+
+/// One `call mul32` (jal + body + ret) with multiplier `w`: the loop
+/// runs once per bit of the multiplier's width (at least once), adds
+/// on set bits, and shifts twice per iteration.
+fn mul32_call(c: &mut Count, w: i32) {
+    let w = w as u32;
+    let l = if w == 0 { 1 } else { (32 - w.leading_zeros()) as u64 };
+    let ones = w.count_ones() as u64;
+    c.n += 4 + 5 * l + ones;
+    c.sh += 2 * l;
+    c.taken += (l - ones) + (l - 1);
+}
+
+/// Closed-form cycle estimate of the software-only baseline program
+/// ([`crate::program::baseline`]) for one sample — no simulation.
+/// Exact in intent (every emitted instruction, taken branch, shift
+/// amount and memory access is counted from the generator's code
+/// shape); tests pin it within 10 % of the simulator.
+pub fn baseline_estimate(m: &QuantModel, x_q: &[i32], t: &TimingConfig) -> CycleStats {
+    let k = m.n_classifiers();
+    let f = m.n_features;
+    let cc = m.n_classes;
+    let s = infer::scores(m, x_q);
+    let mut c = Count::default();
+
+    // prologue: la x3, li K / li 0 / li F (+ OvO pair/vote setup and
+    // the votes-zeroing loop)
+    c.n += 6 + li_len(k as i32) + 1 + li_len(f as i32);
+    if m.strategy == Strategy::Ovo {
+        c.n += 7 + li_len(cc as i32) + 4 * cc as u64;
+        c.stores += cc as u64;
+        c.taken += cc as u64 - 1;
+    }
+
+    let mut best = 0i64;
+    for (kk, row) in m.weights.iter().enumerate() {
+        // li sum / li j / mv x-ptr
+        c.n += 3;
+        // per feature: lw,lw / mul32 / add + 3 ptr-and-counter addi + blt
+        for &w in row {
+            c.n += 7;
+            c.loads += 2;
+            mul32_call(&mut c, w);
+        }
+        c.taken += f as u64 - 1; // loop_j back-edges
+        // bias: li 15 / lw / mul32 / add / addi
+        c.n += 4;
+        c.loads += 1;
+        mul32_call(&mut c, m.biases[kk]);
+
+        match m.strategy {
+            Strategy::Ovr => {
+                // strict running max: first classifier always seeds it
+                if kk == 0 || s[kk] > best {
+                    c.n += if kk == 0 { 3 } else { 4 };
+                    c.taken += 1;
+                    best = s[kk];
+                } else {
+                    c.n += 3;
+                }
+            }
+            Strategy::Ovo => {
+                // sign test + vote increment (2 loads, 1 store, slli 2)
+                if s[kk] >= 0 {
+                    c.n += 9;
+                    c.taken += 1;
+                } else {
+                    c.n += 10;
+                }
+                c.loads += 2;
+                c.stores += 1;
+                c.sh += 2;
+            }
+        }
+        // addi k / blt loop_k
+        c.n += 2;
+        if kk + 1 < k {
+            c.taken += 1;
+        }
+    }
+
+    match m.strategy {
+        Strategy::Ovr => c.n += 2, // mv a0 / ecall
+        Strategy::Ovo => {
+            let votes = infer::ovo_votes(m, &s);
+            c.n += 3 + li_len(cc as i32); // la votes / li 0 / li C
+            let mut vbest = 0i64;
+            for (i, &v) in votes.iter().enumerate() {
+                if i == 0 || v > vbest {
+                    c.n += if i == 0 { 7 } else { 8 };
+                    c.taken += 1;
+                    vbest = v;
+                } else {
+                    c.n += 7;
+                }
+                c.loads += 1;
+                if i + 1 < cc {
+                    c.taken += 1; // am_loop back-edge
+                }
+            }
+            c.n += 2; // mv a0 / ecall
+        }
+    }
+    c.stats(t)
+}
+
+/// The baseline estimate on the calibration probe input (`[7; F]`,
+/// matching the farm's calibration run), as total cycles — what the
+/// farm seeds `baseline_cycles` with before real calibration lands.
+pub fn baseline_estimate_cycles(m: &QuantModel, t: &TimingConfig) -> f64 {
+    let x = vec![7i32; m.n_features];
+    baseline_estimate(m, &x, t).total() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::program::ProgramOpts;
+
+    fn toy(strategy: Strategy) -> QuantModel {
+        QuantModel {
+            dataset: "toy".into(),
+            strategy,
+            bits: 4,
+            n_classes: 3,
+            n_features: 2,
+            weights: vec![vec![7, 0], vec![0, 7], vec![-3, -3]],
+            biases: vec![0, 0, 5],
+            pairs: match strategy {
+                Strategy::Ovr => vec![(0, 0), (1, 1), (2, 2)],
+                Strategy::Ovo => vec![(0, 1), (0, 2), (1, 2)],
+            },
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn analytic_model_matches_simulation_exactly() {
+        let mut rng = Pcg32::seeded(0xfa57);
+        for strategy in [Strategy::Ovr, Strategy::Ovo] {
+            for timing in [TimingConfig::flexic(), TimingConfig::ideal_mem()] {
+                for unroll_limit in [0usize, 1024] {
+                    let m = toy(strategy);
+                    let c =
+                        CompiledProgram::accelerated(&m, ProgramOpts { unroll_limit }).unwrap();
+                    let am = AnalyticModel::derive(&m, &c, timing)
+                        .expect("derivation must succeed for accel programs");
+                    let mut runner = ProgramRunner::from_compiled(&c, timing).unwrap();
+                    for _ in 0..12 {
+                        let x: Vec<i32> = (0..2).map(|_| rng.below(16) as i32).collect();
+                        let (pred, stats) = am.predict(&x).unwrap();
+                        let (sp, ss) = runner.run_sample(&x).unwrap();
+                        assert_eq!(pred, sp, "{strategy:?} unroll={unroll_limit} x={x:?}");
+                        assert_eq!(
+                            stats, ss,
+                            "bit-exact bill: {strategy:?} unroll={unroll_limit} x={x:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn derive_rejects_baseline_programs() {
+        let m = toy(Strategy::Ovr);
+        let c = CompiledProgram::baseline(&m).unwrap();
+        assert!(AnalyticModel::derive(&m, &c, TimingConfig::ideal_mem()).is_none());
+    }
+
+    #[test]
+    fn predict_validates_features_like_the_simulator() {
+        let m = toy(Strategy::Ovr);
+        let c = CompiledProgram::accelerated(&m, ProgramOpts::default()).unwrap();
+        let am = AnalyticModel::derive(&m, &c, TimingConfig::ideal_mem()).unwrap();
+        assert!(am.predict(&[1]).is_err(), "wrong arity");
+        assert!(am.predict(&[16, 0]).is_err(), "out-of-range feature");
+        assert!(am.predict(&[-1, 0]).is_err(), "negative feature");
+    }
+
+    #[test]
+    fn baseline_estimate_tracks_the_simulator() {
+        for strategy in [Strategy::Ovr, Strategy::Ovo] {
+            let m = toy(strategy);
+            let t = TimingConfig::flexic();
+            let x = vec![7i32; m.n_features];
+            let est = baseline_estimate(&m, &x, &t);
+            let (_, sim) = ProgramRunner::baseline(&m, t).unwrap().run_sample(&x).unwrap();
+            // memory-access counts are pure code shape: exact
+            assert_eq!((est.loads, est.stores), (sim.loads, sim.stores), "{strategy:?}");
+            let rel =
+                (est.total() as f64 - sim.total() as f64).abs() / sim.total() as f64;
+            assert!(
+                rel < 0.10,
+                "{strategy:?}: estimate {} vs sim {} ({:.1}% off)",
+                est.total(),
+                sim.total(),
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_estimate_scales_with_model_size() {
+        let t = TimingConfig::flexic();
+        let small = toy(Strategy::Ovr);
+        let mut large = toy(Strategy::Ovr);
+        large.weights = (0..9).map(|_| vec![7, -7]).collect();
+        large.biases = vec![1; 9];
+        large.pairs = (0..9).map(|i| (i, i)).collect();
+        large.n_classes = 9;
+        assert!(
+            baseline_estimate_cycles(&large, &t) > 2.0 * baseline_estimate_cycles(&small, &t)
+        );
+        assert!(baseline_estimate_cycles(&small, &t) > 0.0);
+    }
+}

@@ -18,6 +18,7 @@
 
 pub mod accel;
 pub mod baseline;
+pub mod cost;
 pub mod run;
 
 use crate::isa::Asm;

@@ -93,6 +93,20 @@ pub fn render(
         }
         out.push_str(&format!("\nfarm shards ({} spill(s) off the home shard):\n", f.spills));
         out.push_str(&st.render());
+        // the differential-audit story: how much traffic the analytic
+        // fast path absorbed and whether it ever diverged from the SoC
+        if f.fast.fastpath_configs > 0 || f.fast.fast_jobs > 0 || f.fast.poisoned_configs > 0 {
+            out.push_str(&format!(
+                "fast path: {} analytic answer(s), {:.2} Mcyc billed | {} audit(s), {} mismatch(es) | \
+                 {} config(s) analytic, {} demoted to full sim\n",
+                f.fast.fast_jobs,
+                f.fast.fast_cycles as f64 / 1e6,
+                f.fast.audits,
+                f.fast.mismatches,
+                f.fast.fastpath_configs,
+                f.fast.poisoned_configs,
+            ));
+        }
     }
     out
 }
@@ -100,7 +114,7 @@ pub fn render(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::farm::ShardMetrics;
+    use crate::farm::{FastPathMetrics, ShardMetrics};
 
     fn fake_metrics() -> HashMap<String, ConfigMetrics> {
         let mut m = ConfigMetrics::new();
@@ -124,6 +138,14 @@ mod tests {
                 ShardMetrics { jobs: 4, sim_cycles: 240_000, model_loads: 1 },
             ],
             spills: 2,
+            fast: FastPathMetrics {
+                fast_jobs: 90,
+                fast_cycles: 5_400_000,
+                audits: 10,
+                mismatches: 0,
+                fastpath_configs: 1,
+                poisoned_configs: 0,
+            },
         };
         let s = render(
             &fake_metrics(),
@@ -136,6 +158,20 @@ mod tests {
         assert!(s.contains("35.0"), "speedup column: {s}");
         assert!(s.contains("2 spill(s)"), "{s}");
         assert!(s.contains("simulated-vs-wall"), "{s}");
+        assert!(s.contains("90 analytic answer(s)"), "{s}");
+        assert!(s.contains("10 audit(s), 0 mismatch(es)"), "{s}");
+    }
+
+    #[test]
+    fn fast_path_line_hidden_when_inactive() {
+        let farm = FarmMetrics {
+            shards: vec![ShardMetrics { jobs: 6, sim_cycles: 360_000, model_loads: 1 }],
+            spills: 0,
+            fast: FastPathMetrics::default(),
+        };
+        let s = render(&fake_metrics(), Duration::from_secs(1), Some(&farm), &FlexicModel::paper());
+        assert!(s.contains("farm shards"), "{s}");
+        assert!(!s.contains("fast path:"), "{s}");
     }
 
     #[test]

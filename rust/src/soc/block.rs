@@ -247,6 +247,20 @@ impl DecodedProgram {
         }
         n
     }
+
+    /// The translation-time static cost of the block suffix starting at
+    /// `slot`, rendered as the `CycleStats` the block engine charges
+    /// for executing it end to end.  Dynamic terms (taken branches,
+    /// register-count shifts, CFU handshakes) are *not* included —
+    /// they are exactly what [`crate::soc::cost`]'s analytic models add
+    /// back in closed form.  Zero for `Invalid` / out-of-range slots.
+    pub fn static_suffix_cost(&self, slot: usize, t: &TimingConfig) -> CycleStats {
+        let mut stats = CycleStats::default();
+        if slot < self.suffix.len() {
+            self.suffix[slot].charge(t, &mut stats);
+        }
+        stats
+    }
 }
 
 /// A block re-translated from *memory* after self-modifying code

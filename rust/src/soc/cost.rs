@@ -1,0 +1,192 @@
+//! Cycle-vector algebra for analytic cost models (ISSUE 6 tentpole).
+//!
+//! The block engine already separates every program's cycle bill into
+//! a translation-time **static** part (per-block suffix costs, see
+//! [`super::block`]) and a small **dynamic** remainder (taken-branch
+//! PC updates, register-count shifts, CFU handshakes).  An analytic
+//! cost model exploits that split: measure the full bill once on a
+//! probe input, then express the data-dependent remainder as a linear
+//! combination of a few closed-form delta vectors.
+//!
+//! [`CostVec`] is the signed vector space those models compute in —
+//! one `i64` lane per [`CycleStats`] field, so deltas may be negative
+//! (e.g. the not-taken side of a branch retiring one *more*
+//! instruction than the taken side while skipping the
+//! `branch_taken_extra` cycles).  A finished prediction converts back
+//! to `CycleStats` via [`CostVec::to_stats`], which refuses negative
+//! lanes rather than wrapping.
+
+use crate::serv::CycleStats;
+
+/// A signed cycle vector: `CycleStats` lifted to `i64` lanes so cost
+/// models can subtract and scale.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CostVec {
+    pub fetch: i64,
+    pub exec: i64,
+    pub data_mem: i64,
+    pub cfu: i64,
+    pub instret: i64,
+    pub loads: i64,
+    pub stores: i64,
+    pub cfu_ops: i64,
+}
+
+impl CostVec {
+    /// Lift measured stats into the signed vector space.
+    pub fn from_stats(s: &CycleStats) -> CostVec {
+        CostVec {
+            fetch: s.fetch as i64,
+            exec: s.exec as i64,
+            data_mem: s.data_mem as i64,
+            cfu: s.cfu as i64,
+            instret: s.instret as i64,
+            loads: s.loads as i64,
+            stores: s.stores as i64,
+            cfu_ops: s.cfu_ops as i64,
+        }
+    }
+
+    /// Lower back to `CycleStats`; `None` if any lane went negative
+    /// (an ill-formed model must surface, not wrap around).
+    pub fn to_stats(&self) -> Option<CycleStats> {
+        let lanes = [
+            self.fetch,
+            self.exec,
+            self.data_mem,
+            self.cfu,
+            self.instret,
+            self.loads,
+            self.stores,
+            self.cfu_ops,
+        ];
+        if lanes.iter().any(|&v| v < 0) {
+            return None;
+        }
+        Some(CycleStats {
+            fetch: self.fetch as u64,
+            exec: self.exec as u64,
+            data_mem: self.data_mem as u64,
+            cfu: self.cfu as u64,
+            instret: self.instret as u64,
+            loads: self.loads as u64,
+            stores: self.stores as u64,
+            cfu_ops: self.cfu_ops as u64,
+        })
+    }
+
+    pub fn add(self, o: CostVec) -> CostVec {
+        CostVec {
+            fetch: self.fetch + o.fetch,
+            exec: self.exec + o.exec,
+            data_mem: self.data_mem + o.data_mem,
+            cfu: self.cfu + o.cfu,
+            instret: self.instret + o.instret,
+            loads: self.loads + o.loads,
+            stores: self.stores + o.stores,
+            cfu_ops: self.cfu_ops + o.cfu_ops,
+        }
+    }
+
+    pub fn sub(self, o: CostVec) -> CostVec {
+        CostVec {
+            fetch: self.fetch - o.fetch,
+            exec: self.exec - o.exec,
+            data_mem: self.data_mem - o.data_mem,
+            cfu: self.cfu - o.cfu,
+            instret: self.instret - o.instret,
+            loads: self.loads - o.loads,
+            stores: self.stores - o.stores,
+            cfu_ops: self.cfu_ops - o.cfu_ops,
+        }
+    }
+
+    pub fn scaled(self, n: i64) -> CostVec {
+        CostVec {
+            fetch: self.fetch * n,
+            exec: self.exec * n,
+            data_mem: self.data_mem * n,
+            cfu: self.cfu * n,
+            instret: self.instret * n,
+            loads: self.loads * n,
+            stores: self.stores * n,
+            cfu_ops: self.cfu_ops * n,
+        }
+    }
+
+    /// Total cycles of the vector (the `CycleStats::total` analogue).
+    pub fn total(&self) -> i64 {
+        self.fetch + self.exec + self.data_mem + self.cfu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+    use crate::isa::Asm;
+    use crate::serv::TimingConfig;
+    use crate::soc::DecodedProgram;
+
+    #[test]
+    fn stats_round_trip() {
+        let s = CycleStats {
+            fetch: 110,
+            exec: 64,
+            data_mem: 221,
+            cfu: 68,
+            instret: 3,
+            loads: 1,
+            stores: 1,
+            cfu_ops: 1,
+        };
+        let v = CostVec::from_stats(&s);
+        assert_eq!(v.to_stats(), Some(s));
+        assert_eq!(v.total(), s.total() as i64);
+    }
+
+    #[test]
+    fn negative_lane_refuses_to_lower() {
+        let s = CycleStats { exec: 5, ..Default::default() };
+        let v = CostVec::from_stats(&s).sub(CostVec { exec: 6, ..Default::default() });
+        assert_eq!(v.exec, -1, "signed lanes hold intermediate deltas");
+        assert_eq!(v.to_stats(), None, "ill-formed model must surface");
+    }
+
+    #[test]
+    fn algebra_is_affine() {
+        let base = CostVec { fetch: 100, exec: 50, instret: 4, ..Default::default() };
+        let delta = CostVec { fetch: 110, exec: 32, instret: 1, ..Default::default() };
+        let v = base.add(delta.scaled(3));
+        assert_eq!(v.fetch, 430);
+        assert_eq!(v.instret, 7);
+        assert_eq!(v.sub(delta.scaled(3)), base);
+        assert_eq!(delta.scaled(0), CostVec::default());
+    }
+
+    #[test]
+    fn static_suffix_cost_matches_block_translation() {
+        // the public accessor mirrors what the block engine charges
+        // statically: n·fetch, 32/instr exec (+imm shift amounts),
+        // load/store transactions + load shift-in
+        let mut a = Asm::new(0);
+        a.lw(T0, A0, 0);
+        a.slli(T0, T0, 9);
+        a.sw(A0, T0, 0);
+        a.ecall();
+        let p = DecodedProgram::translate(&a.assemble_bytes().unwrap());
+        let t = TimingConfig::flexic();
+        let s = p.static_suffix_cost(0, &t);
+        assert_eq!(s.instret, 4);
+        assert_eq!(s.fetch, 4 * t.fetch_cost());
+        assert_eq!(s.exec, 4 * 32 + 9 + t.load_shift_in);
+        assert_eq!(s.data_mem, t.load_cost() + t.store_cost());
+        assert_eq!((s.loads, s.stores), (1, 1));
+        // mid-block entry covers the remaining suffix only
+        let s2 = p.static_suffix_cost(2, &t);
+        assert_eq!(s2.instret, 2);
+        assert_eq!(s2.stores, 1);
+        // out-of-range and data slots cost nothing
+        assert_eq!(p.static_suffix_cost(99, &t), CycleStats::default());
+    }
+}

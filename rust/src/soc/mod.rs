@@ -10,6 +10,7 @@
 //! `CycleStats` (pinned by `rust/tests/proptests.rs`).
 
 pub mod block;
+pub mod cost;
 pub mod mem;
 pub mod vcd;
 

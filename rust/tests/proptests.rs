@@ -451,3 +451,71 @@ fn prop_cfu_writeback_timing() {
         assert_eq!(res, calc + t.cfu_wb, "writeback must add exactly cfu_wb");
     });
 }
+
+/// ISSUE 6 tentpole invariant: the analytic cost model is bit-exact
+/// against the block-compiled SoC — prediction and every `CycleStats`
+/// lane — for random quantized models at 4/8/16 bits, both program
+/// forms (looped and unrolled) and both memory timings.
+#[test]
+fn prop_analytic_cost_model_is_bit_exact() {
+    use flexsvm::program::cost::AnalyticModel;
+    use flexsvm::program::run::CompiledProgram;
+    check("analytic-vs-sim", 0x159, 10, |rng| {
+        let m = gen::quant_model(rng);
+        let timing = *rng.choose(&[TimingConfig::flexic(), TimingConfig::ideal_mem()]);
+        let unroll_limit = *rng.choose(&[0usize, 4096]);
+        let c = CompiledProgram::accelerated(&m, ProgramOpts { unroll_limit }).unwrap();
+        let am = AnalyticModel::derive(&m, &c, timing)
+            .expect("derivation must succeed for accelerated programs");
+        let mut runner = ProgramRunner::from_compiled(&c, timing).unwrap();
+        for _ in 0..4 {
+            let x = gen::features(rng, m.n_features);
+            let (pred, stats) = am.predict(&x).unwrap();
+            let (sim_pred, sim_stats) = runner.run_sample(&x).unwrap();
+            assert_eq!(pred, sim_pred, "bits={} {:?}", m.bits, m.strategy);
+            assert_eq!(
+                stats, sim_stats,
+                "bits={} {:?}: analytic bill must be bit-exact",
+                m.bits, m.strategy
+            );
+        }
+    });
+}
+
+/// A poisoned analytic model must be caught by the differential audit:
+/// the config demotes to full simulation and the mismatch surfaces in
+/// the farm's metrics — while answers stay correct throughout.
+#[test]
+fn prop_audit_catches_poisoned_cost_models() {
+    use flexsvm::farm::ExecMode;
+    check("audit-poison", 0x15a, 6, |rng| {
+        let m = gen::quant_model(rng);
+        let nf = m.n_features;
+        let farm = Farm::start(
+            vec![("p".to_string(), m.clone())],
+            FarmOpts {
+                shards: 1,
+                timing: TimingConfig::ideal_mem(),
+                calibrate_baseline: false,
+                fastpath: true,
+                audit_rate: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let skew = 1 + rng.below(1000) as u64;
+        farm.inject_analytic_skew("p", skew).unwrap();
+        for i in 0..6 {
+            let x = gen::features(rng, nf);
+            let o = farm.predict("p", &x).unwrap();
+            assert_eq!(o.pred, infer::predict(&m, &x), "ground truth survives the fault");
+            let want = if i == 0 { ExecMode::Audited } else { ExecMode::Sim };
+            assert_eq!(o.mode, want, "request {i}");
+        }
+        let f = farm.metrics().fast;
+        assert_eq!(f.audits, 1);
+        assert_eq!(f.mismatches, 1);
+        assert_eq!(f.poisoned_configs, 1);
+        assert_eq!(f.fast_jobs, 0);
+    });
+}
