@@ -202,9 +202,17 @@ fn main() -> anyhow::Result<()> {
     if let Some(fm) = farm_metrics.as_ref() {
         report.metric("coordinator accel sim Mcyc", fm.total_sim_cycles() as f64 / 1e6, "Mcyc");
     }
+    let stages = client.obs().stage_snapshot();
     print!(
         "{}",
-        serving::render(&client.metrics()?, wall, farm_metrics.as_ref(), &FlexicModel::paper())
+        serving::render(
+            &client.metrics()?,
+            wall,
+            farm_metrics.as_ref(),
+            &FlexicModel::paper(),
+            Some(&stages),
+            None,
+        )
     );
     server.shutdown()?;
     let path = write_report("farm", &[&report])?;

@@ -137,12 +137,35 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.render());
 
-    // energy/request + sim-vs-wall from the farm behind the socket
+    // energy/request + sim-vs-wall from the farm behind the socket,
+    // with the server-side per-stage waterfall
     let metrics = client.metrics()?;
     let farm = client.engine_metrics()?.farm;
-    print!("{}", serving::render(&metrics, t_all.elapsed(), farm.as_ref(), &FlexicModel::paper()));
+    let stages = client.obs().stage_snapshot();
+    print!(
+        "{}",
+        serving::render(
+            &metrics,
+            t_all.elapsed(),
+            farm.as_ref(),
+            &FlexicModel::paper(),
+            Some(&stages),
+            None,
+        )
+    );
     if let Some(fm) = farm.as_ref() {
         report.metric("farm sim Mcyc over the wire", fm.total_sim_cycles() as f64 / 1e6, "Mcyc");
+    }
+    // server-side stage quantiles, aggregated across configs, into
+    // BENCH_net.json (client-observed latency is recorded above; this
+    // is where the time went inside the server)
+    let mut agg = flexsvm::obs::StageMetrics::default();
+    for sm in stages.values() {
+        agg.merge(sm);
+    }
+    for (stage, h) in agg.iter() {
+        report.metric(&format!("stage {} p50", stage.name()), h.quantile_us(0.50) as f64, "us");
+        report.metric(&format!("stage {} p99", stage.name()), h.quantile_us(0.99) as f64, "us");
     }
     let nm = net.metrics();
     report.metric("net accepted connections", nm.accepted as f64, "conns");

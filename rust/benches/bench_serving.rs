@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use flexsvm::coordinator::{Backend, Server};
 use flexsvm::farm::FarmOpts;
+use flexsvm::obs::StageMetrics;
 use flexsvm::svm::infer;
 use flexsvm::svm::model::artifacts_root;
 use flexsvm::svm::{QuantModel, TestSet};
@@ -69,7 +70,7 @@ fn drive(
     batch_max: usize,
     linger_us: u64,
     eager: bool,
-) -> anyhow::Result<(f64, u64, u64, f64)> {
+) -> anyhow::Result<(f64, u64, u64, f64, StageMetrics)> {
     let keys: Vec<String> = testsets.iter().map(|(k, _)| k.clone()).collect();
     let builder = Server::builder()
         .backend(backend)
@@ -87,7 +88,13 @@ fn drive(
     let client = server.client();
     let r = drive_clients(&client, testsets, requests(), WORKERS, None)?;
     let s = latency_summary(&client.metrics()?);
-    Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch))
+    // stage histograms aggregated across configs (where the time went
+    // inside the coordinator, to pair with the end-to-end quantiles)
+    let mut stages = StageMetrics::default();
+    for sm in client.obs().stage_snapshot().values() {
+        stages.merge(sm);
+    }
+    Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch, stages))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -116,7 +123,7 @@ fn main() -> anyhow::Result<()> {
         for (batch_max, linger_us, eager) in
             [(1usize, 0u64, false), (8, 200, false), (64, 500, false), (64, 2000, false), (64, 500, true)]
         {
-            let (rps, p50, p99, mb) = drive(
+            let (rps, p50, p99, mb, _) = drive(
                 &testsets,
                 models_ref,
                 backend,
@@ -148,9 +155,9 @@ fn main() -> anyhow::Result<()> {
     // coordinator — the serving-level view of bench_farm's raw number
     let farm_base = FarmOpts { shards: 4, calibrate_baseline: false, ..Default::default() };
     let farm_fast = FarmOpts { fastpath: true, audit_rate: 32, ..farm_base };
-    let (rps_sim, p50s, p99s, mbs) =
+    let (rps_sim, p50s, p99s, mbs, stages_sim) =
         drive(&testsets, models_ref, Backend::Accel, farm_base, 8, 200, false)?;
-    let (rps_fast, p50f, p99f, mbf) =
+    let (rps_fast, p50f, p99f, mbf, _) =
         drive(&testsets, models_ref, Backend::Accel, farm_fast, 8, 200, false)?;
     t.row([
         "accel (full sim)".to_string(),
@@ -175,6 +182,11 @@ fn main() -> anyhow::Result<()> {
     report.metric("accel full-sim req/s", rps_sim, "req/s");
     report.metric("accel fastpath req/s", rps_fast, "req/s");
     report.metric("fastpath_speedup", rps_fast / rps_sim.max(1e-9), "x");
+    // per-stage waterfall of the full-sim accel run (obs/ telemetry)
+    for (stage, h) in stages_sim.iter() {
+        report.metric(&format!("stage {} p50", stage.name()), h.quantile_us(0.50) as f64, "us");
+        report.metric(&format!("stage {} p99", stage.name()), h.quantile_us(0.99) as f64, "us");
+    }
 
     print!("{}", t.render());
     println!("\n(batch_max=1 is the no-batching baseline; PJRT gains come from batch formation.");

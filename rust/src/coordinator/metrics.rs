@@ -3,27 +3,52 @@
 
 use std::time::Duration;
 
+/// Bucket upper bounds in µs: 1, 2, 5, 10, 20, 50, ... up to 500 s.
+/// A sample lands in bucket `i` iff `BOUNDS[i-1] <= us < BOUNDS[i]`
+/// (bucket 0: `us < 1`); the overflow bucket holds `us >= 500 s`.
+/// Precomputed once — `record` sits on the hot path of every request
+/// and must not allocate.
+const BOUNDS: [u64; 27] = [
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    50_000_000,
+    100_000_000,
+    200_000_000,
+    500_000_000,
+];
+
+const N_BUCKETS: usize = BOUNDS.len() + 1; // + overflow
+
 /// Log-scaled latency histogram, microsecond resolution.
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    /// bucket i counts samples with value < BOUNDS[i].
+    /// bucket i counts samples with value < BOUNDS[i]; the last slot
+    /// is the overflow bucket.
     counts: Vec<u64>,
     total: u64,
     sum_us: u64,
     max_us: u64,
-}
-
-/// Bucket upper bounds in µs: 1, 2, 5, 10, 20, 50, ... up to ~100 s.
-fn bounds() -> Vec<u64> {
-    let mut b = Vec::new();
-    let mut base = 1u64;
-    while base <= 100_000_000 {
-        for m in [1, 2, 5] {
-            b.push(base * m);
-        }
-        base *= 10;
-    }
-    b
 }
 
 impl Default for Histogram {
@@ -34,20 +59,63 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { counts: vec![0; bounds().len() + 1], total: 0, sum_us: 0, max_us: 0 }
+        Histogram { counts: vec![0; N_BUCKETS], total: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// The shared bucket-bound table (µs) — every histogram in the
+    /// fleet uses the same bounds, which is what makes raw bucket
+    /// counts mergeable across the wire.
+    pub fn bucket_bounds() -> &'static [u64] {
+        &BOUNDS
     }
 
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = bounds().iter().position(|&b| us < b).unwrap_or(self.counts.len() - 1);
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        // first bucket whose bound exceeds the sample; all bounds
+        // <= us sit to the left (partition_point = binary search)
+        let idx = BOUNDS.partition_point(|&b| b <= us);
         self.counts[idx] += 1;
         self.total += 1;
         self.sum_us += us;
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold another histogram in (fleet aggregation: both sides use
+    /// the shared `bucket_bounds`, so counts add bucket-wise).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Raw bucket counts (len = `bucket_bounds().len() + 1`; the last
+    /// slot is the overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Rebuild a histogram from wire-carried parts.  Errors if the
+    /// bucket count does not match this build's bound table.
+    pub fn from_parts(counts: Vec<u64>, sum_us: u64, max_us: u64) -> anyhow::Result<Histogram> {
+        if counts.len() != N_BUCKETS {
+            anyhow::bail!("histogram bucket count {} != expected {}", counts.len(), N_BUCKETS);
+        }
+        let total = counts.iter().sum();
+        Ok(Histogram { counts, total, sum_us, max_us })
+    }
+
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -69,11 +137,10 @@ impl Histogram {
         }
         let target = (q * self.total as f64).ceil() as u64;
         let mut seen = 0u64;
-        let bs = bounds();
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return bs.get(i).copied().unwrap_or(self.max_us);
+                return BOUNDS.get(i).copied().unwrap_or(self.max_us);
             }
         }
         self.max_us
@@ -101,6 +168,27 @@ pub struct ConfigMetrics {
 impl ConfigMetrics {
     pub fn new() -> Self {
         ConfigMetrics { latency: Some(Histogram::new()), ..Default::default() }
+    }
+
+    /// Fold another node's counters for this config into ours (fleet
+    /// view).  Latency histograms merge bucket-wise when both sides
+    /// carry one, so fleet quantiles come from real counts rather
+    /// than a max over per-node summaries.
+    pub fn merge(&mut self, other: &ConfigMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batched_samples += other.batched_samples;
+        self.sim_samples += other.sim_samples;
+        self.sim_cycles += other.sim_cycles;
+        self.energy_mj += other.energy_mj;
+        if self.baseline_cycles_per_inf == 0.0 {
+            self.baseline_cycles_per_inf = other.baseline_cycles_per_inf;
+        }
+        match (&mut self.latency, &other.latency) {
+            (Some(mine), Some(theirs)) => mine.merge(theirs),
+            (None, Some(theirs)) => self.latency = Some(theirs.clone()),
+            _ => {}
+        }
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -146,6 +234,37 @@ mod tests {
     use super::*;
 
     #[test]
+    fn const_bounds_match_the_generated_sequence() {
+        // the table replaced a per-record generator loop; pin equality
+        let mut gen = Vec::new();
+        let mut base = 1u64;
+        while base <= 100_000_000 {
+            for m in [1, 2, 5] {
+                gen.push(base * m);
+            }
+            base *= 10;
+        }
+        assert_eq!(Histogram::bucket_bounds(), &gen[..]);
+        assert!(BOUNDS.windows(2).all(|w| w[0] < w[1]), "bounds strictly increasing");
+    }
+
+    #[test]
+    fn record_buckets_by_binary_search() {
+        let mut h = Histogram::new();
+        // bucket edges are half-open [prev, bound): 1us lands in the
+        // bucket bounded by 2, not the one bounded by 1
+        for us in [0u64, 1, 2, 4, 5, 999_999_999_999] {
+            h.record_us(us);
+        }
+        assert_eq!(h.counts()[0], 1, "us=0 < bound 1");
+        assert_eq!(h.counts()[1], 1, "us=1 in [1,2)");
+        assert_eq!(h.counts()[2], 2, "us=2,4 in [2,5)");
+        assert_eq!(h.counts()[3], 1, "us=5 in [5,10)");
+        assert_eq!(*h.counts().last().unwrap(), 1, "overflow bucket");
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
     fn histogram_quantiles_ordered() {
         let mut h = Histogram::new();
         for us in [3u64, 7, 12, 40, 90, 900, 15_000] {
@@ -167,11 +286,67 @@ mod tests {
     }
 
     #[test]
+    fn merge_adds_bucketwise_and_quantiles_follow() {
+        let (mut a, mut b) = (Histogram::new(), Histogram::new());
+        for us in [10u64, 20, 30] {
+            a.record_us(us);
+        }
+        for us in [40_000u64, 50_000, 60_000] {
+            b.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.max_us(), 60_000);
+        assert_eq!(a.sum_us(), 10 + 20 + 30 + 40_000 + 50_000 + 60_000);
+        // fleet p99 reflects the slow node's samples, not a summary max
+        assert!(a.quantile_us(0.99) >= 50_000, "p99 {}", a.quantile_us(0.99));
+        assert!(a.quantile_us(0.25) <= 50, "p25 {}", a.quantile_us(0.25));
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_rejects_bad_shapes() {
+        let mut h = Histogram::new();
+        for us in [5u64, 500, 50_000] {
+            h.record_us(us);
+        }
+        let back = Histogram::from_parts(h.counts().to_vec(), h.sum_us(), h.max_us()).unwrap();
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.quantile_us(0.5), h.quantile_us(0.5));
+        assert!(Histogram::from_parts(vec![0; 3], 0, 0).is_err());
+    }
+
+    #[test]
     fn mean_batch_size() {
         let mut m = ConfigMetrics::new();
         m.batches = 4;
         m.batched_samples = 10;
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_metrics_merge_folds_counters_and_latency() {
+        let mut a = ConfigMetrics::new();
+        a.requests = 3;
+        a.batches = 2;
+        a.batched_samples = 3;
+        a.sim_samples = 3;
+        a.sim_cycles = 300;
+        a.energy_mj = 1.5;
+        a.latency.as_mut().unwrap().record_us(100);
+        let mut b = ConfigMetrics::new();
+        b.requests = 1;
+        b.batches = 1;
+        b.batched_samples = 1;
+        b.baseline_cycles_per_inf = 777.0;
+        b.latency.as_mut().unwrap().record_us(9_000);
+        a.merge(&b);
+        assert_eq!(a.requests, 4);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.sim_cycles, 300);
+        assert_eq!(a.baseline_cycles_per_inf, 777.0);
+        let h = a.latency.as_ref().unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max_us(), 9_000);
     }
 
     #[test]

@@ -36,13 +36,14 @@ pub mod metrics;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::engine::{batch_error, Engine, FarmEngine, ModelSource, NativeEngine};
+use crate::engine::{batch_error, BatchCtx, Engine, FarmEngine, ModelSource, NativeEngine};
 use crate::farm::FarmOpts;
+use crate::obs::{Obs, ObsOpts, Span, Stage, TraceId};
 use crate::svm::model::Manifest;
 use crate::svm::QuantModel;
 
@@ -51,33 +52,51 @@ pub use crate::engine::{Backend, EngineMetrics, ServeError, SimCost};
 use metrics::ConfigMetrics;
 
 /// A single inference answer.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Response {
     pub pred: i32,
+    /// The request's trace id — minted at ingress, or carried in from
+    /// the wire ([`Client::submit_traced`]).
+    pub trace: TraceId,
     /// Queue + execute time observed by the server.
     pub latency: Duration,
     /// How many samples shared the executed batch.
     pub batch_size: usize,
     /// Simulated cycles + energy (None on wall-clock-only engines).
     pub sim: Option<SimCost>,
+    /// Full span tree with per-stage timings.  Populated only for
+    /// explicitly-traced requests (`submit_traced`); plain traffic pays
+    /// no span-assembly cost on the response path.
+    pub span: Option<Box<Span>>,
 }
 
 struct Request {
     key: String,
     features: Vec<i32>,
     enqueued: Instant,
+    /// When the dispatcher routed the request into its per-config
+    /// queue (`queue_wait` ends, `batch_linger` begins).
+    routed: Option<Instant>,
+    trace: TraceId,
+    /// Wire-carried trace: the caller wants the span tree back.
+    explicit: bool,
     resp: mpsc::SyncSender<Result<Response, ServeError>>,
 }
 
 fn make_request(
     key: &str,
     features: &[i32],
+    trace: TraceId,
+    explicit: bool,
 ) -> (Request, mpsc::Receiver<Result<Response, ServeError>>) {
     let (tx, rx) = mpsc::sync_channel(1);
     let req = Request {
         key: key.to_string(),
         features: features.to_vec(),
         enqueued: Instant::now(),
+        routed: None,
+        trace,
+        explicit,
         resp: tx,
     };
     (req, rx)
@@ -137,13 +156,28 @@ impl Pending {
 #[derive(Clone)]
 pub struct Client {
     tx: mpsc::SyncSender<Msg>,
+    obs: Arc<Obs>,
 }
 
 impl Client {
     /// Non-blocking submit: enqueue the request (subject to ingress
     /// backpressure) and return a [`Pending`] handle for the answer.
     pub fn submit(&self, key: &str, features: &[i32]) -> Result<Pending, ServeError> {
-        let (req, rx) = make_request(key, features);
+        let (req, rx) = make_request(key, features, self.obs.next_trace(), false);
+        self.tx.send(Msg::Req(req)).map_err(|_| ServeError::ServerDown)?;
+        Ok(Pending { rx, taken: false })
+    }
+
+    /// Submit under a caller-supplied trace id (one carried in from
+    /// the wire).  The answer's [`Response::span`] holds the full span
+    /// tree, so a remote coordinator can graft it into its own trace.
+    pub fn submit_traced(
+        &self,
+        key: &str,
+        features: &[i32],
+        trace: TraceId,
+    ) -> Result<Pending, ServeError> {
+        let (req, rx) = make_request(key, features, trace, true);
         self.tx.send(Msg::Req(req)).map_err(|_| ServeError::ServerDown)?;
         Ok(Pending { rx, taken: false })
     }
@@ -155,9 +189,29 @@ impl Client {
     /// `503 + Retry-After` under saturation rather than stalling the
     /// socket.
     pub fn try_submit(&self, key: &str, features: &[i32]) -> Result<Pending, ServeError> {
-        let (req, rx) = make_request(key, features);
+        let (req, rx) = make_request(key, features, self.obs.next_trace(), false);
         self.tx.try_send(Msg::Req(req)).map_err(try_send_error)?;
         Ok(Pending { rx, taken: false })
+    }
+
+    /// [`try_submit`](Self::try_submit) under a caller-supplied trace
+    /// id — the admission-controlled twin of
+    /// [`submit_traced`](Self::submit_traced).
+    pub fn try_submit_traced(
+        &self,
+        key: &str,
+        features: &[i32],
+        trace: TraceId,
+    ) -> Result<Pending, ServeError> {
+        let (req, rx) = make_request(key, features, trace, true);
+        self.tx.try_send(Msg::Req(req)).map_err(try_send_error)?;
+        Ok(Pending { rx, taken: false })
+    }
+
+    /// The observability store behind this server (trace ring +
+    /// per-stage histograms).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Blocking single inference.
@@ -239,6 +293,7 @@ fn try_send_error(e: mpsc::TrySendError<Msg>) -> ServeError {
 pub struct Server {
     tx: mpsc::SyncSender<Msg>,
     keys: Vec<String>,
+    obs: Arc<Obs>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -249,7 +304,13 @@ impl Server {
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
+        Client { tx: self.tx.clone(), obs: Arc::clone(&self.obs) }
+    }
+
+    /// The observability store (trace ring + per-stage histograms)
+    /// every request through this server reports into.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// The config keys this server was started with (the served set).
@@ -321,6 +382,7 @@ pub struct ServerBuilder {
     queue_cap: usize,
     eager_flush: bool,
     farm: FarmOpts,
+    obs: ObsOpts,
 }
 
 impl Default for ServerBuilder {
@@ -335,6 +397,7 @@ impl Default for ServerBuilder {
             queue_cap: 1024,
             eager_flush: true,
             farm: FarmOpts::default(),
+            obs: ObsOpts::default(),
         }
     }
 }
@@ -423,6 +486,13 @@ impl ServerBuilder {
         self
     }
 
+    /// Observability knobs: trace sampling rate and retention-ring
+    /// capacity (see [`ObsOpts`]).
+    pub fn obs_opts(mut self, opts: ObsOpts) -> Self {
+        self.obs = opts;
+        self
+    }
+
     /// Validate, spawn the dispatcher, warm the engine, and return the
     /// running server.  Fails fast — bad configs, an unloadable
     /// manifest or an engine warm-up error all surface here, before
@@ -487,11 +557,13 @@ impl ServerBuilder {
         let (tx, rx) = mpsc::sync_channel::<Msg>(self.queue_cap);
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let served_keys = keys.clone();
+        let obs = Arc::new(Obs::new(self.obs));
+        let obs_dispatch = Arc::clone(&obs);
         let join = std::thread::Builder::new()
             .name("flexsvm-dispatcher".into())
-            .spawn(move || dispatcher(engine, source, keys, tuning, rx, ready_tx))?;
+            .spawn(move || dispatcher(engine, source, keys, tuning, obs_dispatch, rx, ready_tx))?;
         ready_rx.recv().context("dispatcher died during init")??;
-        Ok(Server { tx, keys: served_keys, join: Some(join) })
+        Ok(Server { tx, keys: served_keys, obs, join: Some(join) })
     }
 }
 
@@ -510,18 +582,29 @@ const IDLE_POLL: Duration = Duration::from_millis(50);
 /// Execute one queued batch on the engine and answer every request.
 /// Per-sample isolation is universal: a failed sample answers its own
 /// request with the engine's error while its batchmates succeed.
+///
+/// Stage accounting: every measured stage is a disjoint sub-interval
+/// of `[enqueued, answered]` — `queue_wait` (ingress channel), then
+/// `batch_linger` (per-config queue), then whatever the engine
+/// reported ([`crate::engine::Sample::stages`]) — and `dispatch` is
+/// the residual, so the stage sum never exceeds the end-to-end
+/// latency.
 fn flush(
     engine: &dyn Engine,
     key: &str,
     q: &mut Vec<Request>,
     stats: &mut HashMap<String, ConfigMetrics>,
+    obs: &Obs,
 ) {
     if q.is_empty() {
         return;
     }
     let pending: Vec<Request> = std::mem::take(q);
     let xs: Vec<Vec<i32>> = pending.iter().map(|r| r.features.clone()).collect();
-    let mut answers = engine.run_batch(key, &xs);
+    let traces: Vec<TraceId> = pending.iter().map(|r| r.trace).collect();
+    let t_exec = Instant::now();
+    let mut answers = engine.run_batch_ctx(key, &xs, &BatchCtx { traces: &traces });
+    let exec_us = t_exec.elapsed().as_micros() as u64;
     if answers.len() != pending.len() {
         // a misbehaving engine must not leave requests unanswered —
         // and a wrong-length reply makes every answer's attribution
@@ -547,11 +630,50 @@ fn flush(
                 if let Some(h) = m.latency.as_mut() {
                     h.record(latency);
                 }
+                let total_us = latency.as_micros() as u64;
+                let routed = req.routed.unwrap_or(req.enqueued);
+                let mut stages = s.stages;
+                if stages.is_empty() {
+                    // no engine-side breakdown (native/pjrt/mock):
+                    // charge the whole engine call to `execute`
+                    stages.set(Stage::Execute, exec_us);
+                }
+                stages.set(
+                    Stage::QueueWait,
+                    routed.saturating_duration_since(req.enqueued).as_micros() as u64,
+                );
+                stages.set(
+                    Stage::BatchLinger,
+                    t_exec.saturating_duration_since(routed).as_micros() as u64,
+                );
+                stages.set(Stage::Dispatch, total_us.saturating_sub(stages.sum_us()));
+                let sampled = obs.observe(key, &stages, latency);
+                let span = if sampled || req.explicit {
+                    let mut sp = Span::new(req.trace, key);
+                    sp.total_us = total_us;
+                    sp.stages = stages;
+                    sp.mode = s.mode.map(str::to_string);
+                    if let Some(sim) = s.sim {
+                        sp.cycles = Some(sim.cycles);
+                        sp.energy_mj = Some(sim.energy_mj);
+                    }
+                    if let Some(child) = s.child {
+                        sp.children.push(*child);
+                    }
+                    Some(sp)
+                } else {
+                    None
+                };
+                if sampled {
+                    obs.keep(span.clone().expect("sampled implies span"));
+                }
                 let _ = req.resp.send(Ok(Response {
                     pred: s.pred,
+                    trace: req.trace,
                     latency,
                     batch_size: xs.len(),
                     sim: s.sim,
+                    span: if req.explicit { span.map(Box::new) } else { None },
                 }));
             }
             Err(e) => {
@@ -566,6 +688,7 @@ fn dispatcher(
     source: ModelSource,
     keys: Vec<String>,
     tuning: Tuning,
+    obs: Arc<Obs>,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
@@ -607,13 +730,14 @@ fn dispatcher(
                 let mut shutdown = false;
                 for msg in pending {
                     match msg {
-                        Msg::Req(req) => {
+                        Msg::Req(mut req) => {
                             if !queues.contains_key(&req.key) && !keys.iter().any(|k| *k == req.key) {
                                 let _ = req
                                     .resp
                                     .send(Err(ServeError::UnknownConfig(req.key.clone())));
                                 continue;
                             }
+                            req.routed = Some(Instant::now());
                             let m =
                                 stats.entry(req.key.clone()).or_insert_with(ConfigMetrics::new);
                             m.requests += 1;
@@ -622,7 +746,7 @@ fn dispatcher(
                             if q.len() >= tuning.batch_max {
                                 let key = q[0].key.clone();
                                 let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                                flush(engine, &key, &mut taken, &mut stats);
+                                flush(engine, &key, &mut taken, &mut stats, &obs);
                             }
                         }
                         Msg::Snapshot(tx) => {
@@ -640,12 +764,12 @@ fn dispatcher(
                         queues.iter().filter(|(_, q)| !q.is_empty()).map(|(k, _)| k.clone()).collect();
                     for key in due {
                         let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                        flush(engine, &key, &mut taken, &mut stats);
+                        flush(engine, &key, &mut taken, &mut stats, &obs);
                     }
                 }
                 if shutdown {
                     for (key, mut q) in std::mem::take(&mut queues) {
-                        flush(engine, &key, &mut q, &mut stats);
+                        flush(engine, &key, &mut q, &mut stats, &obs);
                     }
                     return;
                 }
@@ -658,7 +782,7 @@ fn dispatcher(
             }
             Ok(Msg::Shutdown) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(engine, &key, &mut q, &mut stats);
+                    flush(engine, &key, &mut q, &mut stats, &obs);
                 }
                 return;
             }
@@ -679,7 +803,7 @@ fn dispatcher(
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(engine, &key, &mut q, &mut stats);
+                    flush(engine, &key, &mut q, &mut stats, &obs);
                 }
                 return;
             }

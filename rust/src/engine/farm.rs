@@ -55,9 +55,14 @@ impl Engine for FarmEngine {
             Ok(outs) => outs
                 .into_iter()
                 .map(|r| {
-                    r.map(|o| Sample {
-                        pred: o.pred,
-                        sim: Some(SimCost { cycles: o.cycles, energy_mj: o.energy_mj }),
+                    r.map(|o| {
+                        let mut s = Sample::new(
+                            o.pred,
+                            Some(SimCost { cycles: o.cycles, energy_mj: o.energy_mj }),
+                        );
+                        s.stages = o.stages;
+                        s.mode = Some(o.mode.name());
+                        s
                     })
                     .map_err(|e| ServeError::Engine(format!("inference failed: {e:#}")))
                 })
@@ -74,6 +79,7 @@ impl Engine for FarmEngine {
         EngineMetrics {
             engine: self.name().to_string(),
             farm: self.farm.as_ref().map(|f| f.metrics()),
+            ..Default::default()
         }
     }
 }

@@ -36,7 +36,9 @@ use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::metrics::ConfigMetrics;
 use crate::farm::FarmMetrics;
+use crate::obs::{Span, StageSet, TraceId};
 use crate::svm::model::Manifest;
 use crate::svm::QuantModel;
 
@@ -137,13 +139,32 @@ pub struct SimCost {
 }
 
 /// One answered sample of an executed batch.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Sample {
     /// Predicted class id.
     pub pred: i32,
     /// Simulated cycles + energy (engines without a hardware model
     /// report `None`).
     pub sim: Option<SimCost>,
+    /// Engine-side stage timings for this sample (the farm records
+    /// `shard_wait` / `execute` / `audit`; engines that don't measure
+    /// stages leave this empty and the coordinator attributes the
+    /// whole engine call to `execute`).
+    pub stages: StageSet,
+    /// Execution-mode label when the engine distinguishes one
+    /// (`"sim"` / `"fast"` / `"audited"` from the farm's `ExecMode`).
+    pub mode: Option<&'static str>,
+    /// Child span from a remote hop (`RemoteEngine` fan-out): the
+    /// executing node's own span for this sample's chunk.
+    pub child: Option<Box<Span>>,
+}
+
+impl Sample {
+    /// A plain answer with no stage breakdown (what most engines
+    /// return; the tracing fields start empty).
+    pub fn new(pred: i32, sim: Option<SimCost>) -> Sample {
+        Sample { pred, sim, stages: StageSet::new(), mode: None, child: None }
+    }
 }
 
 /// Point-in-time engine statistics, snapshotted through the dispatcher.
@@ -154,6 +175,10 @@ pub struct EngineMetrics {
     /// Shard-level statistics for sharded engines (the farm); `None`
     /// for single-executor engines.
     pub farm: Option<FarmMetrics>,
+    /// Fleet-wide per-config serving metrics for fan-out engines
+    /// (`RemoteEngine` merges every node's `ConfigMetrics` — full
+    /// histogram buckets, so fleet quantiles are real quantiles).
+    pub fleet: Option<HashMap<String, ConfigMetrics>>,
 }
 
 /// Where an engine's `warm` gets host-side models from.
@@ -211,6 +236,20 @@ pub trait Engine: Send {
     /// Execute one batch; one answer per input sample, in input order.
     fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>>;
 
+    /// Execute one batch with tracing context (per-sample trace ids,
+    /// parallel to `xs`).  Engines that propagate traces downstream
+    /// (`RemoteEngine` puts them on the wire) override this; the
+    /// default ignores the context, so existing engines keep working
+    /// unchanged.
+    fn run_batch_ctx(
+        &self,
+        key: &str,
+        xs: &[Vec<i32>],
+        _ctx: &BatchCtx<'_>,
+    ) -> Vec<Result<Sample, ServeError>> {
+        self.run_batch(key, xs)
+    }
+
     /// Calibrated software-only cycles/inference for the
     /// accel-vs-baseline ratio (`None` for engines without a baseline
     /// story).
@@ -220,8 +259,16 @@ pub trait Engine: Send {
 
     /// Point-in-time engine statistics.
     fn snapshot(&self) -> EngineMetrics {
-        EngineMetrics { engine: self.name().to_string(), farm: None }
+        EngineMetrics { engine: self.name().to_string(), ..Default::default() }
     }
+}
+
+/// Tracing context for one engine batch: per-sample trace ids,
+/// parallel to the batch's `xs`.  Empty when the caller traces
+/// nothing (benches, plain `run_batch` paths).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchCtx<'a> {
+    pub traces: &'a [TraceId],
 }
 
 /// Replicate one batch-level failure across every sample slot (for

@@ -40,7 +40,7 @@ impl Engine for NativeEngine {
         let Some(m) = self.models.get(key) else {
             return batch_error(xs.len(), ServeError::UnknownConfig(key.to_string()));
         };
-        xs.iter().map(|x| Ok(Sample { pred: infer::predict(m, x), sim: None })).collect()
+        xs.iter().map(|x| Ok(Sample::new(infer::predict(m, x), None))).collect()
     }
 }
 

@@ -61,7 +61,7 @@ impl Engine for PjrtEngine {
             return batch_error(xs.len(), ServeError::Engine("pjrt engine not warmed".into()));
         };
         match rt.predict(key, self.batch, xs) {
-            Ok(preds) => preds.into_iter().map(|pred| Ok(Sample { pred, sim: None })).collect(),
+            Ok(preds) => preds.into_iter().map(|pred| Ok(Sample::new(pred, None))).collect(),
             Err(e) => batch_error(xs.len(), ServeError::Engine(format!("batch execution failed: {e:#}"))),
         }
     }

@@ -56,9 +56,11 @@ pub mod scenario;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::{Stage, StageSet};
 use crate::power::FlexicModel;
 use crate::program::cost::{baseline_estimate_cycles, AnalyticModel};
 use crate::program::run::{CompiledProgram, ProgramRunner};
@@ -141,6 +143,26 @@ pub enum ExecMode {
     Audited,
 }
 
+impl ExecMode {
+    /// Stable wire/trace label.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Sim => "sim",
+            ExecMode::Fast => "fast",
+            ExecMode::Audited => "audited",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ExecMode> {
+        match s {
+            "sim" => Some(ExecMode::Sim),
+            "fast" => Some(ExecMode::Fast),
+            "audited" => Some(ExecMode::Audited),
+            _ => None,
+        }
+    }
+}
+
 /// One inference answer.
 #[derive(Debug, Clone, Copy)]
 pub struct AccelOutput {
@@ -153,6 +175,10 @@ pub struct AccelOutput {
     pub energy_mj: f64,
     /// Which path produced this answer.
     pub mode: ExecMode,
+    /// Wall-clock stage timings for this answer: `shard_wait` /
+    /// `execute` for simulated jobs, `execute` alone for analytic
+    /// ones, plus `audit` (the extra simulation) on audited requests.
+    pub stages: StageSet,
 }
 
 /// Per-config fast-path state (lock-free; shared with nobody — the
@@ -200,11 +226,17 @@ struct FarmConfig {
 struct SimAnswer {
     pred: i32,
     stats: CycleStats,
+    /// Wall-clock µs the job sat in the shard queue before execution.
+    wait_us: u64,
+    /// Wall-clock µs the simulation itself took.
+    exec_us: u64,
 }
 
 struct Job {
     cfg: usize,
     features: Vec<i32>,
+    /// When the job was submitted (drives the `shard_wait` stage).
+    submitted: Instant,
     resp: mpsc::SyncSender<Result<SimAnswer>>,
 }
 
@@ -512,15 +544,16 @@ impl Farm {
         let shard = self.pick_shard(self.configs[cfg].home, self.spill_threshold);
         let (tx, rx) = mpsc::sync_channel(1);
         self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
-        if self.shards[shard].tx.send(ShardMsg::Job(Job { cfg, features, resp: tx })).is_err() {
+        let job = Job { cfg, features, submitted: Instant::now(), resp: tx };
+        if self.shards[shard].tx.send(ShardMsg::Job(job)).is_err() {
             self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
             bail!("shard {shard} is down");
         }
         Ok(rx)
     }
 
-    fn output(&self, pred: i32, cycles: u64, mode: ExecMode) -> AccelOutput {
-        AccelOutput { pred, cycles, energy_mj: self.power.energy_mj(cycles as f64), mode }
+    fn output(&self, pred: i32, cycles: u64, mode: ExecMode, stages: StageSet) -> AccelOutput {
+        AccelOutput { pred, cycles, energy_mj: self.power.energy_mj(cycles as f64), mode, stages }
     }
 
     /// Route one request: analytic fast path when the config has a
@@ -532,7 +565,10 @@ impl Farm {
             if !c.fast.poisoned.load(Ordering::Relaxed) {
                 let n = c.fast.seq.fetch_add(1, Ordering::Relaxed);
                 let audited = self.audit_rate > 0 && n % self.audit_rate == 0;
-                return match am.predict(&features) {
+                let t0 = Instant::now();
+                let answer = am.predict(&features);
+                let fast_us = t0.elapsed().as_micros() as u64;
+                return match answer {
                     // the analytic path rejects exactly what the sim
                     // path would (same validation) — answer inline
                     Err(e) => Ok(Pending::Ready(Err(e))),
@@ -540,14 +576,17 @@ impl Farm {
                         stats.exec += c.fast.skew.load(Ordering::Relaxed);
                         if audited {
                             let rx = self.submit(cfg, features)?;
-                            Ok(Pending::Audit { cfg, rx, pred, stats })
+                            Ok(Pending::Audit { cfg, rx, pred, stats, fast_us })
                         } else {
                             c.fast.fast_jobs.fetch_add(1, Ordering::Relaxed);
                             c.fast.fast_cycles.fetch_add(stats.total(), Ordering::Relaxed);
+                            let mut st = StageSet::new();
+                            st.set(Stage::Execute, fast_us);
                             Ok(Pending::Ready(Ok(self.output(
                                 pred,
                                 stats.total(),
                                 ExecMode::Fast,
+                                st,
                             ))))
                         }
                     }
@@ -568,9 +607,14 @@ impl Farm {
             Pending::Ready(r) => Ok(r),
             Pending::Sim(rx) => {
                 let r = rx.recv().context("farm shard dropped the job")?;
-                Ok(r.map(|a| self.output(a.pred, a.stats.total(), ExecMode::Sim)))
+                Ok(r.map(|a| {
+                    let mut st = StageSet::new();
+                    st.set(Stage::ShardWait, a.wait_us);
+                    st.set(Stage::Execute, a.exec_us);
+                    self.output(a.pred, a.stats.total(), ExecMode::Sim, st)
+                }))
             }
-            Pending::Audit { cfg, rx, pred, stats } => {
+            Pending::Audit { cfg, rx, pred, stats, fast_us } => {
                 let c = &self.configs[cfg];
                 c.fast.audits.fetch_add(1, Ordering::Relaxed);
                 let r = rx.recv().context("farm shard dropped the job")?;
@@ -580,7 +624,13 @@ impl Farm {
                             c.fast.mismatches.fetch_add(1, Ordering::Relaxed);
                             c.fast.poisoned.store(true, Ordering::Relaxed);
                         }
-                        Ok(self.output(a.pred, a.stats.total(), ExecMode::Audited))
+                        // the analytic predict is the `execute` stage;
+                        // the extra simulation is attributed to `audit`
+                        let mut st = StageSet::new();
+                        st.set(Stage::Execute, fast_us);
+                        st.set(Stage::ShardWait, a.wait_us);
+                        st.set(Stage::Audit, a.exec_us);
+                        Ok(self.output(a.pred, a.stats.total(), ExecMode::Audited, st))
                     }
                     Err(e) => {
                         // the analytic model accepted what the SoC
@@ -639,7 +689,14 @@ impl Farm {
 enum Pending {
     Ready(Result<AccelOutput>),
     Sim(mpsc::Receiver<Result<SimAnswer>>),
-    Audit { cfg: usize, rx: mpsc::Receiver<Result<SimAnswer>>, pred: i32, stats: CycleStats },
+    Audit {
+        cfg: usize,
+        rx: mpsc::Receiver<Result<SimAnswer>>,
+        pred: i32,
+        stats: CycleStats,
+        /// Wall-clock µs of the analytic predict (the `execute` stage).
+        fast_us: u64,
+    },
 }
 
 impl Drop for Farm {
@@ -700,6 +757,8 @@ fn shard_main(
             ShardMsg::Job(j) => j,
             ShardMsg::Shutdown => break,
         };
+        let picked = Instant::now();
+        let wait_us = picked.saturating_duration_since(job.submitted).as_micros() as u64;
         let result = (|| -> Result<SimAnswer> {
             let runner = match runners.entry(job.cfg) {
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
@@ -714,7 +773,8 @@ fn shard_main(
             let (pred, stats) = runner.run_sample(&job.features)?;
             counters.jobs.fetch_add(1, Ordering::Relaxed);
             counters.sim_cycles.fetch_add(stats.total(), Ordering::Relaxed);
-            Ok(SimAnswer { pred, stats })
+            let exec_us = picked.elapsed().as_micros() as u64;
+            Ok(SimAnswer { pred, stats, wait_us, exec_us })
         })();
         depth.fetch_sub(1, Ordering::Relaxed);
         let _ = job.resp.send(result);
@@ -832,6 +892,14 @@ mod tests {
     }
 
     #[test]
+    fn exec_mode_names_round_trip() {
+        for m in [ExecMode::Sim, ExecMode::Fast, ExecMode::Audited] {
+            assert_eq!(ExecMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(ExecMode::from_name("warp"), None);
+    }
+
+    #[test]
     fn resolve_shards_auto_positive() {
         assert!(resolve_shards(0) >= 1);
         assert_eq!(resolve_shards(3), 3);
@@ -911,6 +979,25 @@ mod tests {
         assert!(outs[0].is_ok());
         assert!(outs[1].is_err(), "only the invalid sample errors");
         assert!(outs[2].is_ok());
+    }
+
+    #[test]
+    fn outputs_carry_stage_timings() {
+        let farm = Farm::start(vec![tiny("a", false)], fast_opts()).unwrap();
+        let o = farm.predict("a", &[1, 2, 3]).unwrap();
+        assert_eq!(o.mode, ExecMode::Sim);
+        assert!(o.stages.get(Stage::ShardWait).is_some(), "sim jobs time the queue");
+        assert!(o.stages.get(Stage::Execute).is_some(), "sim jobs time the simulation");
+        assert!(o.stages.get(Stage::Audit).is_none());
+
+        let ff = Farm::start(vec![tiny("a", false)], fastpath_opts(2)).unwrap();
+        let o0 = ff.predict("a", &[1, 2, 3]).unwrap();
+        assert_eq!(o0.mode, ExecMode::Audited, "first request always audited");
+        assert!(o0.stages.get(Stage::Audit).is_some(), "the extra sim is the audit stage");
+        let o1 = ff.predict("a", &[1, 2, 3]).unwrap();
+        assert_eq!(o1.mode, ExecMode::Fast);
+        assert!(o1.stages.get(Stage::Execute).is_some());
+        assert!(o1.stages.get(Stage::ShardWait).is_none(), "no shard round trip on the fast path");
     }
 
     #[test]

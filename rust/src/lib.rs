@@ -12,6 +12,7 @@ pub mod engine;
 pub mod farm;
 pub mod isa;
 pub mod net;
+pub mod obs;
 pub mod power;
 pub mod program;
 pub mod report;

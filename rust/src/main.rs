@@ -431,14 +431,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // any engine whose answers carry sim costs (the farm, or remote
     // nodes running farms) gets the serving energy report
     let engine = client.engine_metrics()?;
-    if engine.farm.is_some() {
+    if engine.farm.is_some() || engine.fleet.is_some() {
+        let stages = client.obs().stage_snapshot();
         print!(
             "{}",
             report::serving::render(
                 &metrics,
                 r.wall,
                 engine.farm.as_ref(),
-                &flexsvm::power::FlexicModel::paper()
+                &flexsvm::power::FlexicModel::paper(),
+                Some(&stages),
+                engine.fleet.as_ref(),
             )
         );
     }
@@ -455,7 +458,9 @@ fn serve_listen(server: Server, listen: &str, keys: &[String]) -> Result<()> {
     let net = NetServer::bind(server, listen, NetOpts::default())?;
     println!("flexsvm net: listening on {}", net.addr());
     println!("  configs: {}", keys.join(", "));
-    println!("  endpoints: GET /healthz | GET /v1/metrics | POST /v1/infer");
+    println!(
+        "  endpoints: GET /healthz | GET /v1/metrics | GET /metrics | GET /v1/traces | POST /v1/infer"
+    );
     println!("  ctrl-c drains in-flight requests and stops");
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(150));

@@ -119,6 +119,17 @@ impl HttpClient {
         self.request("POST", path, Some(body.to_string()))
     }
 
+    /// [`post_json`](Self::post_json) with extra request headers (e.g.
+    /// `X-Trace-Id` for distributed trace propagation).
+    pub fn post_json_with(
+        &mut self,
+        path: &str,
+        body: &Json,
+        extra: &[(String, String)],
+    ) -> Result<HttpResponse, NetError> {
+        self.request_with("POST", path, Some(body.to_string()), extra)
+    }
+
     /// One request/response exchange.  A cached keep-alive connection
     /// that turns out dead is replaced once and the request retried.
     pub fn request(
@@ -127,8 +138,19 @@ impl HttpClient {
         path: &str,
         body: Option<String>,
     ) -> Result<HttpResponse, NetError> {
+        self.request_with(method, path, body, &[])
+    }
+
+    /// [`request`](Self::request) with extra request headers.
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<String>,
+        extra: &[(String, String)],
+    ) -> Result<HttpResponse, NetError> {
         let had_cached = self.conn.is_some();
-        match self.exchange(method, path, body.as_deref()) {
+        match self.exchange(method, path, body.as_deref(), extra) {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 self.conn = None;
@@ -136,7 +158,7 @@ impl HttpClient {
                 // keep-alive timeout) — retry once on a fresh one;
                 // fresh-connection failures are real errors
                 if had_cached && !matches!(e, NetError::Timeout(_)) {
-                    let retried = self.exchange(method, path, body.as_deref());
+                    let retried = self.exchange(method, path, body.as_deref(), extra);
                     if retried.is_err() {
                         self.conn = None;
                     }
@@ -153,6 +175,7 @@ impl HttpClient {
         method: &str,
         path: &str,
         body: Option<&str>,
+        extra: &[(String, String)],
     ) -> Result<HttpResponse, NetError> {
         let body_cap = self.opts.max_response_bytes;
         let host = self.addr.clone();
@@ -160,6 +183,9 @@ impl HttpClient {
         let mut headers: Vec<(&str, String)> = vec![("Host", host), ("Connection", "keep-alive".into())];
         if body.is_some() {
             headers.push(("Content-Type", "application/json".into()));
+        }
+        for (k, v) in extra {
+            headers.push((k.as_str(), v.clone()));
         }
         let payload = body.unwrap_or("").as_bytes();
         conn.write_message(&format!("{method} {path} HTTP/1.1"), &headers, payload)

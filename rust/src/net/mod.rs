@@ -14,8 +14,10 @@
 //! | route             | method | body / answer |
 //! |-------------------|--------|----------------|
 //! | `/healthz`        | GET    | `{"status":"ok","engine":..,"configs":[..]}` |
-//! | `/v1/infer`       | POST   | `{"config":k,"features":[..]}` → one answer; `{"config":k,"batch":[[..],..]}` → `{"results":[..]}` with per-sample isolation |
+//! | `/v1/infer`       | POST   | `{"config":k,"features":[..]}` → one answer; `{"config":k,"batch":[[..],..]}` → `{"results":[..]}` with per-sample isolation.  An explicit trace (`"trace"`/`"traces"` field or `X-Trace-Id` header) makes the answer carry its span tree |
 //! | `/v1/metrics`     | GET    | `ConfigMetrics` + `EngineMetrics` + net counters |
+//! | `/metrics`        | GET    | Prometheus text format (counters + latency/stage histograms) |
+//! | `/v1/traces`      | GET    | retained span trees; `?id=<hex>` looks one up, `?n=<count>` bounds the listing |
 //!
 //! Admission control: request bodies are parsed under
 //! [`crate::util::json::Limits`], and submission uses the coordinator's
@@ -53,10 +55,11 @@ pub mod wire {
 
     use anyhow::Result;
 
-    use crate::coordinator::metrics::ConfigMetrics;
+    use crate::coordinator::metrics::{ConfigMetrics, Histogram};
     use crate::coordinator::Response;
     use crate::engine::{EngineMetrics, Sample, ServeError, SimCost};
-    use crate::farm::{FarmMetrics, FastPathMetrics, ShardMetrics};
+    use crate::farm::{ExecMode, FarmMetrics, FastPathMetrics, ShardMetrics};
+    use crate::obs::{Span, TraceId};
     use crate::util::json::{obj, Json};
 
     pub fn features_json(x: &[i32]) -> Json {
@@ -77,6 +80,28 @@ pub mod wire {
         obj([("config", config.into()), ("batch", mat_json(xs))])
     }
 
+    /// `POST /v1/infer` body for one sample under an explicit trace id
+    /// (the wire twin of [`Client::submit_traced`]
+    /// (crate::coordinator::Client::submit_traced)).
+    pub fn infer_body_traced(config: &str, x: &[i32], trace: TraceId) -> Json {
+        obj([
+            ("config", config.into()),
+            ("features", features_json(x)),
+            ("trace", Json::Str(trace.to_hex())),
+        ])
+    }
+
+    /// `POST /v1/infer` body for a batch with per-sample trace ids
+    /// (`traces.len()` must equal `xs.len()`; the remote coordinator
+    /// answers each sample with its span under that id).
+    pub fn infer_batch_body_traced(config: &str, xs: &[Vec<i32>], traces: &[TraceId]) -> Json {
+        obj([
+            ("config", config.into()),
+            ("batch", mat_json(xs)),
+            ("traces", Json::Arr(traces.iter().map(|t| Json::Str(t.to_hex())).collect())),
+        ])
+    }
+
     pub fn sim_json(sim: Option<SimCost>) -> Json {
         match sim {
             None => Json::Null,
@@ -94,22 +119,39 @@ pub mod wire {
         }
     }
 
-    /// One successful coordinator answer.
+    /// One successful coordinator answer.  The trace id always
+    /// travels; the span tree travels only when the coordinator built
+    /// one (explicitly-traced requests).
     pub fn response_json(r: &Response) -> Json {
-        obj([
+        let mut o = obj([
             ("pred", r.pred.into()),
             ("batch_size", Json::Num(r.batch_size as f64)),
             ("latency_us", (r.latency.as_micros() as u64).into()),
             ("sim", sim_json(r.sim)),
-        ])
+            ("trace", Json::Str(r.trace.to_hex())),
+        ]);
+        if let Some(span) = &r.span {
+            let Json::Obj(map) = &mut o else { unreachable!() };
+            map.insert("span".to_string(), span.to_json());
+        }
+        o
     }
 
     /// Parse an answer object back into the engine-level [`Sample`].
+    /// A `"span"` object becomes the sample's child span (the remote
+    /// node's view of the request); its mode name is re-interned
+    /// through [`ExecMode`] so `Sample::mode` stays `&'static`.
     pub fn sample_from_json(v: &Json) -> Result<Sample> {
-        Ok(Sample {
-            pred: v.get("pred")?.as_i32()?,
-            sim: sim_from_json(v.opt("sim").unwrap_or(&Json::Null))?,
-        })
+        let mut s = Sample::new(
+            v.get("pred")?.as_i32()?,
+            sim_from_json(v.opt("sim").unwrap_or(&Json::Null))?,
+        );
+        if let Some(sj) = v.opt("span") {
+            let span = Span::from_json(sj)?;
+            s.mode = span.mode.as_deref().and_then(ExecMode::from_name).map(|m| m.name());
+            s.child = Some(Box::new(span));
+        }
+        Ok(s)
     }
 
     /// HTTP status a typed request-path error maps to.
@@ -238,15 +280,42 @@ pub mod wire {
         ])
     }
 
-    /// Per-config serving counters + latency summary (the histogram
-    /// itself stays server-side; quantiles travel).
+    /// Full latency histogram: per-bucket counts + sum + max, enough
+    /// to reconstruct true quantiles on the far side
+    /// ([`Histogram::from_parts`]).
+    pub fn histogram_json(h: &Histogram) -> Json {
+        obj([
+            ("counts", Json::Arr(h.counts().iter().map(|&c| c.into()).collect())),
+            ("sum_us", h.sum_us().into()),
+            ("max_us", h.max_us().into()),
+        ])
+    }
+
+    pub fn histogram_from_json(v: &Json) -> Result<Histogram> {
+        let counts = v
+            .get("counts")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_i64()?.max(0) as u64))
+            .collect::<Result<Vec<u64>>>()?;
+        Histogram::from_parts(
+            counts,
+            v.get("sum_us")?.as_i64()?.max(0) as u64,
+            v.get("max_us")?.as_i64()?.max(0) as u64,
+        )
+    }
+
+    /// Per-config serving counters + latency.  The summary quantiles
+    /// (`p50_us`/`p99_us`/..) stay for dashboards and old peers; the
+    /// full bucket counts ride alongside under `"latency"` so a
+    /// fan-out coordinator can merge true fleet-wide quantiles.
     pub fn config_metrics_json(m: &ConfigMetrics) -> Json {
         let (p50, p99, mean, max) = m
             .latency
             .as_ref()
             .map(|h| (h.quantile_us(0.50), h.quantile_us(0.99), h.mean_us(), h.max_us()))
             .unwrap_or((0, 0, 0.0, 0));
-        obj([
+        let mut o = obj([
             ("requests", m.requests.into()),
             ("batches", m.batches.into()),
             ("batched_samples", m.batched_samples.into()),
@@ -258,7 +327,32 @@ pub mod wire {
             ("p99_us", p99.into()),
             ("mean_us", mean.into()),
             ("max_us", max.into()),
-        ])
+        ]);
+        if let Some(h) = &m.latency {
+            let Json::Obj(map) = &mut o else { unreachable!() };
+            map.insert("latency".to_string(), histogram_json(h));
+        }
+        o
+    }
+
+    /// Tolerant decode of [`config_metrics_json`]: a peer that
+    /// predates the bucketed `"latency"` object (summary-only) still
+    /// parses — its histogram just stays `None`, and the merge falls
+    /// back to counters.
+    pub fn config_metrics_from_json(v: &Json) -> Result<ConfigMetrics> {
+        let mut m = ConfigMetrics::new();
+        m.requests = v.get("requests")?.as_i64()?.max(0) as u64;
+        m.batches = v.get("batches")?.as_i64()?.max(0) as u64;
+        m.batched_samples = v.get("batched_samples")?.as_i64()?.max(0) as u64;
+        m.sim_samples = v.get("sim_samples")?.as_i64()?.max(0) as u64;
+        m.sim_cycles = v.get("sim_cycles")?.as_i64()?.max(0) as u64;
+        m.energy_mj = v.get("energy_mj")?.as_f64()?;
+        m.baseline_cycles_per_inf = v.get("baseline_cycles_per_inf")?.as_f64()?;
+        m.latency = match v.opt("latency") {
+            Some(h) => Some(histogram_from_json(h)?),
+            None => None,
+        };
+        Ok(m)
     }
 
     /// The whole `/v1/metrics` document.
@@ -452,6 +546,51 @@ mod tests {
         let back = wire::farm_from_json(&v).unwrap();
         assert_eq!(back.fast, FastPathMetrics::default());
         assert_eq!(back.total_jobs(), 2);
+    }
+
+    #[test]
+    fn config_metrics_round_trip_full_histogram_buckets() {
+        use crate::coordinator::metrics::ConfigMetrics;
+        let mut m = ConfigMetrics::new();
+        m.requests = 7;
+        m.batches = 3;
+        m.batched_samples = 7;
+        m.sim_samples = 7;
+        m.sim_cycles = 420_000;
+        m.energy_mj = 9.38;
+        m.baseline_cycles_per_inf = 2_100_000.0;
+        let h = m.latency.as_mut().unwrap();
+        for us in [3u64, 42, 42, 180, 950, 12_000, 88_000] {
+            h.record_us(us);
+        }
+        let j = Json::parse(&wire::config_metrics_json(&m).to_string()).unwrap();
+        let back = wire::config_metrics_from_json(&j).unwrap();
+        assert_eq!(back.requests, 7);
+        assert_eq!(back.sim_cycles, 420_000);
+        let hb = back.latency.as_ref().expect("buckets ride the wire");
+        let ha = m.latency.as_ref().unwrap();
+        assert_eq!(hb.counts(), ha.counts(), "bucket-exact round trip");
+        assert_eq!(hb.sum_us(), ha.sum_us());
+        assert_eq!(hb.max_us(), ha.max_us());
+        assert_eq!(hb.quantile_us(0.99), ha.quantile_us(0.99));
+        // and the summary quantiles still ride alongside for old peers
+        assert!(j.get("p99_us").unwrap().as_i64().unwrap() > 0);
+    }
+
+    #[test]
+    fn config_metrics_tolerate_summary_only_peers() {
+        // a pre-bucketed peer sends summary quantiles but no "latency"
+        // object: the decode must still succeed, histogram-less
+        let v = Json::parse(
+            r#"{"requests":5,"batches":2,"batched_samples":5,"sim_samples":5,
+                "sim_cycles":100,"energy_mj":1.5,"baseline_cycles_per_inf":0,
+                "p50_us":10,"p99_us":20,"mean_us":12.0,"max_us":25}"#,
+        )
+        .unwrap();
+        let back = wire::config_metrics_from_json(&v).unwrap();
+        assert_eq!(back.requests, 5);
+        assert!((back.energy_mj - 1.5).abs() < 1e-12);
+        assert!(back.latency.is_none(), "summary-only peers decode without buckets");
     }
 
     #[test]

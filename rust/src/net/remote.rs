@@ -24,8 +24,10 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::engine::{batch_error, Engine, EngineMetrics, ModelSource, Sample, ServeError};
+use crate::coordinator::metrics::ConfigMetrics;
+use crate::engine::{batch_error, BatchCtx, Engine, EngineMetrics, ModelSource, Sample, ServeError};
 use crate::farm::FarmMetrics;
+use crate::obs::TraceId;
 use crate::util::json::Json;
 
 use super::client::{HttpClient, HttpClientOpts, NetError};
@@ -75,10 +77,28 @@ impl RemoteEngine {
         self.nodes.len()
     }
 
-    /// Execute one contiguous chunk on one node.
-    fn run_chunk(&self, node: usize, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
+    /// Execute one contiguous chunk on one node.  When trace ids ride
+    /// along (`traces.len() == xs.len()`), they travel in the wire
+    /// body plus an `X-Trace-Id` header, and each answered sample's
+    /// span comes back as a child span stamped with this node's
+    /// address.
+    fn run_chunk(
+        &self,
+        node: usize,
+        key: &str,
+        xs: &[Vec<i32>],
+        traces: &[TraceId],
+    ) -> Vec<Result<Sample, ServeError>> {
         let mut client = self.nodes[node].lock().unwrap();
-        let resp = match client.post_json("/v1/infer", &wire::infer_batch_body(key, xs)) {
+        let addr = client.addr().to_string();
+        let resp = if traces.len() == xs.len() && !traces.is_empty() {
+            let body = wire::infer_batch_body_traced(key, xs, traces);
+            let extra = [("X-Trace-Id".to_string(), traces[0].to_hex())];
+            client.post_json_with("/v1/infer", &body, &extra)
+        } else {
+            client.post_json("/v1/infer", &wire::infer_batch_body(key, xs))
+        };
+        let resp = match resp {
             Ok(r) => r,
             Err(e) => return batch_error(xs.len(), net_to_serve(e)),
         };
@@ -106,10 +126,68 @@ impl RemoteEngine {
                     Err(wire::error_from_json(item))
                 } else {
                     wire::sample_from_json(item)
+                        .map(|mut s| {
+                            if let Some(child) = s.child.as_mut() {
+                                if child.node.is_empty() {
+                                    child.node = addr.clone();
+                                }
+                            }
+                            s
+                        })
                         .map_err(|e| ServeError::Engine(format!("bad sample: {e:#}")))
                 }
             })
             .collect()
+    }
+
+    /// Split the batch into contiguous per-node chunks and post them
+    /// concurrently (shared by the traced and untraced entry points).
+    fn fan_out(
+        &self,
+        key: &str,
+        xs: &[Vec<i32>],
+        traces: &[TraceId],
+    ) -> Vec<Result<Sample, ServeError>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let n_nodes = self.nodes.len();
+        // rotate the start node per batch: small batches (down to the
+        // single-sample flushes of a lightly-loaded front) spread over
+        // the fleet instead of pinning node 0
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n_nodes;
+        if n_nodes == 1 || xs.len() == 1 {
+            return self.run_chunk(start, key, xs, traces);
+        }
+        // contiguous chunks, one per node, posted concurrently
+        let chunk = xs.len().div_ceil(n_nodes);
+        let chunks: Vec<&[Vec<i32>]> = xs.chunks(chunk).collect();
+        let tchunks: Vec<&[TraceId]> = if traces.len() == xs.len() {
+            traces.chunks(chunk).collect()
+        } else {
+            vec![&[]; chunks.len()]
+        };
+        let mut out = Vec::with_capacity(xs.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .zip(&tchunks)
+                .enumerate()
+                .map(|(i, (c, t))| {
+                    scope.spawn(move || self.run_chunk((start + i) % n_nodes, key, c, t))
+                })
+                .collect();
+            for (h, c) in handles.into_iter().zip(&chunks) {
+                match h.join() {
+                    Ok(answers) => out.extend(answers),
+                    Err(_) => out.extend(batch_error(
+                        c.len(),
+                        ServeError::Engine("remote chunk worker panicked".into()),
+                    )),
+                }
+            }
+        });
+        out
     }
 }
 
@@ -187,38 +265,19 @@ impl Engine for RemoteEngine {
     }
 
     fn run_batch(&self, key: &str, xs: &[Vec<i32>]) -> Vec<Result<Sample, ServeError>> {
-        if xs.is_empty() {
-            return Vec::new();
-        }
-        let n_nodes = self.nodes.len();
-        // rotate the start node per batch: small batches (down to the
-        // single-sample flushes of a lightly-loaded front) spread over
-        // the fleet instead of pinning node 0
-        let start = self.next.fetch_add(1, Ordering::Relaxed) % n_nodes;
-        if n_nodes == 1 || xs.len() == 1 {
-            return self.run_chunk(start, key, xs);
-        }
-        // contiguous chunks, one per node, posted concurrently
-        let chunk = xs.len().div_ceil(n_nodes);
-        let chunks: Vec<&[Vec<i32>]> = xs.chunks(chunk).collect();
-        let mut out = Vec::with_capacity(xs.len());
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = chunks
-                .iter()
-                .enumerate()
-                .map(|(i, c)| scope.spawn(move || self.run_chunk((start + i) % n_nodes, key, c)))
-                .collect();
-            for (h, c) in handles.into_iter().zip(&chunks) {
-                match h.join() {
-                    Ok(answers) => out.extend(answers),
-                    Err(_) => out.extend(batch_error(
-                        c.len(),
-                        ServeError::Engine("remote chunk worker panicked".into()),
-                    )),
-                }
-            }
-        });
-        out
+        self.fan_out(key, xs, &[])
+    }
+
+    /// Traced fan-out: every sample's trace id crosses the wire, so
+    /// the remote nodes answer with child spans and the coordinator's
+    /// span trees show the per-node breakdown.
+    fn run_batch_ctx(
+        &self,
+        key: &str,
+        xs: &[Vec<i32>],
+        ctx: &BatchCtx<'_>,
+    ) -> Vec<Result<Sample, ServeError>> {
+        self.fan_out(key, xs, ctx.traces)
     }
 
     fn baseline_cycles(&self, key: &str) -> Option<f64> {
@@ -226,45 +285,73 @@ impl Engine for RemoteEngine {
     }
 
     /// Merge the nodes' farm shards into one view (jobs/cycles per
-    /// remote shard, spills summed) so `report::serving` can show the
-    /// whole fleet.  Nodes are probed concurrently: this runs on the
-    /// coordinator's dispatcher thread, so a dead node must cost one
-    /// bounded reconnect, not one per node in series.
+    /// remote shard, spills summed) and fold every node's per-config
+    /// serving metrics — full latency bucket counts included — into
+    /// the fleet map, so `report::serving` shows true fleet-wide
+    /// quantiles rather than a max over per-node summaries.  Nodes are
+    /// probed concurrently: this runs on the coordinator's dispatcher
+    /// thread, so a dead node must cost one bounded reconnect, not one
+    /// per node in series.
     fn snapshot(&self) -> EngineMetrics {
-        let farms: Vec<Option<FarmMetrics>> = std::thread::scope(|scope| {
+        type NodeView = (Option<FarmMetrics>, HashMap<String, ConfigMetrics>);
+        let views: Vec<Option<NodeView>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .nodes
                 .iter()
                 .map(|node| {
-                    scope.spawn(move || {
+                    scope.spawn(move || -> Option<NodeView> {
                         let mut client = node.lock().unwrap();
                         let resp = client.get("/v1/metrics").ok()?;
                         if resp.status != 200 {
                             return None;
                         }
                         let doc = resp.json().ok()?;
-                        let farm_json = doc.opt("engine").and_then(|e| e.opt("farm"))?;
-                        if matches!(farm_json, Json::Null) {
-                            return None;
+                        let farm = doc
+                            .opt("engine")
+                            .and_then(|e| e.opt("farm"))
+                            .filter(|f| !matches!(f, Json::Null))
+                            .and_then(|f| wire::farm_from_json(f).ok());
+                        let mut configs = HashMap::new();
+                        if let Some(Json::Obj(cfgs)) = doc.opt("configs") {
+                            for (key, m) in cfgs {
+                                if let Ok(cm) = wire::config_metrics_from_json(m) {
+                                    configs.insert(key.clone(), cm);
+                                }
+                            }
                         }
-                        wire::farm_from_json(farm_json).ok()
+                        Some((farm, configs))
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
         });
         let mut merged: Option<FarmMetrics> = None;
-        for f in farms.into_iter().flatten() {
-            match merged.as_mut() {
-                None => merged = Some(f),
-                Some(m) => {
-                    m.spills += f.spills;
-                    m.fast.merge(&f.fast);
-                    m.shards.extend(f.shards);
+        let mut fleet: HashMap<String, ConfigMetrics> = HashMap::new();
+        for (farm, configs) in views.into_iter().flatten() {
+            if let Some(f) = farm {
+                match merged.as_mut() {
+                    None => merged = Some(f),
+                    Some(m) => {
+                        m.spills += f.spills;
+                        m.fast.merge(&f.fast);
+                        m.shards.extend(f.shards);
+                    }
+                }
+            }
+            for (key, cm) in configs {
+                match fleet.get_mut(&key) {
+                    Some(existing) => existing.merge(&cm),
+                    None => {
+                        fleet.insert(key, cm);
+                    }
                 }
             }
         }
-        EngineMetrics { engine: self.name.clone(), farm: merged }
+        EngineMetrics {
+            engine: self.name.clone(),
+            farm: merged,
+            fleet: (!fleet.is_empty()).then_some(fleet),
+        }
     }
 }
 

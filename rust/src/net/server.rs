@@ -22,12 +22,13 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
 use crate::coordinator::{Client, Server};
 use crate::engine::ServeError;
+use crate::obs::{Span, Stage, TraceId};
 use crate::util::json::{obj, Json, Limits};
 
 use super::http::{Conn, HttpError, Message};
@@ -296,7 +297,18 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
                     .unwrap_or(false);
                 let answer = route(ctx, &msg);
                 let keep = !close_requested && !ctx.stop.load(Ordering::SeqCst);
+                let t_enc = Instant::now();
                 let write_ok = write_answer(&mut conn, &answer, keep, &ctx.opts).is_ok();
+                if let Some(cfg) = &answer.encode_cfg {
+                    // the encode stage (serialization + socket write)
+                    // happens after the span is sealed, so it reports
+                    // into the stage histograms directly
+                    ctx.client.obs().record_stage(
+                        cfg,
+                        Stage::Encode,
+                        t_enc.elapsed().as_micros() as u64,
+                    );
+                }
                 ctx.counters.bytes_in.fetch_add(conn.bytes_in() - folded_in, Ordering::Relaxed);
                 ctx.counters.bytes_out.fetch_add(conn.bytes_out() - folded_out, Ordering::Relaxed);
                 folded_in = conn.bytes_in();
@@ -326,17 +338,47 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
     ctx.counters.active.fetch_sub(1, Ordering::SeqCst);
 }
 
+/// Answer payload: JSON for the API routes, preformatted text for the
+/// Prometheus scrape endpoint.
+enum Body {
+    Json(Json),
+    Text(String),
+}
+
 /// One routed answer, ready to serialize.
 struct Answer {
     status: u16,
     reason: &'static str,
-    body: Json,
+    body: Body,
     retry_after: bool,
+    /// Echoed back as `X-Trace-Id` (explicitly-traced requests).
+    trace: Option<TraceId>,
+    /// Config whose `encode` stage should be credited with this
+    /// answer's serialization + socket-write time.
+    encode_cfg: Option<String>,
 }
 
 impl Answer {
     fn ok(body: Json) -> Answer {
-        Answer { status: 200, reason: "OK", body, retry_after: false }
+        Answer {
+            status: 200,
+            reason: "OK",
+            body: Body::Json(body),
+            retry_after: false,
+            trace: None,
+            encode_cfg: None,
+        }
+    }
+
+    fn text(text: String) -> Answer {
+        Answer {
+            status: 200,
+            reason: "OK",
+            body: Body::Text(text),
+            retry_after: false,
+            trace: None,
+            encode_cfg: None,
+        }
     }
 
     fn plain(status: u16, reason: &'static str, message: &str) -> Answer {
@@ -344,7 +386,14 @@ impl Answer {
             "error",
             obj([("kind", reason_kind(status).into()), ("message", message.into())]),
         )]);
-        Answer { status, reason, body, retry_after: false }
+        Answer {
+            status,
+            reason,
+            body: Body::Json(body),
+            retry_after: false,
+            trace: None,
+            encode_cfg: None,
+        }
     }
 
     fn from_serve_error(e: ServeError) -> Answer {
@@ -353,7 +402,9 @@ impl Answer {
             status,
             reason: reason_phrase(status),
             retry_after: matches!(e, ServeError::Overloaded),
-            body: wire::error_body(&e),
+            body: Body::Json(wire::error_body(&e)),
+            trace: None,
+            encode_cfg: None,
         }
     }
 }
@@ -382,15 +433,21 @@ fn reason_kind(status: u16) -> &'static str {
 
 fn route(ctx: &Ctx, msg: &Message) -> Answer {
     let mut parts = msg.start_line.split_whitespace();
-    let (method, path) = match (parts.next(), parts.next()) {
+    let (method, target) = match (parts.next(), parts.next()) {
         (Some(m), Some(p)) => (m, p),
         _ => return Answer::plain(400, "Bad Request", "bad request line"),
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
     };
     match (method, path) {
         ("GET", "/healthz") => healthz(ctx),
         ("GET", "/v1/metrics") => metrics(ctx),
-        ("POST", "/v1/infer") => infer(ctx, &msg.body),
-        (_, "/healthz" | "/v1/metrics" | "/v1/infer") => {
+        ("GET", "/metrics") => prom(ctx),
+        ("GET", "/v1/traces") => traces(ctx, query),
+        ("POST", "/v1/infer") => infer(ctx, msg),
+        (_, "/healthz" | "/v1/metrics" | "/metrics" | "/v1/traces" | "/v1/infer") => {
             Answer::plain(405, "Method Not Allowed", &format!("{method} not allowed here"))
         }
         _ => Answer::plain(404, "Not Found", &format!("no route {path:?}")),
@@ -431,8 +488,87 @@ fn metrics(ctx: &Ctx) -> Answer {
     Answer::ok(wire::metrics_body(&configs, &engine, &ctx.counters.snapshot()))
 }
 
-fn infer(ctx: &Ctx, body: &[u8]) -> Answer {
-    let text = match std::str::from_utf8(body) {
+/// `GET /metrics`: the Prometheus text-format twin of `/v1/metrics` —
+/// per-config counters + latency histograms, per-stage histograms,
+/// net-layer and trace-retention counters.
+fn prom(ctx: &Ctx) -> Answer {
+    let configs = match ctx.client.try_metrics() {
+        Ok(c) => c,
+        Err(e) => return shed_aware_error(ctx, e),
+    };
+    let obs = ctx.client.obs();
+    let net = ctx.counters.snapshot();
+    Answer::text(crate::obs::prom_render(
+        &configs,
+        &obs.stage_snapshot(),
+        &[
+            ("net_connections_accepted_total", net.accepted),
+            ("net_connections_active", net.active),
+            ("net_requests_shed_total", net.shed),
+            ("net_requests_total", net.requests),
+            ("net_bytes_in_total", net.bytes_in),
+            ("net_bytes_out_total", net.bytes_out),
+            ("traces_retained", obs.retained() as u64),
+            ("traces_observed_total", obs.observed()),
+        ],
+    ))
+}
+
+/// `GET /v1/traces[?id=<hex>|n=<count>]`: retained span trees from the
+/// ring — by trace id (404 when not retained), or the newest `n`.
+fn traces(ctx: &Ctx, query: &str) -> Answer {
+    let obs = ctx.client.obs();
+    let mut id = None;
+    let mut n = 32usize;
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match k {
+            "id" => match TraceId::parse(v) {
+                Some(t) => id = Some(t),
+                None => return Answer::plain(400, "Bad Request", &format!("bad trace id {v:?}")),
+            },
+            "n" => match v.parse::<usize>() {
+                Ok(v) if v >= 1 => n = v.min(1024),
+                _ => return Answer::plain(400, "Bad Request", &format!("bad count {v:?}")),
+            },
+            _ => {} // tolerate unknown query params
+        }
+    }
+    match id {
+        Some(t) => match obs.get(t) {
+            Some(span) => {
+                let mut a = Answer::ok(span.to_json());
+                a.trace = Some(t);
+                a
+            }
+            None => {
+                Answer::plain(404, "Not Found", &format!("no retained trace {}", t.to_hex()))
+            }
+        },
+        None => Answer::ok(obj([
+            ("observed", obs.observed().into()),
+            ("retained", (obs.retained() as u64).into()),
+            ("traces", Json::Arr(obs.recent(n).iter().map(Span::to_json).collect())),
+        ])),
+    }
+}
+
+/// The request's explicit trace id, if any: the JSON `"trace"` field
+/// wins over the `X-Trace-Id` header.
+fn explicit_trace(doc: &Json, msg: &Message) -> Result<Option<TraceId>, String> {
+    let from = |s: &str| TraceId::parse(s).ok_or_else(|| format!("bad trace id {s:?}"));
+    if let Some(t) = doc.opt("trace") {
+        let s = t.as_str().map_err(|e| format!("bad trace: {e:#}"))?;
+        return from(s).map(Some);
+    }
+    match msg.header("X-Trace-Id") {
+        Some(s) => from(s).map(Some),
+        None => Ok(None),
+    }
+}
+
+fn infer(ctx: &Ctx, msg: &Message) -> Answer {
+    let text = match std::str::from_utf8(&msg.body) {
         Ok(t) => t,
         Err(_) => return Answer::plain(400, "Bad Request", "body is not UTF-8"),
     };
@@ -445,19 +581,58 @@ fn infer(ctx: &Ctx, body: &[u8]) -> Answer {
         Ok(k) => k.to_string(),
         Err(e) => return Answer::plain(400, "Bad Request", &format!("{e:#}")),
     };
+    let trace = match explicit_trace(&doc, msg) {
+        Ok(t) => t,
+        Err(e) => return Answer::plain(400, "Bad Request", &e),
+    };
     if let Some(batch) = doc.opt("batch") {
         let xs = match batch.as_mat_i32() {
             Ok(xs) => xs,
             Err(e) => return Answer::plain(400, "Bad Request", &format!("bad batch: {e:#}")),
         };
+        // per-sample trace ids (`"traces"`, a RemoteEngine fan-out
+        // chunk) win over one batch-wide id (`"trace"` / header)
+        let traces: Option<Vec<TraceId>> = match doc.opt("traces") {
+            Some(tj) => {
+                let parsed: Option<Vec<TraceId>> = tj
+                    .as_arr()
+                    .ok()
+                    .map(|a| a.iter().filter_map(|t| TraceId::parse(t.as_str().ok()?)).collect());
+                match parsed {
+                    Some(ts) if ts.len() == xs.len() => Some(ts),
+                    _ => {
+                        return Answer::plain(
+                            400,
+                            "Bad Request",
+                            "\"traces\" must be hex ids, one per batch sample",
+                        )
+                    }
+                }
+            }
+            None => trace.map(|t| vec![t; xs.len()]),
+        };
+        let t0 = Instant::now();
         // admission is per sample: shed samples answer `overloaded` in
         // their slot while accepted batchmates still complete
-        let handles: Vec<_> = xs.iter().map(|x| ctx.client.try_submit(&key, x)).collect();
+        let handles: Vec<_> = match &traces {
+            Some(ts) => xs
+                .iter()
+                .zip(ts)
+                .map(|(x, &t)| ctx.client.try_submit_traced(&key, x, t))
+                .collect(),
+            None => xs.iter().map(|x| ctx.client.try_submit(&key, x)).collect(),
+        };
         let mut any_shed = false;
+        let mut spans: Vec<Span> = Vec::new();
         let results: Vec<Json> = handles
             .into_iter()
             .map(|h| match h.and_then(|p| p.wait()) {
-                Ok(resp) => wire::response_json(&resp),
+                Ok(resp) => {
+                    if let Some(s) = &resp.span {
+                        spans.push((**s).clone());
+                    }
+                    wire::response_json(&resp)
+                }
                 Err(e) => {
                     if matches!(e, ServeError::Overloaded) {
                         any_shed = true;
@@ -467,16 +642,47 @@ fn infer(ctx: &Ctx, body: &[u8]) -> Answer {
                 }
             })
             .collect();
+        // retain explicit spans so `/v1/traces?id=` can answer: one
+        // batch-wide trace becomes one tree (per-sample children),
+        // per-sample ids are retained individually
+        match (trace, &traces) {
+            (Some(t), _) if spans.len() > 1 => {
+                let mut root = Span::new(t, &key);
+                root.total_us = t0.elapsed().as_micros() as u64;
+                root.children = spans;
+                ctx.client.obs().keep(root);
+            }
+            (_, Some(_)) => {
+                for s in spans {
+                    ctx.client.obs().keep(s);
+                }
+            }
+            _ => {}
+        }
         let mut a = Answer::ok(obj([("results", Json::Arr(results))]));
         a.retry_after = any_shed;
+        a.trace = trace;
+        a.encode_cfg = Some(key);
         a
     } else if let Some(features) = doc.opt("features") {
         let x = match features.as_vec_i32() {
             Ok(x) => x,
             Err(e) => return Answer::plain(400, "Bad Request", &format!("bad features: {e:#}")),
         };
-        match ctx.client.try_submit(&key, &x).and_then(|p| p.wait()) {
-            Ok(resp) => Answer::ok(wire::response_json(&resp)),
+        let submitted = match trace {
+            Some(t) => ctx.client.try_submit_traced(&key, &x, t),
+            None => ctx.client.try_submit(&key, &x),
+        };
+        match submitted.and_then(|p| p.wait()) {
+            Ok(resp) => {
+                if let Some(s) = &resp.span {
+                    ctx.client.obs().keep((**s).clone());
+                }
+                let mut a = Answer::ok(wire::response_json(&resp));
+                a.trace = trace;
+                a.encode_cfg = Some(key);
+                a
+            }
             Err(e) => shed_aware_error(ctx, e),
         }
     } else {
@@ -490,16 +696,27 @@ fn write_answer(
     keep: bool,
     opts: &NetOpts,
 ) -> Result<(), HttpError> {
+    let content_type = match &a.body {
+        Body::Json(_) => "application/json",
+        Body::Text(_) => "text/plain; version=0.0.4; charset=utf-8",
+    };
     let mut headers: Vec<(&str, String)> = vec![
-        ("Content-Type", "application/json".to_string()),
+        ("Content-Type", content_type.to_string()),
         ("Connection", if keep { "keep-alive" } else { "close" }.to_string()),
     ];
     if a.retry_after {
         headers.push(("Retry-After", opts.retry_after.as_secs().max(1).to_string()));
     }
+    if let Some(t) = a.trace {
+        headers.push(("X-Trace-Id", t.to_hex()));
+    }
+    let payload = match &a.body {
+        Body::Json(j) => j.to_string(),
+        Body::Text(t) => t.clone(),
+    };
     conn.write_message(
         &format!("HTTP/1.1 {} {}", a.status, a.reason),
         &headers,
-        a.body.to_string().as_bytes(),
+        payload.as_bytes(),
     )
 }

@@ -1,0 +1,26 @@
+//! Cross-layer observability: request spans, stage-level telemetry,
+//! and Prometheus exposition.
+//!
+//! A request is traced from ingress (coordinator `submit` or
+//! `POST /v1/infer`) to the answer: every layer records named stage
+//! timings (`queue_wait`, `batch_linger`, `dispatch`, `shard_wait`,
+//! `execute`, `audit`, `encode`) into the request's own [`StageSet`]
+//! — a fixed-size value type, no locking on the hot path — and the
+//! completed span is folded into the process-wide [`Obs`] hub exactly
+//! once.  The trace id travels the wire (`"trace"` in the JSON body,
+//! `X-Trace-Id` header), so a fan-out through
+//! [`crate::net::RemoteEngine`] yields one span tree with a child
+//! span per node.
+//!
+//! Retention is 1-in-N sampling plus tail capture (anything slower
+//! than the rolling p99 keeps its full span tree) into a bounded ring
+//! served at `GET /v1/traces`; stage histograms and the serving
+//! counters are also rendered as Prometheus text at `GET /metrics`.
+
+mod prom;
+mod span;
+mod store;
+
+pub use prom::render as prom_render;
+pub use span::{Span, Stage, StageSet, TraceId};
+pub use store::{merge_stage_maps, Obs, ObsOpts, StageMetrics};

@@ -1,0 +1,150 @@
+//! Prometheus text-format exposition (`GET /metrics`), hand-rolled:
+//! the text format is a line protocol, so no client library is
+//! needed.  Served alongside the existing JSON `/v1/metrics` — same
+//! numbers, scrape-friendly shape.
+//!
+//! Histograms follow the Prometheus convention: cumulative `_bucket`
+//! lines with `le` upper bounds (from the fleet-shared
+//! [`Histogram::bucket_bounds`] table, in **microseconds**), then
+//! `_sum` and `_count`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::{ConfigMetrics, Histogram};
+
+use super::store::StageMetrics;
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Append one histogram as cumulative `le` buckets + `_sum`/`_count`.
+/// `labels` is the pre-rendered label list without braces (may be "").
+fn write_hist(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, bound) in Histogram::bucket_bounds().iter().enumerate() {
+        cum += h.counts()[i];
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{bound}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum_us());
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+}
+
+/// Render the scrape document: per-config serving counters + latency
+/// histograms, per-stage histograms, and process-level counters
+/// passed in by the caller (net front, trace retention, farm).
+pub fn render(
+    configs: &HashMap<String, ConfigMetrics>,
+    stages: &BTreeMap<String, StageMetrics>,
+    counters: &[(&str, u64)],
+) -> String {
+    let mut out = String::new();
+    // stable output order for tests and scrape diffing
+    let ordered: BTreeMap<&str, &ConfigMetrics> =
+        configs.iter().map(|(k, v)| (k.as_str(), v)).collect();
+
+    out.push_str("# TYPE flexsvm_requests_total counter\n");
+    for (cfg, m) in &ordered {
+        let _ = writeln!(
+            out,
+            "flexsvm_requests_total{{config=\"{}\"}} {}",
+            escape_label(cfg),
+            m.requests
+        );
+    }
+    out.push_str("# TYPE flexsvm_batches_total counter\n");
+    for (cfg, m) in &ordered {
+        let _ = writeln!(
+            out,
+            "flexsvm_batches_total{{config=\"{}\"}} {}",
+            escape_label(cfg),
+            m.batches
+        );
+    }
+    out.push_str("# TYPE flexsvm_sim_cycles_total counter\n");
+    for (cfg, m) in &ordered {
+        let _ = writeln!(
+            out,
+            "flexsvm_sim_cycles_total{{config=\"{}\"}} {}",
+            escape_label(cfg),
+            m.sim_cycles
+        );
+    }
+    out.push_str("# TYPE flexsvm_energy_mj_total counter\n");
+    for (cfg, m) in &ordered {
+        let _ = writeln!(
+            out,
+            "flexsvm_energy_mj_total{{config=\"{}\"}} {}",
+            escape_label(cfg),
+            m.energy_mj
+        );
+    }
+
+    out.push_str("# TYPE flexsvm_latency_us histogram\n");
+    for (cfg, m) in &ordered {
+        if let Some(h) = &m.latency {
+            let labels = format!("config=\"{}\"", escape_label(cfg));
+            write_hist(&mut out, "flexsvm_latency_us", &labels, h);
+        }
+    }
+
+    out.push_str("# TYPE flexsvm_stage_us histogram\n");
+    for (cfg, sm) in stages {
+        for (stage, h) in sm.iter() {
+            let labels = format!("config=\"{}\",stage=\"{}\"", escape_label(cfg), stage.name());
+            write_hist(&mut out, "flexsvm_stage_us", &labels, h);
+        }
+    }
+
+    for (name, val) in counters {
+        let _ = writeln!(out, "# TYPE flexsvm_{name} counter");
+        let _ = writeln!(out, "flexsvm_{name} {val}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Obs, ObsOpts, Stage, StageSet};
+    use std::time::Duration;
+
+    #[test]
+    fn scrape_document_shape() {
+        let mut configs = HashMap::new();
+        let mut m = ConfigMetrics::new();
+        m.requests = 3;
+        m.batches = 2;
+        m.sim_cycles = 1000;
+        m.latency.as_mut().unwrap().record_us(150);
+        configs.insert("cfg_a".to_string(), m);
+
+        let obs = Obs::new(ObsOpts::default());
+        let mut s = StageSet::new();
+        s.set(Stage::QueueWait, 10);
+        s.set(Stage::Execute, 120);
+        obs.observe("cfg_a", &s, Duration::from_micros(150));
+
+        let text = render(&configs, &obs.stage_snapshot(), &[("net_requests_total", 9)]);
+        assert!(text.contains("# TYPE flexsvm_requests_total counter"), "{text}");
+        assert!(text.contains("flexsvm_requests_total{config=\"cfg_a\"} 3"), "{text}");
+        assert!(text.contains("# TYPE flexsvm_latency_us histogram"), "{text}");
+        assert!(text.contains("flexsvm_latency_us_bucket{config=\"cfg_a\",le=\"+Inf\"} 1"));
+        assert!(text.contains("flexsvm_latency_us_sum{config=\"cfg_a\"} 150"), "{text}");
+        let stage_inf = "flexsvm_stage_us_bucket{config=\"cfg_a\",stage=\"execute\",le=\"+Inf\"} 1";
+        assert!(text.contains(stage_inf), "{text}");
+        assert!(text.contains("flexsvm_net_requests_total 9"), "{text}");
+        // cumulative buckets: the le=200 bucket already includes the
+        // 150us sample, and every later bound repeats it
+        assert!(text.contains("flexsvm_latency_us_bucket{config=\"cfg_a\",le=\"200\"} 1"));
+        assert!(text.contains("flexsvm_latency_us_bucket{config=\"cfg_a\",le=\"100\"} 0"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

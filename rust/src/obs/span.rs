@@ -1,0 +1,318 @@
+//! Request spans: a trace id minted at ingress plus named per-stage
+//! timings collected as the request crosses the layers.  A `Span` is
+//! plain data — building one costs a handful of integer stores; all
+//! locking lives in [`crate::obs::Obs`] and is paid only once per
+//! request, at completion.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::util::json::{obj, Json};
+
+/// A 64-bit trace id, rendered as 16 lowercase hex digits on the wire
+/// (`"trace"` field + `X-Trace-Id` header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Mint an id from a seed + sequence pair (splitmix64 finalizer:
+    /// distinct inputs give distinct ids, and ids from two nodes
+    /// seeded differently do not collide in practice).
+    pub fn mint(seed: u64, seq: u64) -> TraceId {
+        let mut z = seed ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        TraceId(z ^ (z >> 31))
+    }
+
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the 16-hex-digit wire form (also accepts shorter hex).
+    pub fn parse(s: &str) -> Option<TraceId> {
+        if s.is_empty() || s.len() > 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(TraceId)
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// The named stages a request can cross, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// enqueue → picked into a batch by the dispatcher
+    QueueWait,
+    /// picked up → batch flushed (waiting for batchmates / linger)
+    BatchLinger,
+    /// coordinator-side overhead around the engine call
+    Dispatch,
+    /// farm: job submitted → shard thread picks it up
+    ShardWait,
+    /// engine/shard execution proper (sim, fast path, or remote hop)
+    Execute,
+    /// farm: differential audit simulation on the fast path
+    Audit,
+    /// net: response JSON serialization + socket write
+    Encode,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::QueueWait,
+        Stage::BatchLinger,
+        Stage::Dispatch,
+        Stage::ShardWait,
+        Stage::Execute,
+        Stage::Audit,
+        Stage::Encode,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchLinger => "batch_linger",
+            Stage::Dispatch => "dispatch",
+            Stage::ShardWait => "shard_wait",
+            Stage::Execute => "execute",
+            Stage::Audit => "audit",
+            Stage::Encode => "encode",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|st| st.name() == s)
+    }
+
+    fn index(self) -> usize {
+        Stage::ALL.iter().position(|&s| s == self).unwrap()
+    }
+}
+
+/// Per-stage µs timings for one request — a fixed-size value type, so
+/// recording a stage is one store with no allocation or locking.
+/// Unset stages stay `None` and are omitted from the wire form.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageSet([Option<u64>; 7]);
+
+impl StageSet {
+    pub fn new() -> StageSet {
+        StageSet::default()
+    }
+
+    pub fn set(&mut self, stage: Stage, us: u64) {
+        self.0[stage.index()] = Some(us);
+    }
+
+    /// Accumulate into a stage (used when one request crosses the same
+    /// stage twice, e.g. an audited fast-path answer).
+    pub fn add(&mut self, stage: Stage, us: u64) {
+        let slot = &mut self.0[stage.index()];
+        *slot = Some(slot.unwrap_or(0) + us);
+    }
+
+    pub fn get(&self, stage: Stage) -> Option<u64> {
+        self.0[stage.index()]
+    }
+
+    /// Recorded stages in pipeline order.
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, u64)> + '_ {
+        Stage::ALL.into_iter().filter_map(|s| self.get(s).map(|us| (s, us)))
+    }
+
+    /// Sum of all recorded stage times.
+    pub fn sum_us(&self) -> u64 {
+        self.0.iter().flatten().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.iter().all(|s| s.is_none())
+    }
+}
+
+/// One request's trace: end-to-end timing, per-stage breakdown,
+/// execution attribution, and (for fan-out requests) child spans from
+/// the remote nodes that executed chunks of the batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub trace: TraceId,
+    pub config: String,
+    /// Which node produced this span ("" = the local node; the
+    /// coordinator that fans out stamps each child with the node addr).
+    pub node: String,
+    pub total_us: u64,
+    pub stages: StageSet,
+    /// `ExecMode` name (`sim` / `fast` / `audited`) when the farm
+    /// answered; `None` for engines without an execution mode.
+    pub mode: Option<String>,
+    pub cycles: Option<u64>,
+    pub energy_mj: Option<f64>,
+    pub err: Option<String>,
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    pub fn new(trace: TraceId, config: impl Into<String>) -> Span {
+        Span {
+            trace,
+            config: config.into(),
+            node: String::new(),
+            total_us: 0,
+            stages: StageSet::new(),
+            mode: None,
+            cycles: None,
+            energy_mj: None,
+            err: None,
+            children: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stages = Json::Obj(
+            self.stages
+                .iter()
+                .map(|(s, us)| (s.name().to_string(), Json::Num(us as f64)))
+                .collect(),
+        );
+        let mut o = obj([
+            ("trace", Json::Str(self.trace.to_hex())),
+            ("config", Json::Str(self.config.clone())),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("stages", stages),
+        ]);
+        let Json::Obj(map) = &mut o else { unreachable!() };
+        if !self.node.is_empty() {
+            map.insert("node".to_string(), Json::Str(self.node.clone()));
+        }
+        if let Some(m) = &self.mode {
+            map.insert("mode".to_string(), Json::Str(m.clone()));
+        }
+        if let Some(c) = self.cycles {
+            map.insert("cycles".to_string(), Json::Num(c as f64));
+        }
+        if let Some(e) = self.energy_mj {
+            map.insert("energy_mj".to_string(), Json::Num(e));
+        }
+        if let Some(e) = &self.err {
+            map.insert("err".to_string(), Json::Str(e.clone()));
+        }
+        if !self.children.is_empty() {
+            map.insert(
+                "children".to_string(),
+                Json::Arr(self.children.iter().map(|c| c.to_json()).collect()),
+            );
+        }
+        o
+    }
+
+    /// Tolerant decode: unknown stage names and missing optional
+    /// fields are skipped, so peers can grow the schema.
+    pub fn from_json(v: &Json) -> Result<Span> {
+        let trace = TraceId::parse(v.get("trace")?.as_str()?)
+            .ok_or_else(|| anyhow::anyhow!("bad trace id in span"))?;
+        let mut span = Span::new(trace, v.get("config")?.as_str()?);
+        span.total_us = v.get("total_us")?.as_i64()?.max(0) as u64;
+        if let Some(Json::Obj(stages)) = v.opt("stages") {
+            for (name, val) in stages {
+                if let (Some(stage), Ok(us)) = (Stage::parse(name), val.as_i64()) {
+                    span.stages.set(stage, us.max(0) as u64);
+                }
+            }
+        }
+        if let Some(n) = v.opt("node") {
+            span.node = n.as_str()?.to_string();
+        }
+        if let Some(m) = v.opt("mode") {
+            span.mode = Some(m.as_str()?.to_string());
+        }
+        if let Some(c) = v.opt("cycles") {
+            span.cycles = Some(c.as_i64()?.max(0) as u64);
+        }
+        if let Some(e) = v.opt("energy_mj") {
+            span.energy_mj = Some(e.as_f64()?);
+        }
+        if let Some(e) = v.opt("err") {
+            span.err = Some(e.as_str()?.to_string());
+        }
+        if let Some(kids) = v.opt("children") {
+            for kid in kids.as_arr()? {
+                span.children.push(Span::from_json(kid)?);
+            }
+        }
+        Ok(span)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_distinct_and_round_trip_hex() {
+        let a = TraceId::mint(0xabc, 1);
+        let b = TraceId::mint(0xabc, 2);
+        let c = TraceId::mint(0xdef, 1);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        let hex = a.to_hex();
+        assert_eq!(hex.len(), 16);
+        assert_eq!(TraceId::parse(&hex), Some(a));
+        assert_eq!(TraceId::parse("nope!"), None);
+        assert_eq!(TraceId::parse(""), None);
+        assert_eq!(TraceId::parse("123456789abcdef01"), None, "too long");
+    }
+
+    #[test]
+    fn stage_set_records_and_sums() {
+        let mut s = StageSet::new();
+        assert!(s.is_empty());
+        s.set(Stage::QueueWait, 10);
+        s.set(Stage::Execute, 100);
+        s.add(Stage::Execute, 5);
+        assert_eq!(s.get(Stage::Execute), Some(105));
+        assert_eq!(s.get(Stage::Audit), None);
+        assert_eq!(s.sum_us(), 115);
+        let order: Vec<&str> = s.iter().map(|(st, _)| st.name()).collect();
+        assert_eq!(order, ["queue_wait", "execute"], "pipeline order");
+    }
+
+    #[test]
+    fn span_json_round_trip_with_children() {
+        let mut root = Span::new(TraceId::mint(7, 7), "cfg");
+        root.total_us = 1234;
+        root.stages.set(Stage::QueueWait, 20);
+        root.stages.set(Stage::Execute, 1000);
+        root.mode = Some("fast".to_string());
+        root.cycles = Some(4321);
+        root.energy_mj = Some(0.125);
+        let mut kid = Span::new(root.trace, "cfg");
+        kid.node = "127.0.0.1:9999".to_string();
+        kid.total_us = 900;
+        kid.stages.set(Stage::Execute, 880);
+        kid.err = Some("scripted".to_string());
+        root.children.push(kid);
+        let back = Span::from_json(&root.to_json()).unwrap();
+        assert_eq!(back, root);
+    }
+
+    #[test]
+    fn span_decode_tolerates_unknown_stages_and_missing_fields() {
+        let v = Json::parse(
+            r#"{"trace":"00000000000000ff","config":"c","total_us":5,
+                "stages":{"execute":3,"warp_drive":9}}"#,
+        )
+        .unwrap();
+        let s = Span::from_json(&v).unwrap();
+        assert_eq!(s.trace, TraceId(0xff));
+        assert_eq!(s.stages.get(Stage::Execute), Some(3));
+        assert_eq!(s.stages.sum_us(), 3, "unknown stage skipped");
+        assert!(s.mode.is_none() && s.children.is_empty());
+    }
+}

@@ -1,0 +1,322 @@
+//! Span retention + stage-level telemetry: one [`Obs`] per serving
+//! process.  The hot path pays a single short mutex acquisition per
+//! *completed* request (`observe`), never per stage — stages
+//! accumulate lock-free in the request's own [`StageSet`] and are
+//! folded in here at the end.
+//!
+//! Retention policy (both always on):
+//! * **1-in-N sampling** — every `sample_every`-th completed request
+//!   keeps its full span tree, so the ring always holds a
+//!   representative cross-section of traffic;
+//! * **tail capture** — any request slower than the rolling p99 of
+//!   the end-to-end latency keeps its span too, so the traces you
+//!   actually need (the slow ones) are there when you look.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Histogram;
+
+use super::span::{Span, Stage, StageSet, TraceId};
+
+/// Observability knobs (fixed at server build time).
+#[derive(Debug, Clone, Copy)]
+pub struct ObsOpts {
+    /// Keep every Nth request's span unconditionally (1 = keep all).
+    pub sample_every: u64,
+    /// Ring-buffer capacity for retained spans (oldest evicted first).
+    pub ring_cap: usize,
+}
+
+impl Default for ObsOpts {
+    fn default() -> Self {
+        ObsOpts { sample_every: 64, ring_cap: 256 }
+    }
+}
+
+/// The rolling-p99 tail threshold only activates once this many
+/// requests have been observed (a p99 over a handful of samples is
+/// noise and would retain everything).
+const TAIL_MIN_COUNT: u64 = 32;
+/// Refresh the cached tail threshold every this many observations
+/// (computing a quantile per request would be wasted work).
+const TAIL_REFRESH: u64 = 16;
+
+/// Per-config stage histograms: one latency histogram per stage name.
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    hists: [Option<Histogram>; 7],
+}
+
+impl StageMetrics {
+    fn record(&mut self, stages: &StageSet) {
+        for (stage, us) in stages.iter() {
+            self.record_one(stage, us);
+        }
+    }
+
+    fn record_one(&mut self, stage: Stage, us: u64) {
+        let idx = Stage::ALL.iter().position(|&s| s == stage).unwrap();
+        self.hists[idx].get_or_insert_with(Histogram::new).record_us(us);
+    }
+
+    /// Fold another snapshot's histograms into this one (fleet
+    /// aggregation / cross-config rollups).
+    pub fn merge(&mut self, other: &StageMetrics) {
+        for (mine, theirs) in self.hists.iter_mut().zip(&other.hists) {
+            match (mine.as_mut(), theirs) {
+                (Some(m), Some(t)) => m.merge(t),
+                (None, Some(t)) => *mine = Some(t.clone()),
+                _ => {}
+            }
+        }
+    }
+
+    /// Stages that have received at least one sample, pipeline order.
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, &Histogram)> + '_ {
+        Stage::ALL
+            .into_iter()
+            .zip(&self.hists)
+            .filter_map(|(s, h)| h.as_ref().map(|h| (s, h)))
+    }
+
+    pub fn get(&self, stage: Stage) -> Option<&Histogram> {
+        let idx = Stage::ALL.iter().position(|&s| s == stage).unwrap();
+        self.hists[idx].as_ref()
+    }
+}
+
+struct Inner {
+    ring: VecDeque<Span>,
+    /// Global end-to-end latency across configs (drives the rolling
+    /// tail threshold).
+    latency: Histogram,
+    /// Cached p99-in-µs threshold; 0 = tail capture not active yet.
+    tail_us: u64,
+    stages: BTreeMap<String, StageMetrics>,
+}
+
+/// Process-wide observability hub: mints trace ids, decides span
+/// retention, and aggregates per-config stage histograms.
+pub struct Obs {
+    opts: ObsOpts,
+    seed: u64,
+    seq: AtomicU64,
+    observed: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new(ObsOpts::default())
+    }
+}
+
+impl Obs {
+    pub fn new(opts: ObsOpts) -> Obs {
+        // seed trace-id minting so two nodes started the same
+        // nanosecond still diverge by pid
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seed = nanos ^ ((std::process::id() as u64) << 32);
+        Obs {
+            opts: ObsOpts {
+                sample_every: opts.sample_every.max(1),
+                ring_cap: opts.ring_cap.max(1),
+            },
+            seed,
+            seq: AtomicU64::new(0),
+            observed: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                ring: VecDeque::new(),
+                latency: Histogram::new(),
+                tail_us: 0,
+                stages: BTreeMap::new(),
+            }),
+        }
+    }
+
+    pub fn opts(&self) -> ObsOpts {
+        self.opts
+    }
+
+    /// Mint a fresh trace id (ingress: coordinator `submit` or the
+    /// net front when the client did not send one).
+    pub fn next_trace(&self) -> TraceId {
+        TraceId::mint(self.seed, self.seq.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Record a completed request's telemetry (stage + end-to-end
+    /// histograms) and decide retention: `true` means the caller
+    /// should build the full span and [`keep`](Obs::keep) it.
+    pub fn observe(&self, config: &str, stages: &StageSet, total: Duration) -> bool {
+        let n = self.observed.fetch_add(1, Ordering::Relaxed);
+        let total_us = total.as_micros() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        inner.latency.record_us(total_us);
+        if !stages.is_empty() {
+            inner.stages.entry(config.to_string()).or_default().record(stages);
+        }
+        if n % TAIL_REFRESH == 0 && inner.latency.count() >= TAIL_MIN_COUNT {
+            inner.tail_us = inner.latency.quantile_us(0.99);
+        }
+        let tail_hit = inner.tail_us > 0 && total_us >= inner.tail_us;
+        n % self.opts.sample_every == 0 || tail_hit
+    }
+
+    /// Record one stage sample outside the `observe` flow — for stages
+    /// measured after the span is already sealed (the net front's
+    /// `encode`: response serialization + socket write).
+    pub fn record_stage(&self, config: &str, stage: Stage, us: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stages.entry(config.to_string()).or_default().record_one(stage, us);
+    }
+
+    /// Retain a span in the ring buffer, evicting oldest-first.
+    pub fn keep(&self, span: Span) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.ring.len() >= self.opts.ring_cap {
+            inner.ring.pop_front();
+        }
+        inner.ring.push_back(span);
+    }
+
+    /// Look a retained span up by trace id (newest match wins).
+    pub fn get(&self, trace: TraceId) -> Option<Span> {
+        let inner = self.inner.lock().unwrap();
+        inner.ring.iter().rev().find(|s| s.trace == trace).cloned()
+    }
+
+    /// The most recent `n` retained spans, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Span> {
+        let inner = self.inner.lock().unwrap();
+        inner.ring.iter().rev().take(n).cloned().collect()
+    }
+
+    pub fn retained(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    /// Requests observed so far (sampled or not).
+    pub fn observed(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-config stage histograms.
+    pub fn stage_snapshot(&self) -> BTreeMap<String, StageMetrics> {
+        self.inner.lock().unwrap().stages.clone()
+    }
+
+    /// Fold a remote node's stage snapshot into ours (fleet view).
+    pub fn merge_stages(&self, other: &BTreeMap<String, StageMetrics>) {
+        let mut inner = self.inner.lock().unwrap();
+        for (cfg, sm) in other {
+            inner.stages.entry(cfg.clone()).or_default().merge(sm);
+        }
+    }
+
+    /// Snapshot of the global end-to-end latency histogram.
+    pub fn latency_snapshot(&self) -> Histogram {
+        self.inner.lock().unwrap().latency.clone()
+    }
+}
+
+/// Merge two per-config stage snapshots (used by `report::serving`
+/// when combining local + fleet views).
+pub fn merge_stage_maps(
+    into: &mut BTreeMap<String, StageMetrics>,
+    other: &BTreeMap<String, StageMetrics>,
+) {
+    for (cfg, sm) in other {
+        into.entry(cfg.clone()).or_default().merge(sm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: TraceId) -> Span {
+        Span::new(trace, "cfg")
+    }
+
+    #[test]
+    fn one_in_n_sampling_is_always_on() {
+        let obs = Obs::new(ObsOpts { sample_every: 4, ring_cap: 8 });
+        let stages = StageSet::new();
+        let kept: Vec<bool> =
+            (0..8).map(|_| obs.observe("c", &stages, Duration::from_micros(10))).collect();
+        assert_eq!(kept, [true, false, false, false, true, false, false, false]);
+        assert_eq!(obs.observed(), 8);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let obs = Obs::new(ObsOpts { sample_every: 1, ring_cap: 3 });
+        let ids: Vec<TraceId> = (0..5).map(|_| obs.next_trace()).collect();
+        for &id in &ids {
+            obs.keep(span(id));
+        }
+        assert_eq!(obs.retained(), 3);
+        assert!(obs.get(ids[0]).is_none(), "oldest evicted");
+        assert!(obs.get(ids[1]).is_none(), "second-oldest evicted");
+        for &id in &ids[2..] {
+            assert!(obs.get(id).is_some(), "newest three retained");
+        }
+        let recent = obs.recent(2);
+        assert_eq!(recent[0].trace, ids[4], "newest first");
+        assert_eq!(recent[1].trace, ids[3]);
+    }
+
+    #[test]
+    fn tail_capture_retains_a_slow_request() {
+        // sampling alone would keep only request 0; the slow request
+        // must be retained by the rolling-p99 tail rule instead
+        let obs = Obs::new(ObsOpts { sample_every: 1_000_000, ring_cap: 8 });
+        let stages = StageSet::new();
+        let mut kept_fast = 0;
+        for _ in 0..64 {
+            if obs.observe("c", &stages, Duration::from_micros(100)) {
+                kept_fast += 1;
+            }
+        }
+        assert!(kept_fast <= 1, "only the 1-in-N sample survives: {kept_fast}");
+        let slow = obs.observe("c", &stages, Duration::from_millis(500));
+        assert!(slow, "a request slower than the rolling p99 is retained");
+    }
+
+    #[test]
+    fn stage_histograms_aggregate_per_config() {
+        let obs = Obs::new(ObsOpts::default());
+        let mut s = StageSet::new();
+        s.set(Stage::QueueWait, 10);
+        s.set(Stage::Execute, 300);
+        obs.observe("a", &s, Duration::from_micros(350));
+        obs.observe("a", &s, Duration::from_micros(350));
+        obs.observe("b", &s, Duration::from_micros(350));
+        let snap = obs.stage_snapshot();
+        assert_eq!(snap.len(), 2);
+        let a = &snap["a"];
+        assert_eq!(a.get(Stage::Execute).unwrap().count(), 2);
+        assert_eq!(a.get(Stage::QueueWait).unwrap().count(), 2);
+        assert!(a.get(Stage::Audit).is_none(), "unrecorded stages stay absent");
+        let names: Vec<&str> = a.iter().map(|(st, _)| st.name()).collect();
+        assert_eq!(names, ["queue_wait", "execute"]);
+    }
+
+    #[test]
+    fn stage_merge_folds_fleet_counts() {
+        let obs = Obs::new(ObsOpts::default());
+        let mut s = StageSet::new();
+        s.set(Stage::Execute, 100);
+        obs.observe("a", &s, Duration::from_micros(100));
+        let remote = obs.stage_snapshot();
+        obs.merge_stages(&remote);
+        let snap = obs.stage_snapshot();
+        assert_eq!(snap["a"].get(Stage::Execute).unwrap().count(), 2);
+    }
+}

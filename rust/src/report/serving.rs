@@ -10,22 +10,28 @@
 //!    (Table I's speedup column, re-derived from live traffic),
 //!  * per-shard farm balance (jobs, simulated cycles, reload churn).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::time::Duration;
 
 use crate::coordinator::metrics::ConfigMetrics;
 use crate::farm::FarmMetrics;
+use crate::obs::StageMetrics;
 use crate::power::FlexicModel;
 use crate::util::Table;
 
 /// Render the serving section from a coordinator metrics snapshot.
 /// `farm` adds the per-shard table; `wall` is the driving run's
-/// wall-clock span.
+/// wall-clock span; `stages` (an [`crate::obs::Obs`] stage snapshot)
+/// adds the per-stage waterfall; `fleet` (merged per-node metrics from
+/// `RemoteEngine::snapshot`) adds fleet-wide quantiles computed from
+/// merged histogram buckets.
 pub fn render(
     per_config: &HashMap<String, ConfigMetrics>,
     wall: Duration,
     farm: Option<&FarmMetrics>,
     power: &FlexicModel,
+    stages: Option<&BTreeMap<String, StageMetrics>>,
+    fleet: Option<&HashMap<String, ConfigMetrics>>,
 ) -> String {
     let mut out = String::from("\n=== serving energy report (Table I under load) ===\n");
     let mut keys: Vec<&String> = per_config.keys().collect();
@@ -108,6 +114,55 @@ pub fn render(
             ));
         }
     }
+
+    // where a request's time actually goes, stage by stage
+    if let Some(stages) = stages {
+        let mut any = false;
+        let mut wt = Table::new(["config", "stage", "p50 (us)", "p99 (us)", "mean (us)", "count"]);
+        for (cfg, sm) in stages {
+            for (stage, h) in sm.iter() {
+                any = true;
+                wt.row([
+                    cfg.clone(),
+                    stage.name().to_string(),
+                    h.quantile_us(0.50).to_string(),
+                    h.quantile_us(0.99).to_string(),
+                    format!("{:.1}", h.mean_us()),
+                    h.count().to_string(),
+                ]);
+            }
+        }
+        if any {
+            out.push_str("\nper-stage waterfall:\n");
+            out.push_str(&wt.render());
+        }
+    }
+
+    // fleet view: quantiles from bucket counts merged across nodes,
+    // not a max over per-node summaries
+    if let Some(fleet) = fleet {
+        let mut keys: Vec<&String> = fleet.keys().collect();
+        keys.sort();
+        let mut ft = Table::new(["config", "reqs", "mJ/req", "p50 (us)", "p99 (us)", "max (us)"]);
+        for key in keys {
+            let m = &fleet[key];
+            let (p50, p99, max) = m
+                .latency
+                .as_ref()
+                .map(|h| (h.quantile_us(0.50), h.quantile_us(0.99), h.max_us()))
+                .unwrap_or((0, 0, 0));
+            ft.row([
+                key.clone(),
+                m.requests.to_string(),
+                format!("{:.3}", m.mean_energy_mj()),
+                p50.to_string(),
+                p99.to_string(),
+                max.to_string(),
+            ]);
+        }
+        out.push_str("\nfleet (merged per-node histograms):\n");
+        out.push_str(&ft.render());
+    }
     out
 }
 
@@ -152,6 +207,8 @@ mod tests {
             Duration::from_secs(2),
             Some(&farm),
             &FlexicModel::paper(),
+            None,
+            None,
         );
         assert!(s.contains("iris_ovr_w4"), "{s}");
         assert!(s.contains("1.340"), "mean mJ/req: {s}");
@@ -160,6 +217,45 @@ mod tests {
         assert!(s.contains("simulated-vs-wall"), "{s}");
         assert!(s.contains("90 analytic answer(s)"), "{s}");
         assert!(s.contains("10 audit(s), 0 mismatch(es)"), "{s}");
+        assert!(!s.contains("per-stage waterfall"), "no stages given: {s}");
+        assert!(!s.contains("fleet ("), "no fleet given: {s}");
+    }
+
+    #[test]
+    fn waterfall_and_fleet_sections_render() {
+        use crate::obs::{Obs, ObsOpts, Stage, StageSet};
+        let obs = Obs::new(ObsOpts::default());
+        let mut st = StageSet::new();
+        st.set(Stage::QueueWait, 15);
+        st.set(Stage::Execute, 480);
+        obs.observe("iris_ovr_w4", &st, Duration::from_micros(520));
+        let stages = obs.stage_snapshot();
+
+        let mut fleet = HashMap::new();
+        let mut fm = ConfigMetrics::new();
+        fm.requests = 20;
+        fm.sim_samples = 20;
+        fm.energy_mj = 10.0;
+        for us in [100u64, 200, 40_000] {
+            fm.latency.as_mut().unwrap().record_us(us);
+        }
+        fleet.insert("iris_ovr_w4".to_string(), fm);
+
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            Some(&stages),
+            Some(&fleet),
+        );
+        assert!(s.contains("per-stage waterfall"), "{s}");
+        assert!(s.contains("queue_wait"), "{s}");
+        assert!(s.contains("execute"), "{s}");
+        assert!(s.contains("fleet (merged per-node histograms)"), "{s}");
+        // the fleet p99 comes from real buckets: the 40ms sample pulls
+        // it to the 50ms bound, far above the p50 bucket
+        assert!(s.contains("50000"), "fleet p99 from merged buckets: {s}");
     }
 
     #[test]
@@ -169,7 +265,14 @@ mod tests {
             spills: 0,
             fast: FastPathMetrics::default(),
         };
-        let s = render(&fake_metrics(), Duration::from_secs(1), Some(&farm), &FlexicModel::paper());
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(1),
+            Some(&farm),
+            &FlexicModel::paper(),
+            None,
+            None,
+        );
         assert!(s.contains("farm shards"), "{s}");
         assert!(!s.contains("fast path:"), "{s}");
     }
@@ -182,7 +285,7 @@ mod tests {
         m.sim_cycles = 0;
         m.energy_mj = 0.0;
         m.baseline_cycles_per_inf = 0.0;
-        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper());
+        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper(), None, None);
         assert!(s.contains("iris_ovr_w4"));
         assert!(s.contains('-'), "uncalibrated ratio renders as dash");
         assert!(!s.contains("farm shards"));

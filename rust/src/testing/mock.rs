@@ -101,7 +101,7 @@ impl Engine for MockEngine {
                 if self.fail_on == Some(first) {
                     Err(ServeError::Engine("mock engine: scripted failure".into()))
                 } else {
-                    Ok(Sample { pred: first, sim: self.sim })
+                    Ok(Sample::new(first, self.sim))
                 }
             })
             .collect()

@@ -12,6 +12,7 @@ use flexsvm::coordinator::{Backend, Server, ServeError};
 use flexsvm::engine::SimCost;
 use flexsvm::farm::FarmOpts;
 use flexsvm::manifest_or_return;
+use flexsvm::obs::{Stage, TraceId};
 use flexsvm::serv::TimingConfig;
 use flexsvm::svm::infer;
 use flexsvm::svm::model::{artifacts_root, QuantModel};
@@ -384,6 +385,57 @@ fn accel_clean_shutdown_then_rejects_new_requests() {
     server.shutdown().unwrap();
     let err = client.infer("s", &[1, 2, 3]).unwrap_err();
     assert_eq!(err, ServeError::ServerDown);
+}
+
+// ----------------------------------------------------------- observability
+
+#[test]
+fn traced_requests_carry_spans_with_consistent_stage_timings() {
+    let server = Server::builder()
+        .models(vec![tiny_model("tr", false)])
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .farm(test_farm())
+        .start()
+        .unwrap();
+    let client = server.client();
+
+    // plain traffic: a trace id is minted, but the response carries no
+    // span tree (no assembly cost on the default path)
+    let plain = client.infer("tr", &[1, 2, 3]).unwrap();
+    assert!(plain.span.is_none(), "plain traffic pays no span assembly");
+
+    let t = TraceId::parse("00000000abad1dea").unwrap();
+    let resp = client.submit_traced("tr", &[4, 5, 6], t).unwrap().wait().unwrap();
+    assert_eq!(resp.trace, t);
+    let span = resp.span.expect("explicitly-traced responses carry the span tree");
+    assert_eq!(span.trace, t);
+    assert_eq!(span.config, "tr");
+
+    // stage decomposition: coordinator stages always present, farm
+    // stages present on the accel path, and the parts never exceed
+    // the measured whole
+    for stage in [Stage::QueueWait, Stage::BatchLinger, Stage::Dispatch, Stage::Execute] {
+        assert!(span.stages.get(stage).is_some(), "{} missing: {:?}", stage.name(), span.stages);
+    }
+    assert!(
+        span.stages.sum_us() <= span.total_us,
+        "stage sum {} exceeds end-to-end total {}",
+        span.stages.sum_us(),
+        span.total_us
+    );
+    assert_eq!(span.total_us, resp.latency.as_micros() as u64);
+    assert_eq!(span.mode.as_deref(), Some("sim"));
+    assert!(span.cycles.unwrap() > 0, "sim cycles attributed to the span");
+    assert!(span.energy_mj.unwrap() > 0.0, "energy attributed to the span");
+
+    // every request (traced or not) lands in the stage histograms
+    let obs = client.obs();
+    assert_eq!(obs.observed(), 2);
+    let snap = obs.stage_snapshot();
+    assert_eq!(snap["tr"].get(Stage::Execute).unwrap().count(), 2);
+    assert_eq!(snap["tr"].get(Stage::QueueWait).unwrap().count(), 2);
+    server.shutdown().unwrap();
 }
 
 // ------------------------------------------------------- artifact-backed

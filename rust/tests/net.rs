@@ -11,6 +11,7 @@ use std::time::Duration;
 use flexsvm::coordinator::{Server, ServeError};
 use flexsvm::engine::{Engine, ModelSource, SimCost};
 use flexsvm::net::{wire, HttpClient, HttpClientOpts, NetOpts, NetServer, RemoteEngine};
+use flexsvm::obs::{Span, TraceId};
 use flexsvm::svm::{infer, QuantModel};
 use flexsvm::testing::{gen, MockEngine};
 use flexsvm::util::Pcg32;
@@ -177,6 +178,130 @@ fn remote_engine_fans_one_batch_out_to_two_nodes() {
     assert_eq!(ra["m"].requests, 4, "node A serves its contiguous chunk");
     assert_eq!(rb["m"].requests, 4, "node B serves its contiguous chunk");
     drop(re);
+    net_a.shutdown().unwrap();
+    net_b.shutdown().unwrap();
+}
+
+// ------------------------------------------------------ observability
+
+#[test]
+fn explicit_trace_ids_survive_the_wire_and_are_retrievable() {
+    let net = native_net_server(tiny_models(), NetOpts::default());
+    let mut c = HttpClient::new(net.addr().to_string());
+
+    // trace in the JSON body: the answer echoes it in the body, the
+    // X-Trace-Id header, and the attached span tree
+    let t = TraceId::parse("00000000deadbeef").unwrap();
+    let r = c.post_json("/v1/infer", &wire::infer_body_traced("cfg_a", &[1, 2, 3], t)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("X-Trace-Id"), Some(t.to_hex().as_str()), "{}", r.body);
+    let doc = r.json().unwrap();
+    assert_eq!(doc.get("trace").unwrap().as_str().unwrap(), t.to_hex());
+    let span = Span::from_json(doc.get("span").unwrap()).unwrap();
+    assert_eq!(span.trace, t);
+    assert_eq!(span.config, "cfg_a");
+    assert!(span.stages.sum_us() <= span.total_us.max(1), "{span:?}");
+
+    // header-only propagation (no "trace" field in the body)
+    let t2 = TraceId::parse("00000000cafebabe").unwrap();
+    let r = c
+        .request_with(
+            "POST",
+            "/v1/infer",
+            Some(wire::infer_body("cfg_b", &[4, 5, 6]).to_string()),
+            &[("X-Trace-Id".to_string(), t2.to_hex())],
+        )
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("X-Trace-Id"), Some(t2.to_hex().as_str()));
+
+    // both explicit spans are retrievable from the ring by id
+    for id in [t, t2] {
+        let tr = c.get(&format!("/v1/traces?id={}", id.to_hex())).unwrap();
+        assert_eq!(tr.status, 200, "{}", tr.body);
+        let sp = Span::from_json(&tr.json().unwrap()).unwrap();
+        assert_eq!(sp.trace, id);
+    }
+    // unknown id answers 404, malformed id answers 400
+    assert_eq!(c.get("/v1/traces?id=0000000000000001").unwrap().status, 404);
+    assert_eq!(c.get("/v1/traces?id=zzz").unwrap().status, 400);
+
+    // the trace listing and the Prometheus endpoint serve after traffic
+    let l = c.get("/v1/traces").unwrap();
+    assert_eq!(l.status, 200, "{}", l.body);
+    let ld = l.json().unwrap();
+    assert!(ld.get("observed").unwrap().as_i64().unwrap() >= 2, "{}", l.body);
+    assert!(ld.get("retained").unwrap().as_i64().unwrap() >= 2, "{}", l.body);
+    let p = c.get("/metrics").unwrap();
+    assert_eq!(p.status, 200);
+    assert!(p.header("Content-Type").unwrap().starts_with("text/plain"), "{:?}", p.headers);
+    assert!(p.body.contains("# TYPE"), "{}", p.body);
+    assert!(p.body.contains("flexsvm_"), "{}", p.body);
+    drop(c);
+    net.shutdown().unwrap();
+}
+
+#[test]
+fn traced_fan_out_yields_one_span_tree_with_per_node_children() {
+    // two leaf nodes, one front coordinator fanning out over the wire,
+    // and the front itself on a socket — the full multi-node topology
+    let net_a = mock_net_server(MockEngine::new(), 1024, 64);
+    let net_b = mock_net_server(MockEngine::new(), 1024, 64);
+    let (addr_a, addr_b) = (net_a.addr().to_string(), net_b.addr().to_string());
+
+    let front = Server::builder()
+        .keys(["m"])
+        .engine(Box::new(RemoteEngine::new([addr_a.clone(), addr_b.clone()]).unwrap()))
+        .linger(Duration::from_millis(2))
+        .start()
+        .unwrap();
+    let fnet = NetServer::bind(front, "127.0.0.1:0", NetOpts::default()).unwrap();
+    let mut c = HttpClient::new(fnet.addr().to_string());
+
+    let t = TraceId::parse("00000000feedface").unwrap();
+    let xs: Vec<Vec<i32>> = (0..8).map(|i| vec![i as i32, 0]).collect();
+    let r = c
+        .post_json_with(
+            "/v1/infer",
+            &wire::infer_batch_body("m", &xs),
+            &[("X-Trace-Id".to_string(), t.to_hex())],
+        )
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let results = r.json().unwrap().get("results").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(results.len(), 8);
+    for item in &results {
+        assert_eq!(item.get("trace").unwrap().as_str().unwrap(), t.to_hex());
+        assert!(item.opt("span").is_some(), "explicitly-traced answers carry spans: {item:?}");
+    }
+
+    // one retained tree on the front: batch root → per-sample spans →
+    // remote child spans stamped with the node that executed the chunk
+    let tr = c.get(&format!("/v1/traces?id={}", t.to_hex())).unwrap();
+    assert_eq!(tr.status, 200, "{}", tr.body);
+    let root = Span::from_json(&tr.json().unwrap()).unwrap();
+    assert_eq!(root.trace, t);
+    assert_eq!(root.children.len(), 8, "one child per batch sample");
+    let mut nodes = std::collections::HashSet::new();
+    for child in &root.children {
+        assert_eq!(child.trace, t, "the trace id survives every hop");
+        assert_eq!(child.children.len(), 1, "each sample has its remote node's span: {child:?}");
+        let remote = &child.children[0];
+        assert_eq!(remote.trace, t);
+        assert!(!remote.node.is_empty(), "fan-out children are stamped with the node addr");
+        nodes.insert(remote.node.clone());
+    }
+    assert_eq!(
+        nodes,
+        [addr_a.clone(), addr_b.clone()].into_iter().collect(),
+        "the 8-sample batch crossed both nodes"
+    );
+
+    // the leaf nodes also retained their view of the same trace
+    assert!(net_a.client().obs().get(t).is_some(), "node A kept its span");
+    assert!(net_b.client().obs().get(t).is_some(), "node B kept its span");
+    drop(c);
+    fnet.shutdown().unwrap();
     net_a.shutdown().unwrap();
     net_b.shutdown().unwrap();
 }
