@@ -54,6 +54,9 @@ struct Outcome {
     native_mismatch: u64,
     shed: u64,
     wall: Duration,
+    /// per-config (label-correct, answered) — the in-process drive
+    /// tracks it; the wire drive doesn't (labels stay client-side)
+    per_config: Option<HashMap<String, (u64, u64)>>,
 }
 
 fn main() -> Result<()> {
@@ -117,6 +120,7 @@ fn main() -> Result<()> {
             native_mismatch: d.native_mismatch,
             shed: d.shed,
             wall: d.wall,
+            per_config: None,
         };
         (r, client, Some(net), None)
     } else {
@@ -128,6 +132,7 @@ fn main() -> Result<()> {
             native_mismatch: d.native_mismatch,
             shed: 0,
             wall: d.wall,
+            per_config: Some(d.per_config),
         };
         (r, client, None, Some(server))
     };
@@ -170,7 +175,19 @@ fn main() -> Result<()> {
 
     if backend == Backend::Accel {
         let farm = client.engine_metrics()?.farm;
-        print!("{}", serving::render(&metrics, r.wall, farm.as_ref(), &FlexicModel::paper()));
+        let stages = client.obs().stage_snapshot();
+        print!(
+            "{}",
+            serving::render(
+                &metrics,
+                r.wall,
+                farm.as_ref(),
+                &FlexicModel::paper(),
+                Some(&stages),
+                None,
+                r.per_config.as_ref(),
+            )
+        );
         // Table-I sanity: at least one served config's accel-vs-baseline
         // cycle ratio must sit inside the paper's reported speedup band
         // (Table I spans 1.5x..48.6x across configs).

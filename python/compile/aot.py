@@ -35,6 +35,7 @@ from . import model as M
 BATCH_SIZES = (1, 64)
 STRATEGIES = ("ovr", "ovo")
 BITS = Q.SUPPORTED_BITS
+KERNELS = ("rbf", "poly")  # non-linear configs emitted per dataset (ISSUE 8)
 N_GOLDEN = 32
 
 
@@ -157,6 +158,117 @@ def build_dataset_artifacts(ds: D.Dataset, out: pathlib.Path, manifest: dict, me
                 f"  {key}: acc={acc_q:.3f} (float {float_acc:.3f}) "
                 f"K={qm.n_classifiers} F={qm.n_features}  [{time.time()-t0:.1f}s]"
             )
+
+    for kernel in KERNELS:
+        for strat in STRATEGIES:
+            for bits in BITS:
+                build_kernel_config(
+                    ds, kernel, strat, bits, x_q_train, x_q_test, out, manifest,
+                    metrics,
+                )
+
+
+def build_kernel_config(
+    ds: D.Dataset,
+    kernel: str,
+    strat: str,
+    bits: int,
+    x_q_train: np.ndarray,
+    x_q_test: np.ndarray,
+    out: pathlib.Path,
+    manifest: dict,
+    metrics: dict,
+):
+    """Train, quantize, cross-check, and emit one kernel-machine config.
+
+    Kernel configs have no HLO graphs (the PJRT backend is linear-only);
+    the Rust side serves them on the native/sim path, where the KSVM CFU
+    keeps them bit-exact against these golden vectors.
+    """
+    from .kernels import kernel_pe as KP
+
+    t0 = time.time()
+    qm = Q.fit_kernel_machine(
+        kernel, x_q_train, ds.y_train, ds.n_classes, strat, bits
+    )
+    pred_q = Q.predict_int(qm, x_q_test)
+    acc_q = T.accuracy(pred_q, ds.y_test)
+    # cross-check the L1 pallas kernel PE against the numpy spec
+    scores_pe = np.asarray(KP.qm_pe_scores(qm, x_q_test)).astype(np.int64)
+    scores_spec = Q.scores_int(qm, x_q_test).astype(np.int64)
+    key = f"{ds.name}_{kernel}_{strat}_w{bits}"
+    assert np.array_equal(scores_pe, scores_spec), (
+        f"L1/pallas vs numpy-int mismatch for {key}"
+    )
+
+    metrics[key] = {
+        "dataset": ds.name,
+        "strategy": strat,
+        "bits": bits,
+        "kernel": kernel,
+        "accuracy": acc_q,
+        "n_classifiers": qm.n_classifiers,
+        "n_features": qm.n_features,
+        "n_support": qm.n_support,
+        "n_classes": qm.n_classes,
+    }
+
+    (out / "weights").mkdir(exist_ok=True)
+    with open(out / "weights" / f"{key}.json", "w") as f:
+        json.dump(
+            {
+                "dataset": ds.name,
+                "strategy": strat,
+                "bits": bits,
+                "kernel": kernel,
+                "n_classes": qm.n_classes,
+                "n_features": qm.n_features,
+                "n_classifiers": qm.n_classifiers,
+                "weights": _jsonable(qm.weights),
+                "biases": _jsonable(qm.biases),
+                "pairs": [list(p) for p in qm.pairs],
+                "scale": qm.scale,
+                "support": _jsonable(qm.support),
+                "g2_q": qm.g2_q,
+                "gamma_q": qm.gamma_q,
+                "coef0_q": qm.coef0_q,
+                "degree": qm.degree,
+            },
+            f,
+        )
+
+    n_g = min(N_GOLDEN, x_q_test.shape[0])
+    gx = x_q_test[:n_g]
+    (out / "golden").mkdir(exist_ok=True)
+    with open(out / "golden" / f"{key}.json", "w") as f:
+        json.dump(
+            {
+                "config": key,
+                "x_q": _jsonable(gx),
+                "scores": _jsonable(Q.scores_int(qm, gx)),
+                "pred": _jsonable(Q.predict_int(qm, gx)),
+                "y_true": _jsonable(ds.y_test[:n_g]),
+            },
+            f,
+        )
+
+    manifest["configs"][key] = {
+        "dataset": ds.name,
+        "strategy": strat,
+        "bits": bits,
+        "kernel": kernel,
+        "n_classes": qm.n_classes,
+        "n_features": qm.n_features,
+        "n_classifiers": qm.n_classifiers,
+        "weights": f"weights/{key}.json",
+        "golden": f"golden/{key}.json",
+        "hlo": {},
+        "accuracy": acc_q,
+    }
+    print(
+        f"  {key}: acc={acc_q:.3f} K={qm.n_classifiers} "
+        f"S={qm.n_support} F={qm.n_features}  [{time.time()-t0:.1f}s]"
+    )
 
 
 def main() -> None:

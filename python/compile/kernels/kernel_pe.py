@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernel: the kernel-capable PE datapath (ISSUE 8).
+
+Extends the linear PE (svm_pe.py) to kernel machines.  The datapath is
+the same two-stage structure the KSVM CFU implements:
+
+  stage 1 — feature map: per support vector, either the squared
+    distance (RBF) or the dot product (poly) of the 4-bit input against
+    the 4-bit support vector, then the fixed-point kernel evaluation
+    (32-entry 2^-x LUT for RBF; clamp/square ladder for poly),
+  stage 2 — dual accumulate: the signed alpha weights ride the linear
+    PE's sign-magnitude nibble datapath against phi, and the bias rides
+    as an (input = KSCALE, weight = b_q) pair.
+
+Support vectors and inputs are 4-bit unsigned, so stage 1 reuses the
+eight 4x4 multipliers directly; stage 2 is the identical shift-mux
+accumulate as the linear PE with phi as the "input" lane.
+
+``interpret=True`` always, as in svm_pe.py.  Every kernel here must
+agree bit-exactly with kernels/ref.py (and so with compile/quantize.py
+and the whole Rust stack).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP2_LUT, GSHIFT, KCLAMP, KFRAC, KSCALE, LUTB
+from .svm_pe import DEFAULT_BLOCK_B, _pad_batch
+
+
+def _phi_block(x, sv, lut, *, kind, g2_q, gamma_q, coef0_q, degree):
+    """Stage 1: integer feature map [TB, S] for one batch tile (int32)."""
+    if kind == "rbf":
+        diff = x[:, None, :] - sv[None, :, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        z = jnp.int32(g2_q) * d2
+        zi = z >> GSHIFT
+        zf = (z >> (GSHIFT - LUTB)) & ((1 << LUTB) - 1)
+        return jnp.where(zi >= 31, 0, lut[zf] >> jnp.minimum(zi, 31))
+    d = jnp.dot(x, sv.T, preferred_element_type=jnp.int32)
+    t = jnp.clip((jnp.int32(gamma_q) * d >> GSHIFT) + coef0_q, -KCLAMP, KCLAMP)
+    p = t
+    for _ in range(degree - 1):
+        p = jnp.clip(p * t >> KFRAC, -KCLAMP, KCLAMP)
+    return p
+
+
+def _kpe_scores_kernel(
+    x_ref, sv_ref, w_ref, b_ref, lut_ref, o_ref, *, kind, nibbles, g2_q,
+    gamma_q, coef0_q, degree
+):
+    """One grid step: kernel-machine scores for a TB x F input tile.
+
+    The 2^-x LUT rides as an input ref (pallas kernels may not capture
+    array constants), mirroring the CFU's LUT ROM."""
+    x = x_ref[...].astype(jnp.int32)    # [TB, F] values 0..15
+    sv = sv_ref[...].astype(jnp.int32)  # [S, F]  values 0..15
+    w = w_ref[...].astype(jnp.int32)    # [K, S]  signed dual coefficients
+    phi = _phi_block(
+        x, sv, lut_ref[...], kind=kind, g2_q=g2_q, gamma_q=gamma_q,
+        coef0_q=coef0_q, degree=degree,
+    )
+    # stage 2: the linear PE's sign-magnitude nibble accumulate, with
+    # phi standing in for the input lanes
+    sign = jnp.where(w < 0, -1, 1).astype(jnp.int32)
+    mag = jnp.abs(w)
+    acc = jnp.zeros((x.shape[0], w.shape[0]), jnp.int32)
+    for k in range(nibbles):
+        nib = (mag >> (4 * k)) & 0xF
+        signed_nib = sign * nib
+        acc = acc + (
+            jnp.dot(phi, signed_nib.T, preferred_element_type=jnp.int32) << (4 * k)
+        )
+    o_ref[...] = acc + KSCALE * b_ref[...].astype(jnp.int32)[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "bits", "g2_q", "gamma_q", "coef0_q", "degree",
+                     "block_b"),
+)
+def kernel_pe_scores(
+    x_q, sv_q, w_q, b_q, *, kind: str, bits: int, g2_q: int = 0,
+    gamma_q: int = 0, coef0_q: int = 0, degree: int = 0,
+    block_b: int = DEFAULT_BLOCK_B,
+):
+    """Integer kernel-machine scores [B, K] via the kernel PE datapath.
+
+    x_q:  [B, F] int32 values 0..15      sv_q: [S, F] int32 values 0..15
+    w_q:  [K, S] int32 signed duals      b_q:  [K]    int32 signed
+    """
+    assert kind in ("rbf", "poly"), kind
+    assert bits in (4, 8, 16), bits
+    nibbles = bits // 4
+    x_pad, b_real = _pad_batch(x_q, block_b)
+    n_blocks = x_pad.shape[0] // block_b
+    s, f = sv_q.shape
+    k = w_q.shape[0]
+    out = pl.pallas_call(
+        functools.partial(
+            _kpe_scores_kernel, kind=kind, nibbles=nibbles, g2_q=g2_q,
+            gamma_q=gamma_q, coef0_q=coef0_q, degree=degree,
+        ),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((s, f), lambda i: (0, 0)),
+            pl.BlockSpec((k, s), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((EXP2_LUT.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_pad.shape[0], k), jnp.int32),
+        interpret=True,
+    )(x_pad, sv_q, w_q, b_q, EXP2_LUT)
+    return out[:b_real]
+
+
+def qm_pe_scores(qm, x_q, *, block_b: int = DEFAULT_BLOCK_B):
+    """Convenience wrapper: run the kernel PE straight off a QuantModel."""
+    return kernel_pe_scores(
+        x_q, jnp.asarray(qm.support), jnp.asarray(qm.weights),
+        jnp.asarray(qm.biases), kind=qm.kernel, bits=qm.bits,
+        g2_q=qm.g2_q, gamma_q=qm.gamma_q, coef0_q=qm.coef0_q,
+        degree=qm.degree, block_b=block_b,
+    )
+
+
+def kernel_vmem_estimate_bytes(
+    block_b: int, n_feat: int, n_support: int, n_classifiers: int
+) -> int:
+    """Static VMEM footprint of one grid step (all operands int32)."""
+    x = block_b * n_feat * 4
+    sv = n_support * n_feat * 4
+    w = n_classifiers * n_support * 4
+    b = n_classifiers * 4
+    phi = block_b * n_support * 4
+    out = block_b * n_classifiers * 4
+    scratch = block_b * n_classifiers * 4
+    return x + sv + w + b + phi + out + scratch

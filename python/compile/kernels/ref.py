@@ -47,3 +47,65 @@ def ovo_predict_ref(x_q, w_q, b_q, pairs_i, pairs_j, n_classes):
     s = scores_ref(x_q, w_q, b_q)
     votes = ovo_votes_ref(s, pairs_i, pairs_j, n_classes)
     return jnp.argmax(votes, axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# kernel machines (ISSUE 8): integer feature map + scores, all-int32.
+# Constants are textual twins of compile/quantize.py and
+# rust/src/kernel/mod.rs; test_kernel_quantize.py pins them equal.
+# ---------------------------------------------------------------------------
+
+KFRAC = 8
+KSCALE = 1 << KFRAC
+GSHIFT = 12
+LUTB = 5
+KCLAMP = 1 << 10
+
+EXP2_LUT = jnp.array(
+    [256, 251, 245, 240, 235, 230, 225, 220, 215, 211, 206, 202, 197, 193,
+     189, 185, 181, 177, 173, 170, 166, 162, 159, 156, 152, 149, 146, 143,
+     140, 137, 134, 131],
+    dtype=jnp.int32,
+)
+
+
+def rbf_phi_ref(x_q, sv_q, g2_q):
+    """[B,F] u4, [S,F] u4 -> phi [B,S] i32 (quantize.rbf_phi_int twin).
+
+    int32 is safe end to end: quantize_kernel_constants guarantees
+    g2_q * F * 225 < 2^31."""
+    x = x_q.astype(jnp.int32)
+    sv = sv_q.astype(jnp.int32)
+    diff = x[:, None, :] - sv[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [B, S]
+    z = jnp.int32(g2_q) * d2
+    zi = z >> GSHIFT
+    zf = (z >> (GSHIFT - LUTB)) & ((1 << LUTB) - 1)
+    return jnp.where(zi >= 31, 0, EXP2_LUT[zf] >> jnp.minimum(zi, 31))
+
+
+def poly_phi_ref(x_q, sv_q, gamma_q, coef0_q, degree):
+    """[B,F] u4, [S,F] u4 -> phi [B,S] i32 (quantize.poly_phi_int twin).
+
+    The ±KCLAMP clamp bounds every product inside int32; degree is a
+    static python int (trace-time unrolled, like the nibble loop)."""
+    x = x_q.astype(jnp.int32)
+    sv = sv_q.astype(jnp.int32)
+    d = jnp.dot(x, sv.T, preferred_element_type=jnp.int32)  # [B, S]
+    t = jnp.clip((jnp.int32(gamma_q) * d >> GSHIFT) + coef0_q, -KCLAMP, KCLAMP)
+    p = t
+    for _ in range(degree - 1):
+        p = jnp.clip(p * t >> KFRAC, -KCLAMP, KCLAMP)
+    return p
+
+
+def kernel_scores_ref(phi, w_q, b_q):
+    """[B,S] i32 feature map, [K,S] i32 duals, [K] i32 -> scores [B,K] i32.
+
+    A kernel machine is a linear machine over phi with the bias riding
+    as an (input = KSCALE, weight = b_q) pair."""
+    return (
+        jnp.dot(phi.astype(jnp.int32), w_q.astype(jnp.int32).T,
+                preferred_element_type=jnp.int32)
+        + KSCALE * b_q.astype(jnp.int32)[None, :]
+    )

@@ -37,23 +37,60 @@ import dataclasses
 
 import numpy as np
 
-from .train import SvmModel
+from .train import SvmModel, train_ovo, train_ovr
 
 XMAX = 15  # 4-bit unsigned input full-scale; also the bias "input"
 SUPPORTED_BITS = (4, 8, 16)
 
+# ---------------------------------------------------------------------------
+# kernel fixed-point spec (ISSUE 8): every constant here has a bit-exact
+# twin in rust/src/kernel/mod.rs — change both or neither
+# ---------------------------------------------------------------------------
+
+SUPPORTED_KERNELS = ("linear", "rbf", "poly")
+
+KFRAC = 8                 # fractional bits of the kernel feature map phi
+KSCALE = 1 << KFRAC       # phi full scale; also the kernel bias "input"
+GSHIFT = 12               # fractional bits of the quantized gamma constants
+LUTB = 5                  # log2(EXP2_LUT entries)
+KCLAMP = 1 << 10          # poly feature-map clamp: keeps every product i32
+XMAX2 = XMAX * XMAX       # 225 — the integer full-scale of x·sv and |x-sv|²
+
+# EXP2_LUT[i] = round(KSCALE * 2^(-i/32)): one 2^-x period, KFRAC-scaled.
+# Hardcoded (not computed) so the Rust twin is textually identical; the
+# formula is pinned by test_kernel_quantize.py.
+EXP2_LUT = np.array(
+    [256, 251, 245, 240, 235, 230, 225, 220, 215, 211, 206, 202, 197, 193,
+     189, 185, 181, 177, 173, 170, 166, 162, 159, 156, 152, 149, 146, 143,
+     140, 137, 134, 131],
+    dtype=np.int64,
+)
+
 
 @dataclasses.dataclass
 class QuantModel:
-    """A quantized multi-class SVM, bit-exact spec for all lower layers."""
+    """A quantized multi-class SVM, bit-exact spec for all lower layers.
+
+    ``kernel == "linear"``: ``weights`` is [K, F] and scores follow the
+    paper's integer law.  ``kernel in ("rbf", "poly")``: the model is a
+    *kernel machine* — ``support`` holds S quantized support vectors
+    [S, F], ``weights`` is [K, S] (dual coefficients over the integer
+    feature map ``phi_int``), and the bias rides as ``KSCALE * b_q``.
+    """
 
     strategy: str
     n_classes: int
     bits: int
-    weights: np.ndarray  # [K, F] int32, values in [-qmax, qmax]
+    weights: np.ndarray  # linear: [K, F]; kernel: [K, S] — int32 in [-qmax, qmax]
     biases: np.ndarray   # [K]    int32
     pairs: list[tuple[int, int]]
     scale: float         # s_w — kept for de-quantization / reporting
+    kernel: str = "linear"
+    support: np.ndarray | None = None  # [S, F] int32 values 0..15 (kernel only)
+    g2_q: int = 0        # rbf:  round(gamma * log2(e) * 2^GSHIFT / 225)
+    gamma_q: int = 0     # poly: round(gamma * 2^(KFRAC+GSHIFT) / 225)
+    coef0_q: int = 0     # poly: round(coef0 * KSCALE)
+    degree: int = 0      # poly: exponent (>= 1)
 
     @property
     def n_classifiers(self) -> int:
@@ -61,7 +98,13 @@ class QuantModel:
 
     @property
     def n_features(self) -> int:
+        if self.kernel != "linear":
+            return int(self.support.shape[1])
         return int(self.weights.shape[1])
+
+    @property
+    def n_support(self) -> int:
+        return 0 if self.support is None else int(self.support.shape[0])
 
     def qmax(self) -> int:
         return (1 << (self.bits - 1)) - 1
@@ -96,12 +139,67 @@ def quantize_model(model: SvmModel, bits: int) -> QuantModel:
 
 
 # ---------------------------------------------------------------------------
+# integer kernel feature map (numpy int64; jnp oracle in kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+
+def rbf_phi_int(x_q: np.ndarray, sv_q: np.ndarray, g2_q: int) -> np.ndarray:
+    """phi[n, s] = KSCALE * 2^-(g2_q * |x_n - sv_s|² / 2^GSHIFT), by LUT.
+
+    All-integer: squared distance, a GSHIFT-fixed-point exponent, then a
+    32-entry 2^-x table indexed by the exponent's fraction and shifted by
+    its integer part.  Exponents with integer part >= 31 underflow to 0.
+    """
+    x = x_q.astype(np.int64)
+    sv = sv_q.astype(np.int64)
+    d2 = np.sum((x[:, None, :] - sv[None, :, :]) ** 2, axis=-1)  # [N, S]
+    z = np.int64(g2_q) * d2
+    zi = z >> GSHIFT
+    zf = (z >> (GSHIFT - LUTB)) & ((1 << LUTB) - 1)
+    return np.where(zi >= 31, 0, EXP2_LUT[zf] >> np.minimum(zi, 62))
+
+
+def poly_phi_int(
+    x_q: np.ndarray, sv_q: np.ndarray, gamma_q: int, coef0_q: int, degree: int
+) -> np.ndarray:
+    """phi[n, s] = clamp((gamma_q·(x_n·sv_s) >> GSHIFT) + coef0_q)^degree,
+    every product taken in KFRAC fixed point and clamped to ±KCLAMP —
+    the clamp is part of the feature-map definition (training sees it),
+    and bounds every intermediate inside int32."""
+    x = x_q.astype(np.int64)
+    sv = sv_q.astype(np.int64)
+    d = x @ sv.T  # [N, S]
+    t = np.clip((np.int64(gamma_q) * d >> GSHIFT) + coef0_q, -KCLAMP, KCLAMP)
+    p = t.copy()
+    for _ in range(degree - 1):
+        p = np.clip(p * t >> KFRAC, -KCLAMP, KCLAMP)
+    return p
+
+
+def phi_int(qm: QuantModel, x_q: np.ndarray) -> np.ndarray:
+    """The integer kernel feature map [N, S] of a kernel QuantModel."""
+    if qm.kernel == "rbf":
+        return rbf_phi_int(x_q, qm.support, qm.g2_q)
+    if qm.kernel == "poly":
+        return poly_phi_int(x_q, qm.support, qm.gamma_q, qm.coef0_q, qm.degree)
+    raise ValueError(f"phi_int is for kernel machines, not {qm.kernel!r}")
+
+
+# ---------------------------------------------------------------------------
 # integer reference inference (numpy; the jnp oracle lives in kernels/ref.py)
 # ---------------------------------------------------------------------------
 
 
 def scores_int(qm: QuantModel, x_q: np.ndarray) -> np.ndarray:
-    """Integer classifier scores [N, K]; the spec every layer must match."""
+    """Integer classifier scores [N, K]; the spec every layer must match.
+
+    Kernel machines are linear machines over ``phi_int``: the dual
+    coefficients dot the feature map and the bias rides as an
+    (input = KSCALE, weight = b_q) pair."""
+    if qm.kernel != "linear":
+        return phi_int(qm, x_q) @ qm.weights.T.astype(np.int64) + KSCALE * qm.biases.astype(
+            np.int64
+        )
     return x_q.astype(np.int64) @ qm.weights.T.astype(np.int64) + XMAX * qm.biases.astype(
         np.int64
     )
@@ -120,3 +218,125 @@ def predict_int(qm: QuantModel, x_q: np.ndarray) -> np.ndarray:
         votes[pos, i] += 1
         votes[~pos, j] += 1
     return np.argmax(votes, axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# kernel-machine fitting: constants, support selection, train-on-phi
+# ---------------------------------------------------------------------------
+
+
+def quantize_kernel_constants(
+    kernel: str, n_features: int, gamma: float, coef0: float = 1.0, degree: int = 3
+) -> dict:
+    """Quantize the kernel hyper-parameters and validate i32 headroom.
+
+    The gamma constants fold in the 1/225 input rescale (x_q = 15·x, so
+    x·sv = 225·(x̂·ŝv) and |x_q-sv_q|² = 225·|x̂-ŝv|²)."""
+    if gamma <= 0.0:
+        raise ValueError(f"gamma must be positive, got {gamma}")
+    if kernel == "rbf":
+        g2_q = int(round(gamma * np.log2(np.e) * (1 << GSHIFT) / XMAX2))
+        if g2_q <= 0:
+            raise ValueError(f"gamma {gamma} quantizes to a zero exponent constant")
+        if g2_q * n_features * XMAX2 >= 1 << 31:
+            raise ValueError(f"rbf exponent overflows i32: g2_q={g2_q} F={n_features}")
+        return {"g2_q": g2_q}
+    if kernel == "poly":
+        if degree < 1:
+            raise ValueError(f"degree must be >= 1, got {degree}")
+        gamma_q = int(round(gamma * (1 << (KFRAC + GSHIFT)) / XMAX2))
+        coef0_q = int(round(coef0 * KSCALE))
+        if gamma_q <= 0:
+            raise ValueError(f"gamma {gamma} quantizes to zero")
+        if gamma_q * n_features * XMAX2 >= 1 << 31:
+            raise ValueError(f"poly gamma overflows i32: gamma_q={gamma_q} F={n_features}")
+        if abs(coef0_q) > KCLAMP:
+            raise ValueError(f"coef0 {coef0} exceeds the ±{KCLAMP} clamp")
+        return {"gamma_q": gamma_q, "coef0_q": coef0_q, "degree": int(degree)}
+    raise ValueError(f"unknown kernel {kernel!r} (want rbf or poly)")
+
+
+def select_support(
+    x_q: np.ndarray, y: np.ndarray, n_support: int, seed: int = 0
+) -> np.ndarray:
+    """Stratified anchor selection: round-robin the classes, random
+    without replacement inside each (deterministic under ``seed``)."""
+    rng = np.random.default_rng(seed)
+    by_class = [rng.permutation(np.flatnonzero(y == c)) for c in np.unique(y)]
+    picked: list[int] = []
+    depth = 0
+    while len(picked) < min(n_support, x_q.shape[0]):
+        took = False
+        for idxs in by_class:
+            if depth < len(idxs) and len(picked) < n_support:
+                picked.append(int(idxs[depth]))
+                took = True
+        if not took:
+            break
+        depth += 1
+    return x_q[np.sort(np.asarray(picked, dtype=np.int64))].astype(np.int32)
+
+
+def validate_kernel_accumulator(bits: int, n_support: int) -> None:
+    """The score accumulator Σ_s α·phi + KSCALE·b must stay inside i32 —
+    that is what lets the jnp oracle run int32 and the CFU run a 32-bit
+    adder, like the linear PE."""
+    qmax = (1 << (bits - 1)) - 1
+    if n_support * qmax * KCLAMP + KSCALE * qmax >= 1 << 31:
+        raise ValueError(
+            f"S={n_support} at {bits}-bit overflows the i32 score accumulator"
+        )
+
+
+def fit_kernel_machine(
+    kernel: str,
+    x_q: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    strategy: str,
+    bits: int,
+    *,
+    gamma: float | None = None,
+    coef0: float = 1.0,
+    degree: int = 3,
+    n_support: int = 32,
+    seed: int = 0,
+    c_reg: float = 5.0,
+    steps: int = 4000,
+) -> QuantModel:
+    """Train + quantize a kernel machine end to end.
+
+    The trick that keeps every layer bit-exact: support vectors and
+    kernel constants are quantized FIRST, the training features are the
+    *hardware's own* integer feature map (``phi_int / KSCALE``), and the
+    dual coefficients are then quantized exactly like linear weights.
+    Training therefore absorbs every fixed-point artifact (LUT steps,
+    clamping) instead of being approximated by them.
+    """
+    f = int(x_q.shape[1])
+    if gamma is None:
+        gamma = (2.0 if kernel == "rbf" else 1.0) / f
+    consts = quantize_kernel_constants(kernel, f, gamma, coef0, degree)
+    support = select_support(x_q, y, n_support, seed)
+    validate_kernel_accumulator(bits, support.shape[0])
+    probe = dataclasses.replace(
+        _KPROBE, kernel=kernel, support=support, **consts
+    )
+    phi = phi_int(probe, x_q).astype(np.float64) / KSCALE  # [N, S]
+    train = train_ovr if strategy == "ovr" else train_ovo
+    fm = train(phi, y, n_classes, c_reg=c_reg, steps=steps)
+    qm = quantize_model(fm, bits)
+    return dataclasses.replace(qm, kernel=kernel, support=support, **consts)
+
+
+# A template QuantModel for phi evaluation before training exists (only
+# the kernel fields are ever read through it).
+_KPROBE = QuantModel(
+    strategy="ovr",
+    n_classes=2,
+    bits=4,
+    weights=np.zeros((1, 1), np.int32),
+    biases=np.zeros(1, np.int32),
+    pairs=[(0, 0)],
+    scale=1.0,
+)

@@ -1,0 +1,193 @@
+"""Kernel-machine spec tests (ISSUE 8): LUT formula pinning, integer
+feature-map properties, constant validation, the fit pipeline, and the
+three-way differential numpy spec == jnp oracle == Pallas kernel PE."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets as D
+from compile import quantize as Q
+from compile.kernels import kernel_pe as KP
+from compile.kernels import ref
+
+
+def test_exp2_lut_pins_formula():
+    """The hardcoded table IS round(KSCALE * 2^(-i/32)) — the same table
+    is hardcoded in rust/src/kernel/mod.rs; this test is the tripwire
+    for editing one side only."""
+    want = np.round(Q.KSCALE * 2.0 ** (-np.arange(32) / 32.0)).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(Q.EXP2_LUT), want)
+    np.testing.assert_array_equal(np.asarray(ref.EXP2_LUT), want)
+    assert (Q.KFRAC, Q.GSHIFT, Q.LUTB, Q.KCLAMP) == (
+        ref.KFRAC, ref.GSHIFT, ref.LUTB, ref.KCLAMP
+    )
+
+
+def test_rbf_phi_range_and_identity():
+    """phi is in [0, KSCALE]; identical points score full scale."""
+    rng = np.random.default_rng(0)
+    sv = rng.integers(0, 16, size=(8, 6)).astype(np.int32)
+    consts = Q.quantize_kernel_constants("rbf", 6, gamma=2.0 / 6)
+    phi = Q.rbf_phi_int(sv, sv, consts["g2_q"])
+    assert phi.min() >= 0 and phi.max() <= Q.KSCALE
+    np.testing.assert_array_equal(np.diag(phi), Q.KSCALE)
+
+
+def test_rbf_phi_monotone_in_distance():
+    """Farther points never score higher (2^-x is monotone, and the
+    LUT+shift construction must preserve that)."""
+    sv = np.zeros((1, 4), np.int32)
+    consts = Q.quantize_kernel_constants("rbf", 4, gamma=0.5)
+    xs = np.stack([np.full(4, v, np.int32) for v in range(16)])
+    phi = Q.rbf_phi_int(xs, sv, consts["g2_q"])[:, 0]
+    assert (np.diff(phi) <= 0).all()
+    assert phi[0] == Q.KSCALE
+
+
+def test_poly_phi_clamp_and_degree_one():
+    consts = Q.quantize_kernel_constants("poly", 3, gamma=1.0 / 3, degree=1)
+    x = np.array([[15, 15, 15]], np.int32)
+    sv = np.array([[15, 15, 15]], np.int32)
+    phi = Q.poly_phi_int(x, sv, consts["gamma_q"], consts["coef0_q"], 1)
+    assert abs(int(phi[0, 0])) <= Q.KCLAMP
+    # degree 1 is just the clamped affine map
+    d = int(x.astype(np.int64) @ sv.astype(np.int64).T)
+    want = np.clip(
+        (consts["gamma_q"] * d >> Q.GSHIFT) + consts["coef0_q"],
+        -Q.KCLAMP, Q.KCLAMP,
+    )
+    assert int(phi[0, 0]) == int(want)
+
+
+def test_kernel_constants_validation():
+    with pytest.raises(ValueError):
+        Q.quantize_kernel_constants("rbf", 4, gamma=-1.0)
+    with pytest.raises(ValueError):
+        Q.quantize_kernel_constants("rbf", 4, gamma=1e-9)  # quantizes to 0
+    with pytest.raises(ValueError):
+        Q.quantize_kernel_constants("poly", 4, gamma=0.25, degree=0)
+    with pytest.raises(ValueError):
+        Q.quantize_kernel_constants("sigmoid", 4, gamma=0.25)
+    with pytest.raises(ValueError):
+        Q.validate_kernel_accumulator(16, 1 << 20)
+    Q.validate_kernel_accumulator(16, 64)  # the default S is safe at 16-bit
+
+
+def test_select_support_stratified_deterministic():
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 16, size=(40, 5)).astype(np.int32)
+    y = np.array([0] * 30 + [1] * 8 + [2] * 2)
+    sv_a = Q.select_support(x, y, 12, seed=3)
+    sv_b = Q.select_support(x, y, 12, seed=3)
+    np.testing.assert_array_equal(sv_a, sv_b)
+    assert sv_a.shape == (12, 5)
+    # the 2-sample class must still be represented
+    assert any((sv_a == x[i]).all(1).any() for i in (38, 39))
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "poly"])
+@pytest.mark.parametrize("strategy", ["ovr", "ovo"])
+def test_fit_kernel_machine_iris(kernel, strategy):
+    """End-to-end fit: a kernel machine on iris must beat guessing by a
+    wide margin and carry a well-formed quantized spec."""
+    ds = D.load("iris")
+    x_q = Q.quantize_inputs(ds.x_train)
+    qm = Q.fit_kernel_machine(
+        kernel, x_q, ds.y_train, 3, strategy, 8, steps=1500
+    )
+    assert qm.kernel == kernel
+    assert qm.support is not None and qm.support.shape[1] == 4
+    assert qm.weights.shape == (qm.n_classifiers, qm.n_support)
+    assert qm.support.min() >= 0 and qm.support.max() <= 15
+    x_q_test = Q.quantize_inputs(ds.x_test)
+    from compile import train as T
+
+    acc = T.accuracy(Q.predict_int(qm, x_q_test), ds.y_test)
+    assert acc > 0.8, f"{kernel}/{strategy}: acc={acc}"
+
+
+def _rand_kernel_setup(rng, b, s, k, f, bits, kind):
+    qmax = (1 << (bits - 1)) - 1
+    x = rng.integers(0, 16, size=(b, f)).astype(np.int32)
+    sv = rng.integers(0, 16, size=(s, f)).astype(np.int32)
+    w = rng.integers(-qmax, qmax + 1, size=(k, s)).astype(np.int32)
+    bias = rng.integers(-qmax, qmax + 1, size=(k,)).astype(np.int32)
+    if kind == "rbf":
+        consts = {"g2_q": int(rng.integers(1, 5000)), "gamma_q": 0,
+                  "coef0_q": 0, "degree": 0}
+    else:
+        consts = {
+            "g2_q": 0,
+            "gamma_q": int(rng.integers(1, 5000)),
+            "coef0_q": int(rng.integers(-Q.KCLAMP, Q.KCLAMP + 1)),
+            "degree": int(rng.integers(1, 5)),
+        }
+    return x, sv, w, bias, consts
+
+
+def _spec_scores(x, sv, w, bias, kind, consts):
+    if kind == "rbf":
+        phi = Q.rbf_phi_int(x, sv, consts["g2_q"])
+    else:
+        phi = Q.poly_phi_int(
+            x, sv, consts["gamma_q"], consts["coef0_q"], consts["degree"]
+        )
+    return phi @ w.T.astype(np.int64) + Q.KSCALE * bias.astype(np.int64)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 90),
+    s=st.integers(1, 24),
+    k=st.integers(1, 8),
+    f=st.integers(1, 20),
+    bits=st.sampled_from([4, 8, 16]),
+    kind=st.sampled_from(["rbf", "poly"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_pe_matches_spec_hypothesis(b, s, k, f, bits, kind, seed):
+    """Random kernel machines x 4/8/16-bit: the Pallas kernel PE, the
+    jnp oracle, and the numpy spec must agree bit-exactly."""
+    rng = np.random.default_rng(seed)
+    x, sv, w, bias, consts = _rand_kernel_setup(rng, b, s, k, f, bits, kind)
+    want = _spec_scores(x, sv, w, bias, kind, consts)
+    if kind == "rbf":
+        phi_ref = ref.rbf_phi_ref(jnp.asarray(x), jnp.asarray(sv), consts["g2_q"])
+    else:
+        phi_ref = ref.poly_phi_ref(
+            jnp.asarray(x), jnp.asarray(sv), consts["gamma_q"],
+            consts["coef0_q"], consts["degree"],
+        )
+    oracle = ref.kernel_scores_ref(phi_ref, jnp.asarray(w), jnp.asarray(bias))
+    np.testing.assert_array_equal(np.asarray(oracle).astype(np.int64), want)
+    got = KP.kernel_pe_scores(
+        jnp.asarray(x), jnp.asarray(sv), jnp.asarray(w), jnp.asarray(bias),
+        kind=kind, bits=bits, block_b=32, **consts,
+    )
+    np.testing.assert_array_equal(np.asarray(got).astype(np.int64), want)
+
+
+def test_kernel_accumulator_extreme_no_overflow():
+    """Worst-case accumulation (S=64 supports, 16-bit duals, phi at the
+    poly clamp) stays inside int32 — the i32-oracle headroom argument."""
+    s = 64
+    worst = s * 32767 * Q.KCLAMP + Q.KSCALE * 32767
+    assert worst < 2**31
+    x = np.full((2, 4), 15, np.int32)
+    sv = np.full((s, 4), 15, np.int32)
+    w = np.full((3, s), 32767, np.int32)
+    bias = np.full(3, 32767, np.int32)
+    consts = {"g2_q": 0, "gamma_q": 4999, "coef0_q": Q.KCLAMP, "degree": 3}
+    want = _spec_scores(x, sv, w, bias, "poly", consts)
+    got = KP.kernel_pe_scores(
+        jnp.asarray(x), jnp.asarray(sv), jnp.asarray(w), jnp.asarray(bias),
+        kind="poly", bits=16, **consts,
+    )
+    np.testing.assert_array_equal(np.asarray(got).astype(np.int64), want)
+
+
+def test_kernel_vmem_estimate_is_tiny():
+    est = KP.kernel_vmem_estimate_bytes(KP.DEFAULT_BLOCK_B, 35, 64, 15)
+    assert est < 1 << 20

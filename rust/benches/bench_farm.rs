@@ -212,6 +212,7 @@ fn main() -> anyhow::Result<()> {
             &FlexicModel::paper(),
             Some(&stages),
             None,
+            None,
         )
     );
     server.shutdown()?;

@@ -1,0 +1,100 @@
+//! Kernel-family benchmarks (ISSUE 8): the KSVM accelerator op stream
+//! per kernel, a cross-layer differential counter over random RBF/poly
+//! machines, and kernel configs through the serving farm with every
+//! request audited against the analytic bill.
+//!
+//! Works without artifacts — models are the deterministic testing
+//! fixtures — and emits `BENCH_kernels.json` for the perf-smoke gate:
+//! the `kernel_cross_layer_mismatches` and `kernel_audit_mismatches`
+//! metrics must be zero.
+//!
+//!     cargo bench --bench bench_kernels
+
+use flexsvm::farm::{Farm, FarmOpts};
+use flexsvm::kernel::Kernel;
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::svm::infer;
+use flexsvm::testing::{gen, ksvm_emulate_scores};
+use flexsvm::util::benchkit::{write_report, Bench};
+use flexsvm::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg32::seeded(0x6b65);
+
+    // --- KSVM accelerator op stream per family ---
+    let mut b = Bench::new("KSVM op stream (full classifier sweep)");
+    for kernel in [Kernel::Rbf, Kernel::Poly] {
+        let m = gen::tiny_kernel_model("bench", kernel);
+        let xs: Vec<Vec<i32>> =
+            (0..64).map(|_| gen::features(&mut rng, m.n_features)).collect();
+        let mut sink = 0i64;
+        let s = b.case(&format!("{kernel} op-stream sweep x64"), 10, 200, || {
+            sink = xs.iter().map(|x| ksvm_emulate_scores(&m, x).unwrap()[0]).sum();
+        });
+        std::hint::black_box(sink);
+        b.metric(
+            &format!("{kernel} op-stream sweeps"),
+            64.0 / s.median.as_secs_f64() / 1e3,
+            "ksweeps/s",
+        );
+    }
+
+    // --- cross-layer differential: spec == op stream == SERV sim ---
+    let mut b2 = Bench::new("kernel cross-layer differential (random models)");
+    let mut checked = 0u64;
+    let mut mismatches = 0u64;
+    for _ in 0..12 {
+        let m = gen::kernel_model(&mut rng);
+        let mut acc =
+            ProgramRunner::accelerated(&m, TimingConfig::ideal_mem(), ProgramOpts::default())?;
+        for _ in 0..4 {
+            let x = gen::features(&mut rng, m.n_features);
+            let native = infer::scores(&m, &x);
+            let emu = ksvm_emulate_scores(&m, &x)?;
+            let (pred, _) = acc.run_sample(&x)?;
+            checked += 1;
+            if emu != native || pred != infer::predict(&m, &x) {
+                mismatches += 1;
+            }
+        }
+    }
+    b2.metric("kernel cross-layer checks", checked as f64, "samples");
+    b2.metric("kernel_cross_layer_mismatches", mismatches as f64, "mismatches");
+
+    // --- kernel configs through the farm, every request audited ---
+    let mut b3 = Bench::new("kernel serving farm (fastpath, audit_rate 1)");
+    let models = vec![
+        ("rbf".to_string(), gen::tiny_kernel_model("rbf", Kernel::Rbf)),
+        ("poly".to_string(), gen::tiny_kernel_model("poly", Kernel::Poly)),
+    ];
+    let farm = Farm::start(
+        models.clone(),
+        FarmOpts {
+            shards: 1,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            fastpath: true,
+            audit_rate: 1,
+            ..Default::default()
+        },
+    )?;
+    for (key, m) in &models {
+        let xs: Vec<Vec<i32>> =
+            (0..32).map(|_| gen::features(&mut rng, m.n_features)).collect();
+        let s = b3.case(&format!("{key} predict x32 (sim + analytic audit)"), 2, 20, || {
+            for x in &xs {
+                std::hint::black_box(farm.predict(key, x).unwrap());
+            }
+        });
+        b3.metric(&format!("{key} audited throughput"), 32.0 / s.median.as_secs_f64(), "inf/s");
+    }
+    let f = farm.metrics().fast;
+    b3.metric("kernel_fastpath_configs", f.fastpath_configs as f64, "configs");
+    b3.metric("kernel_audit_mismatches", f.mismatches as f64, "mismatches");
+
+    let path = write_report("kernels", &[&b, &b2, &b3])?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

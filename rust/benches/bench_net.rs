@@ -151,6 +151,7 @@ fn main() -> anyhow::Result<()> {
             &FlexicModel::paper(),
             Some(&stages),
             None,
+            None,
         )
     );
     if let Some(fm) = farm.as_ref() {

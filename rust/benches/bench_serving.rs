@@ -36,11 +36,18 @@ fn requests() -> usize {
 }
 
 /// Deterministic in-memory models + natively-labelled feature streams
-/// (the artifact-free fallback, mirroring `serve --synthetic`).
+/// (the artifact-free fallback, mirroring `serve --synthetic`); the
+/// mix includes one config per kernel family so the batch-policy and
+/// fastpath numbers cover the RBF/poly machines too.
 fn synthetic_setup() -> (Vec<(String, QuantModel)>, Vec<(String, TestSet)>) {
     let models = vec![
         ("syn_a".to_string(), gen::tiny_model("syn_a", false)),
         ("syn_b".to_string(), gen::tiny_model("syn_b", true)),
+        ("syn_rbf".to_string(), gen::tiny_kernel_model("syn_rbf", flexsvm::kernel::Kernel::Rbf)),
+        (
+            "syn_poly".to_string(),
+            gen::tiny_kernel_model("syn_poly", flexsvm::kernel::Kernel::Poly),
+        ),
     ];
     let mut rng = Pcg32::seeded(0x5e1f);
     let testsets = models
@@ -102,7 +109,13 @@ fn main() -> anyhow::Result<()> {
     // the bench must always produce its artifact for CI
     let (models, testsets) = match manifest_or_skip("bench_serving: real Table-I configs") {
         Some(manifest) => {
-            let keys = vec!["iris_ovr_w4".to_string(), "seeds_ovo_w4".to_string()];
+            // one linear OvR, one linear OvO, one kernel machine
+            // (kernel keys require artifacts rebuilt since ISSUE 8)
+            let keys = vec![
+                "iris_ovr_w4".to_string(),
+                "seeds_ovo_w4".to_string(),
+                "iris_rbf_ovr_w4".to_string(),
+            ];
             (None, load_testsets(&manifest, &keys)?)
         }
         None => {

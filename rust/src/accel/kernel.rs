@@ -1,0 +1,276 @@
+//! The kernel-SVM co-processor (ISSUE 8): RBF/polynomial feature-map
+//! evaluation + dual accumulate, behind the [`Cfu`] framework interface
+//! at `funct7 = CFU_FUNCT7_KSVM`.
+//!
+//! Structure mirrors [`super::svm::SvmAccel`] with one extra stage: an
+//! inner-product accumulator `acc` fed by `K_ACC` (squared distance for
+//! RBF, dot product for poly — both reuse the eight 4×4 multipliers,
+//! since inputs *and* support vectors are 4-bit unsigned), a fixed-point
+//! kernel evaluator (`kernel::rbf_phi_of_d2` / `poly_phi_of_dot`)
+//! triggered by `K_EVAL`, and the same `cur_sum`/`max_sum`/`max_id`
+//! argmax registers finalized by `K_RES` with the bias riding as an
+//! (input = KSCALE, weight = b_q) pair.
+//!
+//! All compute-cycle counts are data-independent (2 for the RBF
+//! LUT+shift, `degree` for the poly multiply ladder), which is what
+//! lets `program/cost.rs` derive an analytic bill for kernel programs.
+
+use anyhow::{bail, Result};
+
+use crate::isa::ksvm_ops::{self, kcfg};
+use crate::kernel::{poly_phi_of_dot, rbf_phi_of_d2, Kernel, KernelParams, KSCALE};
+
+use super::{Cfu, CfuOutput};
+
+/// 4-bit lanes per `K_ACC` word (inputs and support vectors alike).
+pub const KLANES: usize = 8;
+
+#[derive(Debug, Clone, Default)]
+pub struct KernelAccel {
+    /// Configured kernel (None until `K_CFG kind` arrives).
+    kind: Option<Kernel>,
+    params: KernelParams,
+    /// Inner-product accumulator of the support vector in flight.
+    acc: i64,
+    cur_sum: i64,
+    cur_id: u32,
+    max_sum: i64,
+    max_id: u32,
+    max_valid: bool,
+    /// lifetime op counter (reports)
+    pub ops: u64,
+}
+
+impl KernelAccel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observable register state (tests and the cycle trace).
+    pub fn registers(&self) -> (i64, i64, u32, i64, u32) {
+        (self.acc, self.cur_sum, self.cur_id, self.max_sum, self.max_id)
+    }
+
+    fn cfg(&mut self, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        match rs2 {
+            kcfg::KIND => {
+                self.kind = Some(match rs1 {
+                    ksvm_ops::KIND_RBF => Kernel::Rbf,
+                    ksvm_ops::KIND_POLY => Kernel::Poly,
+                    other => bail!("ksvm: unknown kernel kind {other}"),
+                })
+            }
+            kcfg::GAMMA => match self.kind {
+                Some(Kernel::Rbf) => self.params.g2_q = rs1 as i32,
+                _ => self.params.gamma_q = rs1 as i32,
+            },
+            kcfg::COEF0 => self.params.coef0_q = rs1 as i32,
+            kcfg::DEGREE => self.params.degree = rs1,
+            other => bail!("ksvm: unknown config register {other}"),
+        }
+        Ok(CfuOutput { value: 0, compute_cycles: 1 })
+    }
+
+    /// One pass of the eight-multiplier array: 8 input lanes against 8
+    /// support-vector lanes.  Zero-padded tail lanes contribute 0 in
+    /// both kernels ((0-0)² = 0·0 = 0).
+    fn acc_step(&mut self, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        let kind = match self.kind {
+            Some(k) => k,
+            None => bail!("ksvm: K_ACC before K_CFG kind"),
+        };
+        for lane in 0..KLANES {
+            let x = ((rs1 >> (4 * lane)) & 0xf) as i64;
+            let s = ((rs2 >> (4 * lane)) & 0xf) as i64;
+            self.acc += match kind {
+                Kernel::Rbf => (x - s) * (x - s),
+                _ => x * s,
+            };
+        }
+        debug_assert!(self.acc < 1 << 31, "acc overflowed the 32-bit accumulator");
+        Ok(CfuOutput { value: 0, compute_cycles: 1 })
+    }
+
+    /// Evaluate phi from the accumulator, fold `alpha * phi` into the
+    /// classifier score, and clear the accumulator for the next support
+    /// vector.
+    fn eval(&mut self, rs1: u32) -> Result<CfuOutput> {
+        let alpha = rs1 as i32 as i64;
+        let (phi, cycles) = match self.kind {
+            Some(Kernel::Rbf) => (rbf_phi_of_d2(self.acc, self.params.g2_q), 2),
+            Some(Kernel::Poly) => {
+                (poly_phi_of_dot(self.acc, &self.params), self.params.degree.max(1) as u64)
+            }
+            _ => bail!("ksvm: K_EVAL before K_CFG kind"),
+        };
+        self.cur_sum += alpha * phi;
+        debug_assert!(
+            self.cur_sum.abs() < (1 << 31),
+            "cur_sum overflowed the 32-bit accumulator"
+        );
+        self.acc = 0;
+        Ok(CfuOutput { value: 0, compute_cycles: cycles })
+    }
+
+    /// Finalize a classifier: `+ KSCALE * b_q`, then the identical
+    /// strictly-greater argmax update and sign|max_id result word as
+    /// the linear accelerator's `SV_Res*`.
+    fn res(&mut self, rs1: u32) -> CfuOutput {
+        let b = rs1 as i32 as i64;
+        self.cur_sum += KSCALE * b;
+        let score = self.cur_sum;
+        if !self.max_valid || score > self.max_sum {
+            self.max_sum = score;
+            self.max_id = self.cur_id;
+            self.max_valid = true;
+        }
+        let sign_bit = if score < 0 { 1u32 << 31 } else { 0 };
+        let value = sign_bit | (self.max_id & 0xff);
+        self.cur_sum = 0;
+        self.acc = 0;
+        self.cur_id = self.cur_id.wrapping_add(1);
+        CfuOutput { value, compute_cycles: 1 }
+    }
+}
+
+impl Cfu for KernelAccel {
+    fn name(&self) -> &'static str {
+        "kernel-svm-accelerator"
+    }
+
+    fn reset(&mut self) {
+        // full reset, config registers included — programs re-issue
+        // K_CFG in their prologue (the SoC rearm re-executes from the
+        // start, so configuration is always re-established)
+        *self = KernelAccel { ops: self.ops, ..KernelAccel::default() };
+    }
+
+    fn execute(&mut self, funct3: u8, rs1: u32, rs2: u32) -> Result<CfuOutput> {
+        self.ops += 1;
+        match funct3 {
+            ksvm_ops::K_CFG => self.cfg(rs1, rs2),
+            ksvm_ops::K_ACC => self.acc_step(rs1, rs2),
+            ksvm_ops::K_EVAL => self.eval(rs1),
+            ksvm_ops::K_RES => Ok(self.res(rs1)),
+            ksvm_ops::K_ENV => {
+                self.reset();
+                Ok(CfuOutput { value: 0, compute_cycles: 1 })
+            }
+            other => bail!("ksvm accelerator: unknown funct3 {other}"),
+        }
+    }
+
+    /// NAND2-equivalent estimate: the eight 4×4 multipliers are shared
+    /// with the subtract stage (RBF distance), plus the 32-entry × 9-bit
+    /// 2^-x LUT ROM, a barrel shifter, the poly clamp/multiply ladder
+    /// reusing one 16×16 multiplier, and the argmax register file.
+    fn nand2_equivalents(&self) -> u64 {
+        let multipliers = 8 * 90;
+        let sub_stage = 8 * 18; // 4-bit subtract + abs before squaring
+        let lut_rom = 32 * 9; // ~1 NAND2 per ROM bit
+        let shifter = 32 * 12; // barrel shift for the 2^-zi scaling
+        let poly_ladder = 16 * 16; // shared multiplier + clamp compare
+        let accumulator = 2 * 32 * 9; // acc + cur_sum adders
+        let registers = 6 * 32 * 4 + 32 * 6;
+        multipliers + sub_stage + lut_rom + shifter + poly_ladder + accumulator + registers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ksvm_ops::*;
+    use crate::kernel;
+
+    fn pack4(vals: &[i32]) -> u32 {
+        vals.iter().enumerate().fold(0u32, |w, (i, &v)| {
+            assert!((0..=15).contains(&v));
+            w | ((v as u32) << (4 * i))
+        })
+    }
+
+    fn configure(a: &mut KernelAccel, kind: u32, p: &KernelParams) {
+        a.execute(K_ENV, 0, 0).unwrap();
+        a.execute(K_CFG, kind, kcfg::KIND).unwrap();
+        let gamma = if kind == KIND_RBF { p.g2_q } else { p.gamma_q };
+        a.execute(K_CFG, gamma as u32, kcfg::GAMMA).unwrap();
+        a.execute(K_CFG, p.coef0_q as u32, kcfg::COEF0).unwrap();
+        a.execute(K_CFG, p.degree, kcfg::DEGREE).unwrap();
+    }
+
+    #[test]
+    fn rbf_op_stream_matches_spec() {
+        let p = KernelParams { g2_q: 137, ..Default::default() };
+        let mut a = KernelAccel::new();
+        configure(&mut a, KIND_RBF, &p);
+        let x = [3, 15, 0, 7, 9];
+        let sv = [0, 15, 15, 1, 9];
+        a.execute(K_ACC, pack4(&x), pack4(&sv)).unwrap();
+        let alpha = -5i32;
+        a.execute(K_EVAL, alpha as u32, 0).unwrap();
+        let want = alpha as i64 * kernel::phi(Kernel::Rbf, &p, &x, &sv);
+        assert_eq!(a.registers().1, want);
+        assert_eq!(a.registers().0, 0, "K_EVAL must clear the accumulator");
+    }
+
+    #[test]
+    fn poly_op_stream_matches_spec() {
+        let p = KernelParams { gamma_q: 801, coef0_q: -300, degree: 3, ..Default::default() };
+        let mut a = KernelAccel::new();
+        configure(&mut a, KIND_POLY, &p);
+        // 9 features: two K_ACC words, tail lanes zero-padded
+        let x = [3, 15, 0, 7, 9, 1, 2, 3, 4];
+        let sv = [0, 15, 15, 1, 9, 5, 6, 7, 8];
+        a.execute(K_ACC, pack4(&x[..8]), pack4(&sv[..8])).unwrap();
+        a.execute(K_ACC, pack4(&x[8..]), pack4(&sv[8..])).unwrap();
+        a.execute(K_EVAL, 7, 0).unwrap();
+        let want = 7 * kernel::phi(Kernel::Poly, &p, &x, &sv);
+        assert_eq!(a.registers().1, want);
+    }
+
+    #[test]
+    fn res_adds_kscale_bias_and_tracks_argmax() {
+        let p = KernelParams { g2_q: 137, ..Default::default() };
+        let mut a = KernelAccel::new();
+        configure(&mut a, KIND_RBF, &p);
+        // classifier 0: zero-distance support (phi = KSCALE), alpha 2
+        a.execute(K_ACC, pack4(&[5]), pack4(&[5])).unwrap();
+        a.execute(K_EVAL, 2, 0).unwrap();
+        let r0 = a.execute(K_RES, 1, 0).unwrap().value;
+        assert_eq!(r0 & 0xff, 0);
+        assert_eq!(a.registers().3, 2 * KSCALE + KSCALE);
+        // classifier 1: negative score -> sign bit, argmax stays 0
+        a.execute(K_ACC, pack4(&[5]), pack4(&[5])).unwrap();
+        a.execute(K_EVAL, (-3i32) as u32, 0).unwrap();
+        let r1 = a.execute(K_RES, 0, 0).unwrap().value;
+        assert_eq!(r1 >> 31, 1);
+        assert_eq!(r1 & 0xff, 0);
+    }
+
+    #[test]
+    fn zero_padded_lanes_contribute_nothing() {
+        let p = KernelParams { g2_q: 137, ..Default::default() };
+        let mut a = KernelAccel::new();
+        configure(&mut a, KIND_RBF, &p);
+        a.execute(K_ACC, pack4(&[7]), pack4(&[2])).unwrap();
+        assert_eq!(a.registers().0, 25);
+    }
+
+    #[test]
+    fn unconfigured_ops_rejected() {
+        let mut a = KernelAccel::new();
+        assert!(a.execute(K_ACC, 0, 0).is_err());
+        assert!(a.execute(K_EVAL, 0, 0).is_err());
+        assert!(a.execute(K_CFG, 9, kcfg::KIND).is_err(), "bad kind value");
+        assert!(a.execute(0b110, 0, 0).is_err(), "unknown funct3");
+    }
+
+    #[test]
+    fn env_resets_config_too() {
+        let p = KernelParams { g2_q: 137, ..Default::default() };
+        let mut a = KernelAccel::new();
+        configure(&mut a, KIND_RBF, &p);
+        a.execute(K_ENV, 0, 0).unwrap();
+        assert!(a.execute(K_ACC, 0, 0).is_err(), "kind cleared by K_ENV");
+    }
+}

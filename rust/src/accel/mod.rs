@@ -18,6 +18,7 @@
 //! instance; [`mac::MacAccel`] (funct7 = 2) and [`popcount::PopcountAccel`]
 //! (funct7 = 3) demonstrate the claimed extensibility.
 
+pub mod kernel;
 pub mod mac;
 pub mod pe;
 pub mod popcount;

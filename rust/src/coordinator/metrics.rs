@@ -163,6 +163,11 @@ pub struct ConfigMetrics {
     /// Calibrated software-only baseline cycles/inference for the
     /// accel-vs-baseline ratio (0.0 when unknown / non-Accel).
     pub baseline_cycles_per_inf: f64,
+    /// Kernel family of the served model (`"linear"`/`"rbf"`/`"poly"`;
+    /// empty when unknown — e.g. a keys-only engine or an old peer).
+    pub kernel: String,
+    /// Weight bit-width of the served model (0 when unknown).
+    pub bits: u8,
 }
 
 impl ConfigMetrics {
@@ -183,6 +188,14 @@ impl ConfigMetrics {
         self.energy_mj += other.energy_mj;
         if self.baseline_cycles_per_inf == 0.0 {
             self.baseline_cycles_per_inf = other.baseline_cycles_per_inf;
+        }
+        // model identity: fill in what we don't know (tolerates peers
+        // that predate the kernel/bits fields)
+        if self.kernel.is_empty() {
+            self.kernel = other.kernel.clone();
+        }
+        if self.bits == 0 {
+            self.bits = other.bits;
         }
         match (&mut self.latency, &other.latency) {
             (Some(mine), Some(theirs)) => mine.merge(theirs),
@@ -338,12 +351,22 @@ mod tests {
         b.batches = 1;
         b.batched_samples = 1;
         b.baseline_cycles_per_inf = 777.0;
+        b.kernel = "rbf".into();
+        b.bits = 8;
         b.latency.as_mut().unwrap().record_us(9_000);
         a.merge(&b);
         assert_eq!(a.requests, 4);
         assert_eq!(a.batches, 3);
         assert_eq!(a.sim_cycles, 300);
         assert_eq!(a.baseline_cycles_per_inf, 777.0);
+        assert_eq!(a.kernel, "rbf", "unknown kernel fills from the peer");
+        assert_eq!(a.bits, 8);
+        let mut c = ConfigMetrics::new();
+        c.kernel = "linear".into();
+        c.bits = 4;
+        a.merge(&c);
+        assert_eq!(a.kernel, "rbf", "known kernel is never overwritten");
+        assert_eq!(a.bits, 8);
         let h = a.latency.as_ref().unwrap();
         assert_eq!(h.count(), 2);
         assert_eq!(h.max_us(), 9_000);

@@ -51,6 +51,19 @@ pub use crate::engine::{Backend, EngineMetrics, ServeError, SimCost};
 
 use metrics::ConfigMetrics;
 
+/// Identity of one served config: the key plus the model-family facts
+/// the wire front reports per config in `/healthz` (ISSUE 8).  Fields
+/// are empty/zero when the model source doesn't know them (keys-only
+/// engines, e.g. remote shards that own their models).
+#[derive(Debug, Clone)]
+pub struct ServedConfig {
+    pub key: String,
+    /// `"linear"` / `"rbf"` / `"poly"`; empty when unknown.
+    pub kernel: String,
+    /// Weight bit-width; 0 when unknown.
+    pub bits: u8,
+}
+
 /// A single inference answer.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -293,6 +306,7 @@ fn try_send_error(e: mpsc::TrySendError<Msg>) -> ServeError {
 pub struct Server {
     tx: mpsc::SyncSender<Msg>,
     keys: Vec<String>,
+    served: Vec<ServedConfig>,
     obs: Arc<Obs>,
     join: Option<std::thread::JoinHandle<()>>,
 }
@@ -316,6 +330,12 @@ impl Server {
     /// The config keys this server was started with (the served set).
     pub fn keys(&self) -> &[String] {
         &self.keys
+    }
+
+    /// The served set with model identity: kernel family + bit-width
+    /// per config (what `/healthz` reports on the wire).
+    pub fn served_configs(&self) -> &[ServedConfig] {
+        &self.served
     }
 
     /// Drain queued work, stop the dispatcher and join it.  A
@@ -554,6 +574,30 @@ impl ServerBuilder {
             linger: self.linger,
             eager_flush: self.eager_flush,
         };
+        // model identity (kernel family + bit-width) per served config,
+        // resolved while the source is still on this side — the
+        // dispatcher stamps it into ConfigMetrics, /healthz reports it
+        let served: Vec<ServedConfig> = keys
+            .iter()
+            .map(|k| {
+                let (kernel, bits) = match &source {
+                    ModelSource::Artifacts(man) => man
+                        .config(k)
+                        .map(|c| (c.kernel.to_string(), c.bits))
+                        .unwrap_or_default(),
+                    ModelSource::Inline(map) => {
+                        map.get(k).map(|m| (m.kernel.to_string(), m.bits)).unwrap_or_default()
+                    }
+                    ModelSource::None => Default::default(),
+                };
+                ServedConfig { key: k.clone(), kernel, bits }
+            })
+            .collect();
+        let meta: HashMap<String, (String, u8)> = served
+            .iter()
+            .filter(|s| !s.kernel.is_empty())
+            .map(|s| (s.key.clone(), (s.kernel.clone(), s.bits)))
+            .collect();
         let (tx, rx) = mpsc::sync_channel::<Msg>(self.queue_cap);
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let served_keys = keys.clone();
@@ -561,9 +605,9 @@ impl ServerBuilder {
         let obs_dispatch = Arc::clone(&obs);
         let join = std::thread::Builder::new()
             .name("flexsvm-dispatcher".into())
-            .spawn(move || dispatcher(engine, source, keys, tuning, obs_dispatch, rx, ready_tx))?;
+            .spawn(move || dispatcher(engine, source, keys, meta, tuning, obs_dispatch, rx, ready_tx))?;
         ready_rx.recv().context("dispatcher died during init")??;
-        Ok(Server { tx, keys: served_keys, obs, join: Some(join) })
+        Ok(Server { tx, keys: served_keys, served, obs, join: Some(join) })
     }
 }
 
@@ -578,6 +622,23 @@ struct Tuning {
 
 /// Receive timeout while no request is queued (nothing to linger on).
 const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// The metrics slot for a config, stamped with its model identity
+/// (kernel family + bit-width) on first touch.
+fn stat_entry<'a>(
+    stats: &'a mut HashMap<String, ConfigMetrics>,
+    key: &str,
+    meta: &HashMap<String, (String, u8)>,
+) -> &'a mut ConfigMetrics {
+    let m = stats.entry(key.to_string()).or_insert_with(ConfigMetrics::new);
+    if m.kernel.is_empty() {
+        if let Some((kernel, bits)) = meta.get(key) {
+            m.kernel = kernel.clone();
+            m.bits = *bits;
+        }
+    }
+    m
+}
 
 /// Execute one queued batch on the engine and answer every request.
 /// Per-sample isolation is universal: a failed sample answers its own
@@ -594,6 +655,7 @@ fn flush(
     key: &str,
     q: &mut Vec<Request>,
     stats: &mut HashMap<String, ConfigMetrics>,
+    meta: &HashMap<String, (String, u8)>,
     obs: &Obs,
 ) {
     if q.is_empty() {
@@ -612,7 +674,7 @@ fn flush(
         let msg = format!("engine answered {} samples for a batch of {}", answers.len(), pending.len());
         answers = batch_error(pending.len(), ServeError::Engine(msg));
     }
-    let m = stats.entry(key.to_string()).or_insert_with(ConfigMetrics::new);
+    let m = stat_entry(stats, key, meta);
     m.batches += 1;
     m.batched_samples += pending.len() as u64;
     if let Some(b) = engine.baseline_cycles(key) {
@@ -687,6 +749,7 @@ fn dispatcher(
     mut engine: Box<dyn Engine>,
     source: ModelSource,
     keys: Vec<String>,
+    meta: HashMap<String, (String, u8)>,
     tuning: Tuning,
     obs: Arc<Obs>,
     rx: mpsc::Receiver<Msg>,
@@ -738,15 +801,14 @@ fn dispatcher(
                                 continue;
                             }
                             req.routed = Some(Instant::now());
-                            let m =
-                                stats.entry(req.key.clone()).or_insert_with(ConfigMetrics::new);
+                            let m = stat_entry(&mut stats, &req.key, &meta);
                             m.requests += 1;
                             let q = queues.entry(req.key.clone()).or_default();
                             q.push(req);
                             if q.len() >= tuning.batch_max {
                                 let key = q[0].key.clone();
                                 let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                                flush(engine, &key, &mut taken, &mut stats, &obs);
+                                flush(engine, &key, &mut taken, &mut stats, &meta, &obs);
                             }
                         }
                         Msg::Snapshot(tx) => {
@@ -764,12 +826,12 @@ fn dispatcher(
                         queues.iter().filter(|(_, q)| !q.is_empty()).map(|(k, _)| k.clone()).collect();
                     for key in due {
                         let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                        flush(engine, &key, &mut taken, &mut stats, &obs);
+                        flush(engine, &key, &mut taken, &mut stats, &meta, &obs);
                     }
                 }
                 if shutdown {
                     for (key, mut q) in std::mem::take(&mut queues) {
-                        flush(engine, &key, &mut q, &mut stats, &obs);
+                        flush(engine, &key, &mut q, &mut stats, &meta, &obs);
                     }
                     return;
                 }
@@ -782,7 +844,7 @@ fn dispatcher(
             }
             Ok(Msg::Shutdown) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(engine, &key, &mut q, &mut stats, &obs);
+                    flush(engine, &key, &mut q, &mut stats, &meta, &obs);
                 }
                 return;
             }
@@ -798,12 +860,12 @@ fn dispatcher(
                     .collect();
                 for key in due {
                     let mut taken = std::mem::take(queues.get_mut(&key).unwrap());
-                    flush(engine, &key, &mut taken, &mut stats);
+                    flush(engine, &key, &mut taken, &mut stats, &meta, &obs);
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (key, mut q) in std::mem::take(&mut queues) {
-                    flush(engine, &key, &mut q, &mut stats, &obs);
+                    flush(engine, &key, &mut q, &mut stats, &meta, &obs);
                 }
                 return;
             }

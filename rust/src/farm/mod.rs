@@ -1000,6 +1000,36 @@ mod tests {
         assert!(o1.stages.get(Stage::ShardWait).is_none(), "no shard round trip on the fast path");
     }
 
+    /// Kernel configs (ISSUE 8) serve end-to-end: analytic fast path
+    /// derives, the differential audit never mismatches, calibration
+    /// tolerates the missing software baseline (0 = unknown, never a
+    /// fabricated ratio).
+    #[test]
+    fn kernel_configs_serve_on_the_fast_path_without_mismatches() {
+        let models = vec![
+            ("rbf".to_string(), gen::tiny_kernel_model("rbf", crate::kernel::Kernel::Rbf)),
+            ("poly".to_string(), gen::tiny_kernel_model("poly", crate::kernel::Kernel::Poly)),
+        ];
+        let opts = FarmOpts { calibrate_baseline: true, ..fastpath_opts(4) };
+        let farm = Farm::start(models.clone(), opts).unwrap();
+        let mut rng = crate::util::Pcg32::seeded(0x4e53);
+        for (key, m) in &models {
+            for _ in 0..8 {
+                let x: Vec<i32> = (0..3).map(|_| rng.below(16) as i32).collect();
+                let o = farm.predict(key, &x).unwrap();
+                assert_eq!(o.pred, infer::predict(m, &x), "{key} {x:?}");
+                assert!(o.cycles > 0);
+                assert!(o.energy_mj > 0.0);
+            }
+            assert_eq!(farm.baseline_cycles(key), Some(0.0), "no baseline program exists");
+        }
+        let m = farm.metrics();
+        assert_eq!(m.fast.mismatches, 0, "kernel fast path must stay bit-exact");
+        assert_eq!(m.fast.poisoned_configs, 0);
+        assert_eq!(m.fast.fastpath_configs, 2);
+        assert!(m.fast.fast_jobs > 0, "kernel configs must actually ride the fast path");
+    }
+
     #[test]
     fn baseline_ratio_available_from_request_one() {
         // calibration off: the closed-form static estimate still

@@ -80,6 +80,45 @@ pub mod svm_ops {
     pub const CREATE_ENV: u8 = 0b111;
 }
 
+/// The funct7 value that routes to the kernel-SVM accelerator (ISSUE 8:
+/// RBF/poly feature-map evaluation + dual accumulate).
+pub const CFU_FUNCT7_KSVM: u8 = 4;
+
+/// Kernel-SVM accelerator funct3 encodings.
+///
+/// A kernel pass per support vector is: repeated `K_ACC` over the
+/// packed 4-bit lanes (squared distance for RBF, dot product for poly),
+/// one `K_EVAL` with the dual coefficient (evaluates phi from the
+/// accumulator and folds `alpha * phi` into the score), and per
+/// classifier one `K_RES` with the bias (finalizes `+ KSCALE * b` and
+/// updates the argmax registers exactly like `SV_RES*`).
+pub mod ksvm_ops {
+    /// rs1 = value, rs2 = config register index (see `kcfg`).
+    pub const K_CFG: u8 = 0b000;
+    /// rs1 = 8x4-bit input lanes, rs2 = 8x4-bit support-vector lanes.
+    pub const K_ACC: u8 = 0b001;
+    /// rs1 = signed dual coefficient alpha.
+    pub const K_EVAL: u8 = 0b010;
+    /// rs1 = signed bias; returns sign|max_id like the linear RES ops.
+    pub const K_RES: u8 = 0b011;
+    /// Full reset, config registers included.
+    pub const K_ENV: u8 = 0b111;
+
+    /// `K_CFG` register indices (rs2 operand).
+    pub mod kcfg {
+        /// 1 = rbf, 2 = poly.
+        pub const KIND: u32 = 0;
+        /// rbf `g2_q` / poly `gamma_q`.
+        pub const GAMMA: u32 = 1;
+        pub const COEF0: u32 = 2;
+        pub const DEGREE: u32 = 3;
+    }
+
+    /// `kcfg::KIND` values.
+    pub const KIND_RBF: u32 = 1;
+    pub const KIND_POLY: u32 = 2;
+}
+
 /// A decoded RV32I (+ custom CFU) instruction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Instr {

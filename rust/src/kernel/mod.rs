@@ -1,0 +1,208 @@
+//! Fixed-point kernel evaluation — the Rust twin of the kernel spec in
+//! `python/compile/quantize.py` (ISSUE 8).
+//!
+//! A kernel machine is a linear machine over the integer feature map
+//! `phi`: per support vector `s`, `phi[s] = K(x_q, sv_q[s])` evaluated
+//! entirely in integers, then the dual coefficients ride the existing
+//! linear accumulate with the bias as an (input = `KSCALE`, weight =
+//! `b_q`) pair.  Every constant and every shift here has a textual twin
+//! in the Python spec; `exp2_lut_pins_formula` is the tripwire for
+//! editing one side only.
+//!
+//! Shared by `svm::infer` (native scores), `accel::kernel` (the KSVM
+//! CFU), and — through those — the SERV programs and the wire front.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Error};
+
+/// Fractional bits of the kernel feature map phi.
+pub const KFRAC: u32 = 8;
+/// Phi full scale; also the kernel bias "input".
+pub const KSCALE: i64 = 1 << KFRAC;
+/// Fractional bits of the quantized gamma constants.
+pub const GSHIFT: u32 = 12;
+/// log2(EXP2_LUT entries).
+pub const LUTB: u32 = 5;
+/// Poly feature-map clamp: keeps every product inside i32.
+pub const KCLAMP: i64 = 1 << 10;
+
+/// `EXP2_LUT[i] = round(KSCALE * 2^(-i/32))` — one 2^-x period in
+/// KFRAC fixed point.  Hardcoded (not computed) so the Python twin is
+/// textually identical.
+pub const EXP2_LUT: [i64; 32] = [
+    256, 251, 245, 240, 235, 230, 225, 220, 215, 211, 206, 202, 197, 193, 189, 185, 181, 177,
+    173, 170, 166, 162, 159, 156, 152, 149, 146, 143, 140, 137, 134, 131,
+];
+
+/// Which kernel a quantized model evaluates (per-config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    #[default]
+    Linear,
+    Rbf,
+    Poly,
+}
+
+impl FromStr for Kernel {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Kernel, Error> {
+        match s {
+            "linear" => Ok(Kernel::Linear),
+            "rbf" => Ok(Kernel::Rbf),
+            "poly" => Ok(Kernel::Poly),
+            _ => bail!("unknown kernel {s:?} (want linear|rbf|poly)"),
+        }
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Kernel::Linear => "linear",
+            Kernel::Rbf => "rbf",
+            Kernel::Poly => "poly",
+        })
+    }
+}
+
+/// Quantized kernel hyper-parameters (all zero for linear models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KernelParams {
+    /// rbf: `round(gamma * log2(e) * 2^GSHIFT / 225)`.
+    pub g2_q: i32,
+    /// poly: `round(gamma * 2^(KFRAC+GSHIFT) / 225)`.
+    pub gamma_q: i32,
+    /// poly: `round(coef0 * KSCALE)`.
+    pub coef0_q: i32,
+    /// poly: exponent, >= 1.
+    pub degree: u32,
+}
+
+/// RBF feature value from a squared distance: LUT'd `2^-x` with the
+/// exponent in GSHIFT fixed point.  `d2 * g2_q` must fit i32 (the
+/// quantizer validates `g2_q * F * 225 < 2^31`).
+pub fn rbf_phi_of_d2(d2: i64, g2_q: i32) -> i64 {
+    let z = g2_q as i64 * d2;
+    let zi = z >> GSHIFT;
+    let zf = (z >> (GSHIFT - LUTB)) & ((1 << LUTB) - 1);
+    if zi >= 31 {
+        0
+    } else {
+        EXP2_LUT[zf as usize] >> zi.min(62)
+    }
+}
+
+/// Poly feature value from a dot product: clamped affine map raised to
+/// `degree` by a KFRAC fixed-point multiply ladder.  The ±KCLAMP clamp
+/// is part of the feature-map definition (training sees it).
+pub fn poly_phi_of_dot(d: i64, p: &KernelParams) -> i64 {
+    let t = ((p.gamma_q as i64 * d) >> GSHIFT) + p.coef0_q as i64;
+    let t = t.clamp(-KCLAMP, KCLAMP);
+    let mut acc = t;
+    for _ in 1..p.degree {
+        acc = ((acc * t) >> KFRAC).clamp(-KCLAMP, KCLAMP);
+    }
+    acc
+}
+
+/// Squared distance between a 4-bit input and a 4-bit support vector.
+pub fn sq_dist(x_q: &[i32], sv: &[i32]) -> i64 {
+    x_q.iter().zip(sv).map(|(&x, &s)| ((x - s) as i64).pow(2)).sum()
+}
+
+/// Dot product between a 4-bit input and a 4-bit support vector.
+pub fn dot(x_q: &[i32], sv: &[i32]) -> i64 {
+    x_q.iter().zip(sv).map(|(&x, &s)| x as i64 * s as i64).sum()
+}
+
+/// The integer feature value of one support vector.
+pub fn phi(kernel: Kernel, params: &KernelParams, x_q: &[i32], sv: &[i32]) -> i64 {
+    debug_assert_eq!(x_q.len(), sv.len(), "feature arity");
+    match kernel {
+        Kernel::Linear => panic!("phi is for kernel machines, not linear"),
+        Kernel::Rbf => rbf_phi_of_d2(sq_dist(x_q, sv), params.g2_q),
+        Kernel::Poly => poly_phi_of_dot(dot(x_q, sv), params),
+    }
+}
+
+/// The full feature map `[phi(x, sv_s)]_s` of one sample.
+pub fn feature_map(
+    kernel: Kernel,
+    params: &KernelParams,
+    support: &[Vec<i32>],
+    x_q: &[i32],
+) -> Vec<i64> {
+    support.iter().map(|sv| phi(kernel, params, x_q, sv)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2_lut_pins_formula() {
+        for (i, &v) in EXP2_LUT.iter().enumerate() {
+            let want = (KSCALE as f64 * 2f64.powf(-(i as f64) / 32.0)).round() as i64;
+            assert_eq!(v, want, "EXP2_LUT[{i}]");
+        }
+    }
+
+    #[test]
+    fn kernel_round_trips_strings() {
+        for k in [Kernel::Linear, Kernel::Rbf, Kernel::Poly] {
+            assert_eq!(k.to_string().parse::<Kernel>().unwrap(), k);
+        }
+        assert!("sigmoid".parse::<Kernel>().is_err());
+    }
+
+    #[test]
+    fn rbf_full_scale_at_zero_distance() {
+        assert_eq!(rbf_phi_of_d2(0, 1000), KSCALE);
+    }
+
+    #[test]
+    fn rbf_monotone_in_distance() {
+        let g2_q = 137;
+        let mut prev = i64::MAX;
+        for d2 in 0..4000 {
+            let v = rbf_phi_of_d2(d2, g2_q);
+            assert!(v <= prev, "phi must not grow with distance (d2={d2})");
+            assert!((0..=KSCALE).contains(&v));
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn rbf_underflows_to_zero() {
+        // zi >= 31 -> exact zero, and huge exponents don't shift-overflow
+        assert_eq!(rbf_phi_of_d2(1 << 24, 1 << 12), 0);
+    }
+
+    #[test]
+    fn poly_degree_one_is_clamped_affine() {
+        let p = KernelParams { gamma_q: 801, coef0_q: -300, degree: 1, ..Default::default() };
+        let d = 187;
+        assert_eq!(poly_phi_of_dot(d, &p), ((801 * d) >> GSHIFT) - 300);
+        // saturation
+        let hot = KernelParams { gamma_q: 4999, coef0_q: 1024, degree: 1, ..Default::default() };
+        assert_eq!(poly_phi_of_dot(35 * 225, &hot), KCLAMP);
+    }
+
+    #[test]
+    fn poly_ladder_clamps_every_step() {
+        let p = KernelParams { gamma_q: 4999, coef0_q: -1024, degree: 4, ..Default::default() };
+        let v = poly_phi_of_dot(35 * 225, &p);
+        assert!((-KCLAMP..=KCLAMP).contains(&v));
+    }
+
+    #[test]
+    fn distance_and_dot_agree_with_naive() {
+        let x = [0, 7, 15, 3];
+        let sv = [15, 7, 0, 4];
+        assert_eq!(sq_dist(&x, &sv), 225 + 0 + 225 + 1);
+        assert_eq!(dot(&x, &sv), 0 + 49 + 0 + 12);
+    }
+}

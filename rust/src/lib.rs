@@ -11,6 +11,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod farm;
 pub mod isa;
+pub mod kernel;
 pub mod net;
 pub mod obs;
 pub mod power;

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   table1        regenerate Table I on the cycle-accurate SERV SoC
 //!   area-power    the §V-B area/power paragraph
-//!   golden-check  cross-layer bit-exactness sweep over all 30 configs
+//!   golden-check  cross-layer bit-exactness sweep over every manifest
+//!                 config — linear PE array and RBF/poly kernel machines
 //!   sim           run one config's test set on the SoC (baseline+accel)
 //!   trace         Fig. 2 life-cycle trace of accelerator instructions
 //!   serve         serving loop: local drive, or `--listen` for the wire
@@ -129,14 +130,22 @@ fn cmd_golden_check() -> Result<()> {
             if native_pred != golden.pred[i] {
                 bail!("{}: native pred diverges at sample {i}", entry.key);
             }
-            // accelerator model via packed-word emulation
-            let mode = pack::mode_for_bits(model.bits);
-            let fw = pack::feature_words(x, model.bits);
-            for (k, &gs) in golden.scores[i].iter().enumerate() {
-                let ww = pack::weight_words(&model, k);
-                let s: i64 = fw.iter().zip(&ww).map(|(&a, &b)| pe::compute(a, b, mode)).sum();
-                if s != gs {
-                    bail!("{}: PE emulation diverges at sample {i} classifier {k}", entry.key);
+            // accelerator model: linear PE array via packed-word
+            // emulation, kernel machines via the KSVM op stream
+            if model.is_kernel() {
+                let scores = flexsvm::testing::ksvm_emulate_scores(&model, x)?;
+                if scores != golden.scores[i] {
+                    bail!("{}: KSVM emulation diverges at sample {i}", entry.key);
+                }
+            } else {
+                let mode = pack::mode_for_bits(model.bits);
+                let fw = pack::feature_words(x, model.bits);
+                for (k, &gs) in golden.scores[i].iter().enumerate() {
+                    let ww = pack::weight_words(&model, k);
+                    let s: i64 = fw.iter().zip(&ww).map(|(&a, &b)| pe::compute(a, b, mode)).sum();
+                    if s != gs {
+                        bail!("{}: PE emulation diverges at sample {i} classifier {k}", entry.key);
+                    }
                 }
             }
             // SERV-executed program
@@ -323,11 +332,16 @@ fn install_ctrlc() -> &'static AtomicBool {
 }
 
 /// Deterministic in-memory models for `--synthetic` (the CI socket
-/// smoke runs without artifacts): two mirrored tiny 2-class configs.
+/// smoke runs without artifacts): two mirrored tiny linear 2-class
+/// configs plus one config per kernel family.
 fn synthetic_models() -> Vec<(String, flexsvm::svm::QuantModel)> {
+    use flexsvm::kernel::Kernel;
+    use flexsvm::testing::gen;
     vec![
-        ("syn_a".to_string(), flexsvm::testing::gen::tiny_model("syn_a", false)),
-        ("syn_b".to_string(), flexsvm::testing::gen::tiny_model("syn_b", true)),
+        ("syn_a".to_string(), gen::tiny_model("syn_a", false)),
+        ("syn_b".to_string(), gen::tiny_model("syn_b", true)),
+        ("syn_rbf".to_string(), gen::tiny_kernel_model("syn_rbf", Kernel::Rbf)),
+        ("syn_poly".to_string(), gen::tiny_kernel_model("syn_poly", Kernel::Poly)),
     ]
 }
 
@@ -442,6 +456,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 &flexsvm::power::FlexicModel::paper(),
                 Some(&stages),
                 engine.fleet.as_ref(),
+                Some(&r.per_config),
             )
         );
     }

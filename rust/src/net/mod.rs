@@ -13,7 +13,7 @@
 //!
 //! | route             | method | body / answer |
 //! |-------------------|--------|----------------|
-//! | `/healthz`        | GET    | `{"status":"ok","engine":..,"configs":[..]}` |
+//! | `/healthz`        | GET    | `{"status":"ok","engine":..,"configs":[{"key":..,"kernel":..,"bits":..},..]}` |
 //! | `/v1/infer`       | POST   | `{"config":k,"features":[..]}` → one answer; `{"config":k,"batch":[[..],..]}` → `{"results":[..]}` with per-sample isolation.  An explicit trace (`"trace"`/`"traces"` field or `X-Trace-Id` header) makes the answer carry its span tree |
 //! | `/v1/metrics`     | GET    | `ConfigMetrics` + `EngineMetrics` + net counters |
 //! | `/metrics`        | GET    | Prometheus text format (counters + latency/stage histograms) |
@@ -332,6 +332,13 @@ pub mod wire {
             let Json::Obj(map) = &mut o else { unreachable!() };
             map.insert("latency".to_string(), histogram_json(h));
         }
+        // model identity travels only when known, so pre-kernel peers
+        // see exactly the document they always saw
+        if !m.kernel.is_empty() {
+            let Json::Obj(map) = &mut o else { unreachable!() };
+            map.insert("kernel".to_string(), Json::Str(m.kernel.clone()));
+            map.insert("bits".to_string(), (m.bits as u64).into());
+        }
         o
     }
 
@@ -352,6 +359,11 @@ pub mod wire {
             Some(h) => Some(histogram_from_json(h)?),
             None => None,
         };
+        // peers that predate mixed kernels omit the model identity;
+        // empty/zero means unknown and the merge treats it as fillable
+        m.kernel =
+            v.opt("kernel").and_then(|k| k.as_str().ok()).unwrap_or_default().to_string();
+        m.bits = v.opt("bits").and_then(|b| b.as_i64().ok()).unwrap_or(0).clamp(0, 255) as u8;
         Ok(m)
     }
 
@@ -559,6 +571,8 @@ mod tests {
         m.sim_cycles = 420_000;
         m.energy_mj = 9.38;
         m.baseline_cycles_per_inf = 2_100_000.0;
+        m.kernel = "rbf".into();
+        m.bits = 8;
         let h = m.latency.as_mut().unwrap();
         for us in [3u64, 42, 42, 180, 950, 12_000, 88_000] {
             h.record_us(us);
@@ -567,6 +581,8 @@ mod tests {
         let back = wire::config_metrics_from_json(&j).unwrap();
         assert_eq!(back.requests, 7);
         assert_eq!(back.sim_cycles, 420_000);
+        assert_eq!(back.kernel, "rbf", "model identity rides the wire");
+        assert_eq!(back.bits, 8);
         let hb = back.latency.as_ref().expect("buckets ride the wire");
         let ha = m.latency.as_ref().unwrap();
         assert_eq!(hb.counts(), ha.counts(), "bucket-exact round trip");
@@ -591,6 +607,8 @@ mod tests {
         assert_eq!(back.requests, 5);
         assert!((back.energy_mj - 1.5).abs() < 1e-12);
         assert!(back.latency.is_none(), "summary-only peers decode without buckets");
+        assert!(back.kernel.is_empty(), "pre-kernel peers decode as unknown family");
+        assert_eq!(back.bits, 0);
     }
 
     #[test]

@@ -229,11 +229,17 @@ impl Engine for RemoteEngine {
                 bail!("node {addr} unhealthy: HTTP {} ({})", resp.status, resp.body);
             }
             let doc = resp.json().map_err(anyhow::Error::from)?;
+            // two healthz generations are in the field: plain key
+            // strings (pre-kernel nodes) and {"key","kernel","bits"}
+            // objects — accept both
             let served: Vec<String> = doc
                 .get("configs")?
                 .as_arr()?
                 .iter()
-                .map(|k| Ok(k.as_str()?.to_string()))
+                .map(|k| match k {
+                    Json::Str(s) => Ok(s.clone()),
+                    obj => Ok(obj.get("key")?.as_str()?.to_string()),
+                })
                 .collect::<Result<_>>()?;
             for key in keys {
                 if !served.iter().any(|s| s == key) {

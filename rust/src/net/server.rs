@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
-use crate::coordinator::{Client, Server};
+use crate::coordinator::{Client, ServedConfig, Server};
 use crate::engine::ServeError;
 use crate::obs::{Span, Stage, TraceId};
 use crate::util::json::{obj, Json, Limits};
@@ -107,7 +107,7 @@ impl Counters {
 /// Shared state between the acceptor and the workers.
 struct Ctx {
     client: Client,
-    keys: Vec<String>,
+    served: Vec<ServedConfig>,
     counters: Counters,
     stop: AtomicBool,
     opts: NetOpts,
@@ -133,7 +133,7 @@ impl NetServer {
         let addr = listener.local_addr()?;
         let ctx = Arc::new(Ctx {
             client: server.client(),
-            keys: server.keys().to_vec(),
+            served: server.served_configs().to_vec(),
             counters: Counters::default(),
             stop: AtomicBool::new(false),
             opts: opts.clone(),
@@ -470,7 +470,24 @@ fn healthz(ctx: &Ctx) -> Answer {
         Ok(em) => Answer::ok(obj([
             ("status", "ok".into()),
             ("engine", em.engine.as_str().into()),
-            ("configs", Json::Arr(ctx.keys.iter().map(|k| k.as_str().into()).collect())),
+            // each served config is an object carrying the model-family
+            // facts (kernel + bit-width); peers that only want the keys
+            // read the "key" field and ignore the rest
+            (
+                "configs",
+                Json::Arr(
+                    ctx.served
+                        .iter()
+                        .map(|s| {
+                            obj([
+                                ("key", s.key.as_str().into()),
+                                ("kernel", s.kernel.as_str().into()),
+                                ("bits", (s.bits as u64).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])),
         Err(e) => shed_aware_error(ctx, e),
     }

@@ -1,21 +1,31 @@
 //! Accelerated SVM inference (paper Algorithm 1) using the custom
-//! instruction set of Fig. 8.
+//! instruction set of Fig. 8, plus the kernel-machine variant (ISSUE 8)
+//! on the `K_*` ops of [`crate::isa::ksvm_ops`].
 //!
-//! Per classifier: stream packed (features, weights) word pairs through
-//! `SV_Calc{4,8,16}`, finalise with `SV_Res{4,8,16}`.  OvR reads the
-//! running `max_id` from the last result; OvO extracts the sign bit and
-//! tallies votes in software.  The calc stream is fully unrolled when
-//! small (inline-asm style); Dermatology-sized models keep the loop.
+//! Linear: per classifier stream packed (features, weights) word pairs
+//! through `SV_Calc{4,8,16}`, finalise with `SV_Res{4,8,16}`.  Kernel:
+//! per classifier loop over the support set — `K_ACC` the packed 4-bit
+//! lane words (squared distance or dot product), `K_EVAL` the dual
+//! coefficient, finalise with `K_RES` carrying the bias.  Both variants
+//! share the OvR/OvO result plumbing: OvR reads the running `max_id`
+//! from the last result; OvO extracts the sign bit and tallies votes in
+//! software.  The linear calc stream is fully unrolled when small
+//! (inline-asm style); Dermatology-sized models and all kernel programs
+//! keep the loop (only the innermost per-word stream is unrolled — the
+//! word count per support vector is tiny).
 //!
-//! Register allocation:
-//!   s0 packed-feature base   s1 weight-word ptr   s3 K   s4 k
-//!   s7 words/classifier      s8/s9 pair ptrs      s10 votes base
-//!   t0 result                t1 j                 t2 feature ptr
+//! Register allocation (shared; kernel reuses s1 for the dual/bias word
+//! walk, s2 for the support-vector base, s7 for the support count):
+//!   s0 packed-feature base   s1 weight-word ptr   s2 sv base (kernel)
+//!   s3 K                     s4 k                 s7 words/classifier | S
+//!   s8/s9 pair ptrs          s10 votes base
+//!   t0 result                t1 j | s             t2 feature/sv ptr
 
 use anyhow::Result;
 
 use crate::isa::reg::*;
-use crate::isa::{svm_ops, Asm, CFU_FUNCT7_SVM};
+use crate::isa::{ksvm_ops, svm_ops, Asm, CFU_FUNCT7_KSVM, CFU_FUNCT7_SVM};
+use crate::kernel::Kernel;
 use crate::svm::model::{QuantModel, Strategy};
 use crate::svm::pack;
 
@@ -39,8 +49,81 @@ fn res_f3(bits: u8) -> u8 {
     }
 }
 
-/// Build the accelerated inference program.
+/// OvO pointer setup + votes zeroing (fresh state every run) — shared
+/// prologue tail of the linear and kernel programs.
+fn emit_ovo_setup(a: &mut Asm, c: usize) {
+    a.la(S8, "pairs_i");
+    a.la(S9, "pairs_j");
+    a.la(S10, "votes");
+    a.mv(T0, S10);
+    a.li(T1, c as i32);
+    a.label("zv_loop");
+    a.sw(T0, ZERO, 0);
+    a.addi(T0, T0, 4);
+    a.addi(T1, T1, -1);
+    a.bne(T1, ZERO, "zv_loop");
+}
+
+/// Per-classifier OvO vote on the CFU result in t0: bit 31 set =>
+/// negative score => vote pairs_j — shared by both program variants (the
+/// analytic cost model's `vote_detour` term is pinned to this shape).
+fn emit_ovo_vote(a: &mut Asm, suffix: &str) {
+    let vi = format!("vote_i{suffix}");
+    let dv = format!("do_vote{suffix}");
+    a.srli(T5, T0, 31);
+    a.beq(T5, ZERO, &vi);
+    a.lw(T5, S9, 0);
+    a.j(&dv);
+    a.label(&vi);
+    a.lw(T5, S8, 0);
+    a.label(&dv);
+    a.slli(T5, T5, 2);
+    a.add(T5, T5, S10);
+    a.lw(T4, T5, 0);
+    a.addi(T4, T4, 1);
+    a.sw(T5, T4, 0);
+    a.addi(S8, S8, 4);
+    a.addi(S9, S9, 4);
+}
+
+/// Result epilogue: OvR reads `max_id` from the last CFU result; OvO
+/// argmaxes the vote array (first max wins, matching `argmax_first`).
+fn emit_epilogue(a: &mut Asm, strategy: Strategy, c: usize) {
+    match strategy {
+        Strategy::Ovr => {
+            // Algorithm 1: max_id <- result & 0xFF
+            a.andi(A0, T0, 0xff);
+            a.ecall();
+        }
+        Strategy::Ovo => {
+            a.la(T6, "votes");
+            a.li(T0, 0);
+            a.li(T1, c as i32);
+            a.label("am_loop");
+            a.lw(T2, T6, 0);
+            a.beq(T0, ZERO, "am_update");
+            a.blt(S5, T2, "am_update");
+            a.j("am_next");
+            a.label("am_update");
+            a.mv(S5, T2);
+            a.mv(S6, T0);
+            a.label("am_next");
+            a.addi(T6, T6, 4);
+            a.addi(T0, T0, 1);
+            a.blt(T0, T1, "am_loop");
+            a.mv(A0, S6);
+            a.ecall();
+        }
+    }
+}
+
+/// Build the accelerated inference program (dispatches on the model's
+/// kernel: linear models use the paper's `SV_*` ops, kernel machines the
+/// `K_*` ops).
 pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
+    if m.is_kernel() {
+        return build_kernel(m, opts);
+    }
     let k = m.n_classifiers();
     let c = m.n_classes;
     let nw = pack::words_per_classifier(m.n_features, m.bits);
@@ -54,39 +137,10 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
     a.la(S0, "fwords");
     a.la(S1, "wwords");
     if m.strategy == Strategy::Ovo {
-        a.la(S8, "pairs_i");
-        a.la(S9, "pairs_j");
-        a.la(S10, "votes");
-        a.mv(T0, S10);
-        a.li(T1, c as i32);
-        a.label("zv_loop");
-        a.sw(T0, ZERO, 0);
-        a.addi(T0, T0, 4);
-        a.addi(T1, T1, -1);
-        a.bne(T1, ZERO, "zv_loop");
+        emit_ovo_setup(&mut a, c);
     }
 
     // per-classifier body, emitted once (loop) or K times (unrolled)
-    let emit_ovo_vote = |a: &mut Asm, suffix: &str| {
-        // t0 = SV_Res result; bit 31 set => negative => vote pairs_j
-        let vi = format!("vote_i{suffix}");
-        let dv = format!("do_vote{suffix}");
-        a.srli(T5, T0, 31);
-        a.beq(T5, ZERO, &vi);
-        a.lw(T5, S9, 0);
-        a.j(&dv);
-        a.label(&vi);
-        a.lw(T5, S8, 0);
-        a.label(&dv);
-        a.slli(T5, T5, 2);
-        a.add(T5, T5, S10);
-        a.lw(T4, T5, 0);
-        a.addi(T4, T4, 1);
-        a.sw(T5, T4, 0);
-        a.addi(S8, S8, 4);
-        a.addi(S9, S9, 4);
-    };
-
     if unroll {
         // straight-line: lw/lw/sv.calc per word, sv.res per classifier
         for kk in 0..k {
@@ -124,32 +178,7 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
     }
 
     // ---- epilogue ----
-    match m.strategy {
-        Strategy::Ovr => {
-            // Algorithm 1: max_id <- result & 0xFF
-            a.andi(A0, T0, 0xff);
-            a.ecall();
-        }
-        Strategy::Ovo => {
-            a.la(T6, "votes");
-            a.li(T0, 0);
-            a.li(T1, c as i32);
-            a.label("am_loop");
-            a.lw(T2, T6, 0);
-            a.beq(T0, ZERO, "am_update");
-            a.blt(S5, T2, "am_update");
-            a.j("am_next");
-            a.label("am_update");
-            a.mv(S5, T2);
-            a.mv(S6, T0);
-            a.label("am_next");
-            a.addi(T6, T6, 4);
-            a.addi(T0, T0, 1);
-            a.blt(T0, T1, "am_loop");
-            a.mv(A0, S6);
-            a.ecall();
-        }
-    }
+    emit_epilogue(&mut a, m.strategy, c);
 
     // ---- data ----
     let text_words = (a.here() / 4) as usize;
@@ -167,6 +196,116 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
     }
 
     let mut built = finish(&a, ProgramKind::Accelerated, "fwords", nw)?;
+    built.text_words = text_words;
+    Ok(built)
+}
+
+/// Build the kernel-machine inference program on the `K_*` op family.
+///
+/// Structure per classifier k: for each support vector s, `K_ACC` the
+/// `ceil(F/8)` packed lane-word pairs (unrolled — the per-vector word
+/// count is tiny), then `K_EVAL` with `alpha[k][s]`; after the support
+/// loop one `K_RES` with `b[k]` yields the sign|max_id result word that
+/// feeds the shared OvR/OvO plumbing.  The config registers are
+/// programmed in the prologue after `K_ENV` — the SoC re-executes the
+/// program from its entry on every rearm, so each run reconfigures.
+///
+/// The data-dependent cycle structure is identical to the linear
+/// program's (only the OvO vote detour and argmax update vary with the
+/// input — `K_EVAL`'s compute cycles depend on the configured kernel,
+/// not the data), so `cost::AnalyticModel` derives for these programs
+/// unchanged.
+fn build_kernel(m: &QuantModel, _opts: ProgramOpts) -> Result<BuiltProgram> {
+    let k = m.n_classifiers();
+    let c = m.n_classes;
+    let s = m.n_support();
+    let nwf = pack::kernel_words_per_sv(m.n_features);
+    let mut a = Asm::new(0);
+
+    // ---- prologue: full reset, then program the config registers ----
+    a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_ENV, ZERO, ZERO, ZERO);
+    let kind = match m.kernel {
+        Kernel::Rbf => ksvm_ops::KIND_RBF,
+        Kernel::Poly => ksvm_ops::KIND_POLY,
+        Kernel::Linear => unreachable!("build_kernel is only called for kernel models"),
+    };
+    let cfg = |a: &mut Asm, reg: u32, value: i32| {
+        a.li(T3, value);
+        a.li(T4, reg as i32);
+        a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_CFG, ZERO, T3, T4);
+    };
+    cfg(&mut a, ksvm_ops::kcfg::KIND, kind as i32);
+    // GAMMA routes to g2_q (rbf) or gamma_q (poly) by the kind above
+    let gamma = match m.kernel {
+        Kernel::Rbf => m.kparams.g2_q,
+        _ => m.kparams.gamma_q,
+    };
+    cfg(&mut a, ksvm_ops::kcfg::GAMMA, gamma);
+    if m.kernel == Kernel::Poly {
+        cfg(&mut a, ksvm_ops::kcfg::COEF0, m.kparams.coef0_q);
+        cfg(&mut a, ksvm_ops::kcfg::DEGREE, m.kparams.degree as i32);
+    }
+
+    a.la(S0, "fwords");
+    a.la(S1, "awords");
+    a.la(S2, "svwords");
+    if m.strategy == Strategy::Ovo {
+        emit_ovo_setup(&mut a, c);
+    }
+    a.li(S3, k as i32);
+    a.li(S4, 0);
+    a.li(S7, s as i32);
+
+    // ---- per-classifier / per-support loops ----
+    a.label("loop_k");
+    a.mv(T2, S2); // every classifier re-walks the shared support set
+    a.li(T1, 0);
+    a.label("loop_s");
+    for j in 0..nwf {
+        a.lw(A0, S0, (j * 4) as i32);
+        a.lw(A1, T2, (j * 4) as i32);
+        a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_ACC, ZERO, A0, A1);
+    }
+    a.addi(T2, T2, (nwf * 4) as i32);
+    a.lw(A0, S1, 0); // alpha[k][s]
+    a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_EVAL, ZERO, A0, ZERO);
+    a.addi(S1, S1, 4);
+    a.addi(T1, T1, 1);
+    a.blt(T1, S7, "loop_s");
+    a.lw(A0, S1, 0); // b[k]
+    a.addi(S1, S1, 4);
+    a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_RES, T0, A0, ZERO);
+    if m.strategy == Strategy::Ovo {
+        emit_ovo_vote(&mut a, "");
+    }
+    a.addi(S4, S4, 1);
+    a.blt(S4, S3, "loop_k");
+
+    // ---- epilogue ----
+    emit_epilogue(&mut a, m.strategy, c);
+
+    // ---- data ----
+    let text_words = (a.here() / 4) as usize;
+    a.label("fwords");
+    a.zeros(nwf); // host-poked packed features (8x4-bit lanes, no bias lane)
+    a.label("awords");
+    for kk in 0..k {
+        // per classifier: S dual-coefficient words, then the bias word
+        a.words_i32(&m.weights[kk]);
+        a.words_i32(&[m.biases[kk]]);
+    }
+    a.label("svwords");
+    a.words(&pack::all_kernel_sv_words(m));
+    if m.strategy == Strategy::Ovo {
+        a.label("pairs_i");
+        a.words_i32(&m.pairs.iter().map(|p| p.0 as i32).collect::<Vec<_>>());
+        a.label("pairs_j");
+        a.words_i32(&m.pairs.iter().map(|p| p.1 as i32).collect::<Vec<_>>());
+        a.label("votes");
+        a.zeros(c);
+    }
+
+    let mut built = finish(&a, ProgramKind::Accelerated, "fwords", nwf)?;
     built.text_words = text_words;
     Ok(built)
 }
@@ -206,7 +345,42 @@ mod tests {
             biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
             pairs,
             scale: 1.0,
+            kernel: Kernel::Linear,
+            support: Vec::new(),
+            kparams: crate::kernel::KernelParams::default(),
         }
+    }
+
+    fn random_kernel_model(
+        rng: &mut Pcg32,
+        kernel: Kernel,
+        strategy: Strategy,
+        bits: u8,
+        c: usize,
+        f: usize,
+        s: usize,
+    ) -> QuantModel {
+        let mut m = random_model(rng, strategy, bits, c, f);
+        // weight rows become dual-coefficient rows over the support set
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let k = m.pairs.len();
+        m.weights = (0..k)
+            .map(|_| (0..s).map(|_| rng.range_i32(-qmax, qmax)).collect())
+            .collect();
+        m.kernel = kernel;
+        m.support =
+            (0..s).map(|_| (0..f).map(|_| rng.below(16) as i32).collect()).collect();
+        m.kparams = match kernel {
+            Kernel::Rbf => crate::kernel::KernelParams { g2_q: 137, ..Default::default() },
+            Kernel::Poly => crate::kernel::KernelParams {
+                gamma_q: 1165,
+                coef0_q: 256,
+                degree: 3,
+                ..Default::default()
+            },
+            Kernel::Linear => unreachable!(),
+        };
+        m
     }
 
     /// SERV + accelerator must agree with native inference — loop and
@@ -255,5 +429,52 @@ mod tests {
             .total();
         let speedup = base as f64 / acc as f64;
         assert!(speedup > 5.0, "speedup only {speedup:.1}x (base {base}, accel {acc})");
+    }
+
+    /// The kernel program on the KSVM CFU must agree with native kernel
+    /// inference — both kernels, both strategies, odd feature counts
+    /// (partial lane words) included.
+    #[test]
+    fn kernel_program_matches_native_inference() {
+        let mut rng = Pcg32::seeded(0x4e51);
+        for kernel in [Kernel::Rbf, Kernel::Poly] {
+            for strategy in [Strategy::Ovr, Strategy::Ovo] {
+                for f in [4usize, 9] {
+                    let m = random_kernel_model(&mut rng, kernel, strategy, 8, 3, f, 5);
+                    let mut runner = ProgramRunner::accelerated(
+                        &m,
+                        TimingConfig::ideal_mem(),
+                        ProgramOpts::default(),
+                    )
+                    .unwrap();
+                    for _ in 0..8 {
+                        let x: Vec<i32> = (0..f).map(|_| rng.below(16) as i32).collect();
+                        let (pred, _) = runner.run_sample(&x).unwrap();
+                        assert_eq!(
+                            pred,
+                            infer::predict(&m, &x),
+                            "{kernel} {strategy:?} f={f} x={x:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rearming the SoC re-executes the prologue, so the config
+    /// registers survive across samples — repeated runs stay correct
+    /// and deterministic.
+    #[test]
+    fn kernel_program_reconfigures_on_rearm() {
+        let mut rng = Pcg32::seeded(0x4e52);
+        let m = random_kernel_model(&mut rng, Kernel::Rbf, Strategy::Ovr, 4, 3, 6, 4);
+        let mut runner =
+            ProgramRunner::accelerated(&m, TimingConfig::flexic(), ProgramOpts::default())
+                .unwrap();
+        let x = vec![7i32; 6];
+        let (p1, s1) = runner.run_sample(&x).unwrap();
+        let (p2, s2) = runner.run_sample(&x).unwrap();
+        assert_eq!(p1, infer::predict(&m, &x));
+        assert_eq!((p1, s1), (p2, s2), "rearm must fully re-init the CFU");
     }
 }

@@ -13,7 +13,7 @@
 //!   t0 sum            t1 j                    t2 x ptr (walks)
 //!   mul32 clobbers a0, a1, t3, t4.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::isa::reg::*;
 use crate::isa::Asm;
@@ -40,7 +40,15 @@ fn emit_mul32(a: &mut Asm) {
 }
 
 /// Build the baseline inference program for a quantized model.
+///
+/// Kernel machines are accelerator-only: a software shift-add feature
+/// map would dwarf the linear baseline without matching any paper
+/// configuration, so callers must keep kernel configs off the baseline
+/// path (the farm seeds their `baseline_cycles` with 0 = unknown).
 pub fn build(m: &QuantModel) -> Result<BuiltProgram> {
+    if m.is_kernel() {
+        bail!("kernel model {} has no software-only baseline program", m.config_key());
+    }
     let k = m.n_classifiers();
     let f = m.n_features;
     let c = m.n_classes;
@@ -208,7 +216,20 @@ mod tests {
             biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
             pairs,
             scale: 1.0,
+            kernel: crate::kernel::Kernel::Linear,
+            support: Vec::new(),
+            kparams: crate::kernel::KernelParams::default(),
         }
+    }
+
+    #[test]
+    fn kernel_models_have_no_baseline() {
+        let mut rng = Pcg32::seeded(3);
+        let mut m = random_model(&mut rng, Strategy::Ovr, 4, 2, 3);
+        m.kernel = crate::kernel::Kernel::Rbf;
+        m.support = vec![vec![1, 2, 3]];
+        m.kparams = crate::kernel::KernelParams { g2_q: 137, ..Default::default() };
+        assert!(build(&m).is_err());
     }
 
     /// The SERV-executed baseline program must agree with the native

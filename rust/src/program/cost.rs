@@ -235,7 +235,15 @@ fn mul32_call(c: &mut Count, w: i32) {
 /// Exact in intent (every emitted instruction, taken branch, shift
 /// amount and memory access is counted from the generator's code
 /// shape); tests pin it within 10 % of the simulator.
+///
+/// Kernel machines have no baseline program (`baseline::build` bails),
+/// so this returns all-zero stats for them — callers treat 0 as "no
+/// baseline" rather than inventing a bill for a program that cannot
+/// exist.
 pub fn baseline_estimate(m: &QuantModel, x_q: &[i32], t: &TimingConfig) -> CycleStats {
+    if m.is_kernel() {
+        return CycleStats::default();
+    }
     let k = m.n_classifiers();
     let f = m.n_features;
     let cc = m.n_classes;
@@ -326,7 +334,12 @@ pub fn baseline_estimate(m: &QuantModel, x_q: &[i32], t: &TimingConfig) -> Cycle
 /// The baseline estimate on the calibration probe input (`[7; F]`,
 /// matching the farm's calibration run), as total cycles — what the
 /// farm seeds `baseline_cycles` with before real calibration lands.
+/// 0.0 for kernel models (no baseline program exists — speedup ratios
+/// are reported as unknown, never fabricated).
 pub fn baseline_estimate_cycles(m: &QuantModel, t: &TimingConfig) -> f64 {
+    if m.is_kernel() {
+        return 0.0;
+    }
     let x = vec![7i32; m.n_features];
     baseline_estimate(m, &x, t).total() as f64
 }
@@ -350,7 +363,30 @@ mod tests {
                 Strategy::Ovo => vec![(0, 1), (0, 2), (1, 2)],
             },
             scale: 1.0,
+            kernel: crate::kernel::Kernel::Linear,
+            support: Vec::new(),
+            kparams: crate::kernel::KernelParams::default(),
         }
+    }
+
+    fn toy_kernel(kernel: crate::kernel::Kernel, strategy: Strategy) -> QuantModel {
+        let mut m = toy(strategy);
+        m.kernel = kernel;
+        m.support = vec![vec![0, 0], vec![7, 7], vec![15, 15]];
+        // dual rows over the S=3 support set
+        m.weights = vec![vec![7, 0, -3], vec![0, 7, 1], vec![-3, -3, 5]];
+        m.kparams = match kernel {
+            crate::kernel::Kernel::Rbf => {
+                crate::kernel::KernelParams { g2_q: 137, ..Default::default() }
+            }
+            _ => crate::kernel::KernelParams {
+                gamma_q: 1165,
+                coef0_q: 256,
+                degree: 3,
+                ..Default::default()
+            },
+        };
+        m
     }
 
     #[test]
@@ -378,6 +414,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The affine law holds for kernel programs too: their only
+    /// data-dependent branch sites are the same OvO vote/argmax pair,
+    /// so derivation must succeed and bill bit-exactly.
+    #[test]
+    fn analytic_model_covers_kernel_programs() {
+        let mut rng = Pcg32::seeded(0xfa58);
+        for kernel in [crate::kernel::Kernel::Rbf, crate::kernel::Kernel::Poly] {
+            for strategy in [Strategy::Ovr, Strategy::Ovo] {
+                let m = toy_kernel(kernel, strategy);
+                let c = CompiledProgram::accelerated(&m, ProgramOpts::default()).unwrap();
+                let am = AnalyticModel::derive(&m, &c, TimingConfig::flexic())
+                    .expect("derivation must succeed for kernel programs");
+                let mut runner =
+                    ProgramRunner::from_compiled(&c, TimingConfig::flexic()).unwrap();
+                for _ in 0..12 {
+                    let x: Vec<i32> = (0..2).map(|_| rng.below(16) as i32).collect();
+                    let (pred, stats) = am.predict(&x).unwrap();
+                    let (sp, ss) = runner.run_sample(&x).unwrap();
+                    assert_eq!(pred, sp, "{kernel} {strategy:?} x={x:?}");
+                    assert_eq!(stats, ss, "bit-exact bill: {kernel} {strategy:?} x={x:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_models_have_no_baseline_estimate() {
+        let m = toy_kernel(crate::kernel::Kernel::Rbf, Strategy::Ovr);
+        let t = TimingConfig::flexic();
+        assert_eq!(baseline_estimate_cycles(&m, &t), 0.0);
+        assert_eq!(baseline_estimate(&m, &[7, 7], &t).total(), 0);
     }
 
     #[test]

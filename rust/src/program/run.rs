@@ -12,7 +12,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::accel::kernel::KernelAccel;
 use crate::accel::svm::SvmAccel;
+use crate::kernel::Kernel;
 use crate::serv::{CycleStats, Exit, TimingConfig};
 use crate::soc::{DecodedProgram, Soc};
 use crate::svm::model::QuantModel;
@@ -30,6 +32,7 @@ pub struct CompiledProgram {
     decoded: Arc<DecodedProgram>,
     bits: u8,
     n_features: usize,
+    kernel: Kernel,
 }
 
 impl CompiledProgram {
@@ -41,6 +44,7 @@ impl CompiledProgram {
             prog,
             bits: m.bits,
             n_features: m.n_features,
+            kernel: m.kernel,
         }))
     }
 
@@ -52,11 +56,18 @@ impl CompiledProgram {
             prog,
             bits: m.bits,
             n_features: m.n_features,
+            kernel: m.kernel,
         }))
     }
 
     pub fn kind(&self) -> ProgramKind {
         self.prog.kind
+    }
+
+    /// The kernel this program was generated for (drives which CFU a
+    /// runner registers and how features are packed).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     pub fn built(&self) -> &BuiltProgram {
@@ -95,7 +106,11 @@ impl ProgramRunner {
     pub fn from_compiled(c: &Arc<CompiledProgram>, timing: TimingConfig) -> Result<ProgramRunner> {
         let mut soc = Soc::with_program(Arc::clone(c.decoded()), timing);
         if c.kind() == ProgramKind::Accelerated {
-            soc.register_cfu(crate::isa::CFU_FUNCT7_SVM, Box::new(SvmAccel::new()))?;
+            if c.kernel == Kernel::Linear {
+                soc.register_cfu(crate::isa::CFU_FUNCT7_SVM, Box::new(SvmAccel::new()))?;
+            } else {
+                soc.register_cfu(crate::isa::CFU_FUNCT7_KSVM, Box::new(KernelAccel::new()))?;
+            }
         }
         Ok(ProgramRunner { soc, prog: Arc::clone(c), budget: DEFAULT_BUDGET })
     }
@@ -126,9 +141,13 @@ impl ProgramRunner {
             bail!("features must be 4-bit unsigned");
         }
         let built = self.prog.built();
-        let words: Vec<u32> = match built.kind {
-            ProgramKind::Baseline => x_q.iter().map(|&v| v as u32).collect(),
-            ProgramKind::Accelerated => pack::feature_words(x_q, self.prog.bits),
+        let words: Vec<u32> = match (built.kind, self.prog.kernel) {
+            (ProgramKind::Baseline, _) => x_q.iter().map(|&v| v as u32).collect(),
+            (ProgramKind::Accelerated, Kernel::Linear) => {
+                pack::feature_words(x_q, self.prog.bits)
+            }
+            // kernel programs: 8x4-bit lanes per word, no bias lane
+            (ProgramKind::Accelerated, _) => pack::kernel_feature_words(x_q),
         };
         debug_assert_eq!(words.len(), built.n_feature_words);
         self.soc.mem.poke_words(built.feature_addr, &words);
@@ -201,6 +220,9 @@ mod tests {
             biases: vec![0, 0],
             pairs: vec![(0, 0), (1, 1)],
             scale: 1.0,
+            kernel: Kernel::Linear,
+            support: Vec::new(),
+            kparams: crate::kernel::KernelParams::default(),
         }
     }
 

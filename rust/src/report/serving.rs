@@ -8,6 +8,9 @@
 //!    cycle-level simulation is from real-time 52 kHz silicon),
 //!  * the accel-vs-baseline cycle ratio measured on the serving path
 //!    (Table I's speedup column, re-derived from live traffic),
+//!  * per-kernel-family aggregates (linear vs RBF vs polynomial
+//!    energy/request — and live accuracy when the driver labelled its
+//!    traffic), now that configs carry their kernel id end to end,
 //!  * per-shard farm balance (jobs, simulated cycles, reload churn).
 
 use std::collections::{BTreeMap, HashMap};
@@ -24,7 +27,10 @@ use crate::util::Table;
 /// wall-clock span; `stages` (an [`crate::obs::Obs`] stage snapshot)
 /// adds the per-stage waterfall; `fleet` (merged per-node metrics from
 /// `RemoteEngine::snapshot`) adds fleet-wide quantiles computed from
-/// merged histogram buckets.
+/// merged histogram buckets; `accuracy` maps config key →
+/// `(label-correct, answered)` counts observed by a labelled driver
+/// (the serving path itself never sees labels), enabling the
+/// per-kernel live-accuracy column.
 pub fn render(
     per_config: &HashMap<String, ConfigMetrics>,
     wall: Duration,
@@ -32,14 +38,15 @@ pub fn render(
     power: &FlexicModel,
     stages: Option<&BTreeMap<String, StageMetrics>>,
     fleet: Option<&HashMap<String, ConfigMetrics>>,
+    accuracy: Option<&HashMap<String, (u64, u64)>>,
 ) -> String {
     let mut out = String::from("\n=== serving energy report (Table I under load) ===\n");
     let mut keys: Vec<&String> = per_config.keys().collect();
     keys.sort();
 
     let mut t = Table::new([
-        "config", "reqs", "mJ/req", "kcyc/req", "accel-vs-base (x)", "hw req/s (1 SoC)",
-        "p50 (us)", "p99 (us)",
+        "config", "kernel", "reqs", "mJ/req", "kcyc/req", "accel-vs-base (x)",
+        "hw req/s (1 SoC)", "p50 (us)", "p99 (us)",
     ]);
     let mut total_reqs = 0u64;
     let mut total_energy = 0.0f64;
@@ -58,6 +65,7 @@ pub fn render(
         let hw_rps = if m.mean_sim_cycles() > 0.0 { power.clock_hz / m.mean_sim_cycles() } else { 0.0 };
         t.row([
             key.clone(),
+            if m.kernel.is_empty() { "?".to_string() } else { m.kernel.clone() },
             m.requests.to_string(),
             format!("{:.3}", m.mean_energy_mj()),
             format!("{:.1}", m.mean_sim_cycles() / 1e3),
@@ -68,6 +76,55 @@ pub fn render(
         ]);
     }
     out.push_str(&t.render());
+
+    // per-kernel-family rollup: the mixed-kernel ablation as observed
+    // on the serving path.  Rendered once any config knows its kernel
+    // id; the accuracy column needs a labelled driver (`accuracy`).
+    #[derive(Default)]
+    struct Family {
+        reqs: u64,
+        sim_samples: u64,
+        energy_mj: f64,
+        sim_cycles: u64,
+        correct: u64,
+        answered: u64,
+    }
+    let mut families: BTreeMap<&str, Family> = BTreeMap::new();
+    for (key, m) in per_config {
+        if m.kernel.is_empty() {
+            continue;
+        }
+        let fam = families.entry(m.kernel.as_str()).or_default();
+        fam.reqs += m.requests;
+        fam.sim_samples += m.sim_samples;
+        fam.energy_mj += m.energy_mj;
+        fam.sim_cycles += m.sim_cycles;
+        if let Some(&(correct, answered)) = accuracy.and_then(|a| a.get(key)) {
+            fam.correct += correct;
+            fam.answered += answered;
+        }
+    }
+    if !families.is_empty() {
+        let mut kt = Table::new(["kernel", "reqs", "mJ/req", "kcyc/req", "live acc"]);
+        for (kernel, f) in &families {
+            let per = |v: f64| {
+                if f.sim_samples > 0 { format!("{:.3}", v / f.sim_samples as f64) } else { "-".into() }
+            };
+            kt.row([
+                kernel.to_string(),
+                f.reqs.to_string(),
+                per(f.energy_mj),
+                per(f.sim_cycles as f64 / 1e3),
+                if f.answered > 0 {
+                    format!("{:.1}%", 100.0 * f.correct as f64 / f.answered as f64)
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+        out.push_str("\nper kernel family (from live traffic):\n");
+        out.push_str(&kt.render());
+    }
 
     // aggregate: simulated hardware time vs the wall clock that served it
     let n_socs = farm.map(|f| f.shards.len().max(1)).unwrap_or(1);
@@ -209,6 +266,7 @@ mod tests {
             &FlexicModel::paper(),
             None,
             None,
+            None,
         );
         assert!(s.contains("iris_ovr_w4"), "{s}");
         assert!(s.contains("1.340"), "mean mJ/req: {s}");
@@ -272,9 +330,55 @@ mod tests {
             &FlexicModel::paper(),
             None,
             None,
+            None,
         );
         assert!(s.contains("farm shards"), "{s}");
         assert!(!s.contains("fast path:"), "{s}");
+    }
+
+    #[test]
+    fn per_kernel_rollup_renders_with_live_accuracy() {
+        let mut map = fake_metrics();
+        map.get_mut("iris_ovr_w4").unwrap().kernel = "linear".into();
+        let mut m = ConfigMetrics::new();
+        m.requests = 4;
+        m.sim_samples = 4;
+        m.sim_cycles = 400_000;
+        m.energy_mj = 2.0;
+        m.kernel = "rbf".into();
+        m.bits = 8;
+        map.insert("syn_rbf".to_string(), m);
+        let mut acc = HashMap::new();
+        acc.insert("syn_rbf".to_string(), (3u64, 4u64));
+        let s = render(
+            &map,
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            None,
+            None,
+            Some(&acc),
+        );
+        assert!(s.contains("per kernel family"), "{s}");
+        assert!(s.contains("rbf"), "{s}");
+        assert!(s.contains("linear"), "{s}");
+        assert!(s.contains("75.0%"), "rbf live accuracy from the labelled drive: {s}");
+        // the linear family had no labelled traffic: dash, not a fake 0%
+        assert!(s.contains('-'), "{s}");
+    }
+
+    #[test]
+    fn kernel_rollup_hidden_when_no_config_knows_its_family() {
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            None,
+            None,
+            None,
+        );
+        assert!(!s.contains("per kernel family"), "{s}");
     }
 
     #[test]
@@ -285,7 +389,7 @@ mod tests {
         m.sim_cycles = 0;
         m.energy_mj = 0.0;
         m.baseline_cycles_per_inf = 0.0;
-        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper(), None, None);
+        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper(), None, None, None);
         assert!(s.contains("iris_ovr_w4"));
         assert!(s.contains('-'), "uncalibrated ratio renders as dash");
         assert!(!s.contains("farm shards"));

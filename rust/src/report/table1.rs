@@ -13,11 +13,15 @@ use crate::svm::model::Manifest;
 use crate::util::{json, Json, Table};
 
 /// One Table-I row (paper columns + our cycle-attribution extras).
+/// Kernel-machine rows (`kernel` = `"rbf"`/`"poly"`) have no software
+/// baseline program, so their `base_*`/`speedup`/`energy_red_pct`
+/// fields are 0 and render as dashes — never a fabricated ratio.
 #[derive(Debug, Clone)]
 pub struct RowResult {
     pub key: String,
     pub dataset: String,
     pub strategy: String,
+    pub kernel: String,
     pub bits: u8,
     pub accuracy: f64,
     pub n_samples: usize,
@@ -77,10 +81,12 @@ pub fn run_table1(manifest: &Manifest, opts: &Table1Opts) -> Result<Vec<RowResul
         }
         Ok(())
     })?;
-    // paper row order: dataset, OvR before OvO, bits ascending
+    // paper row order: dataset, linear before the kernel families,
+    // OvR before OvO, bits ascending
     let ds_rank = |d: &str| ["bs", "derm", "iris", "seeds", "v3"].iter().position(|x| *x == d).unwrap_or(99);
+    let k_rank = |k: &str| ["linear", "rbf", "poly"].iter().position(|x| *x == k).unwrap_or(99);
     let st_rank = |s: &str| if s == "ovr" { 0 } else { 1 };
-    rows.sort_by_key(|r| (ds_rank(&r.dataset), st_rank(&r.strategy), r.bits));
+    rows.sort_by_key(|r| (ds_rank(&r.dataset), k_rank(&r.kernel), st_rank(&r.strategy), r.bits));
     Ok(rows)
 }
 
@@ -94,18 +100,25 @@ fn run_one(
         let model = manifest.model(entry)?;
         let test = manifest.test_set(&entry.dataset)?;
 
-        let mut base = ProgramRunner::baseline(&model, opts.timing)?;
-        let base_res = base.run_test_set(&test.x_q, &test.y, opts.limit)?;
-
         let mut acc = ProgramRunner::accelerated(&model, opts.timing, opts.program)?;
         let acc_res = acc.run_test_set(&test.x_q, &test.y, opts.limit)?;
 
-        // both SoC variants must classify identically (same integer math)
-        anyhow::ensure!(
-            (base_res.accuracy - acc_res.accuracy).abs() < 1e-12,
-            "{}: baseline and accelerated SoC disagree on accuracy",
-            entry.key
-        );
+        // kernel machines have no software-only baseline program
+        // (`program::baseline` refuses them): their rows report the
+        // accelerated side only, baseline columns render as dashes
+        let base_res = if model.is_kernel() {
+            None
+        } else {
+            let mut base = ProgramRunner::baseline(&model, opts.timing)?;
+            let r = base.run_test_set(&test.x_q, &test.y, opts.limit)?;
+            // both SoC variants must classify identically (same integer math)
+            anyhow::ensure!(
+                (r.accuracy - acc_res.accuracy).abs() < 1e-12,
+                "{}: baseline and accelerated SoC disagree on accuracy",
+                entry.key
+            );
+            Some(r)
+        };
         if opts.verify_accuracy && opts.limit.is_none() {
             anyhow::ensure!(
                 (acc_res.accuracy - entry.accuracy).abs() < 1e-9,
@@ -116,22 +129,27 @@ fn run_one(
             );
         }
 
-        let base_cycles = base_res.cycles_per_inference;
+        let base_cycles = base_res.as_ref().map(|r| r.cycles_per_inference).unwrap_or(0.0);
         let accel_cycles = acc_res.cycles_per_inference;
         Ok(RowResult {
             key: entry.key.clone(),
             dataset: entry.dataset.clone(),
-            strategy: entry.strategy.as_str().to_string(),
+            strategy: entry.strategy.to_string(),
+            kernel: entry.kernel.to_string(),
             bits: entry.bits,
             accuracy: acc_res.accuracy,
             n_samples: acc_res.n_samples,
             base_cycles,
-            base_energy_mj: power.energy_mj(base_cycles),
+            base_energy_mj: if base_cycles > 0.0 { power.energy_mj(base_cycles) } else { 0.0 },
             accel_cycles,
             accel_energy_mj: power.energy_mj(accel_cycles),
-            speedup: base_cycles / accel_cycles,
-            energy_red_pct: power.energy_reduction_pct(base_cycles, accel_cycles),
-            base_mem_share: base_res.agg.data_mem_share(),
+            speedup: if base_cycles > 0.0 { base_cycles / accel_cycles } else { 0.0 },
+            energy_red_pct: if base_cycles > 0.0 {
+                power.energy_reduction_pct(base_cycles, accel_cycles)
+            } else {
+                0.0
+            },
+            base_mem_share: base_res.as_ref().map(|r| r.agg.data_mem_share()).unwrap_or(0.0),
             accel_mem_share: acc_res.agg.data_mem_share(),
         })
     }
@@ -140,8 +158,8 @@ fn run_one(
 /// Render in the paper's column layout.
 pub fn render(rows: &[RowResult], with_attr: bool) -> String {
     let mut header = vec![
-        "Dataset", "Strategy", "Bits", "Acc(%)", "base Mcyc", "base mJ/inf", "accel Mcyc",
-        "accel mJ/inf", "Speedup(x)", "EnRed(%)",
+        "Dataset", "Kernel", "Strategy", "Bits", "Acc(%)", "base Mcyc", "base mJ/inf",
+        "accel Mcyc", "accel mJ/inf", "Speedup(x)", "EnRed(%)",
     ];
     if with_attr {
         header.push("base dmem%");
@@ -149,20 +167,23 @@ pub fn render(rows: &[RowResult], with_attr: bool) -> String {
     }
     let mut t = Table::new(header);
     for r in rows {
+        let has_base = r.base_cycles > 0.0;
+        let or_dash = |s: String| if has_base { s } else { "-".to_string() };
         let mut cells = vec![
             r.dataset.clone(),
+            r.kernel.clone(),
             r.strategy.to_uppercase(),
             r.bits.to_string(),
             format!("{:.1}", r.accuracy * 100.0),
-            format!("{:.3}", r.base_cycles / 1e6),
-            format!("{:.1}", r.base_energy_mj),
+            or_dash(format!("{:.3}", r.base_cycles / 1e6)),
+            or_dash(format!("{:.1}", r.base_energy_mj)),
             format!("{:.4}", r.accel_cycles / 1e6),
             format!("{:.2}", r.accel_energy_mj),
-            format!("{:.1}", r.speedup),
-            format!("{:.1}", r.energy_red_pct),
+            or_dash(format!("{:.1}", r.speedup)),
+            or_dash(format!("{:.1}", r.energy_red_pct)),
         ];
         if with_attr {
-            cells.push(format!("{:.1}", r.base_mem_share * 100.0));
+            cells.push(or_dash(format!("{:.1}", r.base_mem_share * 100.0)));
             cells.push(format!("{:.1}", r.accel_mem_share * 100.0));
         }
         t.row(cells);
@@ -173,29 +194,42 @@ pub fn render(rows: &[RowResult], with_attr: bool) -> String {
 }
 
 /// Headline means (the paper's "21× improvement ... on average").
+/// Speedup/energy-reduction means cover the linear rows only — kernel
+/// rows have no baseline to be "faster than"; they get their own
+/// per-family accuracy/energy lines instead.
 pub fn summary(rows: &[RowResult]) -> String {
     if rows.is_empty() {
         return String::new();
     }
-    let mean = |f: &dyn Fn(&RowResult) -> f64| {
-        rows.iter().map(|r| f(r)).sum::<f64>() / rows.len() as f64
-    };
-    let ovr: Vec<&RowResult> = rows.iter().filter(|r| r.strategy == "ovr").collect();
-    let ovo: Vec<&RowResult> = rows.iter().filter(|r| r.strategy == "ovo").collect();
-    let mean_of = |rs: &[&RowResult]| {
+    let linear: Vec<&RowResult> = rows.iter().filter(|r| r.base_cycles > 0.0).collect();
+    let mean_of = |rs: &[&RowResult], f: &dyn Fn(&RowResult) -> f64| {
         if rs.is_empty() {
             0.0
         } else {
-            rs.iter().map(|r| r.speedup).sum::<f64>() / rs.len() as f64
+            rs.iter().map(|r| f(r)).sum::<f64>() / rs.len() as f64
         }
     };
-    format!(
+    let ovr: Vec<&RowResult> = linear.iter().copied().filter(|r| r.strategy == "ovr").collect();
+    let ovo: Vec<&RowResult> = linear.iter().copied().filter(|r| r.strategy == "ovo").collect();
+    let mut out = format!(
         "\nmean speedup {:.1}x (OvR {:.1}x, OvO {:.1}x) | mean energy reduction {:.1}% | paper: 21x avg, OvR 23x, OvO 19.8x\n",
-        mean(&|r| r.speedup),
-        mean_of(&ovr),
-        mean_of(&ovo),
-        mean(&|r| r.energy_red_pct),
-    )
+        mean_of(&linear, &|r| r.speedup),
+        mean_of(&ovr, &|r| r.speedup),
+        mean_of(&ovo, &|r| r.speedup),
+        mean_of(&linear, &|r| r.energy_red_pct),
+    );
+    for family in ["rbf", "poly"] {
+        let fam: Vec<&RowResult> = rows.iter().filter(|r| r.kernel == family).collect();
+        if !fam.is_empty() {
+            out.push_str(&format!(
+                "{family}: {} config(s), mean acc {:.1}%, mean {:.2} mJ/inf on the KSVM accelerator (no software baseline)\n",
+                fam.len(),
+                100.0 * mean_of(&fam, &|r| r.accuracy),
+                mean_of(&fam, &|r| r.accel_energy_mj),
+            ));
+        }
+    }
+    out
 }
 
 /// JSON export for EXPERIMENTS.md bookkeeping.
@@ -205,6 +239,7 @@ pub fn to_json(rows: &[RowResult]) -> Json {
             .map(|r| {
                 json::obj([
                     ("key", r.key.as_str().into()),
+                    ("kernel", r.kernel.as_str().into()),
                     ("accuracy", r.accuracy.into()),
                     ("base_cycles", r.base_cycles.into()),
                     ("accel_cycles", r.accel_cycles.into()),

@@ -2,14 +2,32 @@
 //! (`python/compile/quantize.py`): every layer (Pallas kernel, PJRT
 //! graph, accelerator model, SERV program) must agree with this.
 
+use crate::kernel::{self, KSCALE};
+
 use super::model::{QuantModel, Strategy, TestSet};
 
 /// The bias rides the PE as an (input = 15, weight = b_q) pair.
 pub const XMAX: i64 = 15;
 
-/// Integer classifier scores for one sample: `x·w_k + 15*b_k`.
+/// Integer classifier scores for one sample.
+///
+/// Linear: `x·w_k + 15*b_k`.  Kernel machines: the same accumulate over
+/// the integer feature map — `phi·w_k + KSCALE*b_k` with `phi[s] =
+/// K(x, sv_s)` (see `kernel::phi`); argmax/vote logic is shared.
 pub fn scores(m: &QuantModel, x_q: &[i32]) -> Vec<i64> {
     assert_eq!(x_q.len(), m.n_features, "feature arity");
+    if m.is_kernel() {
+        let phi = kernel::feature_map(m.kernel, &m.kparams, &m.support, x_q);
+        return m
+            .weights
+            .iter()
+            .zip(&m.biases)
+            .map(|(row, &b)| {
+                row.iter().zip(&phi).map(|(&w, &p)| w as i64 * p).sum::<i64>()
+                    + KSCALE * b as i64
+            })
+            .collect();
+    }
     m.weights
         .iter()
         .zip(&m.biases)
@@ -69,6 +87,8 @@ mod tests {
     use super::*;
     use crate::svm::model::Strategy;
 
+    use crate::kernel::{Kernel, KernelParams};
+
     fn toy(strategy: Strategy) -> QuantModel {
         QuantModel {
             dataset: "toy".into(),
@@ -83,6 +103,9 @@ mod tests {
                 Strategy::Ovo => vec![(0, 1), (0, 2), (1, 2)],
             },
             scale: 1.0,
+            kernel: Kernel::Linear,
+            support: Vec::new(),
+            kparams: KernelParams::default(),
         }
     }
 
@@ -126,5 +149,42 @@ mod tests {
         let v = ovo_votes(&m, &[0, -1, -1]);
         // k0 zero -> vote 0; k1 neg -> vote 2; k2 neg -> vote 2
         assert_eq!(v, vec![1, 0, 2]);
+    }
+
+    fn toy_rbf() -> QuantModel {
+        QuantModel {
+            dataset: "toy".into(),
+            strategy: Strategy::Ovr,
+            bits: 4,
+            n_classes: 2,
+            n_features: 2,
+            // duals over S=2 supports; nearest-support wins
+            weights: vec![vec![7, 0], vec![0, 7]],
+            biases: vec![0, 0],
+            pairs: vec![(0, 0), (1, 1)],
+            scale: 1.0,
+            kernel: Kernel::Rbf,
+            support: vec![vec![0, 0], vec![15, 15]],
+            kparams: KernelParams { g2_q: 137, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn kernel_scores_follow_the_feature_map() {
+        let m = toy_rbf();
+        let phi = crate::kernel::feature_map(m.kernel, &m.kparams, &m.support, &[1, 1]);
+        let s = scores(&m, &[1, 1]);
+        assert_eq!(s, vec![7 * phi[0], 7 * phi[1]]);
+        // a point at support 0 classifies as class 0, and vice versa
+        assert_eq!(predict(&m, &[0, 0]), 0);
+        assert_eq!(predict(&m, &[15, 15]), 1);
+    }
+
+    #[test]
+    fn kernel_bias_rides_at_kscale() {
+        let mut m = toy_rbf();
+        m.weights = vec![vec![0, 0], vec![0, 0]];
+        m.biases = vec![3, -2];
+        assert_eq!(scores(&m, &[4, 9]), vec![3 * KSCALE, -2 * KSCALE]);
     }
 }

@@ -1,38 +1,55 @@
 //! Quantized SVM model, dataset and golden-vector loading from the
 //! build-time artifacts emitted by `python/compile/aot.py`.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
+use std::str::FromStr;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Context, Error, Result};
 
+use crate::kernel::{Kernel, KernelParams, KCLAMP, KSCALE};
 use crate::util::Json;
 
 /// Multi-class decomposition strategy (paper §IV-A).
+///
+/// Parsed/rendered via `FromStr`/`Display` like `engine::Backend` and
+/// `kernel::Kernel` — one spelling for CLI flags, artifact JSON, and
+/// config keys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     Ovr,
     Ovo,
 }
 
-impl Strategy {
-    pub fn parse(s: &str) -> Result<Strategy> {
+impl FromStr for Strategy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Strategy> {
         match s {
             "ovr" => Ok(Strategy::Ovr),
             "ovo" => Ok(Strategy::Ovo),
-            _ => bail!("unknown strategy {s:?}"),
-        }
-    }
-
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            Strategy::Ovr => "ovr",
-            Strategy::Ovo => "ovo",
+            _ => bail!("unknown strategy {s:?} (want ovr|ovo)"),
         }
     }
 }
 
-/// A quantized multi-class linear SVM — the bit-exact twin of
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Strategy::Ovr => "ovr",
+            Strategy::Ovo => "ovo",
+        })
+    }
+}
+
+/// A quantized multi-class SVM — the bit-exact twin of
 /// `python/compile/quantize.QuantModel`.
+///
+/// `kernel == Linear`: `weights` is [K][F] over the raw features.
+/// `kernel == Rbf | Poly`: the model is a *kernel machine* — `support`
+/// holds S quantized support vectors [S][F], `weights` is [K][S] (dual
+/// coefficients over the integer feature map `kernel::phi`), and the
+/// bias rides as `KSCALE * b_q`.
 #[derive(Debug, Clone)]
 pub struct QuantModel {
     pub dataset: String,
@@ -40,13 +57,17 @@ pub struct QuantModel {
     pub bits: u8,
     pub n_classes: usize,
     pub n_features: usize,
-    /// [K][F] signed, |w| ≤ 2^(bits-1)-1.
+    /// linear: [K][F]; kernel: [K][S] — signed, |w| ≤ 2^(bits-1)-1.
     pub weights: Vec<Vec<i32>>,
     /// [K]
     pub biases: Vec<i32>,
     /// [K] (i, j) — for OvR, (k, k).
     pub pairs: Vec<(usize, usize)>,
     pub scale: f64,
+    pub kernel: Kernel,
+    /// [S][F] values 0..15 — empty for linear models.
+    pub support: Vec<Vec<i32>>,
+    pub kparams: KernelParams,
 }
 
 impl QuantModel {
@@ -54,8 +75,19 @@ impl QuantModel {
         self.weights.len()
     }
 
+    pub fn n_support(&self) -> usize {
+        self.support.len()
+    }
+
+    pub fn is_kernel(&self) -> bool {
+        self.kernel != Kernel::Linear
+    }
+
     pub fn config_key(&self) -> String {
-        format!("{}_{}_w{}", self.dataset, self.strategy.as_str(), self.bits)
+        match self.kernel {
+            Kernel::Linear => format!("{}_{}_w{}", self.dataset, self.strategy, self.bits),
+            k => format!("{}_{}_{}_w{}", self.dataset, k, self.strategy, self.bits),
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<QuantModel> {
@@ -70,9 +102,28 @@ impl QuantModel {
                 Ok((p[0].as_usize()?, p[1].as_usize()?))
             })
             .collect::<Result<_>>()?;
+        // kernel fields are optional: pre-kernel artifacts stay loadable
+        let kernel = match j.get("kernel") {
+            Ok(k) => k.as_str()?.parse()?,
+            Err(_) => Kernel::Linear,
+        };
+        let (support, kparams) = if kernel == Kernel::Linear {
+            (Vec::new(), KernelParams::default())
+        } else {
+            let geti = |key: &str| -> Result<i32> { Ok(j.get(key)?.as_i64()? as i32) };
+            (
+                j.get("support")?.as_mat_i32()?,
+                KernelParams {
+                    g2_q: geti("g2_q")?,
+                    gamma_q: geti("gamma_q")?,
+                    coef0_q: geti("coef0_q")?,
+                    degree: geti("degree")? as u32,
+                },
+            )
+        };
         let m = QuantModel {
             dataset: j.get("dataset")?.as_str()?.to_string(),
-            strategy: Strategy::parse(j.get("strategy")?.as_str()?)?,
+            strategy: j.get("strategy")?.as_str()?.parse()?,
             bits: j.get("bits")?.as_i64()? as u8,
             n_classes: j.get("n_classes")?.as_usize()?,
             n_features: j.get("n_features")?.as_usize()?,
@@ -80,6 +131,9 @@ impl QuantModel {
             biases,
             pairs,
             scale: j.get("scale")?.as_f64()?,
+            kernel,
+            support,
+            kparams,
         };
         m.validate()?;
         Ok(m)
@@ -97,10 +151,12 @@ impl QuantModel {
         if self.biases.len() != k || self.pairs.len() != k {
             bail!("inconsistent classifier count");
         }
+        // kernel machines: weight rows span the support set, not features
+        let row_len = if self.is_kernel() { self.n_support() } else { self.n_features };
         let qmax = (1i32 << (self.bits - 1)) - 1;
         for row in &self.weights {
-            if row.len() != self.n_features {
-                bail!("weight row length {} != n_features {}", row.len(), self.n_features);
+            if row.len() != row_len {
+                bail!("weight row length {} != {}", row.len(), row_len);
             }
             if row.iter().any(|w| w.abs() > qmax) {
                 bail!("weight exceeds {}-bit range", self.bits);
@@ -112,6 +168,31 @@ impl QuantModel {
         for &(i, j) in &self.pairs {
             if i >= self.n_classes || j >= self.n_classes {
                 bail!("pair ({i},{j}) out of class range");
+            }
+        }
+        if self.is_kernel() {
+            if self.support.is_empty() {
+                bail!("kernel model without support vectors");
+            }
+            for sv in &self.support {
+                if sv.len() != self.n_features {
+                    bail!("support row length {} != n_features {}", sv.len(), self.n_features);
+                }
+                if sv.iter().any(|&v| !(0..=15).contains(&v)) {
+                    bail!("support values must be 4-bit unsigned");
+                }
+            }
+            // i32 headroom of the score accumulator (quantizer contract)
+            let s = self.n_support() as i64;
+            if s * qmax as i64 * KCLAMP + KSCALE * qmax as i64 >= 1 << 31 {
+                bail!("S={} at {}-bit overflows the i32 score accumulator", s, self.bits);
+            }
+            match self.kernel {
+                Kernel::Rbf if self.kparams.g2_q <= 0 => bail!("rbf model needs g2_q > 0"),
+                Kernel::Poly if self.kparams.gamma_q <= 0 || self.kparams.degree == 0 => {
+                    bail!("poly model needs gamma_q > 0 and degree >= 1")
+                }
+                _ => {}
             }
         }
         Ok(())
@@ -196,6 +277,7 @@ pub struct ConfigEntry {
     pub key: String,
     pub dataset: String,
     pub strategy: Strategy,
+    pub kernel: Kernel,
     pub bits: u8,
     pub n_classes: usize,
     pub n_features: usize,
@@ -229,7 +311,12 @@ impl Manifest {
             configs.push(ConfigEntry {
                 key: key.clone(),
                 dataset: c.get("dataset")?.as_str()?.to_string(),
-                strategy: Strategy::parse(c.get("strategy")?.as_str()?)?,
+                strategy: c.get("strategy")?.as_str()?.parse()?,
+                // optional: manifests predating the kernel subsystem
+                kernel: match c.get("kernel") {
+                    Ok(k) => k.as_str()?.parse()?,
+                    Err(_) => Kernel::Linear,
+                },
                 bits: c.get("bits")?.as_i64()? as u8,
                 n_classes: c.get("n_classes")?.as_usize()?,
                 n_features: c.get("n_features")?.as_usize()?,
@@ -303,6 +390,18 @@ mod tests {
         .unwrap()
     }
 
+    fn kernel_model_json() -> Json {
+        Json::parse(
+            r#"{"dataset":"toy","strategy":"ovr","bits":4,"n_classes":2,
+                "n_features":2,"n_classifiers":2,"kernel":"rbf",
+                "weights":[[1,-2,3],[3,4,-1]],"biases":[0,-1],
+                "pairs":[[0,0],[1,1]],"scale":3.5,
+                "support":[[0,15],[7,7],[15,0]],
+                "g2_q":137,"gamma_q":0,"coef0_q":0,"degree":0}"#,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn model_from_json() {
         let m = QuantModel::from_json(&model_json()).unwrap();
@@ -310,6 +409,42 @@ mod tests {
         assert_eq!(m.strategy, Strategy::Ovo);
         assert_eq!(m.config_key(), "toy_ovo_w4");
         assert_eq!(m.weights[2], vec![-5, 6]);
+        // missing "kernel" key == pre-kernel artifact == linear
+        assert_eq!(m.kernel, Kernel::Linear);
+        assert!(!m.is_kernel());
+    }
+
+    #[test]
+    fn kernel_model_from_json() {
+        let m = QuantModel::from_json(&kernel_model_json()).unwrap();
+        assert_eq!(m.kernel, Kernel::Rbf);
+        assert_eq!(m.n_support(), 3);
+        assert_eq!(m.kparams.g2_q, 137);
+        assert_eq!(m.config_key(), "toy_rbf_ovr_w4");
+    }
+
+    #[test]
+    fn kernel_model_validation() {
+        // support values must be 4-bit unsigned
+        let mut j = kernel_model_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("support".into(), Json::parse("[[0,16],[7,7],[15,0]]").unwrap());
+        }
+        assert!(QuantModel::from_json(&j).is_err());
+        // rbf needs a positive exponent constant
+        let mut j = kernel_model_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("g2_q".into(), Json::parse("0").unwrap());
+        }
+        assert!(QuantModel::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn strategy_round_trips_strings() {
+        for s in [Strategy::Ovr, Strategy::Ovo] {
+            assert_eq!(s.to_string().parse::<Strategy>().unwrap(), s);
+        }
+        assert!("ova".parse::<Strategy>().is_err());
     }
 
     #[test]

@@ -50,6 +50,47 @@ pub fn all_weight_words(m: &QuantModel) -> Vec<u32> {
     (0..m.n_classifiers()).flat_map(|k| weight_words(m, k)).collect()
 }
 
+// --- kernel-machine packing (KSVM CFU, ISSUE 8) -------------------------
+//
+// The K_ACC op always takes eight 4-bit lanes per word regardless of the
+// model's weight bit-width (both operands are 4-bit unsigned), and there
+// is no bias lane — the bias rides K_RES.  Dual coefficients travel as
+// raw i32 data words, not packed lanes.
+
+/// 4-bit lanes per `K_ACC` word.
+pub const KERNEL_LANES: usize = 8;
+
+fn pack_nibbles(vals: &[i32]) -> u32 {
+    debug_assert!(vals.len() <= KERNEL_LANES);
+    vals.iter().enumerate().fold(0u32, |w, (i, &v)| {
+        debug_assert!((0..=15).contains(&v), "kernel lanes are 4-bit unsigned");
+        w | ((v as u32) << (4 * i))
+    })
+}
+
+/// Packed feature words of one sample for the kernel accelerator:
+/// `x[0..F]` chunked 8 lanes per word, zero-padded tail.
+pub fn kernel_feature_words(x_q: &[i32]) -> Vec<u32> {
+    x_q.chunks(KERNEL_LANES).map(pack_nibbles).collect()
+}
+
+/// Packed words of support vector `s` — same layout as the features so
+/// the two streams align lane for lane.
+pub fn kernel_sv_words(m: &QuantModel, s: usize) -> Vec<u32> {
+    m.support[s].chunks(KERNEL_LANES).map(pack_nibbles).collect()
+}
+
+/// Words per support vector = ceil(F / 8).
+pub fn kernel_words_per_sv(n_features: usize) -> usize {
+    n_features.div_ceil(KERNEL_LANES)
+}
+
+/// Flattened support-vector words (row-major), as laid out in the
+/// kernel program's data section.
+pub fn all_kernel_sv_words(m: &QuantModel) -> Vec<u32> {
+    (0..m.n_support()).flat_map(|s| kernel_sv_words(m, s)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +112,9 @@ mod tests {
             biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
             pairs: (0..k).map(|i| (i, i)).collect(),
             scale: 1.0,
+            kernel: crate::kernel::Kernel::Linear,
+            support: Vec::new(),
+            kparams: crate::kernel::KernelParams::default(),
         }
     }
 
@@ -117,5 +161,37 @@ mod tests {
         let per = words_per_classifier(6, 8);
         assert_eq!(all.len(), 4 * per);
         assert_eq!(&all[per..2 * per], weight_words(&m, 1).as_slice());
+    }
+
+    #[test]
+    fn kernel_words_pack_eight_lanes_no_bias() {
+        // 9 features -> 2 words, second word only lane 0 populated
+        let x: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let fw = kernel_feature_words(&x);
+        assert_eq!(fw.len(), kernel_words_per_sv(9));
+        assert_eq!(fw.len(), 2);
+        assert_eq!(fw[0], 0x87654321);
+        assert_eq!(fw[1], 0x9);
+        // exact multiple: no padding word
+        assert_eq!(kernel_feature_words(&x[..8]).len(), 1);
+    }
+
+    #[test]
+    fn kernel_sv_words_align_with_features() {
+        let mut rng = Pcg32::seeded(9);
+        let mut m = random_model(&mut rng, 8, 2, 11);
+        m.kernel = crate::kernel::Kernel::Rbf;
+        m.support = (0..3)
+            .map(|_| (0..11).map(|_| rng.below(16) as i32).collect())
+            .collect();
+        let all = all_kernel_sv_words(&m);
+        let per = kernel_words_per_sv(11);
+        assert_eq!(all.len(), 3 * per);
+        assert_eq!(&all[per..2 * per], kernel_sv_words(&m, 1).as_slice());
+        // unpack round-trips lane by lane against the raw support vector
+        for (lane, &v) in m.support[1].iter().enumerate() {
+            let word = all[per + lane / KERNEL_LANES];
+            assert_eq!(((word >> (4 * (lane % KERNEL_LANES))) & 0xf) as i32, v);
+        }
     }
 }

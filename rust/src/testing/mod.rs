@@ -15,7 +15,7 @@ pub mod mock;
 pub use crate::util::Pcg32;
 pub use mock::MockEngine;
 
-use crate::svm::model::{artifacts_root, Manifest};
+use crate::svm::model::{artifacts_root, Manifest, QuantModel};
 
 /// Load the artifact manifest, or skip the calling test with a note
 /// when the artifacts are not on disk (tier-1 runs on machines without
@@ -44,6 +44,45 @@ macro_rules! manifest_or_return {
     };
 }
 
+/// Drive the KSVM accelerator's raw op stream — the same sequence the
+/// `program::accel` codegen emits — and return every classifier score,
+/// reading `cur_sum + KSCALE·b` before `K_RES` folds the bias in and
+/// advances the argmax.  Shared by `golden-check`, the cross-layer
+/// integration tests, and the differential proptests: an independent
+/// path to the same integers as `infer::scores`.
+pub fn ksvm_emulate_scores(m: &QuantModel, x: &[i32]) -> anyhow::Result<Vec<i64>> {
+    use crate::accel::kernel::KernelAccel;
+    use crate::accel::Cfu;
+    use crate::isa::ksvm_ops::{self, kcfg};
+    use crate::kernel::{Kernel, KSCALE};
+    use crate::svm::pack;
+
+    let mut a = KernelAccel::new();
+    a.execute(ksvm_ops::K_ENV, 0, 0)?;
+    let (kind, gamma) = match m.kernel {
+        Kernel::Rbf => (ksvm_ops::KIND_RBF, m.kparams.g2_q),
+        _ => (ksvm_ops::KIND_POLY, m.kparams.gamma_q),
+    };
+    a.execute(ksvm_ops::K_CFG, kind, kcfg::KIND)?;
+    a.execute(ksvm_ops::K_CFG, gamma as u32, kcfg::GAMMA)?;
+    a.execute(ksvm_ops::K_CFG, m.kparams.coef0_q as u32, kcfg::COEF0)?;
+    a.execute(ksvm_ops::K_CFG, m.kparams.degree, kcfg::DEGREE)?;
+    let fw = pack::kernel_feature_words(x);
+    let mut scores = Vec::with_capacity(m.weights.len());
+    for k in 0..m.weights.len() {
+        for s in 0..m.support.len() {
+            let sw = pack::kernel_sv_words(m, s);
+            for (&xw, &vw) in fw.iter().zip(&sw) {
+                a.execute(ksvm_ops::K_ACC, xw, vw)?;
+            }
+            a.execute(ksvm_ops::K_EVAL, m.weights[k][s] as u32, 0)?;
+        }
+        scores.push(a.registers().1 + KSCALE * m.biases[k] as i64);
+        a.execute(ksvm_ops::K_RES, m.biases[k] as u32, 0)?;
+    }
+    Ok(scores)
+}
+
 /// Run a property `cases` times with a deterministic base seed.
 pub fn check<F: FnMut(&mut Pcg32)>(name: &str, seed: u64, cases: u32, mut prop: F) {
     for case in 0..cases {
@@ -60,6 +99,7 @@ pub fn check<F: FnMut(&mut Pcg32)>(name: &str, seed: u64, cases: u32, mut prop: 
 /// Generators over the domains this repo cares about.
 pub mod gen {
     use super::Pcg32;
+    use crate::kernel::{Kernel, KernelParams};
     use crate::svm::model::{QuantModel, Strategy};
 
     /// A 4-bit unsigned feature vector.
@@ -94,7 +134,60 @@ pub mod gen {
             biases: vec![0, 1],
             pairs: vec![(0, 0), (1, 1)],
             scale: 1.0,
+            kernel: Kernel::Linear,
+            support: Vec::new(),
+            kparams: KernelParams::default(),
         }
+    }
+
+    /// A deterministic 2-class, 3-feature kernel-machine fixture: two
+    /// support vectors at opposite corners, nearest-support wins
+    /// (serving-layer twin of `tiny_model` for kernel configs).
+    pub fn tiny_kernel_model(dataset: &str, kernel: Kernel) -> QuantModel {
+        QuantModel {
+            dataset: dataset.into(),
+            strategy: Strategy::Ovr,
+            bits: 4,
+            n_classes: 2,
+            n_features: 3,
+            // dual rows over the S=2 support set
+            weights: vec![vec![7, -1], vec![-1, 7]],
+            biases: vec![0, 0],
+            pairs: vec![(0, 0), (1, 1)],
+            scale: 1.0,
+            kernel,
+            support: vec![vec![0, 0, 0], vec![15, 15, 15]],
+            kparams: match kernel {
+                Kernel::Rbf => KernelParams { g2_q: 91, ..Default::default() },
+                _ => KernelParams { gamma_q: 777, coef0_q: 256, degree: 2, ..Default::default() },
+            },
+        }
+    }
+
+    /// A random well-formed kernel machine over a random support set.
+    pub fn kernel_model(rng: &mut Pcg32) -> QuantModel {
+        let mut m = quant_model(rng);
+        let kernel = if rng.below(2) == 0 { Kernel::Rbf } else { Kernel::Poly };
+        let s = 1 + rng.below(8) as usize; // 1..=8 support vectors
+        let qmax = (1i32 << (m.bits - 1)) - 1;
+        let k = m.pairs.len();
+        m.weights =
+            (0..k).map(|_| (0..s).map(|_| rng.range_i32(-qmax, qmax)).collect()).collect();
+        m.support = (0..s).map(|_| features(rng, m.n_features)).collect();
+        m.kernel = kernel;
+        // constants in the ranges quantize_kernel_constants produces
+        m.kparams = match kernel {
+            Kernel::Rbf => {
+                KernelParams { g2_q: 1 + rng.below(4000) as i32, ..Default::default() }
+            }
+            _ => KernelParams {
+                gamma_q: 1 + rng.below(8000) as i32,
+                coef0_q: rng.range_i32(-1024, 1024),
+                degree: 1 + rng.below(4),
+                ..Default::default()
+            },
+        };
+        m
     }
 
     /// A random well-formed quantized model.
@@ -129,6 +222,9 @@ pub mod gen {
             biases: (0..k).map(|_| rng.range_i32(-qmax, qmax)).collect(),
             pairs,
             scale: 1.0,
+            kernel: Kernel::Linear,
+            support: Vec::new(),
+            kparams: KernelParams::default(),
         }
     }
 }
@@ -159,6 +255,16 @@ mod tests {
             assert_eq!(m.weights.len(), m.pairs.len());
             let x = gen::features(rng, m.n_features);
             assert!(x.iter().all(|&v| (0..16).contains(&v)));
+        });
+    }
+
+    #[test]
+    fn kernel_generator_produces_valid_models() {
+        check("gen-kernel-domains", 4, 50, |rng| {
+            let m = gen::kernel_model(rng);
+            assert!(m.is_kernel());
+            m.validate().expect("generated kernel model must validate");
+            assert_eq!(m.weights[0].len(), m.n_support());
         });
     }
 }

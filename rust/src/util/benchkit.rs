@@ -228,7 +228,7 @@ pub fn load_testsets(manifest: &Manifest, keys: &[String]) -> Result<Vec<(String
 }
 
 /// Outcome of one multi-threaded client drive.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct DriveResult {
     /// Requests answered (workers × per-worker share).
     pub served: u64,
@@ -238,6 +238,9 @@ pub struct DriveResult {
     /// when reference models are supplied; must be 0).
     pub native_mismatch: u64,
     pub wall: Duration,
+    /// Per-config `(label-correct, answered)` counts — the live
+    /// accuracy feed for `report::serving`'s per-kernel rollup.
+    pub per_config: HashMap<String, (u64, u64)>,
 }
 
 /// Drive a serving client from `workers` threads over real test
@@ -258,19 +261,27 @@ pub fn drive_clients(
     let correct = AtomicU64::new(0);
     let mismatch = AtomicU64::new(0);
     let done = AtomicU64::new(0);
+    // one (correct, answered) slot per testset, indexed like the
+    // round-robin so workers touch disjoint atomics, no lock
+    let per_cfg: Vec<(AtomicU64, AtomicU64)> =
+        testsets.iter().map(|_| (AtomicU64::new(0), AtomicU64::new(0))).collect();
     let t0 = Instant::now();
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for w in 0..workers {
             let client = client.clone();
             let (correct, mismatch, done) = (&correct, &mismatch, &done);
+            let per_cfg = &per_cfg;
             handles.push(scope.spawn(move || -> Result<()> {
                 for i in 0..n_requests / workers {
-                    let (key, test) = &testsets[(w + i) % testsets.len()];
+                    let slot = (w + i) % testsets.len();
+                    let (key, test) = &testsets[slot];
                     let idx = (w * 7919 + i * 31) % test.len();
                     let resp = client.infer(key, &test.x_q[idx])?;
+                    per_cfg[slot].1.fetch_add(1, Ordering::Relaxed);
                     if resp.pred == test.y[idx] {
                         correct.fetch_add(1, Ordering::Relaxed);
+                        per_cfg[slot].0.fetch_add(1, Ordering::Relaxed);
                     }
                     if let Some(models) = check_models {
                         if resp.pred != infer::predict(&models[key], &test.x_q[idx]) {
@@ -287,11 +298,19 @@ pub fn drive_clients(
         }
         Ok(())
     })?;
+    let per_config = testsets
+        .iter()
+        .zip(&per_cfg)
+        .map(|((key, _), (c, n))| {
+            (key.clone(), (c.load(Ordering::Relaxed), n.load(Ordering::Relaxed)))
+        })
+        .collect();
     Ok(DriveResult {
         served: done.load(Ordering::Relaxed),
         label_correct: correct.load(Ordering::Relaxed),
         native_mismatch: mismatch.load(Ordering::Relaxed),
         wall: t0.elapsed(),
+        per_config,
     })
 }
 

@@ -1,6 +1,7 @@
 //! Cross-layer bit-exactness over the real artifacts (DESIGN.md §6):
-//! golden JSON (Python spec) ⇔ native Rust ⇔ PE emulation ⇔
-//! SERV-executed program — for every one of the 30 configs.
+//! golden JSON (Python spec) ⇔ native Rust ⇔ accelerator emulation
+//! (linear PE array or KSVM op stream) ⇔ SERV-executed program — for
+//! every one of the 90 configs (linear + RBF + poly families).
 //! Requires `make artifacts`; skips when the artifacts are absent.
 
 use flexsvm::accel::pe;
@@ -13,7 +14,11 @@ use flexsvm::manifest_or_return;
 #[test]
 fn all_configs_native_matches_golden() {
     let m = manifest_or_return!("all_configs_native_matches_golden");
-    assert_eq!(m.configs.len(), 30, "expected 5 datasets x 2 strategies x 3 bit-widths");
+    assert_eq!(
+        m.configs.len(),
+        90,
+        "expected 5 datasets x 18 configs (3 kernels x 2 strategies x 3 bit-widths)"
+    );
     for entry in &m.configs {
         let model = m.model(entry).unwrap();
         let golden = m.golden(entry).unwrap();
@@ -35,6 +40,14 @@ fn all_configs_pe_emulation_matches_golden() {
     for entry in &m.configs {
         let model = m.model(entry).unwrap();
         let golden = m.golden(entry).unwrap();
+        if model.is_kernel() {
+            // kernel machines: drive the KSVM accelerator's op stream
+            for (i, x) in golden.x_q.iter().enumerate() {
+                let scores = flexsvm::testing::ksvm_emulate_scores(&model, x).unwrap();
+                assert_eq!(scores, golden.scores[i], "{} sample {i}", entry.key);
+            }
+            continue;
+        }
         let mode = pack::mode_for_bits(model.bits);
         for (i, x) in golden.x_q.iter().enumerate() {
             let fw = pack::feature_words(x, model.bits);
@@ -57,12 +70,19 @@ fn serv_programs_match_golden_predictions() {
         let mut acc =
             ProgramRunner::accelerated(&model, TimingConfig::ideal_mem(), ProgramOpts::default())
                 .unwrap();
-        let mut base = ProgramRunner::baseline(&model, TimingConfig::ideal_mem()).unwrap();
+        // kernel machines have no software-only baseline program
+        let mut base = if model.is_kernel() {
+            None
+        } else {
+            Some(ProgramRunner::baseline(&model, TimingConfig::ideal_mem()).unwrap())
+        };
         for (i, x) in golden.x_q.iter().enumerate().take(8) {
             let (pa, _) = acc.run_sample(x).unwrap();
             assert_eq!(pa, golden.pred[i], "{} accel sample {i}", entry.key);
-            let (pb, _) = base.run_sample(x).unwrap();
-            assert_eq!(pb, golden.pred[i], "{} baseline sample {i}", entry.key);
+            if let Some(base) = base.as_mut() {
+                let (pb, _) = base.run_sample(x).unwrap();
+                assert_eq!(pb, golden.pred[i], "{} baseline sample {i}", entry.key);
+            }
         }
     }
 }
@@ -91,7 +111,7 @@ fn ovo_accuracy_advantage_on_average() {
         let rows: Vec<f64> = m
             .configs
             .iter()
-            .filter(|c| c.strategy.as_str() == strategy)
+            .filter(|c| c.strategy.to_string() == strategy)
             .map(|c| c.accuracy)
             .collect();
         rows.iter().sum::<f64>() / rows.len() as f64

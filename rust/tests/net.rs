@@ -88,6 +88,51 @@ fn served_predictions_over_http_are_bit_identical_to_in_process_client() {
     net.shutdown().unwrap();
 }
 
+#[test]
+fn kernel_configs_serve_over_http_bit_exactly_and_tag_their_metrics() {
+    use flexsvm::kernel::Kernel;
+    let models = vec![
+        ("rbf_cfg".to_string(), gen::tiny_kernel_model("rbf_cfg", Kernel::Rbf)),
+        ("poly_cfg".to_string(), gen::tiny_kernel_model("poly_cfg", Kernel::Poly)),
+    ];
+    let net = native_net_server(models.clone(), NetOpts::default());
+    let mut http = HttpClient::new(net.addr().to_string());
+    let mut rng = Pcg32::seeded(0x6e77);
+
+    // healthz names each config's kernel family
+    let doc = http.get("/healthz").unwrap().json().unwrap();
+    for c in doc.get("configs").unwrap().as_arr().unwrap() {
+        let key = c.get("key").unwrap().as_str().unwrap();
+        let want = if key == "rbf_cfg" { "rbf" } else { "poly" };
+        assert_eq!(c.get("kernel").unwrap().as_str().unwrap(), want);
+        assert_eq!(c.get("bits").unwrap().as_i64().unwrap(), 4);
+    }
+
+    // served predictions match the native kernel-machine spec
+    for (key, model) in &models {
+        for _ in 0..16 {
+            let x = gen::features(&mut rng, model.n_features);
+            let resp = http.post_json("/v1/infer", &wire::infer_body(key, &x)).unwrap();
+            assert_eq!(resp.status, 200, "{}", resp.body);
+            let pred = resp.json().unwrap().get("pred").unwrap().as_i32().unwrap();
+            assert_eq!(pred, infer::predict(model, &x), "{key}: wire != native kernel spec");
+        }
+    }
+
+    // the metrics document tags each config with its kernel id
+    let doc = http.get("/v1/metrics").unwrap().json().unwrap();
+    for (key, want) in [("rbf_cfg", "rbf"), ("poly_cfg", "poly")] {
+        let m = doc.get("configs").unwrap().get(key).unwrap().clone();
+        assert_eq!(m.get("kernel").unwrap().as_str().unwrap(), want, "{key}");
+        assert_eq!(m.get("requests").unwrap().as_i64().unwrap(), 16);
+        let back = wire::config_metrics_from_json(&m).unwrap();
+        assert_eq!(back.kernel, want);
+        assert_eq!(back.bits, 4);
+    }
+    drop(http);
+    net.shutdown().unwrap();
+}
+
 // ------------------------------------- engine contract over the wire
 
 #[test]
@@ -376,8 +421,14 @@ fn healthz_metrics_and_error_routes() {
     assert_eq!(doc.get("status").unwrap().as_str().unwrap(), "ok");
     assert_eq!(doc.get("engine").unwrap().as_str().unwrap(), "native");
     let configs = doc.get("configs").unwrap().as_arr().unwrap().to_vec();
-    let names: Vec<&str> = configs.iter().map(|c| c.as_str().unwrap()).collect();
-    assert!(names.contains(&"cfg_a") && names.contains(&"cfg_b"), "{names:?}");
+    let names: Vec<String> =
+        configs.iter().map(|c| c.get("key").unwrap().as_str().unwrap().to_string()).collect();
+    assert!(names.iter().any(|n| n == "cfg_a") && names.iter().any(|n| n == "cfg_b"), "{names:?}");
+    // served-config entries carry the model family facts (ISSUE 8)
+    for c in &configs {
+        assert_eq!(c.get("kernel").unwrap().as_str().unwrap(), "linear");
+        assert_eq!(c.get("bits").unwrap().as_i64().unwrap(), 4);
+    }
 
     // some traffic, then the metrics document
     let r = c.post_json("/v1/infer", &wire::infer_body("cfg_a", &[1, 2, 3])).unwrap();

@@ -11,7 +11,7 @@ use flexsvm::program::ProgramOpts;
 use flexsvm::serv::TimingConfig;
 use flexsvm::svm::model::Strategy;
 use flexsvm::svm::{infer, pack};
-use flexsvm::testing::{check, gen};
+use flexsvm::testing::{check, gen, ksvm_emulate_scores};
 
 /// Encode→decode is the identity over random well-formed instructions.
 #[test]
@@ -479,6 +479,92 @@ fn prop_analytic_cost_model_is_bit_exact() {
                 m.bits, m.strategy
             );
         }
+    });
+}
+
+/// Kernel tentpole differential (ISSUE 8): the integer spec
+/// (`infer::scores`, the Rust twin of the Python oracle), the KSVM
+/// accelerator op stream, and the SERV-executed kernel program produce
+/// identical integers on random RBF/poly machines at 4/8/16 bits.
+#[test]
+fn prop_kernel_oracle_accel_and_serv_agree() {
+    check("kernel-three-layers", 0x15b, 40, |rng| {
+        let m = gen::kernel_model(rng);
+        let x = gen::features(rng, m.n_features);
+        let native = infer::scores(&m, &x);
+        let emu = ksvm_emulate_scores(&m, &x).unwrap();
+        assert_eq!(emu, native, "{} bits={} x={x:?}", m.kernel, m.bits);
+        let mut acc =
+            ProgramRunner::accelerated(&m, TimingConfig::ideal_mem(), ProgramOpts::default())
+                .unwrap();
+        let (pred, _) = acc.run_sample(&x).unwrap();
+        assert_eq!(pred, infer::predict(&m, &x), "{} bits={} x={x:?}", m.kernel, m.bits);
+    });
+}
+
+/// The analytic fast path extends to kernel programs: prediction and
+/// the full cycle bill are bit-exact against the simulated SoC.
+#[test]
+fn prop_kernel_analytic_cost_is_bit_exact() {
+    use flexsvm::program::cost::AnalyticModel;
+    use flexsvm::program::run::CompiledProgram;
+    check("kernel-analytic-vs-sim", 0x15c, 10, |rng| {
+        let m = gen::kernel_model(rng);
+        let timing = *rng.choose(&[TimingConfig::flexic(), TimingConfig::ideal_mem()]);
+        let c = CompiledProgram::accelerated(&m, ProgramOpts::default()).unwrap();
+        let am = AnalyticModel::derive(&m, &c, timing)
+            .expect("derivation must succeed for kernel programs");
+        let mut runner = ProgramRunner::from_compiled(&c, timing).unwrap();
+        for _ in 0..3 {
+            let x = gen::features(rng, m.n_features);
+            let (pred, stats) = am.predict(&x).unwrap();
+            let (sim_pred, sim_stats) = runner.run_sample(&x).unwrap();
+            assert_eq!(pred, sim_pred, "{} bits={}", m.kernel, m.bits);
+            assert_eq!(
+                stats, sim_stats,
+                "{} bits={}: analytic bill must be bit-exact",
+                m.kernel, m.bits
+            );
+        }
+    });
+}
+
+/// The kernel fast path never returns a wrong answer: a poisoned
+/// analytic model on a random RBF/poly config is caught by the first
+/// audit, the config demotes to full simulation, and every prediction
+/// still matches the native spec.
+#[test]
+fn prop_kernel_fastpath_audit_never_wrong() {
+    use flexsvm::farm::ExecMode;
+    check("kernel-audit", 0x15d, 6, |rng| {
+        let m = gen::kernel_model(rng);
+        let nf = m.n_features;
+        let farm = Farm::start(
+            vec![("k".to_string(), m.clone())],
+            FarmOpts {
+                shards: 1,
+                timing: TimingConfig::ideal_mem(),
+                calibrate_baseline: false,
+                fastpath: true,
+                audit_rate: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let skew = 1 + rng.below(1000) as u64;
+        farm.inject_analytic_skew("k", skew).unwrap();
+        for i in 0..6 {
+            let x = gen::features(rng, nf);
+            let o = farm.predict("k", &x).unwrap();
+            assert_eq!(o.pred, infer::predict(&m, &x), "{}: ground truth survives", m.kernel);
+            let want = if i == 0 { ExecMode::Audited } else { ExecMode::Sim };
+            assert_eq!(o.mode, want, "{} request {i}", m.kernel);
+        }
+        let f = farm.metrics().fast;
+        assert_eq!(f.audits, 1);
+        assert_eq!(f.mismatches, 1);
+        assert_eq!(f.poisoned_configs, 1);
+        assert_eq!(f.fast_jobs, 0);
     });
 }
 
