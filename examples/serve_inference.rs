@@ -176,6 +176,7 @@ fn main() -> Result<()> {
     if backend == Backend::Accel {
         let farm = client.engine_metrics()?.farm;
         let stages = client.obs().stage_snapshot();
+        let nm = net.as_ref().map(|n| n.metrics());
         print!(
             "{}",
             serving::render(
@@ -186,6 +187,7 @@ fn main() -> Result<()> {
                 Some(&stages),
                 None,
                 r.per_config.as_ref(),
+                nm.as_ref(),
             )
         );
         // Table-I sanity: at least one served config's accel-vs-baseline

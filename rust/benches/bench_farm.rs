@@ -213,6 +213,7 @@ fn main() -> anyhow::Result<()> {
             Some(&stages),
             None,
             None,
+            None,
         )
     );
     server.shutdown()?;

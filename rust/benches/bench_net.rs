@@ -1,19 +1,29 @@
-//! Wire-front serving benchmark: the `farm::scenario` steady / bursty /
-//! multi-tenant streams replayed over loopback sockets against
-//! `net::server` (coordinator + accel farm behind it).
+//! Wire-front serving benchmark: paced scenario replay plus the
+//! device-scale streaming sweep.
 //!
-//! Arrivals are paced open-loop to the scenario's schedule (transport
-//! concurrency is bounded by the client worker pool); every request is
-//! a real HTTP `POST /v1/infer`, so the numbers include JSON
-//! serialization, socket hops and the net layer's admission control.
-//! Recorded per scenario: throughput, client-observed p50/p99 wall
-//! latency, and shed rate; energy/request comes from
-//! `report::serving` over the farm's sim accounting.  Results land in
-//! `BENCH_net.json` through benchkit.
+//! **Part A** replays the `farm::scenario` steady / bursty /
+//! multi-tenant streams over loopback sockets against `net::server`
+//! (coordinator + accel farm behind it).  Arrivals are paced open-loop
+//! to the scenario's schedule; every request is a real HTTP
+//! `POST /v1/infer`, so the numbers include JSON serialization, socket
+//! hops and the net layer's admission control.
+//!
+//! **Part B** is the event-driven front's reason to exist: a sweep of
+//! concurrent keep-alive device sessions (`farm::scenario::Streaming` +
+//! `net::drive_streaming`) run against **both** fronts at shared
+//! concurrency points, plus an epoll-only point at 10k devices — a
+//! scale the pool front cannot hold by construction.  Each point
+//! reports steady-state throughput, client p50/p99, shed/stall rates,
+//! keep-alive reuse, and the peak of the server's open-connection
+//! gauge (sampled live, proving the sessions really were concurrent).
+//! Predictions are checked bit-exact against `svm::infer::predict`
+//! throughout.  Results land in `BENCH_net.json` through benchkit; CI
+//! gates on zero epoll shed at smoke concurrency and epoll throughput
+//! >= pool at every shared point.
 //!
 //!     cargo bench --bench bench_net [n_requests]
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -21,7 +31,7 @@ use flexsvm::coordinator::metrics::Histogram;
 use flexsvm::coordinator::{Backend, Server};
 use flexsvm::farm::scenario::{self, Traffic};
 use flexsvm::farm::FarmOpts;
-use flexsvm::net::{wire, HttpClient, NetOpts, NetServer};
+use flexsvm::net::{drive_streaming, raise_nofile, wire, HttpClient, NetFront, NetOpts, NetServer};
 use flexsvm::power::FlexicModel;
 use flexsvm::report::serving;
 use flexsvm::serv::TimingConfig;
@@ -76,6 +86,92 @@ fn replay_http(
     (wall, served.load(Ordering::Relaxed), shed.load(Ordering::Relaxed), hist.into_inner().unwrap())
 }
 
+/// One streaming sweep point, measured against a fresh server.
+struct StreamPoint {
+    front: NetFront,
+    devices: usize,
+    rps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    shed: u64,
+    stalled: u64,
+    reused: u64,
+    mismatches: u64,
+    /// Peak of the server's live open-connection gauge during the
+    /// drive — the proof the sessions were actually concurrent.
+    peak_open: u64,
+}
+
+/// Stand up a fresh coordinator + wire front, hold `devices` keep-alive
+/// sessions open against it, and measure the steady-state rounds.  An
+/// open-connection sampler rides along to capture the concurrency peak.
+fn stream_point(
+    front: NetFront,
+    devices: usize,
+    rounds: usize,
+    models: &[(String, QuantModel)],
+) -> anyhow::Result<StreamPoint> {
+    let server = Server::builder()
+        .models(models.to_vec())
+        .backend(Backend::Accel)
+        .queue_cap(1024)
+        .linger(Duration::from_micros(200))
+        .farm(FarmOpts {
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            // analytic fast path keeps 10k-device rounds quick while
+            // the differential audit still exercises the full SoC
+            fastpath: true,
+            audit_rate: 64,
+            ..Default::default()
+        })
+        .start()?;
+    let opts = NetOpts {
+        front,
+        // the pool front's honest best at device scale: a big pool and
+        // a small backlog, so starvation sheds fast instead of parking
+        workers: 64,
+        conn_backlog: 4,
+        // devices report on long-lived sessions: idle between rounds
+        // must not count as abandonment
+        keep_alive: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let net = NetServer::bind(server, "127.0.0.1:0", opts)?;
+    let addr = net.addr().to_string();
+    let s = scenario::Streaming::new(devices, models.len(), 8, 0xd1ce ^ devices as u64);
+    let threads = devices.clamp(1, 16);
+
+    let stop = AtomicBool::new(false);
+    let peak = AtomicU64::new(0);
+    let r = std::thread::scope(|sc| {
+        let sampler = sc.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                peak.fetch_max(net.metrics().active, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let r = drive_streaming(&addr, &s, models, rounds, threads);
+        stop.store(true, Ordering::Relaxed);
+        sampler.join().expect("open-conns sampler panicked");
+        r
+    })?;
+    net.shutdown()?;
+
+    Ok(StreamPoint {
+        front,
+        devices,
+        rps: r.served as f64 / r.wall.as_secs_f64().max(1e-9),
+        p50_us: r.latency.quantile_us(0.50),
+        p99_us: r.latency.quantile_us(0.99),
+        shed: r.shed,
+        stalled: r.stalled,
+        reused: r.connections_reused,
+        mismatches: r.native_mismatch,
+        peak_open: peak.load(Ordering::Relaxed),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let default_n = if quick() { 200 } else { 1_500 };
     let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(default_n);
@@ -94,10 +190,17 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         })
         .start()?;
-    let net = NetServer::bind(server, "127.0.0.1:0", NetOpts { workers: WORKERS, ..Default::default() })?;
+    let net = NetServer::bind(
+        server,
+        "127.0.0.1:0",
+        NetOpts { workers: WORKERS, ..Default::default() },
+    )?;
     let addr = net.addr().to_string();
     let client = net.client();
-    println!("### wire front on {addr}: {n} paced requests/scenario, {WORKERS} HTTP clients");
+    println!(
+        "### wire front on {addr} ({} front): {n} paced requests/scenario, {WORKERS} HTTP clients",
+        net.front()
+    );
 
     // single-request wire round trip (serialization + socket + farm)
     let mut rtt_client = HttpClient::new(addr.clone());
@@ -138,10 +241,11 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
 
     // energy/request + sim-vs-wall from the farm behind the socket,
-    // with the server-side per-stage waterfall
+    // with the server-side per-stage waterfall and the net gauges
     let metrics = client.metrics()?;
     let farm = client.engine_metrics()?.farm;
     let stages = client.obs().stage_snapshot();
+    let nm = net.metrics();
     print!(
         "{}",
         serving::render(
@@ -152,6 +256,7 @@ fn main() -> anyhow::Result<()> {
             Some(&stages),
             None,
             None,
+            Some(&nm),
         )
     );
     if let Some(fm) = farm.as_ref() {
@@ -168,13 +273,76 @@ fn main() -> anyhow::Result<()> {
         report.metric(&format!("stage {} p50", stage.name()), h.quantile_us(0.50) as f64, "us");
         report.metric(&format!("stage {} p99", stage.name()), h.quantile_us(0.99) as f64, "us");
     }
-    let nm = net.metrics();
     report.metric("net accepted connections", nm.accepted as f64, "conns");
     report.metric("net requests", nm.requests as f64, "reqs");
     report.metric("net bytes out", nm.bytes_out as f64, "bytes");
     net.shutdown()?;
 
-    let path = write_report("net", &[&report])?;
+    // ---- Part B: device-scale streaming, pool vs epoll -------------
+    let mut streaming = Bench::new("streaming (concurrent keep-alive device sessions)");
+    // shared concurrency points run on both fronts; the 10k point is
+    // epoll-only (the pool cannot hold it by construction)
+    let (shared, epoll_only, rounds): (&[usize], &[usize], usize) = if quick() {
+        (&[64, 256], &[], 3)
+    } else {
+        (&[256, 2_048], &[10_000], 4)
+    };
+    let max_devices = shared.iter().chain(epoll_only).copied().max().unwrap_or(0);
+    // client + server sockets live in this one process: ~2 fds/device
+    let nofile = raise_nofile((4 * max_devices + 256) as u64);
+    streaming.metric("nofile soft limit", nofile as f64, "fds");
+    let fronts: &[NetFront] = if cfg!(target_os = "linux") {
+        &[NetFront::Pool, NetFront::Epoll]
+    } else {
+        &[NetFront::Pool]
+    };
+    let mut points: Vec<StreamPoint> = Vec::new();
+    for &devices in shared {
+        for &front in fronts {
+            points.push(stream_point(front, devices, rounds, &models)?);
+        }
+    }
+    for &devices in epoll_only {
+        if nofile < (2 * devices + 256) as u64 {
+            println!("skipping {devices}-device point: nofile limit {nofile} too low");
+            streaming.metric("epoll 10k point skipped (nofile)", 1.0, "flag");
+            continue;
+        }
+        points.push(stream_point(NetFront::Epoll, devices, rounds, &models)?);
+    }
+    let mut st = Table::new([
+        "front", "devices", "req/s", "p50 (us)", "p99 (us)", "shed", "stalled", "reused",
+        "peak open",
+    ]);
+    let mut total_mismatches = 0u64;
+    for p in &points {
+        st.row([
+            p.front.to_string(),
+            p.devices.to_string(),
+            format!("{:.0}", p.rps),
+            p.p50_us.to_string(),
+            p.p99_us.to_string(),
+            p.shed.to_string(),
+            p.stalled.to_string(),
+            p.reused.to_string(),
+            p.peak_open.to_string(),
+        ]);
+        let tag = format!("streaming {} {}dev", p.front, p.devices);
+        streaming.metric(&format!("{tag} req/s"), p.rps, "req/s");
+        streaming.metric(&format!("{tag} p50 latency"), p.p50_us as f64, "us");
+        streaming.metric(&format!("{tag} p99 latency"), p.p99_us as f64, "us");
+        streaming.metric(&format!("{tag} shed"), p.shed as f64, "reqs");
+        streaming.metric(&format!("{tag} stalled"), p.stalled as f64, "reqs");
+        streaming.metric(&format!("{tag} reused"), p.reused as f64, "reqs");
+        streaming.metric(&format!("{tag} peak open conns"), p.peak_open as f64, "conns");
+        total_mismatches += p.mismatches;
+    }
+    println!("\n### streaming sweep ({rounds} rounds, first = connect/warm, excluded)");
+    print!("{}", st.render());
+    streaming.metric("streaming native mismatches", total_mismatches as f64, "preds");
+    assert_eq!(total_mismatches, 0, "wire answers must be bit-identical to svm::infer");
+
+    let path = write_report("net", &[&report, &streaming])?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -16,6 +16,15 @@
 //! so benches replay identical streams across backends and shard
 //! counts; [`Scenario::replay`] is the shared multi-threaded paced
 //! replayer those benches drive (`bench_farm`, `bench_net`).
+//!
+//! [`Streaming`] models the device-scale workload the wearable
+//! co-processor line of work implies (PAPERS.md, arxiv 2511.05985):
+//! thousands of cheap sensors each holding one long-lived session,
+//! aggregating a window of raw ticks into a 4-bit feature vector per
+//! request, every device pinned to its config (per-device affinity).
+//! Unlike [`Scenario`] it is not a materialised arrival list — with
+//! 10k devices × many windows the stream is generated on the fly, one
+//! deterministic feature vector per `(device, window)`.
 
 use std::time::{Duration, Instant};
 
@@ -102,6 +111,66 @@ impl Scenario {
             }
         });
         start.elapsed()
+    }
+}
+
+/// Device-scale streaming workload: `n_devices` long-lived sessions,
+/// each emitting one windowed feature vector per round to its affine
+/// config.  Pure data — `net::drive_streaming` turns it into sockets.
+#[derive(Debug, Clone, Copy)]
+pub struct Streaming {
+    /// Concurrent device sessions.
+    pub n_devices: usize,
+    /// Configs the device population is pinned across.
+    pub n_configs: usize,
+    /// Raw sensor ticks aggregated into each window's feature vector.
+    pub samples_per_window: usize,
+    seed: u64,
+}
+
+/// SplitMix64 finalizer: the stable hash behind device affinity and
+/// per-window seeding.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Streaming {
+    pub fn new(n_devices: usize, n_configs: usize, samples_per_window: usize, seed: u64) -> Streaming {
+        assert!(n_devices > 0 && n_configs > 0 && samples_per_window > 0);
+        Streaming { n_devices, n_configs, samples_per_window, seed }
+    }
+
+    /// The config this device's session is pinned to — stable across
+    /// windows and runs (the affinity the farm's shard scheduler sees).
+    pub fn config_of(&self, device: usize) -> usize {
+        (mix64(self.seed ^ (device as u64).wrapping_mul(0xd134_2543_de82_ef95))
+            % self.n_configs as u64) as usize
+    }
+
+    /// Windowed feature extraction for `(device, window)`: the device
+    /// aggregates `samples_per_window` raw ticks of a noisy per-channel
+    /// sensor around its own baseline into one mean, clamped to the
+    /// 4-bit feature range the quantized models consume.  Deterministic
+    /// per `(seed, device, window)` — both ends of a wire check can
+    /// regenerate the exact vector.
+    pub fn window_features(&self, device: usize, window: u64, n_features: usize) -> Vec<i32> {
+        let mut rng = Pcg32::seeded(mix64(
+            self.seed ^ mix64(device as u64) ^ window.wrapping_mul(0x2545_f491_4f6c_dd1d),
+        ));
+        (0..n_features)
+            .map(|c| {
+                // per-(device, channel) baseline: devices genuinely
+                // differ, so the config's decision surface is exercised
+                let baseline = (mix64(self.seed ^ ((device * 131 + c) as u64)) % 16) as i64;
+                let sum: i64 = (0..self.samples_per_window)
+                    .map(|_| baseline + rng.below(7) as i64 - 3)
+                    .sum();
+                (sum / self.samples_per_window as i64).clamp(0, 15) as i32
+            })
+            .collect()
     }
 }
 
@@ -216,6 +285,33 @@ mod tests {
         );
         assert!(hits.lock().unwrap().iter().all(|&h| h == 1), "every arrival replayed once");
         assert!(wall >= s.duration(), "pacing must wait out the schedule");
+    }
+
+    #[test]
+    fn streaming_features_are_deterministic_4bit_and_device_specific() {
+        let s = Streaming::new(100, 4, 8, 0xfeed);
+        let a = s.window_features(7, 3, 6);
+        let b = s.window_features(7, 3, 6);
+        assert_eq!(a, b, "same (device, window) regenerates bit-identically");
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&v| (0..16).contains(&v)), "4-bit features: {a:?}");
+        // windows and devices actually vary (not a constant stream)
+        let windows: Vec<_> = (0..16).map(|w| s.window_features(7, w, 6)).collect();
+        assert!(windows.windows(2).any(|p| p[0] != p[1]), "windows never vary");
+        let devices: Vec<_> = (0..16).map(|d| s.window_features(d, 0, 6)).collect();
+        assert!(devices.windows(2).any(|p| p[0] != p[1]), "devices never vary");
+    }
+
+    #[test]
+    fn streaming_affinity_is_stable_and_covers_configs() {
+        let s = Streaming::new(1000, 4, 8, 0xabcd);
+        let mut mix = vec![0usize; 4];
+        for d in 0..s.n_devices {
+            let c = s.config_of(d);
+            assert_eq!(c, s.config_of(d), "affinity must be stable");
+            mix[c] += 1;
+        }
+        assert!(mix.iter().all(|&c| c > 100), "affinity mix too skewed: {mix:?}");
     }
 
     #[test]

@@ -44,8 +44,13 @@ USAGE: flexsvm <subcommand> [options]
                [--batch-max N] [--linger-us N] [--queue-cap N] [--synthetic]
                [--fastpath] [--audit-rate N]
                [--listen HOST:PORT] [--remote HOST:PORT,...]
+               [--net-front pool|epoll] [--event-threads N]
                --listen serves HTTP (POST /v1/infer, GET /healthz, GET
                /v1/metrics) until ctrl-c, which drains in-flight requests;
+               --net-front picks the socket front (default: epoll on Linux
+               — a few event threads hold every keep-alive connection;
+               pool elsewhere/fallback), --event-threads sizes the epoll
+               front (0 = auto);
                --remote executes batches on remote `serve --listen` nodes;
                --synthetic serves built-in tiny models (no artifacts needed);
                --fastpath (accel backend) answers from the analytic cost
@@ -407,7 +412,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     })?;
 
     if let Some(listen) = args.opt_str("listen") {
-        return serve_listen(server, listen, &keys);
+        let mut net_opts = NetOpts::default();
+        if let Some(front) = args.opt_str("net-front") {
+            net_opts.front = front.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        }
+        net_opts.event_threads = args.usize_or("event-threads", net_opts.event_threads)?;
+        return serve_listen(server, listen, &keys, net_opts);
     }
 
     let client = server.client();
@@ -457,6 +467,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Some(&stages),
                 engine.fleet.as_ref(),
                 Some(&r.per_config),
+                None,
             )
         );
     }
@@ -468,10 +479,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `serve --listen`: put the coordinator on a socket and run until
 /// ctrl-c, then drain and shut down.
-fn serve_listen(server: Server, listen: &str, keys: &[String]) -> Result<()> {
+fn serve_listen(server: Server, listen: &str, keys: &[String], opts: NetOpts) -> Result<()> {
     let stop = install_ctrlc();
-    let net = NetServer::bind(server, listen, NetOpts::default())?;
-    println!("flexsvm net: listening on {}", net.addr());
+    let net = NetServer::bind(server, listen, opts)?;
+    println!("flexsvm net: listening on {} ({} front)", net.addr(), net.front());
     println!("  configs: {}", keys.join(", "));
     println!(
         "  endpoints: GET /healthz | GET /v1/metrics | GET /metrics | GET /v1/traces | POST /v1/infer"

@@ -96,6 +96,7 @@ pub struct HttpClient {
     addr: String,
     opts: HttpClientOpts,
     conn: Option<Conn>,
+    reused: u64,
 }
 
 impl HttpClient {
@@ -104,11 +105,28 @@ impl HttpClient {
     }
 
     pub fn with_opts(addr: impl Into<String>, opts: HttpClientOpts) -> HttpClient {
-        HttpClient { addr: addr.into(), opts, conn: None }
+        HttpClient { addr: addr.into(), opts, conn: None, reused: 0 }
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// Requests that rode an already-established keep-alive connection
+    /// (everything except the first request per connect).  A 10k-device
+    /// drive watches this to prove sessions actually stay open instead
+    /// of churning the ephemeral-port range.
+    pub fn connections_reused(&self) -> u64 {
+        self.reused
+    }
+
+    /// Drop the cached connection with an RST instead of a FIN
+    /// (`SO_LINGER` 0 on Linux): no TIME_WAIT state survives, so mass
+    /// teardowns don't strand client ports for 60s.
+    pub fn close_abortive(&mut self) {
+        if let Some(conn) = self.conn.take() {
+            super::abortive_close(conn.stream());
+        }
     }
 
     pub fn get(&mut self, path: &str) -> Result<HttpResponse, NetError> {
@@ -179,6 +197,7 @@ impl HttpClient {
     ) -> Result<HttpResponse, NetError> {
         let body_cap = self.opts.max_response_bytes;
         let host = self.addr.clone();
+        let reusing = self.conn.is_some();
         let conn = self.ensure_conn()?;
         let mut headers: Vec<(&str, String)> = vec![("Host", host), ("Connection", "keep-alive".into())];
         if body.is_some() {
@@ -198,6 +217,9 @@ impl HttpClient {
         let headers = msg.headers;
         if close {
             self.conn = None;
+        }
+        if reusing {
+            self.reused += 1;
         }
         Ok(HttpResponse { status, headers, body })
     }

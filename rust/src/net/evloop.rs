@@ -1,0 +1,839 @@
+//! Epoll readiness loop (Linux): the event-driven serving front.
+//!
+//! One blocking acceptor thread round-robins accepted sockets to a
+//! small set of event threads.  Each event thread owns an epoll
+//! instance and a `HashMap` of connection state machines: non-blocking
+//! reads feed the incremental `http::Parser`, complete requests go
+//! through the shared `server::route()`, and in-flight coordinator
+//! work (`InflightInfer`) is polled with `Pending::try_wait` — so a
+//! handful of threads hold tens of thousands of keep-alive sockets
+//! where the pool front caps out at its worker count.
+//!
+//! Mechanics worth knowing:
+//!
+//!  * **FFI surface is three syscalls.** `epoll_create1/ctl/wait` are
+//!    declared `extern "C"` against the libc std already links (the
+//!    no-new-deps rule); sockets become non-blocking via std's
+//!    `set_nonblocking`, and the cross-thread wake-up is a
+//!    `UnixStream::pair`, not an eventfd.
+//!  * **Level-triggered** with explicit interest management: `EPOLLIN`
+//!    is dropped while a response is in flight and the parser already
+//!    buffers [`PIPELINE_BUF_CAP`] bytes (pipelining backpressure),
+//!    `EPOLLOUT` is raised only while the write buffer is non-empty.
+//!  * **Timeouts ride a hashed timer wheel** with lazy re-check: each
+//!    connection keeps exactly one wheel entry; when it fires, the
+//!    real deadline (idle keep-alive, or the slow-read guard while a
+//!    partial message is buffered) is recomputed and the entry either
+//!    kills the connection or reschedules.
+//!  * **Completion polling** runs with a zero epoll timeout plus a
+//!    50µs sleep when nothing progressed — the latency floor for
+//!    coordinator answers is microseconds, not the 1ms epoll tick.
+//!  * **Graceful drain**: on stop, idle connections close immediately,
+//!    in-flight requests finish and flush with `Connection: close`.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use super::http::Parser;
+use super::server::{
+    answer_bytes, route, shed_connection, Answer, Ctx, Gauge, InflightInfer, Routed,
+};
+use crate::obs::Stage;
+
+/// Stop reading from a connection whose parser already buffers this
+/// many bytes while a response is in flight: bounds per-connection
+/// memory and keeps a pipelining peer from busy-looping the level-
+/// triggered readiness.
+const PIPELINE_BUF_CAP: usize = 64 * 1024;
+
+/// Force-close everything still open this long after a drain starts.
+const DRAIN_LIMIT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------- FFI
+
+// std already links libc on unix; declaring the three epoll calls (and
+// rlimit/setsockopt for the bench helpers) here keeps the no-new-deps
+// rule — same idiom as `signal` in main.rs.
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        name: c_int,
+        value: *const Linger,
+        len: u32,
+    ) -> c_int;
+}
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+/// The kernel ABI struct: packed on x86_64 (the one arch where the
+/// kernel's layout differs from natural C alignment).
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+#[repr(C)]
+struct Linger {
+    onoff: c_int,
+    linger: c_int,
+}
+
+const RLIMIT_NOFILE: c_int = 7;
+const SOL_SOCKET: c_int = 1;
+const SO_LINGER: c_int = 13;
+
+/// Raise the soft open-file limit toward `want` (capped at the hard
+/// limit) and return the effective soft limit.  A 10k-device loopback
+/// drive needs ~2× that many fds in one process; the default soft
+/// limit is often 1024.
+pub fn raise_nofile(want: u64) -> u64 {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 0;
+    }
+    if lim.cur >= want {
+        return lim.cur;
+    }
+    let new = RLimit { cur: want.min(lim.max), max: lim.max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+        new.cur
+    } else {
+        lim.cur
+    }
+}
+
+/// Make dropping this socket send an RST instead of a FIN
+/// (`SO_LINGER` 0): the close leaves no TIME_WAIT state behind, so a
+/// bench sweep tearing down 10k client connections per point doesn't
+/// strand the ephemeral-port range for 60s.
+pub fn abortive_close(stream: &TcpStream) {
+    let lg = Linger { onoff: 1, linger: 0 };
+    let _ = unsafe {
+        setsockopt(
+            stream.as_raw_fd(),
+            SOL_SOCKET,
+            SO_LINGER,
+            &lg,
+            std::mem::size_of::<Linger>() as u32,
+        )
+    };
+}
+
+/// Thin owning wrapper over one epoll instance.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error()).context("epoll_create1");
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        if unsafe { epoll_ctl(self.fd, op, fd, &mut ev) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Wait for readiness; `EINTR` counts as an empty wake-up.
+    fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> usize {
+        let n = unsafe {
+            epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+        };
+        if n < 0 {
+            0 // EINTR or a transient error: treat as a timeout tick
+        } else {
+            n as usize
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// ------------------------------------------------------- timer wheel
+
+/// Hashed timer wheel with lazy re-check.  `schedule` drops a token
+/// into the slot of its deadline tick (modulo the wheel, so far-out
+/// deadlines fire early — the owner re-checks the real deadline and
+/// reschedules).  Each connection keeps exactly one live entry; stale
+/// entries for closed connections fall out on a failed lookup.
+struct TimerWheel {
+    slots: Vec<Vec<u64>>,
+    granularity: Duration,
+    epoch: Instant,
+    cursor: u64,
+}
+
+impl TimerWheel {
+    fn new(n_slots: usize, granularity: Duration) -> TimerWheel {
+        TimerWheel {
+            slots: (0..n_slots).map(|_| Vec::new()).collect(),
+            granularity,
+            epoch: Instant::now(),
+            cursor: 0,
+        }
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        (t.saturating_duration_since(self.epoch).as_nanos() / self.granularity.as_nanos().max(1))
+            as u64
+    }
+
+    fn schedule(&mut self, token: u64, deadline: Instant) {
+        // never behind the cursor, or the entry would wait a full lap
+        let tick = self.tick_of(deadline).max(self.cursor);
+        let idx = (tick % self.slots.len() as u64) as usize;
+        self.slots[idx].push(token);
+    }
+
+    /// Drain every slot up to `now` into `due`.
+    fn advance(&mut self, now: Instant, due: &mut Vec<u64>) {
+        let now_tick = self.tick_of(now);
+        // a long stall (> one lap) still visits each slot once
+        let laps = self.slots.len() as u64;
+        let end = now_tick.min(self.cursor + laps);
+        while self.cursor <= end {
+            let idx = (self.cursor % laps) as usize;
+            due.append(&mut self.slots[idx]);
+            self.cursor += 1;
+        }
+        self.cursor = self.cursor.max(now_tick + 1);
+    }
+}
+
+// -------------------------------------------------- connection state
+
+/// One non-blocking connection owned by an event thread.
+struct ConnState {
+    stream: TcpStream,
+    fd: RawFd,
+    parser: Parser,
+    /// Response bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A routed request waiting on the coordinator, plus whether the
+    /// connection stays open after its answer.
+    inflight: Option<(InflightInfer, bool)>,
+    close_after_write: bool,
+    peer_closed: bool,
+    last_activity: Instant,
+    /// Events currently registered with epoll (interest cache).
+    interest: u32,
+    gauge: Option<Gauge>,
+    /// Parser bytes already folded into the shared counters.
+    folded_in: u64,
+}
+
+impl ConnState {
+    fn wants_read(&self, draining: bool) -> bool {
+        if self.peer_closed || self.close_after_write || draining {
+            return false;
+        }
+        // backpressure: a pipelining peer stops being read once enough
+        // of its next requests are buffered behind an in-flight answer
+        !(self.inflight.is_some() && self.parser.buffered() >= PIPELINE_BUF_CAP)
+    }
+
+    fn wants_write(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    /// The live gauge this connection belongs in right now.
+    fn gauge_now(&self) -> Gauge {
+        if self.inflight.is_some() || self.wants_write() {
+            Gauge::Writing
+        } else if self.parser.mid_message() {
+            Gauge::Reading
+        } else {
+            Gauge::Idle
+        }
+    }
+
+    /// When this connection must next be inspected for a timeout.
+    fn deadline(&self, opts: &super::server::NetOpts) -> Option<Instant> {
+        if self.inflight.is_some() {
+            None // bounded by the coordinator, not the wire
+        } else if let Some(t0) = self.parser.started() {
+            Some(t0 + opts.read_deadline) // slow-read guard
+        } else if self.wants_write() {
+            Some(self.last_activity + opts.read_deadline) // stuck writer
+        } else {
+            Some(self.last_activity + opts.keep_alive) // idle keep-alive
+        }
+    }
+}
+
+// --------------------------------------------------------- the front
+
+/// Handle to the running epoll front: the acceptor, the event threads,
+/// and their wake-up pipes.
+pub(crate) struct EvLoop {
+    acceptor: Option<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
+    wakes: Vec<UnixStream>,
+}
+
+impl EvLoop {
+    /// Spawn the acceptor and `opts.event_threads` event threads
+    /// (0 = `min(4, cores)`).
+    pub(crate) fn start(listener: TcpListener, ctx: Arc<Ctx>) -> Result<EvLoop> {
+        let n = match ctx.opts.event_threads {
+            0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(4),
+            n => n,
+        };
+        let mut threads = Vec::with_capacity(n);
+        let mut wakes = Vec::with_capacity(n);
+        let mut handoffs = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<TcpStream>();
+            let (wake_r, wake_w) = UnixStream::pair().context("wake pipe")?;
+            wake_r.set_nonblocking(true)?;
+            wake_w.set_nonblocking(true)?;
+            let tctx = Arc::clone(&ctx);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("flexsvm-ev-{i}"))
+                    .spawn(move || EventThread::new(tctx, rx, wake_r).run())?,
+            );
+            let wake_accept_side = wake_w.try_clone()?;
+            wakes.push(wake_w);
+            handoffs.push((tx, wake_accept_side));
+        }
+        let actx = Arc::clone(&ctx);
+        let acceptor = std::thread::Builder::new()
+            .name("flexsvm-ev-accept".into())
+            .spawn(move || accept_loop(listener, handoffs, actx))?;
+        Ok(EvLoop { acceptor: Some(acceptor), threads, wakes })
+    }
+
+    /// Join everything down.  The caller has already set `ctx.stop`
+    /// and poked the listener awake.
+    pub(crate) fn stop(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // acceptor exit dropped the handoff senders; a wake byte makes
+        // each event thread notice stop + disconnect immediately
+        for w in &self.wakes {
+            let _ = (&*w).write(&[1]);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handoffs: Vec<(mpsc::Sender<TcpStream>, UnixStream)>,
+    ctx: Arc<Ctx>,
+) {
+    let mut next = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return; // the shutdown wake-up
+                }
+                ctx.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                if ctx.counters.active.load(Ordering::SeqCst) >= ctx.opts.max_conns as u64 {
+                    // connection cap: shed at the door, same contract
+                    // as the pool front's full backlog
+                    ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                    shed_connection(stream, &ctx);
+                    continue;
+                }
+                let (tx, wake) = &handoffs[next % handoffs.len()];
+                next += 1;
+                if tx.send(stream).is_ok() {
+                    let _ = (&*wake).write(&[1]);
+                }
+            }
+            Err(_) => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Per-thread readiness loop state.
+struct EventThread {
+    ctx: Arc<Ctx>,
+    ep: Epoll,
+    rx: mpsc::Receiver<TcpStream>,
+    wake: UnixStream,
+    conns: HashMap<u64, ConnState>,
+    /// Tokens with an in-flight coordinator request to poll.
+    inflight: HashSet<u64>,
+    wheel: TimerWheel,
+    next_token: u64,
+    draining_since: Option<Instant>,
+}
+
+/// epoll token of the wake pipe (connection tokens start at 1).
+const WAKE_TOKEN: u64 = 0;
+
+impl EventThread {
+    fn new(ctx: Arc<Ctx>, rx: mpsc::Receiver<TcpStream>, wake: UnixStream) -> EventThread {
+        let ep = Epoll::new().expect("epoll_create1");
+        ep.add(wake.as_raw_fd(), EPOLLIN, WAKE_TOKEN).expect("register wake pipe");
+        EventThread {
+            ctx,
+            ep,
+            rx,
+            wake,
+            conns: HashMap::new(),
+            inflight: HashSet::new(),
+            wheel: TimerWheel::new(128, Duration::from_millis(20)),
+            next_token: 1,
+            draining_since: None,
+        }
+    }
+
+    fn run(mut self) {
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 512];
+        let mut due: Vec<u64> = Vec::new();
+        loop {
+            // zero timeout while coordinator answers are pending: their
+            // latency floor is the poll cadence, not the epoll tick
+            let timeout_ms: i32 = if self.inflight.is_empty() { 20 } else { 0 };
+            let n = self.ep.wait(&mut events, timeout_ms);
+            let mut progress = n > 0;
+            for i in 0..n {
+                let (token, evs) = (events[i].data, events[i].events);
+                if token == WAKE_TOKEN {
+                    let mut buf = [0u8; 64];
+                    while matches!((&self.wake).read(&mut buf), Ok(n) if n > 0) {}
+                    continue;
+                }
+                self.handle_io(token, evs);
+            }
+
+            // adopt newly accepted connections
+            let mut disconnected = false;
+            loop {
+                match self.rx.try_recv() {
+                    Ok(stream) => {
+                        progress = true;
+                        self.register(stream);
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+
+            // poll in-flight coordinator work
+            let settled: Vec<u64> = self
+                .inflight
+                .iter()
+                .copied()
+                .filter(|t| {
+                    self.conns
+                        .get_mut(t)
+                        .and_then(|c| c.inflight.as_mut())
+                        .is_some_and(|(f, _)| f.try_settle())
+                })
+                .collect();
+            for token in settled {
+                progress = true;
+                self.complete(token);
+            }
+
+            // timer wheel sweep
+            let now = Instant::now();
+            self.wheel.advance(now, &mut due);
+            for token in std::mem::take(&mut due) {
+                self.check_deadline(token, now);
+            }
+
+            // graceful drain: close idle conns, let in-flight finish
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                let t0 = *self.draining_since.get_or_insert(now);
+                let force = now.duration_since(t0) > DRAIN_LIMIT;
+                let doomed: Vec<u64> = self
+                    .conns
+                    .iter()
+                    .filter(|(_, c)| force || (c.inflight.is_none() && !c.wants_write()))
+                    .map(|(t, _)| *t)
+                    .collect();
+                for token in doomed {
+                    self.close_conn(token, false);
+                }
+                if disconnected && self.conns.is_empty() {
+                    return;
+                }
+            }
+
+            if !self.inflight.is_empty() && !progress {
+                // completions are near: poll at 50µs, not a full tick
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+
+    fn register(&mut self, stream: TcpStream) {
+        if self.ctx.stop.load(Ordering::SeqCst) {
+            // accepted just before the drain began: drop it
+            self.ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            self.ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let fd = stream.as_raw_fd();
+        let token = self.next_token;
+        self.next_token += 1;
+        let interest = EPOLLIN | EPOLLRDHUP;
+        if self.ep.add(fd, interest, token).is_err() {
+            self.ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let now = Instant::now();
+        self.ctx.counters.active.fetch_add(1, Ordering::SeqCst);
+        self.ctx.counters.move_gauge(None, Some(Gauge::Idle));
+        self.wheel.schedule(token, now + self.ctx.opts.keep_alive);
+        self.conns.insert(
+            token,
+            ConnState {
+                stream,
+                fd,
+                parser: Parser::new(),
+                out: Vec::new(),
+                out_pos: 0,
+                inflight: None,
+                close_after_write: false,
+                peer_closed: false,
+                last_activity: now,
+                interest,
+                gauge: Some(Gauge::Idle),
+                folded_in: 0,
+            },
+        );
+    }
+
+    /// Readiness on one connection: read what's there, parse + route,
+    /// flush what's writable, then re-arm interest.
+    fn handle_io(&mut self, token: u64, evs: u32) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return; // closed earlier this tick
+        };
+        let mut fatal = evs & (EPOLLERR | EPOLLHUP) != 0;
+        if !fatal && evs & (EPOLLIN | EPOLLRDHUP) != 0 {
+            let draining = self.ctx.stop.load(Ordering::SeqCst);
+            let mut chunk = [0u8; 16 * 1024];
+            while conn.wants_read(draining) {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.parser.feed(&chunk[..n]);
+                        conn.last_activity = Instant::now();
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        fatal = true;
+                        break;
+                    }
+                }
+            }
+            let folded = conn.parser.bytes_in() - conn.folded_in;
+            conn.folded_in = conn.parser.bytes_in();
+            self.ctx.counters.bytes_in.fetch_add(folded, Ordering::Relaxed);
+        }
+        if fatal {
+            self.close_conn(token, false);
+            return;
+        }
+        self.pump(token);
+    }
+
+    /// Drive one connection forward: parse + route buffered requests,
+    /// flush pending output, close or re-arm.
+    fn pump(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        // parse and route while the answer pipeline is clear: HTTP/1.1
+        // answers must go out in request order, so a request in flight
+        // at the coordinator holds everything behind it
+        let mut fatal = false;
+        while conn.inflight.is_none() && !conn.close_after_write {
+            match conn.parser.next_message(self.ctx.opts.body_limit) {
+                Ok(Some(msg)) => {
+                    self.ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    let close_req = msg
+                        .header("Connection")
+                        .map(|v| v.eq_ignore_ascii_case("close"))
+                        .unwrap_or(false);
+                    let keep = !close_req && !self.ctx.stop.load(Ordering::SeqCst);
+                    match route(&self.ctx, &msg) {
+                        Routed::Ready(a) => {
+                            enqueue_answer(&self.ctx, conn, &a, keep);
+                        }
+                        Routed::Infer(f) => {
+                            conn.inflight = Some((f, keep));
+                            self.inflight.insert(token);
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(super::http::HttpError::TooLarge(what)) => {
+                    let a = Answer::plain(
+                        413,
+                        "Payload Too Large",
+                        &format!("request {what} too large"),
+                    );
+                    enqueue_answer(&self.ctx, conn, &a, false);
+                }
+                Err(super::http::HttpError::Malformed(m)) => {
+                    let a = Answer::plain(400, "Bad Request", &m);
+                    enqueue_answer(&self.ctx, conn, &a, false);
+                }
+                // the parser itself never yields Closed/Timeout/Io
+                Err(_) => {
+                    fatal = true;
+                    break;
+                }
+            }
+        }
+        if fatal || self.flush(token).is_err() {
+            self.close_conn(token, false);
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let done_writing = !conn.wants_write();
+        if done_writing && conn.inflight.is_none() && (conn.close_after_write || conn.peer_closed)
+        {
+            self.close_conn(token, false);
+            return;
+        }
+        self.rearm(token);
+    }
+
+    /// A coordinator answer landed: assemble, enqueue, and pick up any
+    /// pipelined request buffered behind it.
+    fn complete(&mut self, token: u64) {
+        self.inflight.remove(&token);
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let Some((f, keep)) = conn.inflight.take() else {
+            return;
+        };
+        let answer = f.finalize(&self.ctx);
+        let keep = keep && !self.ctx.stop.load(Ordering::SeqCst);
+        enqueue_answer(&self.ctx, conn, &answer, keep);
+        self.pump(token);
+    }
+
+    /// Write buffered output until the socket stops accepting.
+    fn flush(&mut self, token: u64) -> std::io::Result<()> {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return Ok(());
+        };
+        while conn.out_pos < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.last_activity = Instant::now();
+                    self.ctx.counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if conn.out_pos >= conn.out.len() {
+            conn.out.clear();
+            conn.out_pos = 0;
+        }
+        Ok(())
+    }
+
+    /// Sync epoll interest and the live gauge with the state machine.
+    fn rearm(&mut self, token: u64) {
+        let draining = self.ctx.stop.load(Ordering::SeqCst);
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let mut want = EPOLLRDHUP;
+        if conn.wants_read(draining) {
+            want |= EPOLLIN;
+        }
+        if conn.wants_write() {
+            want |= EPOLLOUT;
+        }
+        let mut fatal = false;
+        if want != conn.interest {
+            if self.ep.modify(conn.fd, want, token).is_ok() {
+                conn.interest = want;
+            } else {
+                fatal = true;
+            }
+        }
+        let g = Some(conn.gauge_now());
+        if g != conn.gauge {
+            self.ctx.counters.move_gauge(conn.gauge, g);
+            conn.gauge = g;
+        }
+        if fatal {
+            self.close_conn(token, false);
+        }
+    }
+
+    /// A wheel entry fired: recompute the real deadline; kill or
+    /// reschedule.
+    fn check_deadline(&mut self, token: u64, now: Instant) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return; // stale entry of a closed connection
+        };
+        match conn.deadline(&self.ctx.opts) {
+            Some(d) if d <= now => {
+                // a partial message that ran out its deadline is the
+                // slow-read guard firing; an idle expiry is routine
+                let slow_read = conn.parser.mid_message();
+                self.close_conn(token, slow_read);
+            }
+            Some(d) => self.wheel.schedule(token, d),
+            // in flight at the coordinator: look again in a while
+            None => self.wheel.schedule(token, now + self.ctx.opts.keep_alive),
+        }
+    }
+
+    fn close_conn(&mut self, token: u64, timed_out: bool) {
+        let Some(conn) = self.conns.remove(&token) else {
+            return;
+        };
+        self.inflight.remove(&token);
+        // dropping the stream closes the fd, which also removes it
+        // from the epoll interest list — no EPOLL_CTL_DEL needed
+        let folded = conn.parser.bytes_in() - conn.folded_in;
+        self.ctx.counters.bytes_in.fetch_add(folded, Ordering::Relaxed);
+        self.ctx.counters.move_gauge(conn.gauge, None);
+        self.ctx.counters.active.fetch_sub(1, Ordering::SeqCst);
+        self.ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
+        if timed_out {
+            self.ctx.counters.timed_out.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Serialize an answer into the connection's write buffer and credit
+/// the encode stage (serialization only — the socket write is async).
+fn enqueue_answer(ctx: &Ctx, conn: &mut ConnState, a: &Answer, keep: bool) {
+    let t_enc = Instant::now();
+    let bytes = answer_bytes(a, keep, &ctx.opts);
+    if let Some(cfg) = &a.encode_cfg {
+        ctx.client.obs().record_stage(cfg, Stage::Encode, t_enc.elapsed().as_micros() as u64);
+    }
+    conn.out.extend_from_slice(&bytes);
+    conn.last_activity = Instant::now();
+    if !keep {
+        conn.close_after_write = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_wheel_fires_in_order_and_reschedules() {
+        let mut w = TimerWheel::new(8, Duration::from_millis(10));
+        let t0 = w.epoch;
+        w.schedule(1, t0 + Duration::from_millis(25));
+        w.schedule(2, t0 + Duration::from_millis(5));
+        let mut due = Vec::new();
+        w.advance(t0 + Duration::from_millis(12), &mut due);
+        assert_eq!(due, vec![2], "only the near deadline fires");
+        due.clear();
+        w.advance(t0 + Duration::from_millis(40), &mut due);
+        assert_eq!(due, vec![1]);
+        // far-out deadlines (> one lap) fire early and are simply
+        // rescheduled by the owner — lazy re-check by design
+        due.clear();
+        w.schedule(3, t0 + Duration::from_secs(10));
+        w.advance(t0 + Duration::from_millis(200), &mut due);
+        assert_eq!(due, vec![3]);
+    }
+
+    #[test]
+    fn raise_nofile_reports_a_sane_limit() {
+        let got = raise_nofile(256);
+        assert!(got >= 256, "soft nofile limit {got} below floor");
+    }
+}

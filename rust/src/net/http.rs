@@ -1,16 +1,29 @@
 //! Minimal HTTP/1.1 message layer shared by the wire server and
 //! client (no hyper/reqwest in the offline vendor set).
 //!
-//! One [`Conn`] wraps a `TcpStream` with a read buffer so keep-alive
-//! connections can carry back-to-back (even pipelined) messages.
-//! [`Conn::read_message`] returns the raw start-line, headers and body
-//! of the next message — the server parses the start-line as a request
-//! line, the client as a status line.  Bodies are `Content-Length`
-//! framed only (chunked transfer encoding is rejected); head and body
-//! sizes are capped so a hostile peer cannot balloon memory.
+//! The core is the **incremental** [`Parser`]: feed it bytes as they
+//! arrive ([`Parser::feed`]) and pull complete messages out
+//! ([`Parser::next_message`]) — the readiness-loop front
+//! (`net::evloop`) feeds it from non-blocking reads, one parser per
+//! connection, thousands of connections per thread.  [`Conn`] wraps a
+//! `TcpStream` + parser for the blocking users (the pool front and the
+//! wire client): keep-alive connections carry back-to-back (even
+//! pipelined) messages, and [`Conn::read_message`] blocks until the
+//! next one is complete.  Bodies are `Content-Length` framed only
+//! (chunked transfer encoding is rejected); head and body sizes are
+//! capped so a hostile peer cannot balloon memory.
+//!
+//! Slow-read (slowloris) guard: the parser stamps the arrival of the
+//! first byte of every message ([`Parser::started`]).  A peer that
+//! trickles a request byte-by-byte is bounded by the caller's read
+//! deadline — [`Conn::set_read_deadline`] enforces it on the blocking
+//! path (each arrival re-checks elapsed time since the message
+//! started), the event loop's timer wheel enforces it on the
+//! non-blocking path.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 /// Hard cap on the start-line + headers block.
 pub const HEAD_LIMIT: usize = 16 * 1024;
@@ -21,7 +34,8 @@ pub enum HttpError {
     /// Clean EOF before any byte of the next message (keep-alive peer
     /// went away between requests).
     Closed,
-    /// The socket read timed out.
+    /// The socket read timed out, or the message exceeded the read
+    /// deadline (slow-read guard).
     Timeout,
     /// Head or body exceeded its size cap (maps to `413`).
     TooLarge(&'static str),
@@ -72,69 +86,212 @@ pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str
     headers.iter().find(|(k, _)| k.eq_ignore_ascii_case(name)).map(|(_, v)| v.as_str())
 }
 
-/// A TCP connection with a read buffer (leftover bytes between
-/// keep-alive messages) and byte counters for the net-layer metrics.
+/// Serialize one message (start-line + headers + `Content-Length`
+/// framing) to bytes — shared by the blocking [`Conn::write_message`]
+/// and the event loop's write buffers.
+pub fn encode_message(start_line: &str, headers: &[(&str, String)], body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(128 + body.len());
+    out.extend_from_slice(start_line.as_bytes());
+    out.extend_from_slice(b"\r\n");
+    for (k, v) in headers {
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b": ");
+        out.extend_from_slice(v.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
+    out.extend_from_slice(format!("Content-Length: {}\r\n\r\n", body.len()).as_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// A head parsed out of the buffer, waiting for its body bytes.
+struct PendingHead {
+    start_line: String,
+    headers: Vec<(String, String)>,
+    body_len: usize,
+}
+
+/// Incremental HTTP/1.1 message parser: a byte buffer plus the state
+/// of the message currently being assembled.  `feed` bytes in any
+/// chunking, pull complete messages with `next_message`; leftover
+/// bytes (pipelined requests) stay buffered for the next call.
+#[derive(Default)]
+pub struct Parser {
+    buf: Vec<u8>,
+    head: Option<PendingHead>,
+    /// When the first byte of the in-progress message arrived (the
+    /// slow-read guard clock); `None` between messages.
+    started: Option<Instant>,
+    bytes_in: u64,
+}
+
+impl Parser {
+    pub fn new() -> Parser {
+        Parser::default()
+    }
+
+    /// Append bytes read off the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        self.bytes_in += bytes.len() as u64;
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Total bytes ever fed (the net-layer `bytes_in` counter).
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    /// Bytes buffered but not yet consumed as a message.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True while a partial message sits in the buffer — the state the
+    /// slow-read deadline applies to.
+    pub fn mid_message(&self) -> bool {
+        self.started.is_some()
+    }
+
+    /// Arrival time of the in-progress message's first byte.
+    pub fn started(&self) -> Option<Instant> {
+        self.started
+    }
+
+    /// Try to complete the next message from the buffered bytes.
+    /// `Ok(None)` means "need more bytes"; errors are terminal for the
+    /// connection (size caps, protocol violations).
+    pub fn next_message(&mut self, body_cap: usize) -> Result<Option<Message>, HttpError> {
+        if self.head.is_none() {
+            let Some(head_end) = find_head_end(&self.buf) else {
+                if self.buf.len() > HEAD_LIMIT {
+                    return Err(HttpError::TooLarge("head"));
+                }
+                return Ok(None);
+            };
+            let head_bytes: Vec<u8> = self.buf.drain(..head_end + 4).collect();
+            let head = std::str::from_utf8(&head_bytes[..head_end])
+                .map_err(|_| HttpError::Malformed("head is not UTF-8".into()))?;
+            let mut lines = head.split("\r\n");
+            let start_line = lines
+                .next()
+                .filter(|l| !l.is_empty())
+                .ok_or_else(|| HttpError::Malformed("empty start line".into()))?
+                .to_string();
+            let mut headers = Vec::new();
+            for line in lines {
+                if line.is_empty() {
+                    continue;
+                }
+                let (k, v) = line
+                    .split_once(':')
+                    .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+                headers.push((k.trim().to_string(), v.trim().to_string()));
+            }
+            if header(&headers, "Transfer-Encoding").is_some() {
+                return Err(HttpError::Malformed("chunked transfer encoding not supported".into()));
+            }
+            let body_len = match header(&headers, "Content-Length") {
+                None => 0usize,
+                Some(v) => v
+                    .parse::<usize>()
+                    .map_err(|_| HttpError::Malformed(format!("bad Content-Length {v:?}")))?,
+            };
+            self.head = Some(PendingHead { start_line, headers, body_len });
+        }
+        let body_len = self.head.as_ref().unwrap().body_len;
+        if body_len > body_cap {
+            return Err(HttpError::TooLarge("body"));
+        }
+        if self.buf.len() < body_len {
+            return Ok(None);
+        }
+        let PendingHead { start_line, headers, body_len } = self.head.take().unwrap();
+        let body: Vec<u8> = self.buf.drain(..body_len).collect();
+        // leftover bytes are the next (pipelined) message, already
+        // partially arrived: its deadline clock starts now
+        self.started = if self.buf.is_empty() { None } else { Some(Instant::now()) };
+        Ok(Some(Message { start_line, headers, body }))
+    }
+}
+
+/// A blocking TCP connection over the incremental parser, with byte
+/// counters for the net-layer metrics.
 pub struct Conn {
     stream: TcpStream,
-    buf: Vec<u8>,
-    bytes_in: u64,
+    parser: Parser,
     bytes_out: u64,
+    read_deadline: Option<Duration>,
 }
 
 impl Conn {
     pub fn new(stream: TcpStream) -> Conn {
-        Conn { stream, buf: Vec::new(), bytes_in: 0, bytes_out: 0 }
+        Conn { stream, parser: Parser::new(), bytes_out: 0, read_deadline: None }
+    }
+
+    /// The underlying socket (timeouts, socket options).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
     }
 
     pub fn bytes_in(&self) -> u64 {
-        self.bytes_in
+        self.parser.bytes_in()
     }
 
     pub fn bytes_out(&self) -> u64 {
         self.bytes_out
     }
 
+    /// True while a partial message is buffered (used to tell a
+    /// slow-read kill from an idle keep-alive timeout).
+    pub fn mid_message(&self) -> bool {
+        self.parser.mid_message()
+    }
+
+    /// Bound the wall time one message may take to arrive, however
+    /// slowly the peer trickles it (slowloris guard).  Checked on
+    /// every arrival, so the effective kill time is
+    /// `deadline + socket read timeout` at worst.
+    pub fn set_read_deadline(&mut self, deadline: Option<Duration>) {
+        self.read_deadline = deadline;
+    }
+
     /// Read the next message off the connection; `body_cap` bounds the
     /// accepted `Content-Length`.
     pub fn read_message(&mut self, body_cap: usize) -> Result<Message, HttpError> {
-        let head_end = self.fill_until_head_end()?;
-        // split head off the buffer; keep any body/pipelined bytes
-        let head_bytes: Vec<u8> = self.buf.drain(..head_end + 4).collect();
-        let head = std::str::from_utf8(&head_bytes[..head_end])
-            .map_err(|_| HttpError::Malformed("head is not UTF-8".into()))?;
-        let mut lines = head.split("\r\n");
-        let start_line = lines
-            .next()
-            .filter(|l| !l.is_empty())
-            .ok_or_else(|| HttpError::Malformed("empty start line".into()))?
-            .to_string();
-        let mut headers = Vec::new();
-        for line in lines {
-            if line.is_empty() {
-                continue;
+        loop {
+            if let Some(msg) = self.parser.next_message(body_cap)? {
+                return Ok(msg);
             }
-            let (k, v) = line
-                .split_once(':')
-                .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
-            headers.push((k.trim().to_string(), v.trim().to_string()));
+            if let (Some(deadline), Some(t0)) = (self.read_deadline, self.parser.started()) {
+                if t0.elapsed() > deadline {
+                    return Err(HttpError::Timeout);
+                }
+            }
+            let was_mid = self.parser.mid_message();
+            match self.fill_some() {
+                Ok(()) => {}
+                // EOF between messages is a clean keep-alive close;
+                // EOF mid-message is a protocol error
+                Err(HttpError::Closed) if was_mid => {
+                    return Err(HttpError::Malformed("EOF mid-message".into()))
+                }
+                Err(e) => return Err(e),
+            }
         }
-        if header(&headers, "Transfer-Encoding").is_some() {
-            return Err(HttpError::Malformed("chunked transfer encoding not supported".into()));
-        }
-        let body_len = match header(&headers, "Content-Length") {
-            None => 0usize,
-            Some(v) => v
-                .parse::<usize>()
-                .map_err(|_| HttpError::Malformed(format!("bad Content-Length {v:?}")))?,
-        };
-        if body_len > body_cap {
-            return Err(HttpError::TooLarge("body"));
-        }
-        while self.buf.len() < body_len {
-            self.fill_some()?;
-        }
-        let body: Vec<u8> = self.buf.drain(..body_len).collect();
-        Ok(Message { start_line, headers, body })
+    }
+
+    /// Write pre-encoded wire bytes (see [`encode_message`]).
+    pub fn write_raw(&mut self, bytes: &[u8]) -> Result<(), HttpError> {
+        self.stream.write_all(bytes).map_err(io_error)?;
+        self.stream.flush().map_err(io_error)?;
+        self.bytes_out += bytes.len() as u64;
+        Ok(())
     }
 
     /// Write one message; returns when the bytes are handed to the OS.
@@ -144,55 +301,29 @@ impl Conn {
         headers: &[(&str, String)],
         body: &[u8],
     ) -> Result<(), HttpError> {
-        let mut head = String::with_capacity(128);
-        head.push_str(start_line);
-        head.push_str("\r\n");
-        for (k, v) in headers {
-            head.push_str(k);
-            head.push_str(": ");
-            head.push_str(v);
-            head.push_str("\r\n");
-        }
-        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
-        self.stream.write_all(head.as_bytes()).map_err(io_error)?;
-        self.stream.write_all(body).map_err(io_error)?;
+        let bytes = encode_message(start_line, headers, body);
+        // write_all already retries ErrorKind::Interrupted internally
+        self.stream.write_all(&bytes).map_err(io_error)?;
         self.stream.flush().map_err(io_error)?;
-        self.bytes_out += (head.len() + body.len()) as u64;
+        self.bytes_out += bytes.len() as u64;
         Ok(())
     }
 
-    /// Grow the buffer until it contains the `\r\n\r\n` head terminator;
-    /// returns its offset.
-    fn fill_until_head_end(&mut self) -> Result<usize, HttpError> {
-        loop {
-            if let Some(pos) = find_head_end(&self.buf) {
-                return Ok(pos);
-            }
-            if self.buf.len() > HEAD_LIMIT {
-                return Err(HttpError::TooLarge("head"));
-            }
-            let was_empty = self.buf.is_empty();
-            match self.fill_some() {
-                Ok(()) => {}
-                // EOF between messages is a clean keep-alive close;
-                // EOF mid-head is a protocol error
-                Err(HttpError::Closed) if !was_empty => {
-                    return Err(HttpError::Malformed("EOF mid-head".into()))
-                }
-                Err(e) => return Err(e),
-            }
-        }
-    }
-
-    /// One `read` into the buffer; maps EOF to [`HttpError::Closed`].
+    /// One `read` into the parser; maps EOF to [`HttpError::Closed`]
+    /// and retries `EINTR`.
     fn fill_some(&mut self) -> Result<(), HttpError> {
         let mut chunk = [0u8; 4096];
-        let n = self.stream.read(&mut chunk).map_err(io_error)?;
+        let n = loop {
+            match self.stream.read(&mut chunk) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(io_error(e)),
+            }
+        };
         if n == 0 {
             return Err(HttpError::Closed);
         }
-        self.bytes_in += n as u64;
-        self.buf.extend_from_slice(&chunk[..n]);
+        self.parser.feed(&chunk[..n]);
         Ok(())
     }
 }
@@ -264,5 +395,65 @@ mod tests {
             Err(HttpError::Malformed(_)) => {}
             other => panic!("expected Malformed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn incremental_parser_assembles_messages_byte_by_byte() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}";
+        let mut p = Parser::new();
+        assert!(!p.mid_message());
+        for (i, b) in raw.iter().enumerate() {
+            // no message until the very last byte lands
+            assert!(p.next_message(1024).unwrap().is_none(), "early message at byte {i}");
+            p.feed(std::slice::from_ref(b));
+            assert!(p.mid_message());
+        }
+        let m = p.next_message(1024).unwrap().expect("complete after the last byte");
+        assert_eq!(m.start_line, "POST /v1/infer HTTP/1.1");
+        assert_eq!(m.body, b"{\"a\":1}");
+        assert!(!p.mid_message(), "parser is idle between messages");
+        assert_eq!(p.bytes_in(), raw.len() as u64);
+    }
+
+    #[test]
+    fn incremental_parser_keeps_pipelined_leftovers() {
+        let mut p = Parser::new();
+        p.feed(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\nGET /c");
+        assert_eq!(p.next_message(64).unwrap().unwrap().start_line, "GET /a HTTP/1.1");
+        assert_eq!(p.next_message(64).unwrap().unwrap().start_line, "GET /b HTTP/1.1");
+        // the third message is partial: deadline clock restarted for it
+        assert!(p.next_message(64).unwrap().is_none());
+        assert!(p.mid_message());
+        p.feed(b" HTTP/1.1\r\n\r\n");
+        assert_eq!(p.next_message(64).unwrap().unwrap().start_line, "GET /c HTTP/1.1");
+    }
+
+    #[test]
+    fn read_deadline_kills_a_trickling_message() {
+        let (mut c, mut s) = pair();
+        s.set_read_deadline(Some(Duration::from_millis(80)));
+        let _ = s.stream.set_read_timeout(Some(Duration::from_millis(30)));
+        // trickle a partial head slower than the deadline allows
+        c.stream.write_all(b"POST /v1/infer HT").unwrap();
+        let t0 = Instant::now();
+        loop {
+            match s.read_message(1024) {
+                Err(HttpError::Timeout) if s.mid_message() => break,
+                Err(HttpError::Timeout) => {
+                    // socket-timeout tick before the deadline: keep going
+                    assert!(t0.elapsed() < Duration::from_secs(2), "never hit the deadline");
+                    c.stream.write_all(b"T").unwrap();
+                }
+                other => panic!("expected slow-read timeout, got {other:?}"),
+            }
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(80), "killed before the deadline");
+    }
+
+    #[test]
+    fn encode_message_matches_conn_writes() {
+        let bytes = encode_message("GET / HTTP/1.1", &[("Host", "x".into())], b"hi");
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(text, "GET / HTTP/1.1\r\nHost: x\r\nContent-Length: 2\r\n\r\nhi");
     }
 }

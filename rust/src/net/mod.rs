@@ -1,10 +1,13 @@
 //! Wire-protocol serving front: the coordinator on a socket.
 //!
 //! Everything below `net/` is std-only (matching the repo's no-deps
-//! substrate style in `util/`): a from-scratch HTTP/1.1 layer
-//! ([`http`]), a serving front that puts a [`crate::coordinator::Server`]
-//! behind a `TcpListener` ([`server`]), a keep-alive wire client
-//! ([`client`]), and [`remote::RemoteEngine`] — an implementation of
+//! substrate style in `util/`): a from-scratch incremental HTTP/1.1
+//! layer ([`http`]), a serving front that puts a
+//! [`crate::coordinator::Server`] behind a `TcpListener` ([`server`],
+//! with two socket fronts — the blocking worker pool and the
+//! [`evloop`] epoll readiness loop that holds 10k+ keep-alive device
+//! sockets on a few threads), a keep-alive wire client ([`client`]),
+//! and [`remote::RemoteEngine`] — an implementation of
 //! [`crate::engine::Engine`] that executes batches on remote flexsvm
 //! nodes, so one coordinator can fan out to N machines (the first
 //! multi-node topology; see DESIGN.md §"The network front").
@@ -30,13 +33,26 @@
 //! predictions bit-identical across process boundaries (DESIGN.md §6).
 
 pub mod client;
+#[cfg(target_os = "linux")]
+pub mod evloop;
 pub mod http;
 pub mod remote;
 pub mod server;
 
 pub use client::{HttpClient, HttpClientOpts, HttpResponse, NetError};
 pub use remote::RemoteEngine;
-pub use server::{NetMetricsSnapshot, NetOpts, NetServer};
+pub use server::{NetFront, NetMetricsSnapshot, NetOpts, NetServer};
+
+#[cfg(target_os = "linux")]
+pub use evloop::{abortive_close, raise_nofile};
+
+/// No-op stand-ins off Linux so bench/drive code stays portable.
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile(_want: u64) -> u64 {
+    u64::MAX
+}
+#[cfg(not(target_os = "linux"))]
+pub fn abortive_close(_stream: &std::net::TcpStream) {}
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -385,6 +401,11 @@ pub mod wire {
                 obj([
                     ("accepted", net.accepted.into()),
                     ("active", net.active.into()),
+                    ("closed", net.closed.into()),
+                    ("timed_out", net.timed_out.into()),
+                    ("reading", net.reading.into()),
+                    ("writing", net.writing.into()),
+                    ("idle", net.idle.into()),
                     ("shed", net.shed.into()),
                     ("requests", net.requests.into()),
                     ("bytes_in", net.bytes_in.into()),
@@ -481,6 +502,157 @@ pub fn drive_http(
         shed: shed.load(Ordering::Relaxed),
         wall: t0.elapsed(),
         latency: latency.into_inner().unwrap(),
+    })
+}
+
+/// Outcome of one device-scale streaming drive
+/// ([`drive_streaming`]).  Throughput numbers cover the steady-state
+/// rounds only (the connect round warms every keep-alive session and
+/// is excluded).
+#[derive(Debug)]
+pub struct StreamDriveResult {
+    /// Concurrent keep-alive device sessions held open.
+    pub devices: usize,
+    /// Steady-state requests answered `200`.
+    pub served: u64,
+    /// Steady-state requests shed with `503`.
+    pub shed: u64,
+    /// Steady-state requests that timed out or died at the transport —
+    /// a front that cannot hold this many sessions (the pool at device
+    /// scale) starves connections, and the device reconnects next
+    /// round.  Zero on a healthy front.
+    pub stalled: u64,
+    /// Answers that diverged from `svm::infer::predict` (bit-exactness
+    /// over the wire; must be 0).  Counted across every round.
+    pub native_mismatch: u64,
+    /// Wall time of the steady-state rounds.
+    pub wall: Duration,
+    /// Client-observed latency of steady-state successes.
+    pub latency: Histogram,
+    /// Keep-alive reuses summed over every device client — at 10k
+    /// devices this is what keeps the ephemeral-port range alive.
+    pub connections_reused: u64,
+}
+
+/// Drive a wire server with `s.n_devices` concurrent keep-alive device
+/// sessions from a handful of client threads: each thread owns
+/// `devices/threads` devices, each device its own [`HttpClient`]
+/// (→ one open socket per device), and every round submits one
+/// windowed feature vector per device to its affine config.  Round 0
+/// establishes the sessions (staggered so the listener backlog never
+/// overflows) and is excluded from the timed window; predictions are
+/// checked bit-exact against `svm::infer::predict` throughout.
+pub fn drive_streaming(
+    addr: &str,
+    s: &crate::farm::scenario::Streaming,
+    models: &[(String, QuantModel)],
+    rounds: usize,
+    client_threads: usize,
+) -> Result<StreamDriveResult> {
+    assert!(rounds >= 2, "need a connect round plus at least one timed round");
+    assert!(!models.is_empty());
+    let threads = client_threads.clamp(1, s.n_devices.max(1));
+    let served = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let stalled = AtomicU64::new(0);
+    let mismatch = AtomicU64::new(0);
+    let reused = AtomicU64::new(0);
+    let latency = Mutex::new(Histogram::new());
+    // all threads (plus the timer below) rendezvous once every session
+    // is connected and warmed, so the timed window is pure steady state
+    let warm = std::sync::Barrier::new(threads + 1);
+    let mut wall = Duration::ZERO;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..threads {
+            let (served, shed, stalled) = (&served, &shed, &stalled);
+            let (mismatch, reused) = (&mismatch, &reused);
+            let (latency, warm) = (&latency, &warm);
+            handles.push(scope.spawn(move || -> Result<()> {
+                let devices: Vec<usize> = (w..s.n_devices).step_by(threads).collect();
+                let opts = HttpClientOpts {
+                    // well above a healthy front's p99, well below the
+                    // bench-killing default: a starved connection is
+                    // counted and retried, not waited out for 10s
+                    io_timeout: Duration::from_millis(2_500),
+                    ..Default::default()
+                };
+                let mut clients: Vec<HttpClient> =
+                    devices.iter().map(|_| HttpClient::with_opts(addr, opts.clone())).collect();
+                for r in 0..rounds {
+                    let timed = r > 0;
+                    for (di, &device) in devices.iter().enumerate() {
+                        if r == 0 && di % 64 == 63 {
+                            // pace the connect storm below the
+                            // listener backlog
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        let cfg = s.config_of(device) % models.len();
+                        let (key, model) = &models[cfg];
+                        let x = s.window_features(device, r as u64, model.n_features);
+                        let t_req = Instant::now();
+                        match clients[di].post_json("/v1/infer", &wire::infer_body(key, &x)) {
+                            Ok(resp) => match resp.status {
+                                200 => {
+                                    if timed {
+                                        latency.lock().unwrap().record(t_req.elapsed());
+                                        served.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    let pred = resp.json()?.get("pred")?.as_i32()?;
+                                    if pred != infer::predict(model, &x) {
+                                        mismatch.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                503 if timed => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                503 => {}
+                                status => bail!("unexpected status {status}: {}", resp.body),
+                            },
+                            // a front that cannot hold this session
+                            // parked it unanswered: count the stall,
+                            // reconnect next round
+                            Err(NetError::Timeout(_)) | Err(NetError::Io(_)) => {
+                                if timed {
+                                    stalled.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(e) => {
+                                return Err(e)
+                                    .with_context(|| format!("device {device} round {r}"))
+                            }
+                        }
+                    }
+                    if r == 0 {
+                        warm.wait();
+                    }
+                }
+                for c in &mut clients {
+                    reused.fetch_add(c.connections_reused(), Ordering::Relaxed);
+                    // RST close: a 10k-session teardown must not park
+                    // the ephemeral-port range in TIME_WAIT
+                    c.close_abortive();
+                }
+                Ok(())
+            }));
+        }
+        warm.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            h.join().expect("streaming drive thread panicked").context("streaming drive")?;
+        }
+        wall = t0.elapsed();
+        Ok(())
+    })?;
+    Ok(StreamDriveResult {
+        devices: s.n_devices,
+        served: served.load(Ordering::Relaxed),
+        shed: shed.load(Ordering::Relaxed),
+        stalled: stalled.load(Ordering::Relaxed),
+        native_mismatch: mismatch.load(Ordering::Relaxed),
+        wall,
+        latency: latency.into_inner().unwrap(),
+        connections_reused: reused.load(Ordering::Relaxed),
     })
 }
 

@@ -1,22 +1,37 @@
 //! The serving front: a `coordinator::Server` behind a `TcpListener`.
 //!
-//! Shape: one acceptor thread pushes accepted connections into a
-//! bounded queue drained by a fixed worker pool; each worker speaks
-//! keep-alive HTTP/1.1 on its connection and drives requests into the
-//! coordinator.  Admission control is two-stage and never blocks the
-//! socket:
+//! Two interchangeable fronts speak the same HTTP/1.1 + routing stack
+//! (selected by [`NetOpts::front`], CLI `--net-front pool|epoll`):
 //!
-//!  * a full connection queue sheds the connection itself with a
-//!    one-shot `503 + Retry-After`;
+//!  * **pool** — one acceptor thread pushes accepted connections into
+//!    a bounded queue drained by a fixed worker pool; each worker
+//!    blocks on its connection.  Concurrency is capped at the pool
+//!    size; the fallback and the non-Linux default.
+//!  * **epoll** (`net::evloop`, Linux) — a handful of event threads
+//!    hold tens of thousands of non-blocking keep-alive sockets in an
+//!    epoll readiness loop, feeding bytes to the incremental
+//!    `net::http::Parser` and polling in-flight coordinator work via
+//!    `Pending::try_wait`.  The device-scale streaming front.
+//!
+//! Both fronts share `route()`: a request either resolves immediately
+//! ([`Routed::Ready`]) or becomes an [`InflightInfer`] — submitted
+//! slots the pool front waits on and the event loop polls.  Admission
+//! control is two-stage and never blocks the socket:
+//!
+//!  * a full connection queue (pool) or connection cap (epoll) sheds
+//!    the connection itself with a one-shot `503 + Retry-After`;
 //!  * a saturated coordinator ingress sheds the *request* the same way
 //!    (`Client::try_submit` → [`ServeError::Overloaded`] →
 //!    `503 + Retry-After`) while accepted batchmates still complete.
 //!
-//! Slow or idle peers are bounded by the keep-alive read timeout, and
-//! request bodies by [`NetOpts::body_limit`] (both the raw read and the
-//! JSON parse enforce it).  [`NetServer::shutdown`] stops accepting,
-//! drains in-flight connections, then shuts the coordinator down —
-//! surfacing dispatcher panics like `Server::shutdown` does.
+//! Timeout contract (both fronts): an idle keep-alive peer is closed
+//! after [`NetOpts::keep_alive`]; a peer mid-message — however slowly
+//! it trickles bytes — is killed after [`NetOpts::read_deadline`] and
+//! counted in `timed_out` (the slowloris guard).  Request bodies are
+//! bounded by [`NetOpts::body_limit`] (raw read and JSON parse).
+//! [`NetServer::shutdown`] stops accepting, drains in-flight
+//! connections, then shuts the coordinator down — surfacing dispatcher
+//! panics like `Server::shutdown` does.
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,7 +41,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
-use crate::coordinator::{Client, ServedConfig, Server};
+use crate::coordinator::{Client, Pending, ServedConfig, Server};
 use crate::engine::ServeError;
 use crate::obs::{Span, Stage, TraceId};
 use crate::util::json::{obj, Json, Limits};
@@ -34,20 +49,72 @@ use crate::util::json::{obj, Json, Limits};
 use super::http::{Conn, HttpError, Message};
 use super::wire;
 
+/// Which serving front holds the sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFront {
+    /// Blocking worker pool: one thread per in-flight connection.
+    Pool,
+    /// Epoll readiness loop (Linux): a few event threads hold all
+    /// connections.  Falls back to `Pool` with a warning elsewhere.
+    Epoll,
+}
+
+impl NetFront {
+    /// `Epoll` where the readiness loop exists (Linux), `Pool`
+    /// elsewhere.
+    pub fn default_for_platform() -> NetFront {
+        if cfg!(target_os = "linux") {
+            NetFront::Epoll
+        } else {
+            NetFront::Pool
+        }
+    }
+}
+
+impl std::str::FromStr for NetFront {
+    type Err = String;
+    fn from_str(s: &str) -> Result<NetFront, String> {
+        match s {
+            "pool" => Ok(NetFront::Pool),
+            "epoll" => Ok(NetFront::Epoll),
+            _ => Err(format!("unknown net front {s:?} (expected pool|epoll)")),
+        }
+    }
+}
+
+impl std::fmt::Display for NetFront {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            NetFront::Pool => "pool",
+            NetFront::Epoll => "epoll",
+        })
+    }
+}
+
 /// Net-layer knobs.
 #[derive(Debug, Clone)]
 pub struct NetOpts {
-    /// Connection-handling worker threads (= max concurrent
-    /// connections being served).
+    /// Which front holds the sockets.
+    pub front: NetFront,
+    /// Pool front: connection-handling worker threads (= max
+    /// concurrent connections being served).
     pub workers: usize,
-    /// Bound of the accepted-connection queue; overflow is shed with
-    /// `503`.
+    /// Epoll front: event-loop threads (`0` = auto: `min(4, cores)`).
+    pub event_threads: usize,
+    /// Epoll front: cap on concurrently open connections; overflow is
+    /// shed with `503` at accept time.
+    pub max_conns: usize,
+    /// Pool front: bound of the accepted-connection queue; overflow is
+    /// shed with `503`.
     pub conn_backlog: usize,
     /// Request-body cap in bytes (raw read and JSON parse).
     pub body_limit: usize,
-    /// Keep-alive read timeout: how long an idle (or stalled) peer may
-    /// hold a worker before the connection is closed.
+    /// Idle keep-alive timeout: how long a peer may sit between
+    /// requests before the connection is closed.
     pub keep_alive: Duration,
+    /// Slow-read (slowloris) deadline: max wall time one message may
+    /// take to arrive, however slowly the peer trickles bytes.
+    pub read_deadline: Duration,
     /// Value of the `Retry-After` header on shed requests.
     pub retry_after: Duration,
 }
@@ -55,10 +122,14 @@ pub struct NetOpts {
 impl Default for NetOpts {
     fn default() -> Self {
         NetOpts {
+            front: NetFront::default_for_platform(),
             workers: 8,
+            event_threads: 0,
+            max_conns: 16 * 1024,
             conn_backlog: 64,
             body_limit: 1 << 20,
             keep_alive: Duration::from_secs(2),
+            read_deadline: Duration::from_secs(5),
             retry_after: Duration::from_secs(1),
         }
     }
@@ -69,8 +140,18 @@ impl Default for NetOpts {
 pub struct NetMetricsSnapshot {
     /// Connections accepted off the listener.
     pub accepted: u64,
-    /// Connections currently being served.
+    /// Connections currently open (the `open` gauge).
     pub active: u64,
+    /// Connections that have ended (any reason, sheds included).
+    pub closed: u64,
+    /// Connections killed by the idle or slow-read timeout.
+    pub timed_out: u64,
+    /// Open connections with a partial request buffered.
+    pub reading: u64,
+    /// Open connections with an answer being produced or written.
+    pub writing: u64,
+    /// Open connections idle between keep-alive requests.
+    pub idle: u64,
     /// Requests (and overflow connections) shed with `503`.
     pub shed: u64,
     /// HTTP requests parsed.
@@ -81,14 +162,29 @@ pub struct NetMetricsSnapshot {
     pub bytes_out: u64,
 }
 
+/// Which live gauge a connection currently occupies.  The epoll front
+/// tracks these exactly; the pool front approximates (a worker blocked
+/// in read counts as `idle` until bytes arrive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Gauge {
+    Reading,
+    Writing,
+    Idle,
+}
+
 #[derive(Default)]
-struct Counters {
-    accepted: AtomicU64,
-    active: AtomicU64,
-    shed: AtomicU64,
-    requests: AtomicU64,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
+pub(crate) struct Counters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) active: AtomicU64,
+    pub(crate) closed: AtomicU64,
+    pub(crate) timed_out: AtomicU64,
+    pub(crate) reading: AtomicU64,
+    pub(crate) writing: AtomicU64,
+    pub(crate) idle: AtomicU64,
+    pub(crate) shed: AtomicU64,
+    pub(crate) requests: AtomicU64,
+    pub(crate) bytes_in: AtomicU64,
+    pub(crate) bytes_out: AtomicU64,
 }
 
 impl Counters {
@@ -96,21 +192,55 @@ impl Counters {
         NetMetricsSnapshot {
             accepted: self.accepted.load(Ordering::Relaxed),
             active: self.active.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            reading: self.reading.load(Ordering::Relaxed),
+            writing: self.writing.load(Ordering::Relaxed),
+            idle: self.idle.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
         }
     }
+
+    fn gauge(&self, g: Gauge) -> &AtomicU64 {
+        match g {
+            Gauge::Reading => &self.reading,
+            Gauge::Writing => &self.writing,
+            Gauge::Idle => &self.idle,
+        }
+    }
+
+    /// Move one connection between live gauges (`None` = not counted,
+    /// used at open/close).
+    pub(crate) fn move_gauge(&self, from: Option<Gauge>, to: Option<Gauge>) {
+        if from == to {
+            return;
+        }
+        if let Some(g) = from {
+            self.gauge(g).fetch_sub(1, Ordering::Relaxed);
+        }
+        if let Some(g) = to {
+            self.gauge(g).fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
-/// Shared state between the acceptor and the workers.
-struct Ctx {
-    client: Client,
-    served: Vec<ServedConfig>,
-    counters: Counters,
-    stop: AtomicBool,
-    opts: NetOpts,
+/// Shared state between the acceptor and the connection handlers.
+pub(crate) struct Ctx {
+    pub(crate) client: Client,
+    pub(crate) served: Vec<ServedConfig>,
+    pub(crate) counters: Counters,
+    pub(crate) stop: AtomicBool,
+    pub(crate) opts: NetOpts,
+}
+
+/// The running front's threads.
+enum FrontImpl {
+    Pool { acceptor: Option<JoinHandle<()>>, workers: Vec<JoinHandle<()>> },
+    #[cfg(target_os = "linux")]
+    Epoll(Option<super::evloop::EvLoop>),
 }
 
 /// Running wire front.  Owns the wrapped coordinator server; prefer an
@@ -119,8 +249,7 @@ struct Ctx {
 pub struct NetServer {
     addr: SocketAddr,
     ctx: Arc<Ctx>,
-    acceptor: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    front: FrontImpl,
     coordinator: Option<Server>,
 }
 
@@ -131,6 +260,11 @@ impl NetServer {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         let addr = listener.local_addr()?;
+        let mut opts = opts;
+        if opts.front == NetFront::Epoll && !cfg!(target_os = "linux") {
+            eprintln!("flexsvm net: epoll front unavailable on this platform, using pool");
+            opts.front = NetFront::Pool;
+        }
         let ctx = Arc::new(Ctx {
             client: server.client(),
             served: server.served_configs().to_vec(),
@@ -138,23 +272,16 @@ impl NetServer {
             stop: AtomicBool::new(false),
             opts: opts.clone(),
         });
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(opts.conn_backlog.max(1));
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let mut workers = Vec::with_capacity(opts.workers.max(1));
-        for i in 0..opts.workers.max(1) {
-            let rx = Arc::clone(&conn_rx);
-            let wctx = Arc::clone(&ctx);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("flexsvm-net-{i}"))
-                    .spawn(move || worker_loop(rx, wctx))?,
-            );
-        }
-        let actx = Arc::clone(&ctx);
-        let acceptor = std::thread::Builder::new()
-            .name("flexsvm-net-accept".into())
-            .spawn(move || acceptor_loop(listener, conn_tx, actx))?;
-        Ok(NetServer { addr, ctx, acceptor: Some(acceptor), workers, coordinator: Some(server) })
+        let front = match opts.front {
+            NetFront::Pool => start_pool(listener, &ctx, &opts)?,
+            #[cfg(target_os = "linux")]
+            NetFront::Epoll => {
+                FrontImpl::Epoll(Some(super::evloop::EvLoop::start(listener, Arc::clone(&ctx))?))
+            }
+            #[cfg(not(target_os = "linux"))]
+            NetFront::Epoll => unreachable!("epoll front rewritten to pool above"),
+        };
+        Ok(NetServer { addr, ctx, front, coordinator: Some(server) })
     }
 
     /// The bound address (resolves `:0` to the picked port).
@@ -173,6 +300,11 @@ impl NetServer {
         self.ctx.counters.snapshot()
     }
 
+    /// The front actually serving (after platform fallback).
+    pub fn front(&self) -> NetFront {
+        self.ctx.opts.front
+    }
+
     /// Stop accepting, drain in-flight connections, then shut the
     /// coordinator down (dispatcher panics surface here).
     pub fn shutdown(mut self) -> Result<()> {
@@ -186,23 +318,22 @@ impl NetServer {
     /// Idempotent net-side teardown (shared by `shutdown` and `Drop`).
     fn stop_net(&mut self) {
         self.ctx.stop.store(true, Ordering::SeqCst);
-        // wake the blocking `accept` with a throwaway connection; an
-        // unspecified bind address (0.0.0.0 / [::]) is not
-        // self-connectable on every platform, so aim at its loopback
-        // equivalent, and never hang the teardown on the connect
-        let mut wake = self.addr;
-        if wake.ip().is_unspecified() {
-            wake.set_ip(match wake.ip() {
-                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        wake_accept(self.addr);
+        match &mut self.front {
+            FrontImpl::Pool { acceptor, workers } => {
+                if let Some(a) = acceptor.take() {
+                    let _ = a.join();
+                }
+                for w in workers.drain(..) {
+                    let _ = w.join();
+                }
+            }
+            #[cfg(target_os = "linux")]
+            FrontImpl::Epoll(ev) => {
+                if let Some(ev) = ev.take() {
+                    ev.stop();
+                }
+            }
         }
     }
 }
@@ -214,6 +345,41 @@ impl Drop for NetServer {
         // teardown (panics are logged, not surfaced — use
         // NetServer::shutdown to handle them)
     }
+}
+
+/// Wake a blocking `accept` with a throwaway connection; an
+/// unspecified bind address (0.0.0.0 / [::]) is not self-connectable
+/// on every platform, so aim at its loopback equivalent, and never
+/// hang the teardown on the connect.
+fn wake_accept(addr: SocketAddr) {
+    let mut wake = addr;
+    if wake.ip().is_unspecified() {
+        wake.set_ip(match wake.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+}
+
+fn start_pool(listener: TcpListener, ctx: &Arc<Ctx>, opts: &NetOpts) -> Result<FrontImpl> {
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(opts.conn_backlog.max(1));
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut workers = Vec::with_capacity(opts.workers.max(1));
+    for i in 0..opts.workers.max(1) {
+        let rx = Arc::clone(&conn_rx);
+        let wctx = Arc::clone(ctx);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("flexsvm-net-{i}"))
+                .spawn(move || worker_loop(rx, wctx))?,
+        );
+    }
+    let actx = Arc::clone(ctx);
+    let acceptor = std::thread::Builder::new()
+        .name("flexsvm-net-accept".into())
+        .spawn(move || acceptor_loop(listener, conn_tx, actx))?;
+    Ok(FrontImpl::Pool { acceptor: Some(acceptor), workers })
 }
 
 fn acceptor_loop(listener: TcpListener, conn_tx: mpsc::SyncSender<TcpStream>, ctx: Arc<Ctx>) {
@@ -231,7 +397,7 @@ fn acceptor_loop(listener: TcpListener, conn_tx: mpsc::SyncSender<TcpStream>, ct
                         // the connection instead of letting it queue
                         // unboundedly behind the socket
                         ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
-                        shed_connection(stream, &ctx.opts);
+                        shed_connection(stream, &ctx);
                     }
                     Err(mpsc::TrySendError::Disconnected(_)) => return,
                 }
@@ -250,18 +416,19 @@ fn acceptor_loop(listener: TcpListener, conn_tx: mpsc::SyncSender<TcpStream>, ct
 }
 
 /// Best-effort one-shot `503` on a connection we cannot serve.
-fn shed_connection(stream: TcpStream, opts: &NetOpts) {
+pub(crate) fn shed_connection(stream: TcpStream, ctx: &Ctx) {
     let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
     let mut conn = Conn::new(stream);
     let _ = conn.write_message(
         "HTTP/1.1 503 Service Unavailable",
         &[
             ("Content-Type", "application/json".to_string()),
-            ("Retry-After", opts.retry_after.as_secs().max(1).to_string()),
+            ("Retry-After", ctx.opts.retry_after.as_secs().max(1).to_string()),
             ("Connection", "close".to_string()),
         ],
         wire::error_body(&ServeError::Overloaded).to_string().as_bytes(),
     );
+    ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
 }
 
 fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>, ctx: Arc<Ctx>) {
@@ -285,17 +452,27 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
     let _ = stream.set_read_timeout(Some(ctx.opts.keep_alive));
     let _ = stream.set_nodelay(true);
     ctx.counters.active.fetch_add(1, Ordering::SeqCst);
+    let mut gauge = Some(Gauge::Idle);
+    ctx.counters.move_gauge(None, gauge);
     let mut conn = Conn::new(stream);
+    conn.set_read_deadline(Some(ctx.opts.read_deadline));
     let (mut folded_in, mut folded_out) = (0u64, 0u64);
     loop {
         match conn.read_message(ctx.opts.body_limit) {
             Ok(msg) => {
+                ctx.counters.move_gauge(gauge, Some(Gauge::Writing));
+                gauge = Some(Gauge::Writing);
                 ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
                 let close_requested = msg
                     .header("Connection")
                     .map(|v| v.eq_ignore_ascii_case("close"))
                     .unwrap_or(false);
-                let answer = route(ctx, &msg);
+                let answer = match route(ctx, &msg) {
+                    Routed::Ready(a) => a,
+                    // the pool front simply parks its worker on the
+                    // in-flight slots; the event loop polls instead
+                    Routed::Infer(inflight) => inflight.finish(ctx),
+                };
                 let keep = !close_requested && !ctx.stop.load(Ordering::SeqCst);
                 let t_enc = Instant::now();
                 let write_ok = write_answer(&mut conn, &answer, keep, &ctx.opts).is_ok();
@@ -316,6 +493,8 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
                 if !write_ok || !keep {
                     break;
                 }
+                ctx.counters.move_gauge(gauge, Some(Gauge::Idle));
+                gauge = Some(Gauge::Idle);
             }
             Err(HttpError::TooLarge(what)) => {
                 let a = Answer::plain(413, "Payload Too Large", &format!("request {what} too large"));
@@ -327,35 +506,46 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
                 let _ = write_answer(&mut conn, &a, false, &ctx.opts);
                 break;
             }
-            // clean close, idle/stalled timeout, or transport error
-            Err(HttpError::Closed | HttpError::Timeout | HttpError::Io(_)) => break,
+            Err(HttpError::Timeout) => {
+                // idle keep-alive expiry is a clean close; a timeout
+                // with a partial message buffered is the slow-read
+                // guard firing
+                if conn.mid_message() {
+                    ctx.counters.timed_out.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+            // clean close or transport error
+            Err(HttpError::Closed | HttpError::Io(_)) => break,
         }
     }
     // fold whatever the in-loop folds missed (error answers, partial
     // requests) so the byte counters cover every exit path
     ctx.counters.bytes_in.fetch_add(conn.bytes_in() - folded_in, Ordering::Relaxed);
     ctx.counters.bytes_out.fetch_add(conn.bytes_out() - folded_out, Ordering::Relaxed);
+    ctx.counters.move_gauge(gauge, None);
     ctx.counters.active.fetch_sub(1, Ordering::SeqCst);
+    ctx.counters.closed.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Answer payload: JSON for the API routes, preformatted text for the
 /// Prometheus scrape endpoint.
-enum Body {
+pub(crate) enum Body {
     Json(Json),
     Text(String),
 }
 
 /// One routed answer, ready to serialize.
-struct Answer {
-    status: u16,
-    reason: &'static str,
-    body: Body,
-    retry_after: bool,
+pub(crate) struct Answer {
+    pub(crate) status: u16,
+    pub(crate) reason: &'static str,
+    pub(crate) body: Body,
+    pub(crate) retry_after: bool,
     /// Echoed back as `X-Trace-Id` (explicitly-traced requests).
-    trace: Option<TraceId>,
+    pub(crate) trace: Option<TraceId>,
     /// Config whose `encode` stage should be credited with this
     /// answer's serialization + socket-write time.
-    encode_cfg: Option<String>,
+    pub(crate) encode_cfg: Option<String>,
 }
 
 impl Answer {
@@ -381,7 +571,7 @@ impl Answer {
         }
     }
 
-    fn plain(status: u16, reason: &'static str, message: &str) -> Answer {
+    pub(crate) fn plain(status: u16, reason: &'static str, message: &str) -> Answer {
         let body = obj([(
             "error",
             obj([("kind", reason_kind(status).into()), ("message", message.into())]),
@@ -431,26 +621,160 @@ fn reason_kind(status: u16) -> &'static str {
     }
 }
 
-fn route(ctx: &Ctx, msg: &Message) -> Answer {
+/// A routed request: either answered on the spot, or a set of
+/// submitted coordinator slots still in flight.
+pub(crate) enum Routed {
+    Ready(Answer),
+    Infer(InflightInfer),
+}
+
+/// One submitted inference slot: still pending at the coordinator, or
+/// settled with its result.
+enum Slot {
+    Pending(Pending),
+    Ready(Result<crate::coordinator::Response, ServeError>),
+}
+
+/// An infer request whose samples have been submitted (admission
+/// already applied per sample) but not yet answered.  The pool front
+/// blocks in [`finish`](Self::finish); the event loop calls
+/// [`try_settle`](Self::try_settle) each tick and
+/// [`finalize`](Self::finalize) once everything landed — both paths
+/// assemble the identical answer.
+pub(crate) struct InflightInfer {
+    key: String,
+    t0: Instant,
+    trace: Option<TraceId>,
+    per_sample_traced: bool,
+    batch: bool,
+    slots: Vec<Slot>,
+}
+
+impl InflightInfer {
+    /// Poll every pending slot without blocking; true once all have
+    /// settled and [`finalize`](Self::finalize) may run.
+    pub(crate) fn try_settle(&mut self) -> bool {
+        let mut all = true;
+        for s in &mut self.slots {
+            if let Slot::Pending(p) = s {
+                match p.try_wait() {
+                    Some(r) => *s = Slot::Ready(r),
+                    None => all = false,
+                }
+            }
+        }
+        all
+    }
+
+    /// Block until every slot settles, then assemble the answer (the
+    /// pool front's path).
+    pub(crate) fn finish(mut self, ctx: &Ctx) -> Answer {
+        self.slots = std::mem::take(&mut self.slots)
+            .into_iter()
+            .map(|s| match s {
+                Slot::Pending(p) => Slot::Ready(p.wait()),
+                ready => ready,
+            })
+            .collect();
+        self.finalize(ctx)
+    }
+
+    /// Assemble the answer from settled slots (blocks on any stragglers
+    /// for safety; call after [`try_settle`](Self::try_settle) returned
+    /// true to stay non-blocking).
+    pub(crate) fn finalize(self, ctx: &Ctx) -> Answer {
+        let InflightInfer { key, t0, trace, per_sample_traced, batch, slots } = self;
+        let settled: Vec<Result<crate::coordinator::Response, ServeError>> = slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Ready(r) => r,
+                Slot::Pending(p) => p.wait(),
+            })
+            .collect();
+        if !batch {
+            let r = settled.into_iter().next().expect("single infer has one slot");
+            return match r {
+                Ok(resp) => {
+                    if let Some(s) = &resp.span {
+                        ctx.client.obs().keep((**s).clone());
+                    }
+                    let mut a = Answer::ok(wire::response_json(&resp));
+                    a.trace = trace;
+                    a.encode_cfg = Some(key);
+                    a
+                }
+                Err(e) => shed_aware_error(ctx, e),
+            };
+        }
+        let mut any_shed = false;
+        let mut spans: Vec<Span> = Vec::new();
+        let results: Vec<Json> = settled
+            .into_iter()
+            .map(|r| match r {
+                Ok(resp) => {
+                    if let Some(s) = &resp.span {
+                        spans.push((**s).clone());
+                    }
+                    wire::response_json(&resp)
+                }
+                Err(e) => {
+                    if matches!(e, ServeError::Overloaded) {
+                        any_shed = true;
+                        ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    wire::error_body(&e)
+                }
+            })
+            .collect();
+        // retain explicit spans so `/v1/traces?id=` can answer: one
+        // batch-wide trace becomes one tree (per-sample children),
+        // per-sample ids are retained individually
+        match (trace, per_sample_traced) {
+            (Some(t), _) if spans.len() > 1 => {
+                let mut root = Span::new(t, &key);
+                root.total_us = t0.elapsed().as_micros() as u64;
+                root.children = spans;
+                ctx.client.obs().keep(root);
+            }
+            (_, true) => {
+                for s in spans {
+                    ctx.client.obs().keep(s);
+                }
+            }
+            _ => {}
+        }
+        let mut a = Answer::ok(obj([("results", Json::Arr(results))]));
+        a.retry_after = any_shed;
+        a.trace = trace;
+        a.encode_cfg = Some(key);
+        a
+    }
+}
+
+pub(crate) fn route(ctx: &Ctx, msg: &Message) -> Routed {
     let mut parts = msg.start_line.split_whitespace();
     let (method, target) = match (parts.next(), parts.next()) {
         (Some(m), Some(p)) => (m, p),
-        _ => return Answer::plain(400, "Bad Request", "bad request line"),
+        _ => return Routed::Ready(Answer::plain(400, "Bad Request", "bad request line")),
     };
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p, q),
         None => (target, ""),
     };
     match (method, path) {
-        ("GET", "/healthz") => healthz(ctx),
-        ("GET", "/v1/metrics") => metrics(ctx),
-        ("GET", "/metrics") => prom(ctx),
-        ("GET", "/v1/traces") => traces(ctx, query),
+        ("GET", "/healthz") => Routed::Ready(healthz(ctx)),
+        ("GET", "/v1/metrics") => Routed::Ready(metrics(ctx)),
+        ("GET", "/metrics") => Routed::Ready(prom(ctx)),
+        ("GET", "/v1/traces") => Routed::Ready(traces(ctx, query)),
         ("POST", "/v1/infer") => infer(ctx, msg),
         (_, "/healthz" | "/v1/metrics" | "/metrics" | "/v1/traces" | "/v1/infer") => {
-            Answer::plain(405, "Method Not Allowed", &format!("{method} not allowed here"))
+            Routed::Ready(Answer::plain(
+                405,
+                "Method Not Allowed",
+                &format!("{method} not allowed here"),
+            ))
         }
-        _ => Answer::plain(404, "Not Found", &format!("no route {path:?}")),
+        _ => Routed::Ready(Answer::plain(404, "Not Found", &format!("no route {path:?}"))),
     }
 }
 
@@ -520,7 +844,12 @@ fn prom(ctx: &Ctx) -> Answer {
         &obs.stage_snapshot(),
         &[
             ("net_connections_accepted_total", net.accepted),
-            ("net_connections_active", net.active),
+            ("net_connections_open", net.active),
+            ("net_connections_closed_total", net.closed),
+            ("net_connections_timed_out_total", net.timed_out),
+            ("net_connections_reading", net.reading),
+            ("net_connections_writing", net.writing),
+            ("net_connections_idle", net.idle),
             ("net_requests_shed_total", net.shed),
             ("net_requests_total", net.requests),
             ("net_bytes_in_total", net.bytes_in),
@@ -584,28 +913,32 @@ fn explicit_trace(doc: &Json, msg: &Message) -> Result<Option<TraceId>, String> 
     }
 }
 
-fn infer(ctx: &Ctx, msg: &Message) -> Answer {
+/// Parse + submit an infer request.  Validation failures answer
+/// immediately; submitted work comes back as [`Routed::Infer`] so the
+/// caller chooses blocking or polled completion.
+fn infer(ctx: &Ctx, msg: &Message) -> Routed {
+    let bad = |m: &str| Routed::Ready(Answer::plain(400, "Bad Request", m));
     let text = match std::str::from_utf8(&msg.body) {
         Ok(t) => t,
-        Err(_) => return Answer::plain(400, "Bad Request", "body is not UTF-8"),
+        Err(_) => return bad("body is not UTF-8"),
     };
     let limits = Limits { max_bytes: ctx.opts.body_limit, max_depth: 64 };
     let doc = match Json::parse_limited(text, &limits) {
         Ok(d) => d,
-        Err(e) => return Answer::plain(400, "Bad Request", &format!("bad JSON: {e:#}")),
+        Err(e) => return bad(&format!("bad JSON: {e:#}")),
     };
     let key = match doc.get("config").and_then(|c| c.as_str()) {
         Ok(k) => k.to_string(),
-        Err(e) => return Answer::plain(400, "Bad Request", &format!("{e:#}")),
+        Err(e) => return bad(&format!("{e:#}")),
     };
     let trace = match explicit_trace(&doc, msg) {
         Ok(t) => t,
-        Err(e) => return Answer::plain(400, "Bad Request", &e),
+        Err(e) => return bad(&e),
     };
     if let Some(batch) = doc.opt("batch") {
         let xs = match batch.as_mat_i32() {
             Ok(xs) => xs,
-            Err(e) => return Answer::plain(400, "Bad Request", &format!("bad batch: {e:#}")),
+            Err(e) => return bad(&format!("bad batch: {e:#}")),
         };
         // per-sample trace ids (`"traces"`, a RemoteEngine fan-out
         // chunk) win over one batch-wide id (`"trace"` / header)
@@ -617,13 +950,7 @@ fn infer(ctx: &Ctx, msg: &Message) -> Answer {
                     .map(|a| a.iter().filter_map(|t| TraceId::parse(t.as_str().ok()?)).collect());
                 match parsed {
                     Some(ts) if ts.len() == xs.len() => Some(ts),
-                    _ => {
-                        return Answer::plain(
-                            400,
-                            "Bad Request",
-                            "\"traces\" must be hex ids, one per batch sample",
-                        )
-                    }
+                    _ => return bad("\"traces\" must be hex ids, one per batch sample"),
                 }
             }
             None => trace.map(|t| vec![t; xs.len()]),
@@ -631,88 +958,59 @@ fn infer(ctx: &Ctx, msg: &Message) -> Answer {
         let t0 = Instant::now();
         // admission is per sample: shed samples answer `overloaded` in
         // their slot while accepted batchmates still complete
-        let handles: Vec<_> = match &traces {
+        let slots: Vec<Slot> = match &traces {
             Some(ts) => xs
                 .iter()
                 .zip(ts)
-                .map(|(x, &t)| ctx.client.try_submit_traced(&key, x, t))
+                .map(|(x, &t)| match ctx.client.try_submit_traced(&key, x, t) {
+                    Ok(p) => Slot::Pending(p),
+                    Err(e) => Slot::Ready(Err(e)),
+                })
                 .collect(),
-            None => xs.iter().map(|x| ctx.client.try_submit(&key, x)).collect(),
+            None => xs
+                .iter()
+                .map(|x| match ctx.client.try_submit(&key, x) {
+                    Ok(p) => Slot::Pending(p),
+                    Err(e) => Slot::Ready(Err(e)),
+                })
+                .collect(),
         };
-        let mut any_shed = false;
-        let mut spans: Vec<Span> = Vec::new();
-        let results: Vec<Json> = handles
-            .into_iter()
-            .map(|h| match h.and_then(|p| p.wait()) {
-                Ok(resp) => {
-                    if let Some(s) = &resp.span {
-                        spans.push((**s).clone());
-                    }
-                    wire::response_json(&resp)
-                }
-                Err(e) => {
-                    if matches!(e, ServeError::Overloaded) {
-                        any_shed = true;
-                        ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
-                    }
-                    wire::error_body(&e)
-                }
-            })
-            .collect();
-        // retain explicit spans so `/v1/traces?id=` can answer: one
-        // batch-wide trace becomes one tree (per-sample children),
-        // per-sample ids are retained individually
-        match (trace, &traces) {
-            (Some(t), _) if spans.len() > 1 => {
-                let mut root = Span::new(t, &key);
-                root.total_us = t0.elapsed().as_micros() as u64;
-                root.children = spans;
-                ctx.client.obs().keep(root);
-            }
-            (_, Some(_)) => {
-                for s in spans {
-                    ctx.client.obs().keep(s);
-                }
-            }
-            _ => {}
-        }
-        let mut a = Answer::ok(obj([("results", Json::Arr(results))]));
-        a.retry_after = any_shed;
-        a.trace = trace;
-        a.encode_cfg = Some(key);
-        a
+        Routed::Infer(InflightInfer {
+            key,
+            t0,
+            trace,
+            per_sample_traced: doc.opt("traces").is_some(),
+            batch: true,
+            slots,
+        })
     } else if let Some(features) = doc.opt("features") {
         let x = match features.as_vec_i32() {
             Ok(x) => x,
-            Err(e) => return Answer::plain(400, "Bad Request", &format!("bad features: {e:#}")),
+            Err(e) => return bad(&format!("bad features: {e:#}")),
         };
-        let submitted = match trace {
+        let slot = match trace {
             Some(t) => ctx.client.try_submit_traced(&key, &x, t),
             None => ctx.client.try_submit(&key, &x),
         };
-        match submitted.and_then(|p| p.wait()) {
-            Ok(resp) => {
-                if let Some(s) = &resp.span {
-                    ctx.client.obs().keep((**s).clone());
-                }
-                let mut a = Answer::ok(wire::response_json(&resp));
-                a.trace = trace;
-                a.encode_cfg = Some(key);
-                a
-            }
-            Err(e) => shed_aware_error(ctx, e),
-        }
+        Routed::Infer(InflightInfer {
+            key,
+            t0: Instant::now(),
+            trace,
+            per_sample_traced: false,
+            batch: false,
+            slots: vec![match slot {
+                Ok(p) => Slot::Pending(p),
+                Err(e) => Slot::Ready(Err(e)),
+            }],
+        })
     } else {
-        Answer::plain(400, "Bad Request", "need \"features\" or \"batch\"")
+        bad("need \"features\" or \"batch\"")
     }
 }
 
-fn write_answer(
-    conn: &mut Conn,
-    a: &Answer,
-    keep: bool,
-    opts: &NetOpts,
-) -> Result<(), HttpError> {
+/// Serialize one answer to wire bytes (start-line + headers + body) —
+/// shared by the blocking writer and the event loop's write buffers.
+pub(crate) fn answer_bytes(a: &Answer, keep: bool, opts: &NetOpts) -> Vec<u8> {
     let content_type = match &a.body {
         Body::Json(_) => "application/json",
         Body::Text(_) => "text/plain; version=0.0.4; charset=utf-8",
@@ -731,9 +1029,18 @@ fn write_answer(
         Body::Json(j) => j.to_string(),
         Body::Text(t) => t.clone(),
     };
-    conn.write_message(
+    super::http::encode_message(
         &format!("HTTP/1.1 {} {}", a.status, a.reason),
         &headers,
         payload.as_bytes(),
     )
+}
+
+fn write_answer(
+    conn: &mut Conn,
+    a: &Answer,
+    keep: bool,
+    opts: &NetOpts,
+) -> Result<(), HttpError> {
+    conn.write_raw(&answer_bytes(a, keep, opts))
 }

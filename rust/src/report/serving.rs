@@ -18,6 +18,7 @@ use std::time::Duration;
 
 use crate::coordinator::metrics::ConfigMetrics;
 use crate::farm::FarmMetrics;
+use crate::net::NetMetricsSnapshot;
 use crate::obs::StageMetrics;
 use crate::power::FlexicModel;
 use crate::util::Table;
@@ -30,7 +31,11 @@ use crate::util::Table;
 /// merged histogram buckets; `accuracy` maps config key →
 /// `(label-correct, answered)` counts observed by a labelled driver
 /// (the serving path itself never sees labels), enabling the
-/// per-kernel live-accuracy column.
+/// per-kernel live-accuracy column; `net` (a [`NetMetricsSnapshot`]
+/// from the wire front) adds the connection-lifecycle line — live
+/// gauges (open/reading/writing/idle), accept/close/timeout totals,
+/// shed count, and wire bytes.
+#[allow(clippy::too_many_arguments)]
 pub fn render(
     per_config: &HashMap<String, ConfigMetrics>,
     wall: Duration,
@@ -39,6 +44,7 @@ pub fn render(
     stages: Option<&BTreeMap<String, StageMetrics>>,
     fleet: Option<&HashMap<String, ConfigMetrics>>,
     accuracy: Option<&HashMap<String, (u64, u64)>>,
+    net: Option<&NetMetricsSnapshot>,
 ) -> String {
     let mut out = String::from("\n=== serving energy report (Table I under load) ===\n");
     let mut keys: Vec<&String> = per_config.keys().collect();
@@ -220,6 +226,28 @@ pub fn render(
         out.push_str("\nfleet (merged per-node histograms):\n");
         out.push_str(&ft.render());
     }
+
+    // the wire front's connection lifecycle: how many sessions are
+    // open right now (and what they're doing), how many ever came and
+    // went, and what admission control or the timeout guards shed
+    if let Some(n) = net {
+        out.push_str(&format!(
+            "\nnet front: {} open ({} reading / {} writing / {} idle) | \
+             {} accepted, {} closed ({} timed out) | {} shed | \
+             {} reqs, {:.2} MiB in / {:.2} MiB out\n",
+            n.active,
+            n.reading,
+            n.writing,
+            n.idle,
+            n.accepted,
+            n.closed,
+            n.timed_out,
+            n.shed,
+            n.requests,
+            n.bytes_in as f64 / (1024.0 * 1024.0),
+            n.bytes_out as f64 / (1024.0 * 1024.0),
+        ));
+    }
     out
 }
 
@@ -267,6 +295,7 @@ mod tests {
             None,
             None,
             None,
+            None,
         );
         assert!(s.contains("iris_ovr_w4"), "{s}");
         assert!(s.contains("1.340"), "mean mJ/req: {s}");
@@ -306,6 +335,8 @@ mod tests {
             &FlexicModel::paper(),
             Some(&stages),
             Some(&fleet),
+            None,
+            None,
         );
         assert!(s.contains("per-stage waterfall"), "{s}");
         assert!(s.contains("queue_wait"), "{s}");
@@ -331,9 +362,41 @@ mod tests {
             None,
             None,
             None,
+            None,
         );
         assert!(s.contains("farm shards"), "{s}");
         assert!(!s.contains("fast path:"), "{s}");
+    }
+
+    #[test]
+    fn net_front_line_renders_gauges_and_lifecycle() {
+        let net = NetMetricsSnapshot {
+            accepted: 10_000,
+            active: 9_998,
+            closed: 2,
+            timed_out: 1,
+            reading: 3,
+            writing: 5,
+            idle: 9_990,
+            shed: 7,
+            requests: 123_456,
+            bytes_in: 3 * 1024 * 1024,
+            bytes_out: 6 * 1024 * 1024,
+        };
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            None,
+            None,
+            None,
+            Some(&net),
+        );
+        assert!(s.contains("net front: 9998 open (3 reading / 5 writing / 9990 idle)"), "{s}");
+        assert!(s.contains("10000 accepted, 2 closed (1 timed out)"), "{s}");
+        assert!(s.contains("7 shed"), "{s}");
+        assert!(s.contains("3.00 MiB in / 6.00 MiB out"), "{s}");
     }
 
     #[test]
@@ -358,6 +421,7 @@ mod tests {
             None,
             None,
             Some(&acc),
+            None,
         );
         assert!(s.contains("per kernel family"), "{s}");
         assert!(s.contains("rbf"), "{s}");
@@ -377,6 +441,7 @@ mod tests {
             None,
             None,
             None,
+            None,
         );
         assert!(!s.contains("per kernel family"), "{s}");
     }
@@ -389,7 +454,16 @@ mod tests {
         m.sim_cycles = 0;
         m.energy_mj = 0.0;
         m.baseline_cycles_per_inf = 0.0;
-        let s = render(&map, Duration::from_secs(1), None, &FlexicModel::paper(), None, None, None);
+        let s = render(
+            &map,
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            None,
+            None,
+            None,
+            None,
+        );
         assert!(s.contains("iris_ovr_w4"));
         assert!(s.contains('-'), "uncalibrated ratio renders as dash");
         assert!(!s.contains("farm shards"));

@@ -3,14 +3,20 @@
 //! (`RemoteEngine` against a live local server), and admission
 //! control (`503 + Retry-After` under a saturated ingress).
 //!
-//! Everything here runs artifact-free: servers carry in-memory tiny /
-//! random quantized models or the scripted `MockEngine`.
+//! The admission, slow-read, streaming and shutdown contracts run
+//! against **both** fronts (`pool` and, on Linux, `epoll`) — the
+//! fronts must be behaviorally interchangeable.  Everything here runs
+//! artifact-free: servers carry in-memory tiny / random quantized
+//! models or the scripted `MockEngine`.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use flexsvm::coordinator::{Server, ServeError};
 use flexsvm::engine::{Engine, ModelSource, SimCost};
-use flexsvm::net::{wire, HttpClient, HttpClientOpts, NetOpts, NetServer, RemoteEngine};
+use flexsvm::farm::scenario::Streaming;
+use flexsvm::net::{
+    drive_streaming, wire, HttpClient, HttpClientOpts, NetFront, NetOpts, NetServer, RemoteEngine,
+};
 use flexsvm::obs::{Span, TraceId};
 use flexsvm::svm::{infer, QuantModel};
 use flexsvm::testing::{gen, MockEngine};
@@ -21,6 +27,16 @@ fn tiny_models() -> Vec<(String, QuantModel)> {
         ("cfg_a".to_string(), gen::tiny_model("cfg_a", false)),
         ("cfg_b".to_string(), gen::tiny_model("cfg_b", true)),
     ]
+}
+
+/// Every front the platform supports: the epoll readiness loop is
+/// Linux-only, so elsewhere the pool runs alone.
+fn fronts() -> Vec<NetFront> {
+    if cfg!(target_os = "linux") {
+        vec![NetFront::Pool, NetFront::Epoll]
+    } else {
+        vec![NetFront::Pool]
+    }
 }
 
 /// A native-engine coordinator on a loopback socket.
@@ -35,6 +51,16 @@ fn native_net_server(models: Vec<(String, QuantModel)>, opts: NetOpts) -> NetSer
 
 /// A MockEngine coordinator (pred = x[0]) on a loopback socket.
 fn mock_net_server(engine: MockEngine, queue_cap: usize, batch_max: usize) -> NetServer {
+    mock_net_server_on(NetFront::default_for_platform(), engine, queue_cap, batch_max)
+}
+
+/// Same, pinned to one wire front.
+fn mock_net_server_on(
+    front: NetFront,
+    engine: MockEngine,
+    queue_cap: usize,
+    batch_max: usize,
+) -> NetServer {
     let server = Server::builder()
         .keys(["m"])
         .engine(Box::new(engine))
@@ -43,7 +69,8 @@ fn mock_net_server(engine: MockEngine, queue_cap: usize, batch_max: usize) -> Ne
         .linger(Duration::from_micros(200))
         .start()
         .unwrap();
-    NetServer::bind(server, "127.0.0.1:0", NetOpts { workers: 12, ..Default::default() }).unwrap()
+    let opts = NetOpts { front, workers: 12, ..Default::default() };
+    NetServer::bind(server, "127.0.0.1:0", opts).unwrap()
 }
 
 // ------------------------------------------------- §6 across the wire
@@ -355,11 +382,17 @@ fn traced_fan_out_yields_one_span_tree_with_per_node_children() {
 
 #[test]
 fn saturated_ingress_sheds_503_with_retry_after_while_accepted_complete() {
+    for front in fronts() {
+        saturated_ingress_case(front);
+    }
+}
+
+fn saturated_ingress_case(front: NetFront) {
     // 1-slot ingress + 500 ms batches: while the dispatcher is
     // mid-batch, at most one more request fits; a concurrent burst
     // must shed fast with 503 + Retry-After, not block the socket
     let engine = MockEngine::new().with_delays(vec![Duration::from_millis(500)]);
-    let net = mock_net_server(engine, 1, 1);
+    let net = mock_net_server_on(front, engine, 1, 1);
     let addr = net.addr().to_string();
 
     let warm = std::thread::spawn({
@@ -388,12 +421,12 @@ fn saturated_ingress_sheds_503_with_retry_after_while_accepted_complete() {
     });
 
     let warm_resp = warm.join().unwrap();
-    assert_eq!(warm_resp.status, 200, "in-flight request drains fine: {}", warm_resp.body);
+    assert_eq!(warm_resp.status, 200, "{front}: in-flight request drains: {}", warm_resp.body);
     let shed = results.iter().filter(|(s, _, _)| *s == 503).count();
     let ok = results.iter().filter(|(s, _, _)| *s == 200).count();
-    assert_eq!(shed + ok, 10, "{results:?}");
-    assert!(shed >= 5, "most of the burst must shed: {results:?}");
-    assert!(ok >= 1, "the request that won the ingress slot completes: {results:?}");
+    assert_eq!(shed + ok, 10, "{front}: {results:?}");
+    assert!(shed >= 5, "{front}: most of the burst must shed: {results:?}");
+    assert!(ok >= 1, "{front}: the request that won the ingress slot completes: {results:?}");
     for (status, retry, body) in &results {
         if *status == 503 {
             assert_eq!(retry.as_deref(), Some("1"), "503 must carry Retry-After: {body}");
@@ -482,31 +515,121 @@ fn oversized_bodies_are_rejected_with_413() {
 
 #[test]
 fn shutdown_stops_the_listener_and_coordinator() {
-    let net = mock_net_server(MockEngine::new(), 1024, 64);
-    let addr = net.addr().to_string();
-    let mut c = HttpClient::new(&addr);
-    assert_eq!(c.post_json("/v1/infer", &wire::infer_body("m", &[2, 0])).unwrap().status, 200);
-    drop(c); // release the keep-alive connection
-    net.shutdown().unwrap();
-    // nothing listens there anymore
-    let opts = HttpClientOpts {
-        connect_attempts: 1,
-        backoff: Duration::from_millis(1),
-        ..Default::default()
-    };
-    let mut c2 = HttpClient::with_opts(&addr, opts);
-    assert!(c2.get("/healthz").is_err(), "listener must be gone after shutdown");
+    for front in fronts() {
+        let net = mock_net_server_on(front, MockEngine::new(), 1024, 64);
+        let addr = net.addr().to_string();
+        let mut c = HttpClient::new(&addr);
+        let r = c.post_json("/v1/infer", &wire::infer_body("m", &[2, 0])).unwrap();
+        assert_eq!(r.status, 200, "{front}: {}", r.body);
+        drop(c); // release the keep-alive connection
+        net.shutdown().unwrap();
+        // nothing listens there anymore
+        let opts = HttpClientOpts {
+            connect_attempts: 1,
+            backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut c2 = HttpClient::with_opts(&addr, opts);
+        assert!(c2.get("/healthz").is_err(), "{front}: listener must be gone after shutdown");
+    }
 }
 
 #[test]
 fn dispatcher_panic_surfaces_through_net_shutdown() {
-    let net = mock_net_server(MockEngine::new().panic_when_first_feature_is(7), 1024, 64);
-    let mut c = HttpClient::new(net.addr().to_string());
-    let r = c.post_json("/v1/infer", &wire::infer_body("m", &[7, 0])).unwrap();
-    // the dispatcher died mid-batch: the request is answered `dropped`
-    assert_eq!(r.status, 500, "{}", r.body);
-    assert!(r.body.contains("dropped"), "{}", r.body);
-    drop(c);
-    let err = net.shutdown().unwrap_err();
-    assert!(err.to_string().contains("scripted panic"), "{err:#}");
+    for front in fronts() {
+        let engine = MockEngine::new().panic_when_first_feature_is(7);
+        let net = mock_net_server_on(front, engine, 1024, 64);
+        let mut c = HttpClient::new(net.addr().to_string());
+        let r = c.post_json("/v1/infer", &wire::infer_body("m", &[7, 0])).unwrap();
+        // the dispatcher died mid-batch: the request is answered `dropped`
+        assert_eq!(r.status, 500, "{front}: {}", r.body);
+        assert!(r.body.contains("dropped"), "{front}: {}", r.body);
+        drop(c);
+        let err = net.shutdown().unwrap_err();
+        assert!(err.to_string().contains("scripted panic"), "{front}: {err:#}");
+    }
+}
+
+// ------------------------------------------- slow-read guard + streaming
+
+#[test]
+fn slow_read_connections_are_killed_counted_and_exported() {
+    use std::io::{Read, Write};
+    for front in fronts() {
+        let net = native_net_server(
+            tiny_models(),
+            NetOpts { front, read_deadline: Duration::from_millis(150), ..Default::default() },
+        );
+        let addr = net.addr().to_string();
+        // a slowloris peer: half a request's head, then silence — the
+        // idle keep-alive timeout must NOT apply (bytes did arrive);
+        // the read deadline must
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /v1/infer HTTP/1.1\r\nContent-Length: 40\r\n").unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 64];
+        // the server kills the connection without an answer: EOF (or a
+        // reset, depending on how the close races the read)
+        let t0 = Instant::now();
+        let died = matches!(s.read(&mut buf), Ok(0) | Err(_));
+        assert!(died, "{front}: stalled connection must be closed, not answered");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "{front}: the kill must come from the 150ms read deadline, not keep-alive"
+        );
+        // the kill lands in the counters (the close can race our EOF
+        // observation, so poll briefly)
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let m = net.metrics();
+            if m.timed_out >= 1 && m.closed >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "{front}: slow-read kill not counted: {m:?}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // the server stays healthy, and the connection lifecycle +
+        // gauges are exported through the Prometheus endpoint
+        let mut c = HttpClient::new(&addr);
+        assert_eq!(c.get("/healthz").unwrap().status, 200, "{front}");
+        let p = c.get("/metrics").unwrap();
+        for name in [
+            "flexsvm_net_connections_timed_out_total 1",
+            "flexsvm_net_connections_accepted_total",
+            "flexsvm_net_connections_open",
+            "flexsvm_net_connections_reading",
+            "flexsvm_net_connections_writing",
+            "flexsvm_net_connections_idle",
+        ] {
+            assert!(p.body.contains(name), "{front}: missing {name}:\n{}", p.body);
+        }
+        drop(c);
+        net.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn streaming_sessions_hold_keep_alive_and_stay_bit_exact() {
+    let models = tiny_models();
+    for front in fronts() {
+        let net = native_net_server(
+            models.clone(),
+            NetOpts { front, workers: 32, ..Default::default() },
+        );
+        // 24 devices x 3 rounds (first = connect/warm, 2 timed) over
+        // long-lived sessions, every answer checked against the native
+        // spec inside drive_streaming
+        let s = Streaming::new(24, models.len(), 4, 0x57a7);
+        let r = drive_streaming(&net.addr().to_string(), &s, &models, 3, 4).unwrap();
+        assert_eq!(r.devices, 24, "{front}");
+        assert_eq!(r.native_mismatch, 0, "{front}: wire answers must be bit-exact");
+        assert_eq!(r.stalled, 0, "{front}: no device session may starve: {r:?}");
+        assert_eq!(r.shed, 0, "{front}: nothing sheds at this scale: {r:?}");
+        assert_eq!(r.served, 48, "{front}: every timed window answered: {r:?}");
+        assert!(
+            r.connections_reused >= 48,
+            "{front}: sessions must ride keep-alive, not reconnect: {r:?}"
+        );
+        net.shutdown().unwrap();
+    }
 }
