@@ -188,6 +188,7 @@ fn main() -> Result<()> {
                 None,
                 r.per_config.as_ref(),
                 nm.as_ref(),
+                None,
             )
         );
         // Table-I sanity: at least one served config's accel-vs-baseline

@@ -214,6 +214,7 @@ fn main() -> anyhow::Result<()> {
             None,
             None,
             None,
+            None,
         )
     );
     server.shutdown()?;

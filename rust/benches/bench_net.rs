@@ -184,6 +184,12 @@ fn main() -> anyhow::Result<()> {
         .backend(Backend::Accel)
         .queue_cap(512)
         .linger(Duration::from_micros(500))
+        // generous objectives: the verdict lands in BENCH_net.json so a
+        // regression that tanks availability or p99 flips it to degraded
+        .obs_opts(flexsvm::obs::ObsOpts {
+            slo: Some("p99=2s,avail=50".parse().expect("static SLO spec")),
+            ..Default::default()
+        })
         .farm(FarmOpts {
             timing: TimingConfig::ideal_mem(),
             calibrate_baseline: false,
@@ -246,6 +252,7 @@ fn main() -> anyhow::Result<()> {
     let farm = client.engine_metrics()?.farm;
     let stages = client.obs().stage_snapshot();
     let nm = net.metrics();
+    let slo = client.obs().slo_snapshot();
     print!(
         "{}",
         serving::render(
@@ -257,6 +264,7 @@ fn main() -> anyhow::Result<()> {
             None,
             None,
             Some(&nm),
+            slo.as_ref(),
         )
     );
     if let Some(fm) = farm.as_ref() {
@@ -276,6 +284,13 @@ fn main() -> anyhow::Result<()> {
     report.metric("net accepted connections", nm.accepted as f64, "conns");
     report.metric("net requests", nm.requests as f64, "reqs");
     report.metric("net bytes out", nm.bytes_out as f64, "bytes");
+    if let Some(s) = &slo {
+        report.metric("slo healthy", s.healthy() as u64 as f64, "bool");
+        let worst =
+            s.configs.iter().map(|c| c.burn_long).fold(0.0f64, f64::max);
+        report.metric("slo worst long-window burn", worst, "x");
+        println!("SLO verdict: {}", s.verdict());
+    }
     net.shutdown()?;
 
     // ---- Part B: device-scale streaming, pool vs epoll -------------

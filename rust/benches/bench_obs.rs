@@ -1,0 +1,104 @@
+//! Observability overhead benchmark: what the guest-cycle continuous
+//! profiler costs on the block-compiled SoC hot path, and what a
+//! flight-recorder emit costs per event.
+//!
+//!     cargo bench --bench bench_obs
+//!
+//! Writes `BENCH_obs.json` (CI perf smoke gates the 1-in-64 sampled
+//! profiler at <= 10% overhead over the unprofiled runner).  Every
+//! profiled run is also checked for the conservation contract —
+//! attributed per-block cycles must equal `CycleStats::total()`
+//! bit-exactly — so the overhead number can never come from dropping
+//! accounting work.
+
+use flexsvm::obs::{log as evlog, BlockProfiler, ConfigProfile};
+use flexsvm::program::run::ProgramRunner;
+use flexsvm::program::ProgramOpts;
+use flexsvm::serv::TimingConfig;
+use flexsvm::testing::gen;
+use flexsvm::util::benchkit::{quick, write_report, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("observability overhead (profiler + event log)");
+    let iters = if quick() { 40 } else { 400 };
+
+    for (key, model) in [
+        ("syn_a", gen::tiny_model("syn_a", false)),
+        ("syn_rbf", gen::tiny_kernel_model("syn_rbf", flexsvm::kernel::Kernel::Rbf)),
+    ] {
+        let x: Vec<i32> = (0..model.n_features as i32).map(|i| (i * 7) % 16).collect();
+        let mut runner =
+            ProgramRunner::accelerated(&model, TimingConfig::flexic(), ProgramOpts::default())?;
+        let (pred_ref, stats_ref) = runner.run_sample(&x)?;
+
+        // baseline: the unprofiled hot path the farm runs by default
+        let s_off = b.case(&format!("{key} profiler off"), 2, iters, || {
+            let (p, s) = runner.run_sample(&x).unwrap();
+            assert_eq!((p, s.total()), (pred_ref, stats_ref.total()));
+        });
+
+        // 1-in-64 sampling: the production cadence CI gates on
+        let mut tick = 0u64;
+        let mut profile = ConfigProfile::new();
+        let regions = runner.program().regions.clone();
+        let s_sampled = b.case(&format!("{key} profiler 1-in-64"), 2, iters, || {
+            tick += 1;
+            if tick % 64 == 0 {
+                let mut prof = BlockProfiler::new();
+                let (p, s) = runner.run_sample_profiled(&x, &mut prof).unwrap();
+                assert_eq!((p, s.total()), (pred_ref, stats_ref.total()));
+                assert_eq!(prof.attributed(), s.total(), "conservation");
+                profile.absorb(&prof, &regions);
+            } else {
+                let (p, _) = runner.run_sample(&x).unwrap();
+                assert_eq!(p, pred_ref);
+            }
+        });
+
+        // always-on: the worst case (what `--profile-rate 1` costs)
+        let s_always = b.case(&format!("{key} profiler always-on"), 2, iters, || {
+            let mut prof = BlockProfiler::new();
+            let (p, s) = runner.run_sample_profiled(&x, &mut prof).unwrap();
+            assert_eq!(p, pred_ref);
+            assert_eq!(prof.attributed(), s.total(), "conservation");
+        });
+
+        let ns_off = s_off.median.as_secs_f64();
+        b.metric(
+            &format!("{key} profiler off"),
+            stats_ref.total() as f64 / ns_off / 1e6,
+            "Mcyc/s",
+        );
+        b.metric(
+            &format!("{key} overhead 1-in-64"),
+            s_sampled.median.as_secs_f64() / ns_off,
+            "x",
+        );
+        b.metric(
+            &format!("{key} overhead always-on"),
+            s_always.median.as_secs_f64() / ns_off,
+            "x",
+        );
+    }
+
+    // flight recorder: cost of one suppressed emit (below threshold —
+    // the common case on the hot path) vs one recorded emit
+    evlog::set_level(evlog::Level::Info);
+    let n_emit = if quick() { 10_000 } else { 100_000 };
+    let s_sup = b.case("log emit suppressed (debug under info)", 2, 20, || {
+        for i in 0..n_emit {
+            evlog::emit_fmt(evlog::Level::Debug, "bench_suppressed", || format!("event {i}"));
+        }
+    });
+    let s_rec = b.case("log emit recorded (info)", 2, 20, || {
+        for i in 0..n_emit {
+            evlog::emit_fmt(evlog::Level::Info, "bench_recorded", || format!("event {i}"));
+        }
+    });
+    b.metric("log suppressed emit", s_sup.median.as_secs_f64() / n_emit as f64 * 1e9, "ns");
+    b.metric("log recorded emit", s_rec.median.as_secs_f64() / n_emit as f64 * 1e9, "ns");
+
+    let path = write_report("obs", &[&b])?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

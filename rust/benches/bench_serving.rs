@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use flexsvm::coordinator::{Backend, Server};
 use flexsvm::farm::FarmOpts;
-use flexsvm::obs::StageMetrics;
+use flexsvm::obs::{ObsOpts, SloSnapshot, StageMetrics};
 use flexsvm::svm::infer;
 use flexsvm::svm::model::artifacts_root;
 use flexsvm::svm::{QuantModel, TestSet};
@@ -77,7 +77,7 @@ fn drive(
     batch_max: usize,
     linger_us: u64,
     eager: bool,
-) -> anyhow::Result<(f64, u64, u64, f64, StageMetrics)> {
+) -> anyhow::Result<(f64, u64, u64, f64, StageMetrics, Option<SloSnapshot>)> {
     let keys: Vec<String> = testsets.iter().map(|(k, _)| k.clone()).collect();
     let builder = Server::builder()
         .backend(backend)
@@ -86,6 +86,12 @@ fn drive(
         .linger(Duration::from_micros(linger_us))
         .queue_cap(4096)
         .eager_flush(eager)
+        // generous objectives: the verdict rides into BENCH_serving.json
+        // so a regression that tanks tail latency flips it to degraded
+        .obs_opts(ObsOpts {
+            slo: Some("p99=2s,avail=50".parse().expect("static SLO spec")),
+            ..Default::default()
+        })
         .farm(farm);
     let builder = match models {
         Some(ms) => builder.models(ms.to_vec()),
@@ -101,7 +107,8 @@ fn drive(
     for sm in client.obs().stage_snapshot().values() {
         stages.merge(sm);
     }
-    Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch, stages))
+    let slo = client.obs().slo_snapshot();
+    Ok((r.served as f64 / r.wall.as_secs_f64(), s.p50_us, s.p99_us, s.mean_batch, stages, slo))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -136,7 +143,7 @@ fn main() -> anyhow::Result<()> {
         for (batch_max, linger_us, eager) in
             [(1usize, 0u64, false), (8, 200, false), (64, 500, false), (64, 2000, false), (64, 500, true)]
         {
-            let (rps, p50, p99, mb, _) = drive(
+            let (rps, p50, p99, mb, _, _) = drive(
                 &testsets,
                 models_ref,
                 backend,
@@ -168,9 +175,9 @@ fn main() -> anyhow::Result<()> {
     // coordinator — the serving-level view of bench_farm's raw number
     let farm_base = FarmOpts { shards: 4, calibrate_baseline: false, ..Default::default() };
     let farm_fast = FarmOpts { fastpath: true, audit_rate: 32, ..farm_base };
-    let (rps_sim, p50s, p99s, mbs, stages_sim) =
+    let (rps_sim, p50s, p99s, mbs, stages_sim, slo_sim) =
         drive(&testsets, models_ref, Backend::Accel, farm_base, 8, 200, false)?;
-    let (rps_fast, p50f, p99f, mbf, _) =
+    let (rps_fast, p50f, p99f, mbf, _, _) =
         drive(&testsets, models_ref, Backend::Accel, farm_fast, 8, 200, false)?;
     t.row([
         "accel (full sim)".to_string(),
@@ -199,6 +206,13 @@ fn main() -> anyhow::Result<()> {
     for (stage, h) in stages_sim.iter() {
         report.metric(&format!("stage {} p50", stage.name()), h.quantile_us(0.50) as f64, "us");
         report.metric(&format!("stage {} p99", stage.name()), h.quantile_us(0.99) as f64, "us");
+    }
+    // SLO verdict of the full-sim accel run
+    if let Some(s) = &slo_sim {
+        report.metric("slo healthy", s.healthy() as u64 as f64, "bool");
+        let worst = s.configs.iter().map(|c| c.burn_long).fold(0.0f64, f64::max);
+        report.metric("slo worst long-window burn", worst, "x");
+        println!("SLO verdict (accel full sim): {}", s.verdict());
     }
 
     print!("{}", t.render());

@@ -709,6 +709,7 @@ fn flush(
                     t_exec.saturating_duration_since(routed).as_micros() as u64,
                 );
                 stages.set(Stage::Dispatch, total_us.saturating_sub(stages.sum_us()));
+                obs.slo_record(key, true, latency);
                 let sampled = obs.observe(key, &stages, latency);
                 let span = if sampled || req.explicit {
                     let mut sp = Span::new(req.trace, key);
@@ -739,6 +740,7 @@ fn flush(
                 }));
             }
             Err(e) => {
+                obs.slo_record(key, false, latency);
                 let _ = req.resp.send(Err(e));
             }
         }

@@ -79,6 +79,7 @@ impl Engine for FarmEngine {
         EngineMetrics {
             engine: self.name().to_string(),
             farm: self.farm.as_ref().map(|f| f.metrics()),
+            profiles: self.farm.as_ref().map(|f| f.profiles()).unwrap_or_default(),
             ..Default::default()
         }
     }

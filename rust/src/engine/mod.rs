@@ -38,7 +38,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::metrics::ConfigMetrics;
 use crate::farm::FarmMetrics;
-use crate::obs::{Span, StageSet, TraceId};
+use crate::obs::{ConfigProfile, Span, StageSet, TraceId};
 use crate::svm::model::Manifest;
 use crate::svm::QuantModel;
 
@@ -179,6 +179,10 @@ pub struct EngineMetrics {
     /// (`RemoteEngine` merges every node's `ConfigMetrics` — full
     /// histogram buckets, so fleet quantiles are real quantiles).
     pub fleet: Option<HashMap<String, ConfigMetrics>>,
+    /// Per-config guest-cycle profiles from the sampled continuous
+    /// profiler (the farm aggregates across shards; `RemoteEngine`
+    /// merges across nodes).  Empty when profiling is off.
+    pub profiles: HashMap<String, ConfigProfile>,
 }
 
 /// Where an engine's `warm` gets host-side models from.

@@ -55,12 +55,13 @@ pub mod scenario;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, OnceLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::obs::{Stage, StageSet};
+use crate::obs::log as evlog;
+use crate::obs::{BlockProfiler, ConfigProfile, Stage, StageSet};
 use crate::power::FlexicModel;
 use crate::program::cost::{baseline_estimate_cycles, AnalyticModel};
 use crate::program::run::{CompiledProgram, ProgramRunner};
@@ -103,6 +104,12 @@ pub struct FarmOpts {
     /// bit-for-bit (0 disables auditing).  The first request per
     /// config is always audited.
     pub audit_rate: u64,
+    /// Continuous profiler sampling: profile every Nth simulated job
+    /// per config (0 disables).  A profiled job runs the exact same
+    /// block-compiled simulation — the profiler only reads the cycle
+    /// counters already maintained per step, so sampled answers stay
+    /// bit-identical to unsampled ones.
+    pub profile_rate: u64,
 }
 
 impl Default for FarmOpts {
@@ -117,6 +124,7 @@ impl Default for FarmOpts {
             calibrate_baseline: true,
             fastpath: false,
             audit_rate: 16,
+            profile_rate: 0,
         }
     }
 }
@@ -219,6 +227,13 @@ struct FarmConfig {
     /// thread when `calibrate_baseline` is on.
     baseline_cal: OnceLock<f64>,
     fast: FastState,
+    /// Aggregated region profile (shards fold sampled runs in; the
+    /// lock is off the hot path — only every `profile_rate`-th job
+    /// touches it).
+    profile: Mutex<ConfigProfile>,
+    /// Simulated jobs seen for this config (drives the 1-in-N
+    /// profiling cadence across all shards).
+    profile_tick: AtomicU64,
 }
 
 /// What a shard answers with: the prediction plus the full simulated
@@ -379,6 +394,8 @@ impl Farm {
                     baseline_est,
                     baseline_cal: OnceLock::new(),
                     fast: FastState::default(),
+                    profile: Mutex::new(ConfigProfile::new()),
+                    profile_tick: AtomicU64::new(0),
                 })
             })
             .collect::<Result<_>>()?;
@@ -398,6 +415,15 @@ impl Farm {
             });
             for (c, a) in configs.iter_mut().zip(analytics) {
                 c.analytic = a;
+                if c.analytic.is_some() {
+                    evlog::emit_cfg(evlog::Level::Info, "fastpath_on", &c.key, || {
+                        "analytic cost model probe-validated; serving from the fast path".into()
+                    });
+                } else {
+                    evlog::emit_cfg(evlog::Level::Warn, "fastpath_unavailable", &c.key, || {
+                        "analytic cost model failed probe validation; full simulation".into()
+                    });
+                }
             }
         }
         let configs = Arc::new(configs);
@@ -516,6 +542,23 @@ impl Farm {
         }
     }
 
+    /// Per-config guest-cycle profiles from the sampled continuous
+    /// profiler (empty map with `profile_rate` 0 or before the first
+    /// sampled job).  Configs with no samples yet are omitted.
+    pub fn profiles(&self) -> HashMap<String, ConfigProfile> {
+        self.configs
+            .iter()
+            .filter_map(|c| {
+                let p = c.profile.lock().unwrap();
+                if p.is_empty() {
+                    None
+                } else {
+                    Some((c.key.clone(), p.clone()))
+                }
+            })
+            .collect()
+    }
+
     /// Affinity-with-spill scheduling: home shard unless its queue is
     /// deeper than the spill threshold, else the least-loaded shard.
     fn pick_shard(&self, home: usize, spill_threshold: usize) -> usize {
@@ -534,6 +577,9 @@ impl Farm {
         }
         if best != home {
             self.spills.fetch_add(1, Ordering::Relaxed);
+            evlog::emit_fmt(evlog::Level::Debug, "shard_spill", || {
+                format!("home shard {home} depth {home_depth} > {spill_threshold}; spilled to {best}")
+            });
         }
         best
     }
@@ -623,6 +669,15 @@ impl Farm {
                         if a.pred != pred || a.stats != stats {
                             c.fast.mismatches.fetch_add(1, Ordering::Relaxed);
                             c.fast.poisoned.store(true, Ordering::Relaxed);
+                            evlog::emit_cfg(evlog::Level::Error, "config_poisoned", &c.key, || {
+                                format!(
+                                    "differential audit mismatch: analytic pred={pred} \
+                                     cycles={} vs SoC pred={} cycles={}; demoted to full sim",
+                                    stats.total(),
+                                    a.pred,
+                                    a.stats.total()
+                                )
+                            });
                         }
                         // the analytic predict is the `execute` stage;
                         // the extra simulation is attributed to `audit`
@@ -637,6 +692,12 @@ impl Farm {
                         // rejected: that is itself an audit failure
                         c.fast.mismatches.fetch_add(1, Ordering::Relaxed);
                         c.fast.poisoned.store(true, Ordering::Relaxed);
+                        evlog::emit_cfg(evlog::Level::Error, "config_poisoned", &c.key, || {
+                            format!(
+                                "differential audit: SoC rejected a sample the analytic \
+                                 model accepted ({e:#}); demoted to full sim"
+                            )
+                        });
                         Err(e)
                     }
                 })
@@ -770,7 +831,19 @@ fn shard_main(
                     v.insert(ProgramRunner::from_compiled(&c.program, opts.timing)?)
                 }
             };
-            let (pred, stats) = runner.run_sample(&job.features)?;
+            let c = &configs[job.cfg];
+            let sampled = opts.profile_rate > 0
+                && c.profile_tick.fetch_add(1, Ordering::Relaxed) % opts.profile_rate == 0;
+            let (pred, stats) = if sampled {
+                // profiled run: identical simulation, plus per-block
+                // cycle attribution folded into the config's profile
+                let mut prof = BlockProfiler::new();
+                let out = runner.run_sample_profiled(&job.features, &mut prof)?;
+                c.profile.lock().unwrap().absorb(&prof, &c.program.built().regions);
+                out
+            } else {
+                runner.run_sample(&job.features)?
+            };
             counters.jobs.fetch_add(1, Ordering::Relaxed);
             counters.sim_cycles.fetch_add(stats.total(), Ordering::Relaxed);
             let exec_us = picked.elapsed().as_micros() as u64;
@@ -1028,6 +1101,25 @@ mod tests {
         assert_eq!(m.fast.poisoned_configs, 0);
         assert_eq!(m.fast.fastpath_configs, 2);
         assert!(m.fast.fast_jobs > 0, "kernel configs must actually ride the fast path");
+    }
+
+    #[test]
+    fn profiler_samples_and_aggregates_per_config() {
+        let opts = FarmOpts { shards: 1, profile_rate: 2, ..fast_opts() };
+        let farm = Farm::start(vec![tiny("a", false)], opts).unwrap();
+        let off = Farm::start(vec![tiny("a", false)], FarmOpts { shards: 1, ..fast_opts() }).unwrap();
+        for _ in 0..8 {
+            let p = farm.predict("a", &[1, 2, 3]).unwrap();
+            let q = off.predict("a", &[1, 2, 3]).unwrap();
+            // sampling must not perturb answers or bills
+            assert_eq!((p.pred, p.cycles), (q.pred, q.cycles));
+        }
+        let profs = farm.profiles();
+        let p = profs.get("a").expect("sampled config has a profile");
+        assert_eq!(p.sampled_runs, 4, "1-in-2 of 8 jobs sampled");
+        assert!(p.total_cycles > 0);
+        assert!(p.regions.contains_key("dot_loop"), "{:?}", p.regions);
+        assert!(off.profiles().is_empty(), "profiling off: no profiles");
     }
 
     #[test]

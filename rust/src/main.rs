@@ -45,6 +45,8 @@ USAGE: flexsvm <subcommand> [options]
                [--fastpath] [--audit-rate N]
                [--listen HOST:PORT] [--remote HOST:PORT,...]
                [--net-front pool|epoll] [--event-threads N]
+               [--profile-rate N] [--log-level debug|info|warn|error]
+               [--log-file events.jsonl] [--slo p99=20ms,avail=99.9]
                --listen serves HTTP (POST /v1/infer, GET /healthz, GET
                /v1/metrics) until ctrl-c, which drains in-flight requests;
                --net-front picks the socket front (default: epoll on Linux
@@ -55,7 +57,14 @@ USAGE: flexsvm <subcommand> [options]
                --synthetic serves built-in tiny models (no artifacts needed);
                --fastpath (accel backend) answers from the analytic cost
                model, auditing every Nth request (--audit-rate, default 16)
-               bit-exactly against the simulated SoC
+               bit-exactly against the simulated SoC;
+               --profile-rate N samples the guest-cycle profiler on every
+               Nth simulated request (accel backend; 0 = off; GET
+               /v1/profile, ?collapsed=1 for flamegraph input);
+               --log-level sets the flight-recorder threshold (default
+               info; GET /v1/logs), --log-file mirrors events as JSONL;
+               --slo sets latency/availability objectives (burn-rate
+               gauges in /metrics, verdict in /healthz)
   asm          <file.s> [--out image.bin] [--run] [--max-cycles N]
   rtl-template [--out-dir DIR]     (emit Verilog + C header for the SVM CFU)
   vcd          --config <key> [--sample I] [--out trace.vcd]
@@ -386,13 +395,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let farm_opts = flexsvm::farm::FarmOpts {
         fastpath: args.flag("fastpath"),
         audit_rate: args.u64_or("audit-rate", 16)?,
+        profile_rate: args.u64_or("profile-rate", 0)?,
         ..Default::default()
     };
+
+    // flight recorder: threshold + optional JSONL sink, set before any
+    // serving work so warm-up events land in the ring too
+    if let Some(level) = args.opt_str("log-level") {
+        flexsvm::obs::log::set_level(level.parse()?);
+    }
+    if let Some(path) = args.opt_str("log-file") {
+        flexsvm::obs::log::set_sink(std::path::Path::new(path))?;
+    }
+    let slo: Option<flexsvm::obs::SloTargets> =
+        args.opt_str("slo").map(|s| s.parse()).transpose()?;
 
     let builder = Server::builder()
         .batch_max(args.usize_or("batch-max", 64)?)
         .linger(Duration::from_micros(args.u64_or("linger-us", 2000)?))
         .queue_cap(args.usize_or("queue-cap", 1024)?)
+        .obs_opts(flexsvm::obs::ObsOpts { slo, ..Default::default() })
         .farm(farm_opts);
     let from_artifacts = remotes.is_empty() && !synthetic;
     let builder = if !remotes.is_empty() {
@@ -468,6 +490,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 engine.fleet.as_ref(),
                 Some(&r.per_config),
                 None,
+                client.obs().slo_snapshot().as_ref(),
             )
         );
     }
@@ -485,7 +508,7 @@ fn serve_listen(server: Server, listen: &str, keys: &[String], opts: NetOpts) ->
     println!("flexsvm net: listening on {} ({} front)", net.addr(), net.front());
     println!("  configs: {}", keys.join(", "));
     println!(
-        "  endpoints: GET /healthz | GET /v1/metrics | GET /metrics | GET /v1/traces | POST /v1/infer"
+        "  endpoints: GET /healthz | GET /v1/metrics | GET /metrics | GET /v1/traces | GET /v1/profile | GET /v1/logs | POST /v1/infer"
     );
     println!("  ctrl-c drains in-flight requests and stops");
     while !stop.load(Ordering::SeqCst) {

@@ -75,7 +75,7 @@ pub mod wire {
     use crate::coordinator::Response;
     use crate::engine::{EngineMetrics, Sample, ServeError, SimCost};
     use crate::farm::{ExecMode, FarmMetrics, FastPathMetrics, ShardMetrics};
-    use crate::obs::{Span, TraceId};
+    use crate::obs::{ConfigProfile, Span, TraceId};
     use crate::util::json::{obj, Json};
 
     pub fn features_json(x: &[i32]) -> Json {
@@ -290,10 +290,65 @@ pub mod wire {
     }
 
     pub fn engine_metrics_json(em: &EngineMetrics) -> Json {
-        obj([
+        let mut o = obj([
             ("name", em.engine.as_str().into()),
             ("farm", em.farm.as_ref().map(farm_json).unwrap_or(Json::Null)),
+        ]);
+        // profiles travel only when the profiler has samples, so
+        // pre-profiler peers see exactly the document they always saw
+        if !em.profiles.is_empty() {
+            let Json::Obj(map) = &mut o else { unreachable!() };
+            map.insert("profiles".to_string(), profiles_json(&em.profiles));
+        }
+        o
+    }
+
+    /// One config's aggregated guest-cycle profile.
+    pub fn profile_json(p: &ConfigProfile) -> Json {
+        let regions: std::collections::BTreeMap<String, Json> =
+            p.regions.iter().map(|(k, &c)| (k.clone(), c.into())).collect();
+        obj([
+            ("sampled_runs", p.sampled_runs.into()),
+            ("total_cycles", p.total_cycles.into()),
+            ("regions", Json::Obj(regions)),
         ])
+    }
+
+    pub fn profile_from_json(v: &Json) -> Result<ConfigProfile> {
+        let mut p = ConfigProfile::new();
+        p.sampled_runs = v.get("sampled_runs")?.as_i64()?.max(0) as u64;
+        p.total_cycles = v.get("total_cycles")?.as_i64()?.max(0) as u64;
+        if let Some(regions) = v.opt("regions") {
+            for (name, c) in regions.as_obj()? {
+                p.regions.insert(name.clone(), c.as_i64()?.max(0) as u64);
+            }
+        }
+        Ok(p)
+    }
+
+    /// The per-config profile map under `"profiles"` in the engine
+    /// object of `/v1/metrics`.
+    pub fn profiles_json(profiles: &HashMap<String, ConfigProfile>) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        for (k, p) in profiles {
+            o.insert(k.clone(), profile_json(p));
+        }
+        Json::Obj(o)
+    }
+
+    /// Tolerant decode of the `"profiles"` map: absent on pre-profiler
+    /// peers (→ empty map), and a malformed entry drops alone rather
+    /// than failing the whole snapshot.
+    pub fn profiles_from_json(v: Option<&Json>) -> HashMap<String, ConfigProfile> {
+        let mut out = HashMap::new();
+        if let Some(Json::Obj(map)) = v {
+            for (k, pj) in map {
+                if let Ok(p) = profile_from_json(pj) {
+                    out.insert(k.clone(), p);
+                }
+            }
+        }
+        out
     }
 
     /// Full latency histogram: per-bucket counts + sum + max, enough
@@ -781,6 +836,44 @@ mod tests {
         assert!(back.latency.is_none(), "summary-only peers decode without buckets");
         assert!(back.kernel.is_empty(), "pre-kernel peers decode as unknown family");
         assert_eq!(back.bits, 0);
+    }
+
+    #[test]
+    fn profiles_ride_the_engine_metrics_wire() {
+        use crate::engine::EngineMetrics;
+        use crate::obs::{BlockProfiler, ConfigProfile, Region};
+        let mut p = ConfigProfile::new();
+        let mut run = BlockProfiler::new();
+        run.record(0, 10, 0);
+        run.record(4, 90, 16);
+        p.absorb(&run, &[Region { name: "dot_loop", start_word: 4, end_word: 8 }]);
+        let mut em = EngineMetrics { engine: "accel".into(), ..Default::default() };
+        em.profiles.insert("iris_w4".to_string(), p.clone());
+        let j = Json::parse(&wire::engine_metrics_json(&em).to_string()).unwrap();
+        let back = wire::profiles_from_json(j.opt("profiles"));
+        assert_eq!(back.get("iris_w4"), Some(&p), "counter-exact round trip");
+        // total == sum of regions survives the wire (conservation)
+        let b = &back["iris_w4"];
+        assert_eq!(b.regions.values().sum::<u64>(), b.total_cycles);
+    }
+
+    #[test]
+    fn engine_metrics_tolerate_pre_profiler_peers() {
+        // a pre-profiler node sends no "profiles" key; an empty local
+        // profile map sends none either — both directions decode clean
+        let v = Json::parse(r#"{"name":"accel","farm":null}"#).unwrap();
+        assert!(wire::profiles_from_json(v.opt("profiles")).is_empty());
+        let em = crate::engine::EngineMetrics { engine: "accel".into(), ..Default::default() };
+        let j = wire::engine_metrics_json(&em);
+        assert!(j.opt("profiles").is_none(), "no samples: wire document unchanged");
+        // a malformed entry drops alone instead of failing the snapshot
+        let v = Json::parse(
+            r#"{"a":{"sampled_runs":1,"total_cycles":5,"regions":{"x":5}},"b":{"bogus":true}}"#,
+        )
+        .unwrap();
+        let back = wire::profiles_from_json(Some(&v));
+        assert_eq!(back.len(), 1);
+        assert_eq!(back["a"].total_cycles, 5);
     }
 
     #[test]

@@ -27,7 +27,8 @@ use anyhow::{bail, Context as _, Result};
 use crate::coordinator::metrics::ConfigMetrics;
 use crate::engine::{batch_error, BatchCtx, Engine, EngineMetrics, ModelSource, Sample, ServeError};
 use crate::farm::FarmMetrics;
-use crate::obs::TraceId;
+use crate::obs::log as evlog;
+use crate::obs::{ConfigProfile, TraceId};
 use crate::util::json::Json;
 
 use super::client::{HttpClient, HttpClientOpts, NetError};
@@ -100,7 +101,15 @@ impl RemoteEngine {
         };
         let resp = match resp {
             Ok(r) => r,
-            Err(e) => return batch_error(xs.len(), net_to_serve(e)),
+            Err(e) => {
+                let err = net_to_serve(e);
+                if err == ServeError::ServerDown {
+                    evlog::emit_fmt(evlog::Level::Warn, "node_down", || {
+                        format!("node {addr} unreachable after bounded reconnect; chunk failed alone")
+                    });
+                }
+                return batch_error(xs.len(), err);
+            }
         };
         if resp.status != 200 {
             return batch_error(xs.len(), status_to_serve(resp.status, &resp.body));
@@ -299,7 +308,8 @@ impl Engine for RemoteEngine {
     /// thread, so a dead node must cost one bounded reconnect, not one
     /// per node in series.
     fn snapshot(&self) -> EngineMetrics {
-        type NodeView = (Option<FarmMetrics>, HashMap<String, ConfigMetrics>);
+        type NodeView =
+            (Option<FarmMetrics>, HashMap<String, ConfigMetrics>, HashMap<String, ConfigProfile>);
         let views: Vec<Option<NodeView>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .nodes
@@ -325,7 +335,11 @@ impl Engine for RemoteEngine {
                                 }
                             }
                         }
-                        Some((farm, configs))
+                        // absent on pre-profiler nodes → empty map
+                        let profiles = wire::profiles_from_json(
+                            doc.opt("engine").and_then(|e| e.opt("profiles")),
+                        );
+                        Some((farm, configs, profiles))
                     })
                 })
                 .collect();
@@ -333,7 +347,8 @@ impl Engine for RemoteEngine {
         });
         let mut merged: Option<FarmMetrics> = None;
         let mut fleet: HashMap<String, ConfigMetrics> = HashMap::new();
-        for (farm, configs) in views.into_iter().flatten() {
+        let mut profiles: HashMap<String, ConfigProfile> = HashMap::new();
+        for (farm, configs, node_profiles) in views.into_iter().flatten() {
             if let Some(f) = farm {
                 match merged.as_mut() {
                     None => merged = Some(f),
@@ -352,11 +367,16 @@ impl Engine for RemoteEngine {
                     }
                 }
             }
+            // fleet profile: plain counter adds, order-independent
+            for (key, p) in node_profiles {
+                profiles.entry(key).or_default().merge(&p);
+            }
         }
         EngineMetrics {
             engine: self.name.clone(),
             farm: merged,
             fleet: (!fleet.is_empty()).then_some(fleet),
+            profiles,
         }
     }
 }

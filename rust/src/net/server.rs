@@ -43,6 +43,7 @@ use anyhow::{Context as _, Result};
 
 use crate::coordinator::{Client, Pending, ServedConfig, Server};
 use crate::engine::ServeError;
+use crate::obs::log as evlog;
 use crate::obs::{Span, Stage, TraceId};
 use crate::util::json::{obj, Json, Limits};
 
@@ -257,6 +258,7 @@ impl NetServer {
     /// Put `server` on a socket.  `listen` is `host:port`; port `0`
     /// picks a free port — read it back from [`addr`](Self::addr).
     pub fn bind(server: Server, listen: &str, opts: NetOpts) -> Result<NetServer> {
+        crate::obs::mark_start(); // anchor flexsvm_uptime_seconds
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         let addr = listener.local_addr()?;
@@ -317,7 +319,12 @@ impl NetServer {
 
     /// Idempotent net-side teardown (shared by `shutdown` and `Drop`).
     fn stop_net(&mut self) {
-        self.ctx.stop.store(true, Ordering::SeqCst);
+        let first = !self.ctx.stop.swap(true, Ordering::SeqCst);
+        if first {
+            evlog::emit_fmt(evlog::Level::Info, "drain_start", || {
+                format!("stopped accepting on {}; draining in-flight connections", self.addr)
+            });
+        }
         wake_accept(self.addr);
         match &mut self.front {
             FrontImpl::Pool { acceptor, workers } => {
@@ -334,6 +341,11 @@ impl NetServer {
                     ev.stop();
                 }
             }
+        }
+        if first {
+            evlog::emit_fmt(evlog::Level::Info, "drain_end", || {
+                "net front drained; all connection threads joined".into()
+            });
         }
     }
 }
@@ -397,6 +409,9 @@ fn acceptor_loop(listener: TcpListener, conn_tx: mpsc::SyncSender<TcpStream>, ct
                         // the connection instead of letting it queue
                         // unboundedly behind the socket
                         ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        evlog::emit_fmt(evlog::Level::Warn, "admission_shed", || {
+                            "connection backlog full; connection shed with 503".into()
+                        });
                         shed_connection(stream, &ctx);
                     }
                     Err(mpsc::TrySendError::Disconnected(_)) => return,
@@ -703,7 +718,15 @@ impl InflightInfer {
                     a.encode_cfg = Some(key);
                     a
                 }
-                Err(e) => shed_aware_error(ctx, e),
+                Err(e) => {
+                    // engine-side failures are scored against the SLO
+                    // inside the coordinator's flush; admission sheds
+                    // never reach it, so score them here
+                    if matches!(e, ServeError::Overloaded) {
+                        ctx.client.obs().slo_record(&key, false, t0.elapsed());
+                    }
+                    shed_aware_error(ctx, e)
+                }
             };
         }
         let mut any_shed = false;
@@ -721,6 +744,7 @@ impl InflightInfer {
                     if matches!(e, ServeError::Overloaded) {
                         any_shed = true;
                         ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        ctx.client.obs().slo_record(&key, false, t0.elapsed());
                     }
                     wire::error_body(&e)
                 }
@@ -766,8 +790,14 @@ pub(crate) fn route(ctx: &Ctx, msg: &Message) -> Routed {
         ("GET", "/v1/metrics") => Routed::Ready(metrics(ctx)),
         ("GET", "/metrics") => Routed::Ready(prom(ctx)),
         ("GET", "/v1/traces") => Routed::Ready(traces(ctx, query)),
+        ("GET", "/v1/profile") => Routed::Ready(profile(ctx, query)),
+        ("GET", "/v1/logs") => Routed::Ready(logs(query)),
         ("POST", "/v1/infer") => infer(ctx, msg),
-        (_, "/healthz" | "/v1/metrics" | "/metrics" | "/v1/traces" | "/v1/infer") => {
+        (
+            _,
+            "/healthz" | "/v1/metrics" | "/metrics" | "/v1/traces" | "/v1/profile" | "/v1/logs"
+            | "/v1/infer",
+        ) => {
             Routed::Ready(Answer::plain(
                 405,
                 "Method Not Allowed",
@@ -782,6 +812,9 @@ pub(crate) fn route(ctx: &Ctx, msg: &Message) -> Routed {
 fn shed_aware_error(ctx: &Ctx, e: ServeError) -> Answer {
     if matches!(e, ServeError::Overloaded) {
         ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+        evlog::emit_fmt(evlog::Level::Warn, "admission_shed", || {
+            "coordinator ingress saturated; request shed with 503 + Retry-After".into()
+        });
     }
     Answer::from_serve_error(e)
 }
@@ -791,8 +824,16 @@ fn healthz(ctx: &Ctx) -> Answer {
     // probe; non-blocking so a saturated ingress sheds the probe with
     // 503 instead of parking this worker
     match ctx.client.try_engine_metrics() {
-        Ok(em) => Answer::ok(obj([
-            ("status", "ok".into()),
+        Ok(em) => {
+            // SLO verdict folds into liveness: a live server with a
+            // burning error budget answers "degraded" + the reasons
+            let slo = ctx.client.obs().slo_snapshot();
+            let status = match &slo {
+                Some(s) if !s.healthy() => "degraded",
+                _ => "ok",
+            };
+            let mut body = obj([
+            ("status", status.into()),
             ("engine", em.engine.as_str().into()),
             // each served config is an object carrying the model-family
             // facts (kernel + bit-width); peers that only want the keys
@@ -812,7 +853,13 @@ fn healthz(ctx: &Ctx) -> Answer {
                         .collect(),
                 ),
             ),
-        ])),
+            ]);
+            if let Some(s) = &slo {
+                let Json::Obj(map) = &mut body else { unreachable!() };
+                map.insert("slo".to_string(), Json::Str(s.verdict()));
+            }
+            Answer::ok(body)
+        }
         Err(e) => shed_aware_error(ctx, e),
     }
 }
@@ -839,6 +886,7 @@ fn prom(ctx: &Ctx) -> Answer {
     };
     let obs = ctx.client.obs();
     let net = ctx.counters.snapshot();
+    let slo = obs.slo_snapshot();
     Answer::text(crate::obs::prom_render(
         &configs,
         &obs.stage_snapshot(),
@@ -857,6 +905,7 @@ fn prom(ctx: &Ctx) -> Answer {
             ("traces_retained", obs.retained() as u64),
             ("traces_observed_total", obs.observed()),
         ],
+        slo.as_ref(),
     ))
 }
 
@@ -897,6 +946,91 @@ fn traces(ctx: &Ctx, query: &str) -> Answer {
             ("traces", Json::Arr(obs.recent(n).iter().map(Span::to_json).collect())),
         ])),
     }
+}
+
+/// `GET /v1/profile[?n=<count>&collapsed=1]`: the continuous
+/// profiler's merged per-config region profile — top-`n` hot regions
+/// as JSON, or the full collapsed-stack text (flamegraph input) with
+/// `collapsed=1`.  Configs with zero sampled runs are omitted; remote
+/// engines answer with the fleet-merged profile.
+fn profile(ctx: &Ctx, query: &str) -> Answer {
+    let em = match ctx.client.try_engine_metrics() {
+        Ok(em) => em,
+        Err(e) => return shed_aware_error(ctx, e),
+    };
+    let mut n = 10usize;
+    let mut collapsed = false;
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match k {
+            "n" => match v.parse::<usize>() {
+                Ok(v) if v >= 1 => n = v.min(64),
+                _ => return Answer::plain(400, "Bad Request", &format!("bad count {v:?}")),
+            },
+            "collapsed" => collapsed = v != "0",
+            _ => {} // tolerate unknown query params
+        }
+    }
+    if collapsed {
+        let mut out = String::new();
+        let mut keys: Vec<&String> = em.profiles.keys().collect();
+        keys.sort();
+        for k in keys {
+            em.profiles[k].collapsed_stack(k, &mut out);
+        }
+        return Answer::text(out);
+    }
+    let mut cfgs = std::collections::BTreeMap::new();
+    for (key, p) in &em.profiles {
+        let hot: Vec<Json> = p
+            .hot_regions(n)
+            .into_iter()
+            .map(|(name, cycles, pct)| {
+                obj([
+                    ("region", name.as_str().into()),
+                    ("cycles", cycles.into()),
+                    ("pct", pct.into()),
+                ])
+            })
+            .collect();
+        cfgs.insert(
+            key.clone(),
+            obj([
+                ("sampled_runs", p.sampled_runs.into()),
+                ("total_cycles", p.total_cycles.into()),
+                ("hot", Json::Arr(hot)),
+            ]),
+        );
+    }
+    Answer::ok(obj([("configs", Json::Obj(cfgs))]))
+}
+
+/// `GET /v1/logs[?n=<count>&level=<min>&trace=<hex>]`: the newest
+/// structured events from the flight-recorder ring, newest first.
+fn logs(query: &str) -> Answer {
+    let mut n = 100usize;
+    let mut min_level = None;
+    let mut trace: Option<String> = None;
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match k {
+            "n" => match v.parse::<usize>() {
+                Ok(v) if v >= 1 => n = v.min(1024),
+                _ => return Answer::plain(400, "Bad Request", &format!("bad count {v:?}")),
+            },
+            "level" => match v.parse::<evlog::Level>() {
+                Ok(l) => min_level = Some(l),
+                Err(e) => return Answer::plain(400, "Bad Request", &format!("{e:#}")),
+            },
+            "trace" => trace = Some(v.to_string()),
+            _ => {} // tolerate unknown query params
+        }
+    }
+    let events = evlog::recent(n, min_level, trace.as_deref());
+    Answer::ok(obj([
+        ("recorded", evlog::recorded().into()),
+        ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+    ]))
 }
 
 /// The request's explicit trace id, if any: the JSON `"trace"` field

@@ -1,0 +1,299 @@
+//! Flight-recorder event log: structured, leveled, trace-correlated.
+//!
+//! Lifecycle events that previously vanished into bare counters —
+//! audit mismatch → config poisoned, fast-path activation, SMC
+//! re-translation, shard spill, node down, admission shed, drain
+//! start/end — are recorded here as structured [`Event`]s: a bounded
+//! in-memory ring (newest win, served at `GET /v1/logs?n=&level=&trace=`)
+//! plus an optional JSONL file sink (`--log-file`) that survives the
+//! process for post-mortems.
+//!
+//! The log is a process-global (one flight recorder per process, like
+//! the airframe it is named after): emit sites live in `soc/`, `farm/`,
+//! `net/` and `coordinator/` and must not thread a handle through every
+//! layer.  The level gate is a single relaxed atomic load, and
+//! [`emit_fmt`] takes a closure so disabled events never format.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Ring capacity: enough to hold the events around any one incident
+/// without growing with traffic.
+const RING_CAP: usize = 512;
+
+/// Event severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Debug,
+            1 => Level::Info,
+            2 => Level::Warn,
+            _ => Level::Error,
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for Level {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Level> {
+        match s {
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" => Ok(Level::Warn),
+            "error" => Ok(Level::Error),
+            other => anyhow::bail!("unknown log level {other:?} (debug|info|warn|error)"),
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Monotonic per-process sequence number (total order even within
+    /// one millisecond).
+    pub seq: u64,
+    /// Unix milliseconds at emit time.
+    pub ts_ms: u64,
+    pub level: Level,
+    /// Stable machine-readable kind (`"config_poisoned"`,
+    /// `"admission_shed"`, ...) — what dashboards key off.
+    pub event: &'static str,
+    /// Served config the event concerns, when there is one.
+    pub config: Option<String>,
+    /// Correlated trace id (16-hex), when the event happened inside a
+    /// traced request.
+    pub trace: Option<String>,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seq", self.seq.into()),
+            ("ts_ms", self.ts_ms.into()),
+            ("level", self.level.as_str().into()),
+            ("event", self.event.into()),
+            ("msg", self.msg.as_str().into()),
+        ];
+        if let Some(c) = &self.config {
+            pairs.push(("config", c.as_str().into()));
+        }
+        if let Some(t) = &self.trace {
+            pairs.push(("trace", t.as_str().into()));
+        }
+        obj(pairs)
+    }
+}
+
+struct EventLog {
+    level: AtomicU8,
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+    sink: Mutex<Option<File>>,
+}
+
+static GLOBAL: EventLog = EventLog {
+    level: AtomicU8::new(Level::Info as u8),
+    seq: AtomicU64::new(0),
+    ring: Mutex::new(VecDeque::new()),
+    sink: Mutex::new(None),
+};
+
+/// Set the minimum recorded level (CLI `--log-level`).
+pub fn set_level(level: Level) {
+    GLOBAL.level.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    Level::from_u8(GLOBAL.level.load(Ordering::Relaxed))
+}
+
+/// Would an event at `level` be recorded?  One relaxed atomic load —
+/// emit sites on hot-ish paths gate on this (or use [`emit_fmt`])
+/// before formatting.
+pub fn enabled(level: Level) -> bool {
+    level >= self::level()
+}
+
+/// Attach a JSONL file sink (CLI `--log-file`): every recorded event
+/// is appended as one JSON line, surviving the process.
+pub fn set_sink(path: &Path) -> Result<()> {
+    let f = File::options()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open log sink {path:?}"))?;
+    *GLOBAL.sink.lock().unwrap() = Some(f);
+    Ok(())
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// Record one event (no-op below the current level).
+pub fn emit(
+    level: Level,
+    event: &'static str,
+    config: Option<&str>,
+    trace: Option<&str>,
+    msg: String,
+) {
+    if !enabled(level) {
+        return;
+    }
+    let e = Event {
+        seq: GLOBAL.seq.fetch_add(1, Ordering::Relaxed),
+        ts_ms: now_ms(),
+        level,
+        event,
+        config: config.map(str::to_string),
+        trace: trace.map(str::to_string),
+        msg,
+    };
+    if let Some(f) = GLOBAL.sink.lock().unwrap().as_mut() {
+        // best-effort: a full disk must not take serving down
+        let _ = writeln!(f, "{}", e.to_json());
+    }
+    let mut ring = GLOBAL.ring.lock().unwrap();
+    if ring.len() == RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(e);
+}
+
+/// [`emit`] with lazy formatting: the closure runs only when the level
+/// passes, so disabled emit sites cost one atomic load.
+pub fn emit_fmt(level: Level, event: &'static str, msg: impl FnOnce() -> String) {
+    if enabled(level) {
+        emit(level, event, None, None, msg());
+    }
+}
+
+/// [`emit_fmt`] tagged with the config it concerns.
+pub fn emit_cfg(level: Level, event: &'static str, config: &str, msg: impl FnOnce() -> String) {
+    if enabled(level) {
+        emit(level, event, Some(config), None, msg());
+    }
+}
+
+/// Newest-first slice of the ring: up to `n` events at `min_level` or
+/// above, optionally only those correlated with `trace`.
+pub fn recent(n: usize, min_level: Option<Level>, trace: Option<&str>) -> Vec<Event> {
+    let ring = GLOBAL.ring.lock().unwrap();
+    ring.iter()
+        .rev()
+        .filter(|e| min_level.is_none_or(|l| e.level >= l))
+        .filter(|e| trace.is_none_or(|t| e.trace.as_deref() == Some(t)))
+        .take(n)
+        .cloned()
+        .collect()
+}
+
+/// Total events recorded since process start (ring evictions included).
+pub fn recorded() -> u64 {
+    GLOBAL.seq.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the log is process-global and tests run concurrently, so
+    // assertions key on unique event kinds rather than global counts.
+
+    #[test]
+    fn emit_and_recall_by_kind_and_level() {
+        emit(Level::Warn, "test_ev_alpha", Some("cfg_a"), None, "first".into());
+        emit(Level::Error, "test_ev_alpha", Some("cfg_a"), None, "second".into());
+        let evs = recent(RING_CAP, Some(Level::Warn), None);
+        let mine: Vec<_> = evs.iter().filter(|e| e.event == "test_ev_alpha").collect();
+        assert!(mine.len() >= 2);
+        // newest first
+        assert_eq!(mine[0].msg, "second");
+        assert_eq!(mine[0].level, Level::Error);
+        assert_eq!(mine[1].config.as_deref(), Some("cfg_a"));
+        assert!(mine[0].seq > mine[1].seq);
+    }
+
+    #[test]
+    fn trace_filter_correlates() {
+        emit(Level::Info, "test_ev_traced", None, Some("00000000feedbeef"), "hit".into());
+        emit(Level::Info, "test_ev_traced", None, Some("0000000000000001"), "miss".into());
+        let evs = recent(RING_CAP, None, Some("00000000feedbeef"));
+        assert!(evs.iter().any(|e| e.event == "test_ev_traced" && e.msg == "hit"));
+        assert!(!evs.iter().any(|e| e.msg == "miss"));
+    }
+
+    #[test]
+    fn debug_is_filtered_at_default_level() {
+        // default level is Info: a Debug emit is dropped entirely
+        emit(Level::Debug, "test_ev_debug_dropped", None, None, "gone".into());
+        let evs = recent(RING_CAP, None, None);
+        assert!(!evs.iter().any(|e| e.event == "test_ev_debug_dropped"));
+        assert!(!enabled(Level::Debug));
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let e = Event {
+            seq: 7,
+            ts_ms: 1234,
+            level: Level::Warn,
+            event: "config_poisoned",
+            config: Some("iris_w4".into()),
+            trace: Some("00000000deadbeef".into()),
+            msg: "audit mismatch".into(),
+        };
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(j.get("level").unwrap().as_str().unwrap(), "warn");
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "config_poisoned");
+        assert_eq!(j.get("config").unwrap().as_str().unwrap(), "iris_w4");
+        assert_eq!(j.get("trace").unwrap().as_str().unwrap(), "00000000deadbeef");
+        assert_eq!(j.get("seq").unwrap().as_i64().unwrap(), 7);
+    }
+
+    #[test]
+    fn level_round_trips_strings() {
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert_eq!(l.as_str().parse::<Level>().unwrap(), l);
+        }
+        assert!("loud".parse::<Level>().is_err());
+    }
+}

@@ -16,11 +16,27 @@
 //! than the rolling p99 keeps its full span tree) into a bounded ring
 //! served at `GET /v1/traces`; stage histograms and the serving
 //! counters are also rendered as Prometheus text at `GET /metrics`.
+//!
+//! Three deeper subsystems ride alongside (ISSUE 10):
+//! * [`profile`] — sampled continuous guest-cycle profiler on the
+//!   block-compiled SoC hot path, symbolized through the program's
+//!   region map and served at `GET /v1/profile`;
+//! * [`log`] — the process-global flight-recorder event log
+//!   (`GET /v1/logs`, optional JSONL sink);
+//! * [`slo`] — per-config latency/availability objectives with
+//!   rolling error budgets and multi-window burn-rate verdicts
+//!   (`flexsvm_slo_*` gauges, `/healthz` verdict).
+
+pub mod log;
+pub mod profile;
+pub mod slo;
 
 mod prom;
 mod span;
 mod store;
 
-pub use prom::render as prom_render;
+pub use profile::{BlockProfiler, ConfigProfile, Region};
+pub use prom::{mark_start, render as prom_render};
+pub use slo::{SloSnapshot, SloTargets};
 pub use span::{Span, Stage, StageSet, TraceId};
 pub use store::{merge_stage_maps, Obs, ObsOpts, StageMetrics};

@@ -1,0 +1,249 @@
+//! Sampled continuous guest-cycle profiler.
+//!
+//! The block-compiled SoC hot path ([`crate::soc::block`]) already
+//! charges cycles block-at-a-time; profiling piggybacks on that: a
+//! [`BlockProfiler`] records one `(entry slot, cycles)` bump per
+//! executed basic block (CFU cycles kept separate, since the CFU is a
+//! meaningful "region" of its own), and the program generator emits a
+//! [`Region`] map so raw `pc/4` block slots symbolize to program
+//! regions (load / dot-product loop / kernel phi / vote / argmax).
+//!
+//! The conservation contract (DESIGN.md §5): a profiled run attributes
+//! **every** cycle — `BlockProfiler::attributed()` equals the run's
+//! `CycleStats::total()` bit-exactly.  This is what makes per-region
+//! percentages trustworthy, and it is proptested over random models ×
+//! bits × kernels × timing.
+//!
+//! Per-run profiles are absorbed into a per-config [`ConfigProfile`]
+//! in the farm (sampled 1-in-N requests, `FarmOpts::profile_rate`),
+//! merged across shards and — via `net::wire` — across the fleet, and
+//! served at `GET /v1/profile` (top-N hot regions + a collapsed-stack
+//! text form for flamegraph tooling).
+
+use std::collections::BTreeMap;
+
+/// A named half-open word range `[start_word, end_word)` of compiled
+/// program text.  Several ranges may share a name (e.g. an unrolled
+/// vote sequence emitted per class pair); symbolization folds them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub name: &'static str,
+    pub start_word: u32,
+    pub end_word: u32,
+}
+
+impl Region {
+    pub fn contains(&self, slot: u32) -> bool {
+        self.start_word <= slot && slot < self.end_word
+    }
+}
+
+/// Name for a block-entry slot under a region map.  Slots outside
+/// every region (or any slot when the program carries no map, e.g. the
+/// shift-add baseline) fall into `"other"` — never dropped, so the
+/// conservation contract survives symbolization.
+pub fn symbolize(slot: u32, regions: &[Region]) -> &'static str {
+    regions.iter().find(|r| r.contains(slot)).map(|r| r.name).unwrap_or("other")
+}
+
+/// Pseudo-region holding CFU busy cycles (they belong to the custom
+/// function unit, not to any text range).
+pub const CFU_REGION: &str = "cfu";
+
+/// Raw per-run cycle attribution: one counter bump per executed basic
+/// block, keyed by the block's entry slot (`pc/4`).
+#[derive(Debug, Clone, Default)]
+pub struct BlockProfiler {
+    blocks: BTreeMap<u32, u64>,
+    cfu: u64,
+}
+
+impl BlockProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one executed block: `cycles` non-CFU cycles to its entry
+    /// slot, `cfu` cycles to the CFU pseudo-region.
+    pub fn record(&mut self, slot: u32, cycles: u64, cfu: u64) {
+        *self.blocks.entry(slot).or_insert(0) += cycles;
+        self.cfu += cfu;
+    }
+
+    /// Every cycle this run attributed anywhere.  The conservation
+    /// contract: equals the run's `CycleStats::total()` bit-exactly.
+    pub fn attributed(&self) -> u64 {
+        self.blocks.values().sum::<u64>() + self.cfu
+    }
+
+    pub fn cfu_cycles(&self) -> u64 {
+        self.cfu
+    }
+
+    pub fn blocks(&self) -> &BTreeMap<u32, u64> {
+        &self.blocks
+    }
+}
+
+/// Aggregated, symbolized profile for one served config.  Built by
+/// absorbing sampled [`BlockProfiler`] runs shard-side; merged across
+/// shards / nodes with [`merge`](Self::merge) (both directions are
+/// plain counter adds, so fleet aggregation is order-independent).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ConfigProfile {
+    /// Runs that were profiled (not total requests — sampling).
+    pub sampled_runs: u64,
+    /// Total cycles across all sampled runs (== sum of `regions`).
+    pub total_cycles: u64,
+    /// Cycles per region name, `"other"` + [`CFU_REGION`] included.
+    pub regions: BTreeMap<String, u64>,
+}
+
+impl ConfigProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sampled_runs == 0
+    }
+
+    /// Fold one profiled run in, symbolizing block slots through the
+    /// program's region map.
+    pub fn absorb(&mut self, run: &BlockProfiler, regions: &[Region]) {
+        self.sampled_runs += 1;
+        for (&slot, &cycles) in run.blocks() {
+            *self.regions.entry(symbolize(slot, regions).to_string()).or_insert(0) += cycles;
+        }
+        if run.cfu_cycles() > 0 {
+            *self.regions.entry(CFU_REGION.to_string()).or_insert(0) += run.cfu_cycles();
+        }
+        self.total_cycles += run.attributed();
+    }
+
+    /// Counter-add another profile (shard → config, node → fleet).
+    pub fn merge(&mut self, other: &ConfigProfile) {
+        self.sampled_runs += other.sampled_runs;
+        self.total_cycles += other.total_cycles;
+        for (name, cycles) in &other.regions {
+            *self.regions.entry(name.clone()).or_insert(0) += cycles;
+        }
+    }
+
+    /// Top-`n` regions by cycles: `(name, cycles, pct_of_total)`.
+    pub fn hot_regions(&self, n: usize) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64)> =
+            self.regions.iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        v.truncate(n);
+        let total = self.total_cycles.max(1) as f64;
+        v.into_iter().map(|(k, c)| (k, c, 100.0 * c as f64 / total)).collect()
+    }
+
+    /// Collapsed-stack lines (`flexsvm;<config>;<region> <cycles>`) —
+    /// the text format flamegraph tooling folds directly.
+    pub fn collapsed_stack(&self, config: &str, out: &mut String) {
+        for (name, cycles) in &self.regions {
+            out.push_str("flexsvm;");
+            out.push_str(config);
+            out.push(';');
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&cycles.to_string());
+            out.push('\n');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> Vec<Region> {
+        vec![
+            Region { name: "load", start_word: 0, end_word: 4 },
+            Region { name: "dot_loop", start_word: 4, end_word: 10 },
+            Region { name: "vote", start_word: 10, end_word: 12 },
+        ]
+    }
+
+    #[test]
+    fn symbolize_maps_slots_and_falls_back_to_other() {
+        let m = map();
+        assert_eq!(symbolize(0, &m), "load");
+        assert_eq!(symbolize(4, &m), "dot_loop");
+        assert_eq!(symbolize(9, &m), "dot_loop");
+        assert_eq!(symbolize(10, &m), "vote");
+        assert_eq!(symbolize(12, &m), "other");
+        assert_eq!(symbolize(3, &[]), "other", "no map: everything is other");
+    }
+
+    #[test]
+    fn profiler_attribution_is_the_sum_of_its_parts() {
+        let mut p = BlockProfiler::new();
+        p.record(4, 100, 8);
+        p.record(4, 50, 0);
+        p.record(0, 7, 0);
+        assert_eq!(p.attributed(), 100 + 50 + 7 + 8);
+        assert_eq!(p.cfu_cycles(), 8);
+        assert_eq!(p.blocks()[&4], 150);
+    }
+
+    #[test]
+    fn absorb_symbolizes_and_conserves_totals() {
+        let mut p = BlockProfiler::new();
+        p.record(0, 10, 0); // load
+        p.record(4, 200, 32); // dot_loop + cfu
+        p.record(10, 15, 0); // vote
+        p.record(40, 5, 0); // other
+        let mut cp = ConfigProfile::new();
+        cp.absorb(&p, &map());
+        assert_eq!(cp.sampled_runs, 1);
+        assert_eq!(cp.total_cycles, p.attributed());
+        assert_eq!(cp.regions["dot_loop"], 200);
+        assert_eq!(cp.regions[CFU_REGION], 32);
+        assert_eq!(cp.regions["other"], 5);
+        assert_eq!(cp.regions.values().sum::<u64>(), cp.total_cycles);
+    }
+
+    #[test]
+    fn merge_is_a_plain_counter_add() {
+        let mut a = ConfigProfile::new();
+        let mut b = ConfigProfile::new();
+        let mut p = BlockProfiler::new();
+        p.record(4, 100, 0);
+        a.absorb(&p, &map());
+        b.absorb(&p, &map());
+        b.absorb(&p, &map());
+        a.merge(&b);
+        assert_eq!(a.sampled_runs, 3);
+        assert_eq!(a.total_cycles, 300);
+        assert_eq!(a.regions["dot_loop"], 300);
+    }
+
+    #[test]
+    fn hot_regions_rank_by_cycles_with_pct() {
+        let mut cp = ConfigProfile::new();
+        let mut p = BlockProfiler::new();
+        p.record(0, 10, 0);
+        p.record(4, 80, 10);
+        cp.absorb(&p, &map());
+        let hot = cp.hot_regions(2);
+        assert_eq!(hot.len(), 2);
+        assert_eq!(hot[0].0, "dot_loop");
+        assert_eq!(hot[0].1, 80);
+        assert!((hot[0].2 - 80.0).abs() < 1e-9);
+        assert_eq!(hot[1].0, CFU_REGION);
+    }
+
+    #[test]
+    fn collapsed_stack_renders_flamegraph_lines() {
+        let mut cp = ConfigProfile::new();
+        let mut p = BlockProfiler::new();
+        p.record(4, 42, 0);
+        cp.absorb(&p, &map());
+        let mut s = String::new();
+        cp.collapsed_stack("iris_w4", &mut s);
+        assert_eq!(s, "flexsvm;iris_w4;dot_loop 42\n");
+    }
+}

@@ -10,10 +10,26 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::fmt::Write as _;
+use std::sync::OnceLock;
+use std::time::Instant;
 
 use crate::coordinator::metrics::{ConfigMetrics, Histogram};
 
+use super::slo::SloSnapshot;
 use super::store::StageMetrics;
+
+/// Process-start anchor for `flexsvm_uptime_seconds`.  Server start
+/// calls [`mark_start`]; rendering lazily anchors if nobody did.
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Anchor the uptime clock (idempotent; call at server start).
+pub fn mark_start() {
+    let _ = START.get_or_init(Instant::now);
+}
+
+fn uptime_seconds() -> u64 {
+    START.get_or_init(Instant::now).elapsed().as_secs()
+}
 
 fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
@@ -34,17 +50,29 @@ fn write_hist(out: &mut String, name: &str, labels: &str, h: &Histogram) {
 }
 
 /// Render the scrape document: per-config serving counters + latency
-/// histograms, per-stage histograms, and process-level counters
-/// passed in by the caller (net front, trace retention, farm).
+/// histograms, per-stage histograms, process-level counters passed in
+/// by the caller (net front, trace retention, farm), build/uptime
+/// hygiene gauges, and — when objectives are configured — the
+/// `flexsvm_slo_*` gauge family.
 pub fn render(
     configs: &HashMap<String, ConfigMetrics>,
     stages: &BTreeMap<String, StageMetrics>,
     counters: &[(&str, u64)],
+    slo: Option<&SloSnapshot>,
 ) -> String {
     let mut out = String::new();
     // stable output order for tests and scrape diffing
     let ordered: BTreeMap<&str, &ConfigMetrics> =
         configs.iter().map(|(k, v)| (k.as_str(), v)).collect();
+
+    out.push_str("# TYPE flexsvm_build_info gauge\n");
+    let _ = writeln!(
+        out,
+        "flexsvm_build_info{{version=\"{}\"}} 1",
+        escape_label(env!("CARGO_PKG_VERSION"))
+    );
+    out.push_str("# TYPE flexsvm_uptime_seconds gauge\n");
+    let _ = writeln!(out, "flexsvm_uptime_seconds {}", uptime_seconds());
 
     out.push_str("# TYPE flexsvm_requests_total counter\n");
     for (cfg, m) in &ordered {
@@ -103,6 +131,51 @@ pub fn render(
         let _ = writeln!(out, "# TYPE flexsvm_{name} counter");
         let _ = writeln!(out, "flexsvm_{name} {val}");
     }
+
+    if let Some(s) = slo {
+        out.push_str("# TYPE flexsvm_slo_target_p99_us gauge\n");
+        let _ = writeln!(out, "flexsvm_slo_target_p99_us {}", s.targets.p99_us);
+        out.push_str("# TYPE flexsvm_slo_target_availability gauge\n");
+        let _ = writeln!(out, "flexsvm_slo_target_availability {}", s.targets.avail);
+        out.push_str("# TYPE flexsvm_slo_burn_rate gauge\n");
+        for c in &s.configs {
+            let cfg = escape_label(&c.config);
+            let _ = writeln!(
+                out,
+                "flexsvm_slo_burn_rate{{config=\"{cfg}\",window=\"short\"}} {:.6}",
+                c.burn_short
+            );
+            let _ = writeln!(
+                out,
+                "flexsvm_slo_burn_rate{{config=\"{cfg}\",window=\"long\"}} {:.6}",
+                c.burn_long
+            );
+        }
+        out.push_str("# TYPE flexsvm_slo_window_good gauge\n");
+        out.push_str("# TYPE flexsvm_slo_window_total gauge\n");
+        for c in &s.configs {
+            let cfg = escape_label(&c.config);
+            let _ = writeln!(
+                out,
+                "flexsvm_slo_window_good{{config=\"{cfg}\",window=\"long\"}} {}",
+                c.long.0
+            );
+            let _ = writeln!(
+                out,
+                "flexsvm_slo_window_total{{config=\"{cfg}\",window=\"long\"}} {}",
+                c.long.1
+            );
+        }
+        out.push_str("# TYPE flexsvm_slo_degraded gauge\n");
+        for c in &s.configs {
+            let _ = writeln!(
+                out,
+                "flexsvm_slo_degraded{{config=\"{}\"}} {}",
+                escape_label(&c.config),
+                c.degraded as u8
+            );
+        }
+    }
     out
 }
 
@@ -128,8 +201,18 @@ mod tests {
         s.set(Stage::Execute, 120);
         obs.observe("cfg_a", &s, Duration::from_micros(150));
 
-        let text = render(&configs, &obs.stage_snapshot(), &[("net_requests_total", 9)]);
+        let text = render(&configs, &obs.stage_snapshot(), &[("net_requests_total", 9)], None);
         assert!(text.contains("# TYPE flexsvm_requests_total counter"), "{text}");
+        // build/uptime hygiene rides every scrape
+        assert!(
+            text.contains(&format!(
+                "flexsvm_build_info{{version=\"{}\"}} 1",
+                env!("CARGO_PKG_VERSION")
+            )),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE flexsvm_uptime_seconds gauge"), "{text}");
+        assert!(!text.contains("flexsvm_slo_"), "no SLO gauges without targets");
         assert!(text.contains("flexsvm_requests_total{config=\"cfg_a\"} 3"), "{text}");
         assert!(text.contains("# TYPE flexsvm_latency_us histogram"), "{text}");
         assert!(text.contains("flexsvm_latency_us_bucket{config=\"cfg_a\",le=\"+Inf\"} 1"));
@@ -146,5 +229,33 @@ mod tests {
     #[test]
     fn label_escaping() {
         assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn slo_gauges_render_when_targets_are_set() {
+        use crate::obs::slo::ConfigSlo;
+        let snap = SloSnapshot {
+            targets: "p99=20ms,avail=99.9".parse().unwrap(),
+            configs: vec![ConfigSlo {
+                config: "syn_a".into(),
+                short: (9, 10),
+                long: (59, 60),
+                burn_short: 100.0,
+                burn_long: 16.66,
+                degraded: true,
+            }],
+        };
+        let text = render(&HashMap::new(), &BTreeMap::new(), &[], Some(&snap));
+        assert!(text.contains("flexsvm_slo_target_p99_us 20000"), "{text}");
+        assert!(text.contains("flexsvm_slo_target_availability 99.9"), "{text}");
+        assert!(
+            text.contains("flexsvm_slo_burn_rate{config=\"syn_a\",window=\"short\"} 100.0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("flexsvm_slo_window_total{config=\"syn_a\",window=\"long\"} 60"),
+            "{text}"
+        );
+        assert!(text.contains("flexsvm_slo_degraded{config=\"syn_a\"} 1"), "{text}");
     }
 }

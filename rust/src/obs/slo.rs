@@ -1,0 +1,347 @@
+//! Serving-level objectives: rolling error budgets and burn-rate
+//! alerts per served config.
+//!
+//! An SLO here is two targets: a p99-style latency bound (a request
+//! slower than `p99_us` is "bad" even if it succeeded) and an
+//! availability percentage (the fraction of requests that must be
+//! good).  Every completed request is scored good/bad into per-config
+//! rings of one-second buckets; evaluation reads two rolling windows —
+//! short (10 s, "is it burning *now*") and long (60 s, "has it been
+//! burning") — and computes each window's **burn rate**: the observed
+//! bad-request rate divided by the budgeted rate `1 - avail`.  Burn 1.0
+//! means the error budget is being consumed exactly as fast as it
+//! refills; the classic multi-window rule says a config is degraded
+//! only when *both* windows burn above threshold (a lone short spike
+//! or a long-gone incident doesn't page).
+//!
+//! The verdict (`ok | degraded(reasons)`) surfaces in `GET /healthz`,
+//! the per-config numbers as `flexsvm_slo_*` gauges in `/metrics`, and
+//! as an SLO table in `report::serving`.
+
+use std::str::FromStr;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Short ("burning now") window, seconds.
+pub const SHORT_WINDOW_S: u64 = 10;
+/// Long ("has been burning") window, seconds.
+pub const LONG_WINDOW_S: u64 = 60;
+/// One-second buckets; must exceed the long window so stale buckets
+/// can be detected by epoch instead of zeroed on a timer.
+const N_BUCKETS: u64 = 64;
+/// Both windows must burn at or above this to degrade the verdict.
+pub const BURN_ALERT: f64 = 1.0;
+
+/// The objectives one config is held to (CLI `--slo p99=20ms,avail=99.9`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    /// Latency bound in microseconds: a slower answer is "bad".
+    pub p99_us: u64,
+    /// Availability target in percent (e.g. `99.9`): at least this
+    /// fraction of requests must be good.
+    pub avail: f64,
+}
+
+impl SloTargets {
+    /// Budgeted bad-request fraction (`1 - avail`), floored so a
+    /// `100%` target doesn't divide by zero.
+    pub fn budget(&self) -> f64 {
+        ((100.0 - self.avail) / 100.0).max(1e-9)
+    }
+
+    /// Is one request within objective?
+    pub fn good(&self, ok: bool, latency: Duration) -> bool {
+        ok && latency.as_micros() as u64 <= self.p99_us
+    }
+}
+
+fn parse_duration_us(s: &str) -> Result<u64> {
+    let (num, mult) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1_000.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1_000_000.0)
+    } else {
+        (s, 1.0) // bare number = microseconds
+    };
+    let v: f64 = num.parse().with_context(|| format!("bad duration {s:?}"))?;
+    if v < 0.0 {
+        bail!("negative duration {s:?}");
+    }
+    Ok((v * mult) as u64)
+}
+
+impl FromStr for SloTargets {
+    type Err = anyhow::Error;
+
+    /// `p99=20ms,avail=99.9` (either part optional; defaults
+    /// `p99=50ms`, `avail=99.0`).
+    fn from_str(s: &str) -> Result<SloTargets> {
+        let mut t = SloTargets { p99_us: 50_000, avail: 99.0 };
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("expected key=value in SLO spec, got {part:?}"))?;
+            match k.trim() {
+                "p99" => t.p99_us = parse_duration_us(v.trim())?,
+                "avail" => {
+                    t.avail = v.trim().parse().with_context(|| format!("bad avail {v:?}"))?;
+                    if !(0.0..=100.0).contains(&t.avail) {
+                        bail!("avail must be a percentage in [0,100], got {v}");
+                    }
+                }
+                other => bail!("unknown SLO key {other:?} (p99|avail)"),
+            }
+        }
+        Ok(t)
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Bucket {
+    /// Absolute second this bucket last counted for; a mismatch on
+    /// access means the bucket is stale and reads/writes as zero.
+    epoch_s: u64,
+    good: u64,
+    total: u64,
+}
+
+/// Per-config rolling good/total counts in one-second buckets.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    buckets: Vec<Bucket>,
+}
+
+impl Default for SloTracker {
+    fn default() -> Self {
+        SloTracker { buckets: vec![Bucket::default(); N_BUCKETS as usize] }
+    }
+}
+
+impl SloTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Score one completed request at absolute second `now_s`.
+    pub fn record(&mut self, now_s: u64, good: bool) {
+        let b = &mut self.buckets[(now_s % N_BUCKETS) as usize];
+        if b.epoch_s != now_s {
+            *b = Bucket { epoch_s: now_s, good: 0, total: 0 };
+        }
+        b.total += 1;
+        b.good += good as u64;
+    }
+
+    /// `(good, total)` over the trailing `window_s` seconds ending at
+    /// `now_s` (inclusive).
+    pub fn window(&self, now_s: u64, window_s: u64) -> (u64, u64) {
+        let (mut good, mut total) = (0u64, 0u64);
+        for back in 0..window_s.min(N_BUCKETS) {
+            let Some(s) = now_s.checked_sub(back) else { break };
+            let b = &self.buckets[(s % N_BUCKETS) as usize];
+            if b.epoch_s == s {
+                good += b.good;
+                total += b.total;
+            }
+        }
+        (good, total)
+    }
+}
+
+/// One config's SLO evaluation at a point in time.
+#[derive(Debug, Clone)]
+pub struct ConfigSlo {
+    pub config: String,
+    /// `(good, total)` over the short / long windows.
+    pub short: (u64, u64),
+    pub long: (u64, u64),
+    /// Error-budget burn rates (1.0 = budget consumed exactly as fast
+    /// as it refills); 0 when the window saw no traffic.
+    pub burn_short: f64,
+    pub burn_long: f64,
+    pub degraded: bool,
+}
+
+/// Evaluate one config: burn per window, degraded when both windows
+/// burn at or above [`BURN_ALERT`].
+pub fn evaluate(config: &str, tracker: &SloTracker, targets: &SloTargets, now_s: u64) -> ConfigSlo {
+    let burn = |(good, total): (u64, u64)| -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        let err = (total - good) as f64 / total as f64;
+        err / targets.budget()
+    };
+    let short = tracker.window(now_s, SHORT_WINDOW_S);
+    let long = tracker.window(now_s, LONG_WINDOW_S);
+    let (burn_short, burn_long) = (burn(short), burn(long));
+    ConfigSlo {
+        config: config.to_string(),
+        short,
+        long,
+        burn_short,
+        burn_long,
+        degraded: burn_short >= BURN_ALERT && burn_long >= BURN_ALERT,
+    }
+}
+
+/// Fleet-facing evaluation of every config under one set of targets.
+#[derive(Debug, Clone)]
+pub struct SloSnapshot {
+    pub targets: SloTargets,
+    pub configs: Vec<ConfigSlo>,
+}
+
+impl SloSnapshot {
+    pub fn healthy(&self) -> bool {
+        self.configs.iter().all(|c| !c.degraded)
+    }
+
+    /// Human-readable reasons for every degraded config (empty = ok).
+    pub fn reasons(&self) -> Vec<String> {
+        self.configs
+            .iter()
+            .filter(|c| c.degraded)
+            .map(|c| {
+                format!(
+                    "{}: burn {:.1}x/{:.1}x (short/long) vs p99<={}us avail>={}%",
+                    c.config, c.burn_short, c.burn_long, self.targets.p99_us, self.targets.avail
+                )
+            })
+            .collect()
+    }
+
+    /// `ok` or `degraded(reason; reason)` — the `/healthz` verdict.
+    pub fn verdict(&self) -> String {
+        if self.healthy() {
+            "ok".to_string()
+        } else {
+            format!("degraded({})", self.reasons().join("; "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targets_parse_with_units_and_defaults() {
+        let t: SloTargets = "p99=20ms,avail=99.9".parse().unwrap();
+        assert_eq!(t.p99_us, 20_000);
+        assert!((t.avail - 99.9).abs() < 1e-12);
+        let t: SloTargets = "p99=1500us".parse().unwrap();
+        assert_eq!(t.p99_us, 1_500);
+        assert!((t.avail - 99.0).abs() < 1e-12, "avail defaults");
+        let t: SloTargets = "p99=2s".parse().unwrap();
+        assert_eq!(t.p99_us, 2_000_000);
+        let t: SloTargets = "avail=95".parse().unwrap();
+        assert_eq!(t.p99_us, 50_000, "p99 defaults");
+        assert!("p99=oops".parse::<SloTargets>().is_err());
+        assert!("avail=120".parse::<SloTargets>().is_err());
+        assert!("spice=11".parse::<SloTargets>().is_err());
+    }
+
+    #[test]
+    fn good_requires_both_success_and_latency() {
+        let t: SloTargets = "p99=10ms,avail=99".parse().unwrap();
+        assert!(t.good(true, Duration::from_millis(5)));
+        assert!(!t.good(true, Duration::from_millis(50)), "slow success is bad");
+        assert!(!t.good(false, Duration::from_millis(1)), "fast failure is bad");
+    }
+
+    #[test]
+    fn windows_roll_and_stale_buckets_read_zero() {
+        let mut tr = SloTracker::new();
+        for s in 100..110 {
+            tr.record(s, true);
+            tr.record(s, false);
+        }
+        assert_eq!(tr.window(109, SHORT_WINDOW_S), (10, 20));
+        // a long gap: those buckets are stale at the new epoch
+        tr.record(500, true);
+        assert_eq!(tr.window(500, SHORT_WINDOW_S), (1, 1));
+        assert_eq!(tr.window(500, LONG_WINDOW_S), (1, 1));
+    }
+
+    #[test]
+    fn bucket_reuse_across_ring_wraps() {
+        let mut tr = SloTracker::new();
+        tr.record(7, false);
+        // same ring slot, N_BUCKETS seconds later: must not leak
+        tr.record(7 + N_BUCKETS, true);
+        assert_eq!(tr.window(7 + N_BUCKETS, 1), (1, 1));
+    }
+
+    #[test]
+    fn burn_rate_needs_both_windows_to_degrade() {
+        let targets: SloTargets = "p99=10ms,avail=90".parse().unwrap(); // budget 10%
+        let mut tr = SloTracker::new();
+        // long window healthy, short window on fire
+        for s in 0..50 {
+            for _ in 0..10 {
+                tr.record(s, true);
+            }
+        }
+        for s in 50..60 {
+            for _ in 0..10 {
+                tr.record(s, false);
+            }
+        }
+        let e = evaluate("cfg", &tr, &targets, 59);
+        assert!(e.burn_short >= BURN_ALERT, "short window is burning: {}", e.burn_short);
+        // long window: 100 bad / 600 total = 16.7% err over 10% budget
+        assert!(e.burn_long > 1.0);
+        assert!(e.degraded);
+
+        // a lone ancient incident must not page
+        let mut tr = SloTracker::new();
+        for _ in 0..100 {
+            tr.record(0, false);
+        }
+        for s in 50..60 {
+            tr.record(s, true);
+        }
+        let e = evaluate("cfg", &tr, &targets, 59);
+        assert!(e.burn_short < BURN_ALERT);
+        assert!(!e.degraded, "short window recovered: no page");
+    }
+
+    #[test]
+    fn snapshot_verdict_renders_reasons() {
+        let targets: SloTargets = "p99=10ms,avail=99".parse().unwrap();
+        let ok = ConfigSlo {
+            config: "a".into(),
+            short: (10, 10),
+            long: (60, 60),
+            burn_short: 0.0,
+            burn_long: 0.0,
+            degraded: false,
+        };
+        let bad = ConfigSlo {
+            config: "b".into(),
+            short: (0, 10),
+            long: (0, 60),
+            burn_short: 100.0,
+            burn_long: 100.0,
+            degraded: true,
+        };
+        let snap = SloSnapshot { targets, configs: vec![ok.clone()] };
+        assert!(snap.healthy());
+        assert_eq!(snap.verdict(), "ok");
+        let snap = SloSnapshot { targets, configs: vec![ok, bad] };
+        assert!(!snap.healthy());
+        assert!(snap.verdict().starts_with("degraded(b: burn"));
+    }
+
+    #[test]
+    fn no_traffic_is_healthy() {
+        let targets: SloTargets = "p99=10ms,avail=99.9".parse().unwrap();
+        let e = evaluate("idle", &SloTracker::new(), &targets, 1000);
+        assert_eq!(e.burn_short, 0.0);
+        assert!(!e.degraded, "an idle config has burned no budget");
+    }
+}

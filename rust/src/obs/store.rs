@@ -15,10 +15,11 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Histogram;
 
+use super::slo::{self, SloSnapshot, SloTargets, SloTracker};
 use super::span::{Span, Stage, StageSet, TraceId};
 
 /// Observability knobs (fixed at server build time).
@@ -28,11 +29,14 @@ pub struct ObsOpts {
     pub sample_every: u64,
     /// Ring-buffer capacity for retained spans (oldest evicted first).
     pub ring_cap: usize,
+    /// Serving-level objectives (`--slo p99=...,avail=...`); None
+    /// disables SLO tracking entirely.
+    pub slo: Option<SloTargets>,
 }
 
 impl Default for ObsOpts {
     fn default() -> Self {
-        ObsOpts { sample_every: 64, ring_cap: 256 }
+        ObsOpts { sample_every: 64, ring_cap: 256, slo: None }
     }
 }
 
@@ -106,6 +110,10 @@ pub struct Obs {
     seq: AtomicU64,
     observed: AtomicU64,
     inner: Mutex<Inner>,
+    /// Process-relative clock anchoring the SLO one-second buckets.
+    start: Instant,
+    /// Per-config SLO good/total rings (empty unless `opts.slo`).
+    slo_trackers: Mutex<BTreeMap<String, SloTracker>>,
 }
 
 impl Default for Obs {
@@ -127,6 +135,7 @@ impl Obs {
             opts: ObsOpts {
                 sample_every: opts.sample_every.max(1),
                 ring_cap: opts.ring_cap.max(1),
+                slo: opts.slo,
             },
             seed,
             seq: AtomicU64::new(0),
@@ -137,6 +146,8 @@ impl Obs {
                 tail_us: 0,
                 stages: BTreeMap::new(),
             }),
+            start: Instant::now(),
+            slo_trackers: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -223,6 +234,35 @@ impl Obs {
     pub fn latency_snapshot(&self) -> Histogram {
         self.inner.lock().unwrap().latency.clone()
     }
+
+    /// Score one completed (or shed/failed) request against the SLO
+    /// targets.  No-op unless targets are configured.
+    pub fn slo_record(&self, config: &str, ok: bool, latency: Duration) {
+        let Some(targets) = self.opts.slo else { return };
+        let now_s = self.start.elapsed().as_secs();
+        let good = targets.good(ok, latency);
+        self.slo_trackers
+            .lock()
+            .unwrap()
+            .entry(config.to_string())
+            .or_default()
+            .record(now_s, good);
+    }
+
+    /// Evaluate every tracked config against the SLO targets right
+    /// now.  `None` when SLO tracking is disabled.
+    pub fn slo_snapshot(&self) -> Option<SloSnapshot> {
+        let targets = self.opts.slo?;
+        let now_s = self.start.elapsed().as_secs();
+        let trackers = self.slo_trackers.lock().unwrap();
+        Some(SloSnapshot {
+            targets,
+            configs: trackers
+                .iter()
+                .map(|(cfg, tr)| slo::evaluate(cfg, tr, &targets, now_s))
+                .collect(),
+        })
+    }
 }
 
 /// Merge two per-config stage snapshots (used by `report::serving`
@@ -246,7 +286,7 @@ mod tests {
 
     #[test]
     fn one_in_n_sampling_is_always_on() {
-        let obs = Obs::new(ObsOpts { sample_every: 4, ring_cap: 8 });
+        let obs = Obs::new(ObsOpts { sample_every: 4, ring_cap: 8, slo: None });
         let stages = StageSet::new();
         let kept: Vec<bool> =
             (0..8).map(|_| obs.observe("c", &stages, Duration::from_micros(10))).collect();
@@ -256,7 +296,7 @@ mod tests {
 
     #[test]
     fn ring_evicts_oldest_first() {
-        let obs = Obs::new(ObsOpts { sample_every: 1, ring_cap: 3 });
+        let obs = Obs::new(ObsOpts { sample_every: 1, ring_cap: 3, slo: None });
         let ids: Vec<TraceId> = (0..5).map(|_| obs.next_trace()).collect();
         for &id in &ids {
             obs.keep(span(id));
@@ -276,7 +316,7 @@ mod tests {
     fn tail_capture_retains_a_slow_request() {
         // sampling alone would keep only request 0; the slow request
         // must be retained by the rolling-p99 tail rule instead
-        let obs = Obs::new(ObsOpts { sample_every: 1_000_000, ring_cap: 8 });
+        let obs = Obs::new(ObsOpts { sample_every: 1_000_000, ring_cap: 8, slo: None });
         let stages = StageSet::new();
         let mut kept_fast = 0;
         for _ in 0..64 {
@@ -306,6 +346,27 @@ mod tests {
         assert!(a.get(Stage::Audit).is_none(), "unrecorded stages stay absent");
         let names: Vec<&str> = a.iter().map(|(st, _)| st.name()).collect();
         assert_eq!(names, ["queue_wait", "execute"]);
+    }
+
+    #[test]
+    fn slo_tracking_scores_requests_and_reports() {
+        let opts = ObsOpts { slo: Some("p99=10ms,avail=50".parse().unwrap()), ..Default::default() };
+        let obs = Obs::new(opts);
+        // within objective, slow, failed
+        obs.slo_record("a", true, Duration::from_millis(1));
+        obs.slo_record("a", true, Duration::from_millis(100));
+        obs.slo_record("a", false, Duration::from_millis(1));
+        let snap = obs.slo_snapshot().expect("slo configured");
+        assert_eq!(snap.configs.len(), 1);
+        let c = &snap.configs[0];
+        assert_eq!(c.config, "a");
+        assert_eq!(c.short, (1, 3));
+        // err 2/3 over a 50% budget: burning but within one test second
+        assert!(c.burn_short > 1.0);
+
+        let off = Obs::new(ObsOpts::default());
+        off.slo_record("a", true, Duration::from_millis(1));
+        assert!(off.slo_snapshot().is_none(), "no targets, no tracking");
     }
 
     #[test]

@@ -26,10 +26,25 @@ use anyhow::Result;
 use crate::isa::reg::*;
 use crate::isa::{ksvm_ops, svm_ops, Asm, CFU_FUNCT7_KSVM, CFU_FUNCT7_SVM};
 use crate::kernel::Kernel;
+use crate::obs::Region;
 use crate::svm::model::{QuantModel, Strategy};
 use crate::svm::pack;
 
 use super::{finish, BuiltProgram, ProgramKind, ProgramOpts};
+
+/// Current text position in words — the unit block entry slots (`pc/4`)
+/// are keyed by, so region ranges symbolize profiler samples directly.
+fn word(a: &Asm) -> u32 {
+    (a.here() / 4) as u32
+}
+
+/// Append a `[start, end)` region, skipping empty ranges (several
+/// ranges may share a name — the profiler folds them).
+fn region(regions: &mut Vec<Region>, name: &'static str, start_word: u32, end_word: u32) {
+    if end_word > start_word {
+        regions.push(Region { name, start_word, end_word });
+    }
+}
 
 fn calc_f3(bits: u8) -> u8 {
     match bits {
@@ -131,6 +146,7 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
     let res = res_f3(m.bits);
     let unroll = k * nw <= opts.unroll_limit;
     let mut a = Asm::new(0);
+    let mut regions: Vec<Region> = Vec::new();
 
     // ---- prologue ----
     a.cfu(CFU_FUNCT7_SVM, svm_ops::CREATE_ENV, ZERO, ZERO, ZERO);
@@ -139,22 +155,28 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
     if m.strategy == Strategy::Ovo {
         emit_ovo_setup(&mut a, c);
     }
+    region(&mut regions, "load", 0, word(&a));
 
     // per-classifier body, emitted once (loop) or K times (unrolled)
     if unroll {
         // straight-line: lw/lw/sv.calc per word, sv.res per classifier
         for kk in 0..k {
+            let ds = word(&a);
             for j in 0..nw {
                 a.lw(A0, S0, (j * 4) as i32);
                 a.lw(A1, S1, ((kk * nw + j) * 4) as i32);
                 a.cfu(CFU_FUNCT7_SVM, calc, ZERO, A0, A1);
             }
             a.cfu(CFU_FUNCT7_SVM, res, T0, ZERO, ZERO);
+            region(&mut regions, "dot_loop", ds, word(&a));
             if m.strategy == Strategy::Ovo {
+                let vs = word(&a);
                 emit_ovo_vote(&mut a, &format!("_{kk}"));
+                region(&mut regions, "vote", vs, word(&a));
             }
         }
     } else {
+        let ds = word(&a);
         a.li(S3, k as i32);
         a.li(S4, 0);
         a.li(S7, nw as i32);
@@ -170,15 +192,22 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
         a.addi(T1, T1, 1);
         a.blt(T1, S7, "loop_j");
         a.cfu(CFU_FUNCT7_SVM, res, T0, ZERO, ZERO);
+        region(&mut regions, "dot_loop", ds, word(&a));
         if m.strategy == Strategy::Ovo {
+            let vs = word(&a);
             emit_ovo_vote(&mut a, "");
+            region(&mut regions, "vote", vs, word(&a));
         }
+        let ts = word(&a); // classifier-loop control backedge
         a.addi(S4, S4, 1);
         a.blt(S4, S3, "loop_k");
+        region(&mut regions, "dot_loop", ts, word(&a));
     }
 
     // ---- epilogue ----
+    let es = word(&a);
     emit_epilogue(&mut a, m.strategy, c);
+    region(&mut regions, "argmax", es, word(&a));
 
     // ---- data ----
     let text_words = (a.here() / 4) as usize;
@@ -197,6 +226,7 @@ pub fn build(m: &QuantModel, opts: ProgramOpts) -> Result<BuiltProgram> {
 
     let mut built = finish(&a, ProgramKind::Accelerated, "fwords", nw)?;
     built.text_words = text_words;
+    built.regions = regions;
     Ok(built)
 }
 
@@ -221,6 +251,7 @@ fn build_kernel(m: &QuantModel, _opts: ProgramOpts) -> Result<BuiltProgram> {
     let s = m.n_support();
     let nwf = pack::kernel_words_per_sv(m.n_features);
     let mut a = Asm::new(0);
+    let mut regions: Vec<Region> = Vec::new();
 
     // ---- prologue: full reset, then program the config registers ----
     a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_ENV, ZERO, ZERO, ZERO);
@@ -255,8 +286,10 @@ fn build_kernel(m: &QuantModel, _opts: ProgramOpts) -> Result<BuiltProgram> {
     a.li(S3, k as i32);
     a.li(S4, 0);
     a.li(S7, s as i32);
+    region(&mut regions, "load", 0, word(&a));
 
     // ---- per-classifier / per-support loops ----
+    let ss = word(&a);
     a.label("loop_k");
     a.mv(T2, S2); // every classifier re-walks the shared support set
     a.li(T1, 0);
@@ -272,17 +305,26 @@ fn build_kernel(m: &QuantModel, _opts: ProgramOpts) -> Result<BuiltProgram> {
     a.addi(S1, S1, 4);
     a.addi(T1, T1, 1);
     a.blt(T1, S7, "loop_s");
+    region(&mut regions, "sv_loop", ss, word(&a));
+    let ps = word(&a);
     a.lw(A0, S1, 0); // b[k]
     a.addi(S1, S1, 4);
     a.cfu(CFU_FUNCT7_KSVM, ksvm_ops::K_RES, T0, A0, ZERO);
+    region(&mut regions, "kernel_phi", ps, word(&a));
     if m.strategy == Strategy::Ovo {
+        let vs = word(&a);
         emit_ovo_vote(&mut a, "");
+        region(&mut regions, "vote", vs, word(&a));
     }
+    let ts = word(&a); // classifier-loop control backedge
     a.addi(S4, S4, 1);
     a.blt(S4, S3, "loop_k");
+    region(&mut regions, "kernel_phi", ts, word(&a));
 
     // ---- epilogue ----
+    let es = word(&a);
     emit_epilogue(&mut a, m.strategy, c);
+    region(&mut regions, "argmax", es, word(&a));
 
     // ---- data ----
     let text_words = (a.here() / 4) as usize;
@@ -307,6 +349,7 @@ fn build_kernel(m: &QuantModel, _opts: ProgramOpts) -> Result<BuiltProgram> {
 
     let mut built = finish(&a, ProgramKind::Accelerated, "fwords", nwf)?;
     built.text_words = text_words;
+    built.regions = regions;
     Ok(built)
 }
 

@@ -22,6 +22,7 @@ pub mod cost;
 pub mod run;
 
 use crate::isa::Asm;
+use crate::obs::Region;
 
 /// Which program variant (reports/plots key off this).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +66,11 @@ pub struct BuiltProgram {
     pub n_feature_words: usize,
     /// Static instruction count (text section words).
     pub text_words: usize,
+    /// Named text-word ranges for the guest-cycle profiler
+    /// (`obs::profile`): block entry slots symbolize through this map.
+    /// Empty for generators that don't track regions (baseline) — the
+    /// profiler then attributes everything to `"other"`.
+    pub regions: Vec<Region>,
 }
 
 pub(crate) fn finish(asm: &Asm, kind: ProgramKind, feature_label: &str, n_feature_words: usize)
@@ -79,6 +85,7 @@ pub(crate) fn finish(asm: &Asm, kind: ProgramKind, feature_label: &str, n_featur
         image,
         feature_addr,
         n_feature_words,
-        text_words: 0, // patched by generators that track it
+        text_words: 0,        // patched by generators that track it
+        regions: Vec::new(),  // ditto (accel patches, baseline stays empty)
     })
 }

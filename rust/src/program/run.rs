@@ -165,6 +165,25 @@ impl ProgramRunner {
         }
     }
 
+    /// [`run_sample`](Self::run_sample) under the sampled continuous
+    /// profiler: per-block cycle attribution accumulates into `prof`
+    /// (symbolize via `self.program().regions`).  Same engine, same
+    /// bit-identical prediction and stats; on success
+    /// `prof.attributed()` equals `stats.total()` bit-exactly.
+    pub fn run_sample_profiled(
+        &mut self,
+        x_q: &[i32],
+        prof: &mut crate::obs::BlockProfiler,
+    ) -> Result<(i32, CycleStats)> {
+        self.soc.rearm();
+        self.poke_features(x_q)?;
+        let r = self.soc.run_profiled(self.budget, prof)?;
+        match r.exit {
+            Exit::Ecall { a0, .. } => Ok((a0 as i32, r.stats)),
+            Exit::Ebreak => bail!("program hit ebreak"),
+        }
+    }
+
     /// Run the whole test set; returns (accuracy, mean per-inference
     /// stats, aggregate stats).
     pub fn run_test_set(
@@ -264,6 +283,25 @@ mod tests {
         let (p2, s2) = r2.run_sample(&[9, 2]).unwrap();
         assert_eq!(p1, p2);
         assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn profiled_run_conserves_cycles_and_symbolizes() {
+        let m = tiny_model();
+        let mut r =
+            ProgramRunner::accelerated(&m, TimingConfig::flexic(), ProgramOpts::default())
+                .unwrap();
+        let (p_ref, s_ref) = r.run_sample(&[9, 2]).unwrap();
+        let mut prof = crate::obs::BlockProfiler::new();
+        let (p, s) = r.run_sample_profiled(&[9, 2], &mut prof).unwrap();
+        assert_eq!((p, s), (p_ref, s_ref), "profiling must not perturb execution");
+        assert_eq!(prof.attributed(), s.total(), "conservation: every cycle attributed");
+        let mut cp = crate::obs::ConfigProfile::new();
+        cp.absorb(&prof, &r.program().regions);
+        assert_eq!(cp.total_cycles, s.total());
+        assert!(cp.regions.contains_key("dot_loop"), "{:?}", cp.regions);
+        assert!(cp.regions.contains_key("cfu"), "{:?}", cp.regions);
+        assert!(!cp.regions.contains_key("other"), "all accel blocks are mapped: {:?}", cp.regions);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::time::Duration;
 use crate::coordinator::metrics::ConfigMetrics;
 use crate::farm::FarmMetrics;
 use crate::net::NetMetricsSnapshot;
-use crate::obs::StageMetrics;
+use crate::obs::{SloSnapshot, StageMetrics};
 use crate::power::FlexicModel;
 use crate::util::Table;
 
@@ -34,7 +34,9 @@ use crate::util::Table;
 /// per-kernel live-accuracy column; `net` (a [`NetMetricsSnapshot`]
 /// from the wire front) adds the connection-lifecycle line — live
 /// gauges (open/reading/writing/idle), accept/close/timeout totals,
-/// shed count, and wire bytes.
+/// shed count, and wire bytes; `slo` (an [`crate::obs::Obs`] SLO
+/// snapshot) adds the objective scorecard — per-config burn rates over
+/// both windows and the overall verdict.
 #[allow(clippy::too_many_arguments)]
 pub fn render(
     per_config: &HashMap<String, ConfigMetrics>,
@@ -45,6 +47,7 @@ pub fn render(
     fleet: Option<&HashMap<String, ConfigMetrics>>,
     accuracy: Option<&HashMap<String, (u64, u64)>>,
     net: Option<&NetMetricsSnapshot>,
+    slo: Option<&SloSnapshot>,
 ) -> String {
     let mut out = String::from("\n=== serving energy report (Table I under load) ===\n");
     let mut keys: Vec<&String> = per_config.keys().collect();
@@ -248,6 +251,36 @@ pub fn render(
             n.bytes_out as f64 / (1024.0 * 1024.0),
         ));
     }
+
+    // the SLO scorecard: what each config promised vs what the rolling
+    // windows observed, and whether the error budget is burning
+    if let Some(s) = slo {
+        out.push_str(&format!(
+            "\nSLO (p99 <= {} us, availability >= {}%): {}\n",
+            s.targets.p99_us,
+            s.targets.avail,
+            s.verdict()
+        ));
+        let mut st = Table::new([
+            "config", "good/total (60s)", "avail %", "burn 10s", "burn 60s", "state",
+        ]);
+        for c in &s.configs {
+            let (good, total) = c.long;
+            st.row([
+                c.config.clone(),
+                format!("{good}/{total}"),
+                if total > 0 {
+                    format!("{:.2}", 100.0 * good as f64 / total as f64)
+                } else {
+                    "-".to_string()
+                },
+                format!("{:.2}", c.burn_short),
+                format!("{:.2}", c.burn_long),
+                if c.degraded { "DEGRADED".to_string() } else { "ok".to_string() },
+            ]);
+        }
+        out.push_str(&st.render());
+    }
     out
 }
 
@@ -296,6 +329,7 @@ mod tests {
             None,
             None,
             None,
+            None,
         );
         assert!(s.contains("iris_ovr_w4"), "{s}");
         assert!(s.contains("1.340"), "mean mJ/req: {s}");
@@ -337,6 +371,7 @@ mod tests {
             Some(&fleet),
             None,
             None,
+            None,
         );
         assert!(s.contains("per-stage waterfall"), "{s}");
         assert!(s.contains("queue_wait"), "{s}");
@@ -359,6 +394,7 @@ mod tests {
             Duration::from_secs(1),
             Some(&farm),
             &FlexicModel::paper(),
+            None,
             None,
             None,
             None,
@@ -392,6 +428,7 @@ mod tests {
             None,
             None,
             Some(&net),
+            None,
         );
         assert!(s.contains("net front: 9998 open (3 reading / 5 writing / 9990 idle)"), "{s}");
         assert!(s.contains("10000 accepted, 2 closed (1 timed out)"), "{s}");
@@ -422,6 +459,7 @@ mod tests {
             None,
             Some(&acc),
             None,
+            None,
         );
         assert!(s.contains("per kernel family"), "{s}");
         assert!(s.contains("rbf"), "{s}");
@@ -442,8 +480,51 @@ mod tests {
             None,
             None,
             None,
+            None,
         );
         assert!(!s.contains("per kernel family"), "{s}");
+    }
+
+    #[test]
+    fn slo_scorecard_renders_verdict_and_burn() {
+        use crate::obs::slo::{ConfigSlo, SloTargets};
+        let snap = SloSnapshot {
+            targets: "p99=20ms,avail=99.9".parse::<SloTargets>().unwrap(),
+            configs: vec![
+                ConfigSlo {
+                    config: "iris_ovr_w4".into(),
+                    short: (10, 10),
+                    long: (59, 60),
+                    burn_short: 0.0,
+                    burn_long: 16.67,
+                    degraded: false,
+                },
+                ConfigSlo {
+                    config: "syn_rbf".into(),
+                    short: (0, 10),
+                    long: (0, 60),
+                    burn_short: 1000.0,
+                    burn_long: 1000.0,
+                    degraded: true,
+                },
+            ],
+        };
+        let s = render(
+            &fake_metrics(),
+            Duration::from_secs(1),
+            None,
+            &FlexicModel::paper(),
+            None,
+            None,
+            None,
+            None,
+            Some(&snap),
+        );
+        assert!(s.contains("SLO (p99 <= 20000 us, availability >= 99.9%)"), "{s}");
+        assert!(s.contains("degraded(syn_rbf: burn"), "{s}");
+        assert!(s.contains("59/60"), "{s}");
+        assert!(s.contains("DEGRADED"), "{s}");
+        assert!(s.contains("98.33"), "observed availability column: {s}");
     }
 
     #[test]
@@ -459,6 +540,7 @@ mod tests {
             Duration::from_secs(1),
             None,
             &FlexicModel::paper(),
+            None,
             None,
             None,
             None,

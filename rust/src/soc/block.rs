@@ -49,6 +49,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::accel::CfuBank;
 use crate::isa::{self, AluOp, BranchOp, Instr, LoadOp, StoreOp};
+use crate::obs::{log as evlog, BlockProfiler};
 use crate::serv::{CycleStats, Exit, ServCore, TimingConfig};
 
 use super::mem::Memory;
@@ -520,6 +521,14 @@ fn exec_block(
 
 /// Drive a program to completion block-at-a-time; bit-identical
 /// `CycleStats`, registers and exit value to the step interpreter.
+///
+/// When `prof` is supplied (sampled requests), every loop iteration's
+/// cycle delta is attributed to the entered slot (CFU cycles kept
+/// apart), including the exiting block and step-interpreter fallbacks —
+/// so `prof.attributed() == stats.total()` bit-exactly on return (the
+/// obs::profile conservation contract, DESIGN.md §5).  The profiler
+/// costs one `BTreeMap` bump per *block*, and nothing at all on
+/// unsampled requests (the `Option` is `None`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_blocks(
     prog: &DecodedProgram,
@@ -529,6 +538,7 @@ pub(crate) fn run_blocks(
     cfus: &mut CfuBank,
     t: &TimingConfig,
     max_cycles: u64,
+    mut prof: Option<&mut BlockProfiler>,
 ) -> Result<RunResult> {
     let mut stats = CycleStats::default();
     loop {
@@ -537,6 +547,7 @@ pub(crate) fn run_blocks(
             bail!("misaligned PC {pc:#010x}");
         }
         let slot = (pc / 4) as usize;
+        let (cyc_before, cfu_before) = (stats.total(), stats.cfu);
         let translated = slot < prog.n_slots() && !matches!(prog.uops[slot], UOp::Invalid);
         let mut ended = None;
         if translated {
@@ -579,16 +590,23 @@ pub(crate) fn run_blocks(
                 )?);
             }
         }
+        let mut finished: Option<Exit> = None;
         match ended {
             Some(BlockExit::Jump(next)) => core.pc = next,
             Some(BlockExit::Smc { next_pc, slot }) => {
                 core.pc = next_pc;
                 ctx.dirty.insert(slot);
                 ctx.overlay.clear();
+                evlog::emit_fmt(evlog::Level::Warn, "smc_retranslate", || {
+                    format!(
+                        "store dirtied translated slot {slot}; overlay dropped, \
+                         affected blocks re-translate from memory"
+                    )
+                });
             }
             Some(BlockExit::Done(exit, next_pc)) => {
                 core.pc = next_pc;
-                return Ok(RunResult { exit, stats });
+                finished = Some(exit);
             }
             None => {
                 // untranslated (data word / past the image / patched to
@@ -607,9 +625,16 @@ pub(crate) fn run_blocks(
                     }
                 }
                 if let Some(exit) = info.exit {
-                    return Ok(RunResult { exit, stats });
+                    finished = Some(exit);
                 }
             }
+        }
+        if let Some(p) = prof.as_deref_mut() {
+            let cfu_delta = stats.cfu - cfu_before;
+            p.record(slot as u32, stats.total() - cyc_before - cfu_delta, cfu_delta);
+        }
+        if let Some(exit) = finished {
+            return Ok(RunResult { exit, stats });
         }
         if stats.total() > max_cycles {
             bail!(

@@ -106,6 +106,29 @@ impl Soc {
             &mut self.cfus,
             &self.timing,
             max_cycles,
+            None,
+        )
+    }
+
+    /// [`run`](Self::run) with per-block cycle attribution into `prof`
+    /// (the sampled continuous profiler, `obs::profile`).  Same block
+    /// engine, same bit-identical accounting; on success
+    /// `prof.attributed()` equals the run's `stats.total()` bit-exactly.
+    pub fn run_profiled(
+        &mut self,
+        max_cycles: u64,
+        prof: &mut crate::obs::BlockProfiler,
+    ) -> Result<RunResult> {
+        let program = Arc::clone(&self.program);
+        block::run_blocks(
+            &program,
+            &mut self.blocks,
+            &mut self.core,
+            &mut self.mem,
+            &mut self.cfus,
+            &self.timing,
+            max_cycles,
+            Some(prof),
         )
     }
 

@@ -633,3 +633,154 @@ fn streaming_sessions_hold_keep_alive_and_stay_bit_exact() {
         net.shutdown().unwrap();
     }
 }
+
+// ------------------------------------- profiler / flight recorder / SLO
+
+#[test]
+fn profiler_slo_and_logs_surface_over_http() {
+    use flexsvm::coordinator::Backend;
+    use flexsvm::farm::FarmOpts;
+    use flexsvm::obs::ObsOpts;
+    use flexsvm::serv::TimingConfig;
+
+    // accel farm with the continuous profiler on every simulated
+    // request, the analytic fast path auditing every 2nd request (so
+    // the log gets a fastpath_on event and the profiler still sees
+    // SoC runs), and generous SLO targets that stay healthy
+    let models = vec![("prof_lin".to_string(), gen::tiny_model("prof_lin", false))];
+    let server = Server::builder()
+        .models(models.clone())
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .obs_opts(ObsOpts {
+            slo: Some("p99=10s,avail=50".parse().unwrap()),
+            ..Default::default()
+        })
+        .farm(FarmOpts {
+            shards: 1,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            fastpath: true,
+            audit_rate: 2,
+            profile_rate: 1,
+            ..Default::default()
+        })
+        .start()
+        .unwrap();
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOpts::default()).unwrap();
+    let mut c = HttpClient::new(net.addr().to_string());
+
+    let model = &models[0].1;
+    let mut rng = Pcg32::seeded(0x0b5);
+    for _ in 0..16 {
+        let x = gen::features(&mut rng, model.n_features);
+        let r = c.post_json("/v1/infer", &wire::infer_body("prof_lin", &x)).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body);
+        let pred = r.json().unwrap().get("pred").unwrap().as_i32().unwrap();
+        assert_eq!(pred, infer::predict(model, &x), "profiled serving stays bit-exact");
+    }
+
+    // /v1/profile: per-config hot regions from the sampled runs
+    let p = c.get("/v1/profile").unwrap();
+    assert_eq!(p.status, 200, "{}", p.body);
+    let doc = p.json().unwrap();
+    let cfg = doc.get("configs").unwrap().get("prof_lin").unwrap().clone();
+    assert!(cfg.get("sampled_runs").unwrap().as_i64().unwrap() >= 1, "{}", p.body);
+    assert!(cfg.get("total_cycles").unwrap().as_i64().unwrap() > 0, "{}", p.body);
+    let regions: Vec<String> = cfg
+        .get("hot")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|h| h.get("region").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(regions.iter().any(|r| r == "dot_loop"), "named hot region: {regions:?}");
+
+    // collapsed-stack text is flamegraph input
+    let fl = c.get("/v1/profile?collapsed=1").unwrap();
+    assert_eq!(fl.status, 200);
+    assert!(fl.body.contains("flexsvm;prof_lin;dot_loop "), "{}", fl.body);
+    assert_eq!(c.get("/v1/profile?n=0").unwrap().status, 400);
+
+    // /v1/logs: the flight recorder saw this farm's fastpath promotion
+    let l = c.get("/v1/logs?n=512").unwrap();
+    assert_eq!(l.status, 200, "{}", l.body);
+    let events = l.json().unwrap().get("events").unwrap().as_arr().unwrap().to_vec();
+    assert!(
+        events.iter().any(|e| {
+            e.get("event").unwrap().as_str().unwrap() == "fastpath_on"
+                && e.opt("config").is_some_and(|c| c.as_str().unwrap() == "prof_lin")
+        }),
+        "fastpath_on event for prof_lin in: {}",
+        l.body
+    );
+    assert_eq!(c.get("/v1/logs?level=bogus").unwrap().status, 400);
+    assert_eq!(c.get("/v1/logs?n=abc").unwrap().status, 400);
+
+    // /healthz folds the SLO verdict in; generous targets stay ok
+    let h = c.get("/healthz").unwrap().json().unwrap();
+    assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(h.get("slo").unwrap().as_str().unwrap(), "ok");
+
+    // /metrics carries build info, uptime, and the SLO gauges
+    let m = c.get("/metrics").unwrap();
+    for name in [
+        "flexsvm_build_info",
+        "flexsvm_uptime_seconds",
+        "flexsvm_slo_target_p99_us",
+        "flexsvm_slo_target_availability",
+        "flexsvm_slo_burn_rate",
+        "flexsvm_slo_degraded",
+    ] {
+        assert!(m.body.contains(name), "missing {name}:\n{}", m.body);
+    }
+    drop(c);
+    net.shutdown().unwrap();
+}
+
+#[test]
+fn fleet_profiles_merge_across_nodes_and_tolerate_profile_less_peers() {
+    use flexsvm::coordinator::Backend;
+    use flexsvm::farm::FarmOpts;
+    use flexsvm::serv::TimingConfig;
+
+    // node A: accel farm, always-on profiler — its metrics document
+    // carries a "profiles" section
+    let accel = Server::builder()
+        .models(vec![("m".to_string(), gen::tiny_model("m", false))])
+        .backend(Backend::Accel)
+        .linger(Duration::from_micros(200))
+        .farm(FarmOpts {
+            shards: 1,
+            timing: TimingConfig::ideal_mem(),
+            calibrate_baseline: false,
+            profile_rate: 1,
+            ..Default::default()
+        })
+        .start()
+        .unwrap();
+    let net_a = NetServer::bind(accel, "127.0.0.1:0", NetOpts::default()).unwrap();
+    // node B: MockEngine — its document has NO "profiles" key, exactly
+    // the shape a pre-profiler peer emits
+    let net_b = mock_net_server(MockEngine::new(), 1024, 64);
+
+    let mut re =
+        RemoteEngine::new([net_a.addr().to_string(), net_b.addr().to_string()]).unwrap();
+    re.warm(&ModelSource::None, &["m".to_string()]).unwrap();
+    let xs: Vec<Vec<i32>> = (0..8).map(|i| vec![i as i32 % 8, 1, 2]).collect();
+    let out = re.run_batch("m", &xs);
+    assert_eq!(out.iter().filter(|r| r.is_ok()).count(), 8, "{out:?}");
+
+    // the fleet snapshot merges node A's profile and shrugs off node
+    // B's profile-less document
+    let em = re.snapshot();
+    let p = em.profiles.get("m").expect("fleet-merged profile for m");
+    assert_eq!(p.sampled_runs, 4, "node A simulated (and profiled) its 4-sample chunk");
+    assert!(p.regions.contains_key("dot_loop"), "{:?}", p.regions);
+    assert!(p.total_cycles > 0);
+
+    drop(re);
+    net_a.shutdown().unwrap();
+    net_b.shutdown().unwrap();
+}

@@ -605,3 +605,44 @@ fn prop_audit_catches_poisoned_cost_models() {
         assert_eq!(f.fast_jobs, 0);
     });
 }
+
+/// Conservation of the continuous profiler: over random models (linear
+/// and kernel machines, 4/8/16-bit) and random memory timings, the
+/// per-block attributed cycles (+ CFU busy) equal `CycleStats::total()`
+/// bit-exactly, the profiled run answers bit-identically to the
+/// unprofiled one, and every attributed cycle lands in a named codegen
+/// region (accel programs carry a complete region map).
+#[test]
+fn prop_profiler_attribution_conserves_cycles() {
+    use flexsvm::obs::{BlockProfiler, ConfigProfile};
+    check("profiler-conservation", 0x15e, 12, |rng| {
+        let m = if rng.below(2) == 0 { gen::quant_model(rng) } else { gen::kernel_model(rng) };
+        let mut t = TimingConfig::flexic();
+        t.mem_read = 1 + rng.below(8) as u64;
+        t.mem_write = 1 + rng.below(8) as u64;
+        t.mem_overhead = rng.below(4) as u64;
+        let mut runner =
+            ProgramRunner::accelerated(&m, t, ProgramOpts::default()).unwrap();
+        let x = gen::features(rng, m.n_features);
+        let (pred_ref, stats_ref) = runner.run_sample(&x).unwrap();
+        let mut prof = BlockProfiler::new();
+        let (pred, stats) = runner.run_sample_profiled(&x, &mut prof).unwrap();
+        assert_eq!(pred, pred_ref, "profiling must not change the answer");
+        assert_eq!(stats, stats_ref, "profiling must not change the cycle accounting");
+        assert_eq!(
+            prof.attributed(),
+            stats.total(),
+            "bits={} kernel={}: attributed == total",
+            m.bits,
+            m.kernel,
+        );
+        let mut cp = ConfigProfile::new();
+        cp.absorb(&prof, &runner.program().regions);
+        assert_eq!(cp.total_cycles, stats.total(), "region aggregation conserves too");
+        assert!(
+            !cp.regions.contains_key("other"),
+            "accel codegen regions must cover every executed block: {:?}",
+            cp.regions
+        );
+    });
+}
